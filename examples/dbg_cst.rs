@@ -1,0 +1,29 @@
+use seer::experiments::table2_acceptance::replay;
+use seer::spec::cst::Cst;
+use seer::spec::multipath::speculate_multipath;
+use seer::workload::tokens::{GroupTokenGen, TokenGenConfig};
+
+fn main() {
+    // Pure repetition sanity: acceptance should approach gamma+1.
+    let cyc: Vec<u32> = (0..600).map(|i| 10 + (i % 7)).collect();
+    println!("pure cycle acceptance: {:.2}", replay(&[], &cyc, 16, 1));
+
+    // Correlated group streams.
+    let gen = GroupTokenGen::new(TokenGenConfig::default(), 99);
+    let target = gen.response(0, 1200, 1);
+    for n in [0usize, 1, 5, 15] {
+        let refs: Vec<Vec<u32>> =
+            (0..n).map(|i| gen.response(i + 1, 1200, 2 + i as u64)).collect();
+        for k in [1usize, 2, 4] {
+            print!("n={n} k={k}: {:.2}  ", replay(&refs, &target, 16, k));
+        }
+        println!();
+    }
+
+    // Multipath sanity on diverging corpus.
+    let mut cst = Cst::new();
+    cst.append(0, 0, &[1, 2, 3, 4, 5]);
+    cst.append(1, 0, &[1, 2, 3, 9, 8]);
+    let paths = speculate_multipath(&cst, &[1, 2, 3], 2, 8, 1, 4, 0.0);
+    println!("paths: {paths:?}");
+}

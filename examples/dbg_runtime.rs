@@ -1,0 +1,101 @@
+//! Probe PJRT output structure + runtime call costs (perf-pass tooling).
+
+use std::time::Instant;
+
+use seer::runtime::manifest::default_artifact_dir;
+use seer::runtime::{ModelRuntime, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let preset =
+        std::env::args().nth(1).unwrap_or_else(|| "small".to_string());
+
+    // Raw output structure: does PJRT untuple results?
+    let rt = Runtime::cpu()?;
+    let m = seer::runtime::Manifest::load(&dir, &preset)?;
+    let entry = m.entry("slot_extract")?;
+    let exe = rt.load_hlo(&m.hlo_path(entry))?;
+    let d = m.dims;
+    let kc = xla::Literal::vec1(&vec![
+        0f32;
+        d.n_layers * d.batch * d.n_heads * d.max_seq * d.head_dim
+    ])
+    .reshape(&[
+        d.n_layers as i64,
+        d.batch as i64,
+        d.n_heads as i64,
+        d.max_seq as i64,
+        d.head_dim as i64,
+    ])?;
+    let slot = xla::Literal::scalar(0i32);
+    let out = exe.execute::<&xla::Literal>(&[&kc, &kc, &slot])?;
+    println!(
+        "slot_extract (2 results): replicas={} buffers_per_replica={}",
+        out.len(),
+        out[0].len()
+    );
+
+    // Per-entry wall cost.
+    let model = ModelRuntime::load(&dir, &preset)?;
+    let b = d.batch;
+    let tokens = vec![0i32; b * d.prefill_len];
+    let lens = vec![4i32; b];
+    let t0 = Instant::now();
+    let (_, kc, vc) = model.prefill(&tokens, &lens)?;
+    println!("prefill: {:?}", t0.elapsed());
+
+    let cur = vec![1i32; b];
+    for name in ["decode1", "decode2", "decode3"] {
+        let t = Instant::now();
+        let _ = model.decode(&cur, &lens, &kc, &vc)?;
+        println!("{name}: {:?}", t.elapsed());
+    }
+    let drafts = vec![1i32; b * d.draft_width];
+    let t = Instant::now();
+    let _ = model.verify(&drafts, &lens, &kc, &vc)?;
+    println!("verify: {:?}", t.elapsed());
+
+    let padded = vec![1i32; d.prefill_len];
+    let t = Instant::now();
+    let _ = model.prefill_one(&padded, 4)?;
+    println!("prefill_one: {:?}", t.elapsed());
+    let t = Instant::now();
+    let _ = model.slot_extract(&kc, &vc, 0)?;
+    println!("slot_extract: {:?}", t.elapsed());
+
+    // Train probe.
+    let mut model2 = ModelRuntime::load(&dir, &preset)?;
+    let dd = model2.manifest.dims;
+    let ttok: Vec<i32> = (0..dd.batch * dd.train_len).map(|i| (i % dd.vocab) as i32).collect();
+    let tmask = vec![1i32; dd.batch * dd.train_len];
+    let tadv = vec![1f32; dd.batch];
+    for i in 0..3 {
+        println!("train call {i} ...");
+        let loss = model2.train(&ttok, &tmask, &tadv)?;
+        println!("  loss {loss}");
+    }
+    drop(model2);
+
+    // Leak probe: repeated decode calls, watching RSS.
+    println!("rss before loop: {:.0} MB", rss_mb());
+    let mut state = (kc, vc);
+    for i in 0..60 {
+        let (_, nkc, nvc) = model.decode(&cur, &lens, &state.0, &state.1)?;
+        state = (nkc, nvc);
+        if i % 20 == 19 {
+            println!("after {} decodes: rss {:.0} MB", i + 1, rss_mb());
+        }
+    }
+    Ok(())
+}
+
+#[allow(dead_code)]
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap_or_default();
+    let pages: f64 = s
+        .split_whitespace()
+        .nth(1)
+        .and_then(|x| x.parse().ok())
+        .unwrap_or(0.0);
+    pages * 4096.0 / 1e6
+}

@@ -1,0 +1,22 @@
+use seer::config::TaskPreset;
+use seer::config::SystemConfig;
+use seer::engine::cluster::ClusterSim;
+use seer::scheduler::{ContextMode, SeerScheduler};
+use seer::spec::simmodel::SdStrategy;
+use seer::sim::clock::SimTime;
+
+fn main() {
+    let which = std::env::args().nth(1).unwrap_or("moonlight".into());
+    let preset = TaskPreset::from_name(&which).unwrap();
+    let cfg = preset.workload_for_test();
+    eprintln!("cfg: reqs={} insts={} cap={} max_batch={} avg={} max={}",
+        cfg.reqs_per_iter, cfg.n_instances, cfg.hw.kv_capacity_tokens,
+        cfg.hw.max_batch, cfg.avg_gen_len, cfg.max_gen_len);
+    let sys = SystemConfig { chunk_size: 128, ..Default::default() };
+    let w = seer::workload::generate_iteration(&cfg, 42);
+    let out = ClusterSim::new(cfg, sys, w.groups,
+        Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst)
+        .sample_interval(SimTime::from_secs(2))
+        .run();
+    eprintln!("done: makespan={:?} completions={}", out.metrics.makespan, out.metrics.completions.len());
+}

@@ -1,0 +1,78 @@
+//! DGDS walkthrough: the paper's Appendix-A.2 workflow — async appends,
+//! periodic fetch, batched local speculation — exercised with concurrent
+//! producer threads and group-correlated streams.
+//!
+//! Run:  cargo run --release --example dgds_demo
+
+use std::sync::Arc;
+
+use seer::spec::dgds::{DraftClient, DraftServer, SpeculationArgs};
+use seer::workload::tokens::{GroupTokenGen, TokenGenConfig};
+
+fn main() {
+    let server = Arc::new(DraftServer::spawn());
+    let gen = GroupTokenGen::new(TokenGenConfig::default(), 1);
+    server.register_group("g0", 600);
+
+    // Four concurrent "inference instances" streaming sibling responses.
+    let mut producers = vec![];
+    for req in 0..4u64 {
+        let s = Arc::clone(&server);
+        let tokens = gen.response(req as usize, 3000, 100 + req);
+        producers.push(std::thread::spawn(move || {
+            // update_cst in 32-token batches (the paper's batching note).
+            for start in (0..tokens.len()).step_by(32) {
+                let end = (start + 32).min(tokens.len());
+                s.update_cst("g0", req, start, &tokens[start..end]);
+            }
+        }));
+    }
+    for p in producers {
+        p.join().unwrap();
+    }
+    server.flush();
+
+    // A draft client speculating for a fifth sibling.
+    let mut client = DraftClient::new();
+    client.fetch(&server, &["g0".to_string()]);
+    let target = gen.response(4, 2000, 999);
+
+    let mut accepted_total = 0usize;
+    let mut steps = 0usize;
+    let mut pos = 24usize;
+    while pos + 1 < target.len() {
+        let pattern = &target[pos.saturating_sub(24)..pos];
+        let drafts = client.batch_speculate(&[(
+            "g0",
+            pattern,
+            SpeculationArgs {
+                max_spec_tokens: 8,
+                top_k: 2,
+                ..Default::default()
+            },
+        )]);
+        let best = drafts[0]
+            .iter()
+            .map(|p| {
+                p.tokens
+                    .iter()
+                    .zip(&target[pos..])
+                    .take_while(|(a, b)| a == b)
+                    .count()
+            })
+            .max()
+            .unwrap_or(0);
+        accepted_total += best;
+        steps += 1;
+        pos += best + 1;
+    }
+    println!(
+        "speculated {} tokens over {} steps: mean acceptance length {:.2} (incl. bonus)",
+        accepted_total,
+        steps,
+        1.0 + accepted_total as f64 / steps as f64
+    );
+    println!(
+        "paper Table 2 reference: 1.70 (no group refs) -> 2.5-2.9 (full group context)"
+    );
+}

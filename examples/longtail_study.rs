@@ -1,0 +1,102 @@
+//! Long-tail anatomy study: where does rollout time go, and which of
+//! Seer's mechanisms reclaims it? Sweeps chunk size and the starvation
+//! guard, and prints the completion-time CDF for baseline vs SEER — the
+//! ablation DESIGN.md §5 lists beyond the paper's own figures.
+//!
+//! Run:  cargo run --release --example longtail_study
+
+use seer::config::{SystemConfig, TaskPreset};
+use seer::engine::cluster::run_rollout;
+use seer::scheduler::{ContextMode, Scheduler, SeerScheduler, VerlScheduler};
+use seer::spec::simmodel::SdStrategy;
+use seer::util::cli::Args;
+use seer::util::table::Table;
+
+fn main() {
+    let args = Args::from_env(&[]);
+    let seed = args.get_u64("seed", 42);
+    let cfg = TaskPreset::Qwen2Vl72b.workload().scaled(2, 8);
+    let sys = SystemConfig {
+        chunk_size: (cfg.avg_gen_len / 4).clamp(64, 2048),
+        ..Default::default()
+    };
+
+    // ---- completion-time CDF: veRL vs SEER --------------------------
+    println!("# Completion-time CDF (Qwen2-VL, scaled)");
+    let runs: Vec<(&str, Box<dyn Scheduler>, SdStrategy)> = vec![
+        ("veRL", Box::new(VerlScheduler::new()), SdStrategy::None),
+        (
+            "SEER",
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        ),
+    ];
+    for (name, sched, sd) in runs {
+        let out = run_rollout(&cfg, &sys, sched, sd, seed);
+        let mut s = out.metrics.completion_summary();
+        println!(
+            "{name:>6}: p50 {:>6.1}s  p90 {:>6.1}s  p99 {:>6.1}s  max {:>6.1}s  (makespan {:.1}s)",
+            s.percentile(50.0),
+            s.percentile(90.0),
+            s.percentile(99.0),
+            s.max(),
+            out.metrics.makespan.as_secs_f64()
+        );
+    }
+
+    // ---- chunk-size sweep (divided rollout granularity) --------------
+    let mut t = Table::new(
+        "Chunk-size sweep (SEER, no SD) — finer chunks = better balance vs more migrations",
+        &["chunk", "makespan", "tail(10%)", "migrations", "migrated GiB"],
+    );
+    for chunk in [256u32, 512, 1024, 2048, 4096] {
+        let sys = SystemConfig {
+            chunk_size: chunk,
+            ..Default::default()
+        };
+        let out = run_rollout(
+            &cfg,
+            &sys,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+            seed,
+        );
+        let m = &out.metrics;
+        t.row(&[
+            chunk.to_string(),
+            format!("{:.1}s", m.makespan.as_secs_f64()),
+            format!("{:.1}s", m.tail_time(0.10).as_secs_f64()),
+            m.migrations.to_string(),
+            format!("{:.1}", m.migrated_bytes as f64 / (1u64 << 30) as f64),
+        ]);
+    }
+    t.print();
+
+    // ---- starvation-guard sweep --------------------------------------
+    let mut t2 = Table::new(
+        "Starvation-guard sweep (fraction of cycles yielding to underserved groups)",
+        &["guard", "makespan", "tail(10%)", "p99 completion"],
+    );
+    for guard in [0.0, 0.05, 0.2, 0.5] {
+        let sys = SystemConfig {
+            chunk_size: (cfg.avg_gen_len / 4).clamp(64, 2048),
+            starvation_guard_frac: guard,
+            ..Default::default()
+        };
+        let out = run_rollout(
+            &cfg,
+            &sys,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+            seed,
+        );
+        let mut s = out.metrics.completion_summary();
+        t2.row(&[
+            format!("{guard}"),
+            format!("{:.1}s", out.metrics.makespan.as_secs_f64()),
+            format!("{:.1}s", out.metrics.tail_time(0.10).as_secs_f64()),
+            format!("{:.1}s", s.percentile(99.0)),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,69 @@
+//! Cluster-scale scheduler comparison on the paper's three production
+//! workloads (a compact Figure 7): veRL vs StreamRL-Oracle vs SEER
+//! variants, with and without grouped speculative decoding.
+//!
+//! Run:  cargo run --release --example rollout_comparison -- [--full]
+
+use seer::config::{SystemConfig, TaskPreset, ALL_PRESETS};
+use seer::engine::cluster::run_rollout;
+use seer::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use seer::spec::simmodel::SdStrategy;
+use seer::util::cli::Args;
+use seer::util::table::{fmt_pct, fmt_x, Table};
+
+fn main() {
+    let args = Args::from_env(&["full"]);
+    let full = args.has_flag("full");
+    let seed = args.get_u64("seed", 42);
+
+    for preset in ALL_PRESETS {
+        let cfg = if full {
+            preset.workload()
+        } else {
+            match preset {
+                TaskPreset::Moonlight => preset.workload().scaled(2, 16),
+                TaskPreset::Qwen2Vl72b => preset.workload().scaled(2, 8),
+                TaskPreset::KimiK2 => preset.workload().scaled(2, 16),
+            }
+        };
+        let mut sys = SystemConfig::default();
+        if !full {
+            sys.chunk_size = (cfg.avg_gen_len / 4).clamp(64, 2048);
+        }
+
+        let systems: Vec<(&str, fn() -> Box<dyn Scheduler>, SdStrategy)> = vec![
+            ("veRL", (|| Box::new(VerlScheduler::new()) as Box<dyn Scheduler>) as fn() -> _, SdStrategy::None),
+            ("StreamRL-Oracle", || Box::new(StreamRlOracle::new()), SdStrategy::None),
+            ("SEER (no SD)", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::None),
+            ("SEER", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst),
+        ];
+
+        let mut t = Table::new(
+            &format!("{} — {} reqs, {} instances", cfg.name,
+                     cfg.reqs_per_iter, cfg.n_instances),
+            &["System", "Throughput tok/s", "vs veRL", "Tail(10%)",
+              "Preempt", "Migrations", "Util"],
+        );
+        let mut base = 0.0;
+        for (name, mk, sd) in systems {
+            let out = run_rollout(&cfg, &sys, mk(), sd, seed);
+            let m = &out.metrics;
+            let tp = m.throughput();
+            if base == 0.0 {
+                base = tp;
+            }
+            t.row(&[
+                name.to_string(),
+                format!("{tp:.0}"),
+                fmt_x(tp / base),
+                format!("{:.1}s", m.tail_time(0.10).as_secs_f64()),
+                m.preemptions.to_string(),
+                m.migrations.to_string(),
+                fmt_pct(m.mean_utilization()),
+            ]);
+        }
+        t.print();
+    }
+}

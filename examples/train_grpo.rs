@@ -1,0 +1,80 @@
+//! End-to-end synchronous GRPO training — the repo's e2e validation
+//! driver (EXPERIMENTS.md §E2E): train the real transformer for a few
+//! hundred steps on the pattern-continuation task and log the
+//! reward/loss curves. All three layers run: Pallas kernels inside the
+//! decode/verify artifacts, the JAX train_step for optimization, and the
+//! Rust coordinator on the request path.
+//!
+//! Run:  cargo run --release --example train_grpo -- [--preset small]
+//!       [--iters 100] [--spec] [--max-gen 24] [--seed 0]
+
+use anyhow::Result;
+use seer::rl::{GrpoConfig, GrpoTrainer};
+use seer::runtime::manifest::default_artifact_dir;
+use seer::runtime::ModelRuntime;
+use seer::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["spec", "no-context"]);
+    let preset = args.get_or("preset", "tiny");
+    let iters = args.get_usize("iters", 60);
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+
+    println!("# GRPO end-to-end training ({preset}, {iters} iterations)");
+    let model = ModelRuntime::load(&dir, preset)?;
+    let b = model.manifest.dims.batch;
+    println!(
+        "platform {}  params {}  batch {}",
+        model.platform(),
+        model.manifest.n_params,
+        b
+    );
+
+    let cfg = GrpoConfig {
+        prompts_per_iter: b.max(4),
+        group_size: 4,
+        max_gen: args.get_usize("max-gen", 24),
+        use_spec: args.has_flag("spec"),
+        context_aware: !args.has_flag("no-context"),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    let train_steps_per_iter =
+        (cfg.prompts_per_iter * cfg.group_size).div_ceil(b);
+    println!(
+        "{} prompts x G={} per iter; {} train steps per iter\n",
+        cfg.prompts_per_iter, cfg.group_size, train_steps_per_iter
+    );
+
+    let mut trainer = GrpoTrainer::new(model, cfg);
+    println!("{:>5} {:>8} {:>10} {:>8} {:>9} {:>8}",
+             "iter", "reward", "loss", "tokens", "rollout", "train");
+    for i in 0..iters {
+        let s = trainer.run_iteration(i)?;
+        println!(
+            "{:>5} {:>8.3} {:>10.4} {:>8} {:>8.2}s {:>7.2}s",
+            s.iter, s.mean_reward, s.mean_loss, s.tokens,
+            s.rollout_secs, s.train_secs
+        );
+    }
+
+    // Learning check: compare reward over the first and last quartiles.
+    let h = &trainer.history;
+    let q = (h.len() / 4).max(1);
+    let early: f32 =
+        h[..q].iter().map(|s| s.mean_reward).sum::<f32>() / q as f32;
+    let late: f32 = h[h.len() - q..].iter().map(|s| s.mean_reward).sum::<f32>()
+        / q as f32;
+    println!(
+        "\nmean reward: first {q} iters {early:.3} -> last {q} iters {late:.3} ({})",
+        if late > early { "LEARNING ✓" } else { "no improvement" }
+    );
+    println!(
+        "total train steps: {}",
+        trainer.model.train_steps_taken()
+    );
+    Ok(())
+}

@@ -1,0 +1,121 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts + manifest.
+
+HLO text (not ``HloModule.serialize()``) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs only here — ``make artifacts`` — never on the request path.
+The manifest records, for every entry point, the flattened argument and
+result layouts (pytree order = jax tree_flatten order) so the Rust runtime
+can marshal buffers without re-deriving the pytree structure.
+
+Usage: python -m compile.aot --out ../artifacts [--preset small] [--no-pallas]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import PRESETS
+from .model import make_entries
+from .params import init_params, init_opt_state, param_leaves, count_params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_spec(x):
+    # Works for concrete arrays and jax.ShapeDtypeStruct alike.
+    shape = list(getattr(x, "shape"))
+    dtype = str(np.dtype(getattr(x, "dtype")))
+    return {"shape": shape, "dtype": dtype}
+
+
+def _flat_arg_specs(args):
+    leaves = jax.tree_util.tree_leaves(args)
+    return [_leaf_spec(l) for l in leaves]
+
+
+def lower_entry(name, fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_tree = jax.eval_shape(fn, *example_args)
+    return text, {
+        "name": name,
+        "args": _flat_arg_specs(example_args),
+        "results": [_leaf_spec(l) for l in jax.tree_util.tree_leaves(out_tree)],
+    }
+
+
+def emit(out_dir, preset, use_pallas=True, seed=0):
+    cfg = PRESETS[preset]
+    os.makedirs(out_dir, exist_ok=True)
+    entries = make_entries(cfg, use_pallas=use_pallas)
+
+    manifest = {
+        "preset": preset,
+        "config": cfg.to_dict(),
+        "use_pallas": use_pallas,
+        "entries": {},
+        "param_layout": [],
+        "n_params": 0,
+    }
+
+    params = init_params(cfg, seed=seed)
+    manifest["n_params"] = int(count_params(params))
+    for pname, leaf in param_leaves(params):
+        manifest["param_layout"].append({"name": pname, **_leaf_spec(leaf)})
+
+    # Initial weights + Adam state, flattened in manifest order, as a raw
+    # little-endian f32 blob the Rust side can mmap-read.
+    with open(os.path.join(out_dir, f"{preset}.params.bin"), "wb") as f:
+        for _, leaf in param_leaves(params):
+            f.write(np.asarray(leaf, np.float32).tobytes())
+    opt = init_opt_state(params)
+
+    for name, (fn, example_args) in entries.items():
+        text, spec = lower_entry(name, fn, example_args)
+        path = os.path.join(out_dir, f"{preset}.{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        spec["file"] = os.path.basename(path)
+        spec["hlo_sha256"] = hashlib.sha256(text.encode()).hexdigest()
+        manifest["entries"][name] = spec
+        print(f"  {name}: {len(text)} chars -> {path}")
+
+    mpath = os.path.join(out_dir, f"{preset}.manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  manifest -> {mpath} ({manifest['n_params']} params)")
+    return mpath
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default=None,
+                    help="preset name; default: tiny and small")
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="build L2 against the jnp reference attention")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    presets = [args.preset] if args.preset else ["tiny", "small"]
+    for p in presets:
+        print(f"[aot] lowering preset '{p}' (pallas={not args.no_pallas})")
+        emit(args.out, p, use_pallas=not args.no_pallas, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Model/artifact configuration presets shared by the compile path and tests.
+
+Shapes are static: every preset bakes its batch size, max sequence length and
+draft width into the lowered HLO. The Rust runtime reads the emitted
+``artifacts/manifest.json`` and never guesses shapes.
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static configuration for the GPT-style rollout/training model."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    max_seq: int        # KV cache capacity (multiple of kv_block)
+    batch: int          # decode/verify batch size baked into artifacts
+    prefill_len: int    # prompt window for the prefill entry point
+    train_len: int      # sequence window for the train_step entry point
+    draft_width: int    # gamma_max + 1: query positions per verify step
+    kv_block: int       # pallas KV tile (VMEM block along the seq axis)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.d_model == self.n_heads * self.head_dim
+        assert self.max_seq % self.kv_block == 0, "max_seq must tile by kv_block"
+        assert self.prefill_len <= self.max_seq
+        assert self.train_len <= self.max_seq
+
+    def to_dict(self):
+        return asdict(self)
+
+
+# Fast preset for pytest / cargo test / quickstart.
+TINY = ModelConfig(
+    name="tiny", vocab=256, d_model=128, n_layers=2, n_heads=4, head_dim=32,
+    max_seq=192, batch=4, prefill_len=32, train_len=48, draft_width=4,
+    kv_block=64,
+)
+
+# Default artifact preset: ~3.7M params, sub-second CPU train steps; used by
+# the end-to-end GRPO example and the real-model rollout path.
+SMALL = ModelConfig(
+    name="small", vocab=1024, d_model=256, n_layers=4, n_heads=8, head_dim=32,
+    max_seq=512, batch=8, prefill_len=64, train_len=128, draft_width=8,
+    kv_block=64,
+)
+
+# ~91M params — the paper-scale e2e config. CPU-feasible for a short run
+# only; see EXPERIMENTS.md for the measured per-step cost.
+MEDIUM = ModelConfig(
+    name="medium", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+    head_dim=64, max_seq=1024, batch=8, prefill_len=128, train_len=256,
+    draft_width=8, kv_block=128,
+)
+
+PRESETS = {c.name: c for c in (TINY, SMALL, MEDIUM)}

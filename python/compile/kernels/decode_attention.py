@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: flash-decode attention for a single query position.
+
+TPU adaptation of the paper's GPU decode hot spot (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks staging KV tiles
+through shared memory, the KV sequence is tiled by ``BlockSpec`` into
+VMEM-resident ``(B, H, kv_block, D)`` tiles, the (sequential) grid walks
+the tiles, and the online-softmax state (running max ``m``, normalizer
+``l``, weighted accumulator ``acc``) is carried in VMEM scratch.
+
+Tiling choice (perf iteration 1, EXPERIMENTS.md §Perf): the grid covers
+*only* the KV axis; batch and heads stay whole inside each tile. For the
+model sizes this repo ships, a tile is B×H×kv_block×D×4B ≤ 2 MB and the
+carried state ≤ 0.3 MB — comfortably VMEM-resident — and every grid step
+is one dense (B·H, kv_block, D) contraction that maps onto the MXU. (The
+original B×H×KV grid had identical numerics but serialized B·H tiny
+matmuls per tile; on the CPU interpret path it was ~10x slower, and on a
+real TPU it would under-fill the systolic array the same way.)
+
+Runs with ``interpret=True`` everywhere (CPU PJRT cannot execute Mosaic
+custom-calls); the grid lowers to an XLA ``while`` loop, so the AOT'd HLO
+stays compact regardless of sequence length.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _decode_attn_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, kv_block, scale):
+    """Grid = (S // kv_block,): the KV-tile walk."""
+    kb = pl.program_id(0)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)          # (B, H, D)
+    k = k_ref[...].astype(jnp.float32)          # (B, H, BK, D)
+    v = v_ref[...].astype(jnp.float32)          # (B, H, BK, D)
+
+    # (B, H, BK) scores: one dense contraction per tile.
+    s = jnp.einsum("bhd,bhkd->bhk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = kb * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 2
+    )
+    valid = pos < lens_ref[:][:, None, None]     # (B, 1, 1) vs (B,H,BK)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (B, H)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+    # An all-masked tile keeps m at -inf; exp(-inf - -inf) is NaN, so pin
+    # the correction factor to zero-effect in that case.
+    corr = jnp.where(m_new == NEG_INF, 1.0, jnp.exp(m_prev - m_new))
+    p = jnp.where(s == NEG_INF, 0.0, jnp.exp(s - m_new[..., None]))
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "bhk,bhkd->bhd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(0) - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...] / l_ref[...][..., None]
+        ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_lens, *, kv_block=64,
+                     interpret=True):
+    """Pallas flash-decode attention. Same contract as
+    :func:`ref.decode_attention_ref`.
+
+    Args:
+      q:        (B, H, D)
+      k_cache:  (B, H, S, D) with S % kv_block == 0
+      v_cache:  (B, H, S, D)
+      kv_lens:  (B,) int32, 1 <= kv_lens[b] <= S
+      kv_block: KV tile length along the sequence axis (VMEM block).
+
+    Returns:
+      (B, H, D) float32.
+    """
+    B, H, D = q.shape
+    S = k_cache.shape[2]
+    assert S % kv_block == 0, (S, kv_block)
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, kv_block=kv_block, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(S // kv_block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # kv_lens
+            pl.BlockSpec((B, H, D), lambda kb: (0, 0, 0)),
+            pl.BlockSpec((B, H, kv_block, D), lambda kb: (0, 0, kb, 0)),
+            pl.BlockSpec((B, H, kv_block, D), lambda kb: (0, 0, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, H, D), lambda kb: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((B, H), jnp.float32),     # m: running max
+            pltpu.VMEM((B, H), jnp.float32),     # l: running normalizer
+            pltpu.VMEM((B, H, D), jnp.float32),  # acc: weighted value sum
+        ],
+        interpret=interpret,
+    )(kv_lens, q, k_cache, v_cache)

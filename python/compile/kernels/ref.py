@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: ``python/tests`` asserts the Pallas
+kernels match these implementations across shape/dtype sweeps, and the L2
+model can be built against either implementation (``use_pallas`` flag) so a
+numerics regression can always be bisected to one layer.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_lens):
+    """Single-position decode attention.
+
+    Args:
+      q:        (B, H, D)    query for the current decode position.
+      k_cache:  (B, H, S, D) key cache (garbage beyond ``kv_lens`` is masked).
+      v_cache:  (B, H, S, D) value cache.
+      kv_lens:  (B,) int32   valid KV length per sequence (includes the
+                current position's K/V, i.e. attention span is [0, kv_lens)).
+
+    Returns:
+      (B, H, D) attention output in float32.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum(
+        "bhd,bhsd->bhs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    span = jnp.arange(k_cache.shape[2])[None, :] < kv_lens[:, None]  # (B, S)
+    s = jnp.where(span[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bhsd->bhd", p, v_cache.astype(jnp.float32))
+
+
+def verify_attention_ref(q, k_cache, v_cache, prefix_lens):
+    """Speculative-verification attention over G draft positions.
+
+    Query position ``i`` (0-based) sits at absolute position
+    ``prefix_lens[b] + i`` and attends to KV positions
+    ``[0, prefix_lens[b] + i + 1)`` — causal within the draft block, full
+    over the committed prefix. The draft K/V must already be written into
+    the caches at those positions.
+
+    Args:
+      q:           (B, H, G, D) queries for the G draft positions.
+      k_cache:     (B, H, S, D)
+      v_cache:     (B, H, S, D)
+      prefix_lens: (B,) int32 committed prefix length (excludes drafts).
+
+    Returns:
+      (B, H, G, D) float32.
+    """
+    G = q.shape[2]
+    S = k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    s = jnp.einsum(
+        "bhgd,bhsd->bhgs", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    pos = jnp.arange(S)[None, None, :]                       # (1, 1, S)
+    limit = prefix_lens[:, None, None] + jnp.arange(G)[None, :, None] + 1
+    mask = pos < limit                                       # (B, G, S)
+    s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))

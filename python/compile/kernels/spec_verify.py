@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: speculative-verification attention.
+
+The paper's core decoding insight — parallel verification of gamma draft
+tokens converts memory-bound serial decode into one compute-dense pass —
+maps onto the TPU as follows (DESIGN.md §Hardware-Adaptation): the G draft
+queries are batched into a single ``(B·H·G, D) × (D, kv_block)`` MXU
+contraction per KV tile instead of G serial decode steps; the KV walk is
+the sequential grid axis with ``(B, H, kv_block, D)`` VMEM tiles; and the
+per-query online-softmax state ``(m, l, acc)`` of shape
+``(B, H, G) / (B, H, G) / (B, H, G, D)`` lives in VMEM scratch. Like
+`decode_attention`, batch and heads stay whole per tile (perf iteration 1,
+EXPERIMENTS.md §Perf) — the tile plus state stays ≤ 3 MB for the shipped
+model sizes.
+
+Masking: query i sits at absolute position ``prefix_lens[b] + i`` and may
+attend to KV positions ``[0, prefix_lens[b] + i + 1)`` — full over the
+committed prefix, causal inside the draft block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+
+def _verify_attn_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, kv_block, n_drafts, scale):
+    """Grid = (S // kv_block,)."""
+    kb = pl.program_id(0)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...].astype(jnp.float32)           # (B, H, G, D)
+    k = k_ref[...].astype(jnp.float32)           # (B, H, BK, D)
+    v = v_ref[...].astype(jnp.float32)           # (B, H, BK, D)
+
+    s = jnp.einsum("bhgd,bhkd->bhgk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = kb * kv_block + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    limit = (
+        lens_ref[:][:, None, None, None]
+        + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        + 1
+    )
+    s = jnp.where(pos < limit, s, NEG_INF)
+
+    m_prev = m_ref[...]                          # (B, H, G)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=3))
+    corr = jnp.where(m_new == NEG_INF, 1.0, jnp.exp(m_prev - m_new))
+    p = jnp.where(s == NEG_INF, 0.0, jnp.exp(s - m_new[..., None]))
+
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=3)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "bhgk,bhkd->bhgd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kb == pl.num_programs(0) - 1)
+    def _finish():
+        o_ref[...] = (
+            acc_ref[...] / l_ref[...][..., None]
+        ).astype(o_ref.dtype)
+
+
+def verify_attention(q, k_cache, v_cache, prefix_lens, *, kv_block=64,
+                     interpret=True):
+    """Pallas verification attention. Same contract as
+    :func:`ref.verify_attention_ref`.
+
+    Args:
+      q:           (B, H, G, D) draft-position queries.
+      k_cache:     (B, H, S, D) with draft K/V already written at
+                   positions [prefix_lens[b], prefix_lens[b]+G).
+      v_cache:     (B, H, S, D)
+      prefix_lens: (B,) int32 committed prefix length.
+
+    Returns:
+      (B, H, G, D) float32.
+    """
+    B, H, G, D = q.shape
+    S = k_cache.shape[2]
+    assert S % kv_block == 0, (S, kv_block)
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(
+        _verify_attn_kernel, kv_block=kv_block, n_drafts=G, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(S // kv_block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # prefix_lens
+            pl.BlockSpec((B, H, G, D), lambda kb: (0, 0, 0, 0)),
+            pl.BlockSpec((B, H, kv_block, D), lambda kb: (0, 0, kb, 0)),
+            pl.BlockSpec((B, H, kv_block, D), lambda kb: (0, 0, kb, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, H, G, D), lambda kb: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, G, D), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((B, H, G), jnp.float32),
+            pltpu.VMEM((B, H, G), jnp.float32),
+            pltpu.VMEM((B, H, G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(prefix_lens, q, k_cache, v_cache)

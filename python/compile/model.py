@@ -1,0 +1,339 @@
+"""L2: the rollout/training model as pure JAX functions over explicit state.
+
+Four AOT entry points (all shapes static per ``configs.ModelConfig``):
+
+- ``prefill``:     prompt -> last-token logits + populated KV caches.
+- ``decode_step``: one token per sequence -> logits + updated caches.
+                   Attention runs through the L1 Pallas flash-decode kernel.
+- ``verify_step``: G draft tokens per sequence -> (B, G, V) logits + caches,
+                   via the L1 Pallas verification kernel. Acceptance is
+                   decided by the Rust coordinator from the logits; rejected
+                   suffix positions are naturally masked out of later steps
+                   because the coordinator only advances ``cache_lens`` by
+                   the accepted count.
+- ``train_step``:  GRPO policy-gradient step (token logp weighted by group
+                   advantage) with a hand-rolled Adam update.
+
+Sampling is done Rust-side from the returned logits, keeping the artifacts
+deterministic and the RNG under the coordinator's control.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.decode_attention import decode_attention
+from .kernels.spec_verify import verify_attention
+from .kernels.ref import decode_attention_ref, verify_attention_ref
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _split_heads(x, n_heads, head_dim):
+    # (..., d) -> (..., H, Dh) -> move H before the seq axis at call sites.
+    return x.reshape(x.shape[:-1] + (n_heads, head_dim))
+
+
+def _mlp(x, layer):
+    h = jnp.dot(x, layer["wi"])
+    h = jax.nn.gelu(h)
+    return jnp.dot(h, layer["wo_mlp"])
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (prefill & training): plain jnp causal attention.
+# The decode/verify hot path is what the paper optimizes; it uses the L1
+# Pallas kernels below.
+# ---------------------------------------------------------------------------
+
+def _causal_attn(q, k, v, seq_lens):
+    """q,k,v: (B, T, H, Dh); valid positions < seq_lens[b]."""
+    B, T, H, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((T, T), bool))
+    valid = jnp.arange(T)[None, :] < seq_lens[:, None]        # (B, T) keys
+    mask = causal[None, None] & valid[:, None, None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows (query beyond seq_len) produce NaN; zero them.
+    p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def _forward_seq(params, cfg, tokens, seq_lens, positions=None):
+    """Forward over a full (B, T) window. Returns (hidden, k_all, v_all)
+    where k_all/v_all are per-layer (B, T, H, Dh) tensors."""
+    B, T = tokens.shape
+    if positions is None:
+        positions = jnp.arange(T)[None, :].repeat(B, 0)
+    x = params["tok_emb"][tokens] + params["pos_emb"][positions]
+    ks, vs = [], []
+    for layer in params["layers"]:
+        h = _layernorm(x, layer["ln1_g"], layer["ln1_b"])
+        qkv = jnp.dot(h, layer["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, cfg.n_heads, cfg.head_dim)
+        k = _split_heads(k, cfg.n_heads, cfg.head_dim)
+        v = _split_heads(v, cfg.n_heads, cfg.head_dim)
+        attn = _causal_attn(q, k, v, seq_lens)
+        x = x + jnp.dot(attn.reshape(B, T, -1), layer["wo"])
+        h2 = _layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _mlp(h2, layer)
+        ks.append(k)
+        vs.append(v)
+    return x, ks, vs
+
+
+def prefill_one(params, cfg, tokens, seq_lens):
+    """Single-sequence prefill (B=1): used by the rollout engine to admit
+    one request into a batch slot without recomputing the other slots.
+    Returns (logits (1, V), k1, v1) with caches (L, 1, H, S, Dh)."""
+    return prefill(params, cfg, tokens, seq_lens)
+
+
+def slot_update(cfg, k_cache, v_cache, k1, v1, slot):
+    """Insert a single-sequence cache (from prefill_one / slot_extract)
+    into batch slot `slot`. Shapes: caches (L, B, H, S, Dh), k1/v1
+    (L, 1, H, S, Dh); slot scalar int32."""
+    zero = jnp.int32(0)
+    start = (zero, slot, zero, zero, zero)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k1, start)
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v1, start)
+    return k_cache, v_cache
+
+
+def slot_extract(cfg, k_cache, v_cache, slot):
+    """Extract one slot's cache as (L, 1, H, S, Dh) pair — the engine
+    parks it in the global KV pool (host DRAM) when a chunk lease ends."""
+    L, B, H, S, D = k_cache.shape
+    zero = jnp.int32(0)
+    start = (zero, slot, zero, zero, zero)
+    sizes = (L, 1, H, S, D)
+    k1 = jax.lax.dynamic_slice(k_cache, start, sizes)
+    v1 = jax.lax.dynamic_slice(v_cache, start, sizes)
+    return k1, v1
+
+
+def prefill(params, cfg, tokens, seq_lens):
+    """tokens: (B, P) prompt window, seq_lens: (B,) true prompt lengths.
+
+    Returns (logits_last (B, V), k_cache, v_cache) where the caches are
+    (L, B, H, S, Dh) with positions [0, P) populated.
+    """
+    B, P = tokens.shape
+    x, ks, vs = _forward_seq(params, cfg, tokens, seq_lens)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = jnp.dot(x, params["lm_head"])                     # (B, P, V)
+    last = jnp.clip(seq_lens - 1, 0, P - 1)
+    logits_last = jnp.take_along_axis(
+        logits, last[:, None, None].repeat(logits.shape[-1], 2), axis=1
+    )[:, 0, :]
+
+    L, S = cfg.n_layers, cfg.max_seq
+    k_cache = jnp.zeros((L, B, cfg.n_heads, S, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for l in range(L):
+        # (B, P, H, Dh) -> (B, H, P, Dh)
+        k_cache = k_cache.at[l, :, :, :P, :].set(ks[l].transpose(0, 2, 1, 3))
+        v_cache = v_cache.at[l, :, :, :P, :].set(vs[l].transpose(0, 2, 1, 3))
+    return logits_last, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# Decode / verify steps (the hot path; L1 Pallas kernels).
+# ---------------------------------------------------------------------------
+
+def _write_cache(cache_l, new, pos):
+    """cache_l: (B, H, S, Dh); new: (B, H, W, Dh); write at pos[b]."""
+    def one(c, n, p):
+        return jax.lax.dynamic_update_slice(c, n, (0, p, 0))
+    return jax.vmap(one)(cache_l, new, pos)
+
+
+def decode_step(params, cfg, tokens, cache_lens, k_cache, v_cache,
+                use_pallas=True):
+    """tokens: (B,) current token ids; cache_lens: (B,) committed KV length.
+
+    Returns (logits (B, V), k_cache, v_cache) with the new K/V written at
+    position cache_lens[b] (the caller advances cache_lens by 1).
+    """
+    B = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][cache_lens]  # (B, d)
+    attn_fn = decode_attention if use_pallas else decode_attention_ref
+    for l, layer in enumerate(params["layers"]):
+        h = _layernorm(x, layer["ln1_g"], layer["ln1_b"])
+        qkv = jnp.dot(h, layer["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = _split_heads(q, cfg.n_heads, cfg.head_dim)         # (B, H, Dh)
+        k = _split_heads(k, cfg.n_heads, cfg.head_dim)[:, :, None, :]
+        v = _split_heads(v, cfg.n_heads, cfg.head_dim)[:, :, None, :]
+        k_cache = k_cache.at[l].set(_write_cache(k_cache[l], k, cache_lens))
+        v_cache = v_cache.at[l].set(_write_cache(v_cache[l], v, cache_lens))
+        if use_pallas:
+            attn = attn_fn(q, k_cache[l], v_cache[l], cache_lens + 1,
+                           kv_block=cfg.kv_block)
+        else:
+            attn = attn_fn(q, k_cache[l], v_cache[l], cache_lens + 1)
+        x = x + jnp.dot(attn.reshape(B, -1), layer["wo"])
+        h2 = _layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _mlp(h2, layer)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    return jnp.dot(x, params["lm_head"]), k_cache, v_cache
+
+
+def verify_step(params, cfg, draft_tokens, cache_lens, k_cache, v_cache,
+                use_pallas=True):
+    """draft_tokens: (B, G) — position 0 is the last accepted token, 1..G-1
+    are the draft continuation. Returns (logits (B, G, V), caches) where
+    logits[:, i] scores the token *after* draft position i.
+    """
+    B, G = draft_tokens.shape
+    positions = cache_lens[:, None] + jnp.arange(G)[None, :]   # (B, G)
+    x = params["tok_emb"][draft_tokens] + params["pos_emb"][positions]
+    attn_fn = verify_attention if use_pallas else verify_attention_ref
+    for l, layer in enumerate(params["layers"]):
+        h = _layernorm(x, layer["ln1_g"], layer["ln1_b"])
+        qkv = jnp.dot(h, layer["wqkv"])
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        # (B, G, H, Dh) -> (B, H, G, Dh)
+        q = _split_heads(q, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k = _split_heads(k, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        v = _split_heads(v, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        k_cache = k_cache.at[l].set(_write_cache(k_cache[l], k, cache_lens))
+        v_cache = v_cache.at[l].set(_write_cache(v_cache[l], v, cache_lens))
+        if use_pallas:
+            attn = attn_fn(q, k_cache[l], v_cache[l], cache_lens,
+                           kv_block=cfg.kv_block)
+        else:
+            attn = attn_fn(q, k_cache[l], v_cache[l], cache_lens)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, G, -1)
+        x = x + jnp.dot(attn, layer["wo"])
+        h2 = _layernorm(x, layer["ln2_g"], layer["ln2_b"])
+        x = x + _mlp(h2, layer)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    return jnp.dot(x, params["lm_head"]), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# GRPO training step.
+# ---------------------------------------------------------------------------
+
+def grpo_loss(params, cfg, tokens, loss_mask, advantages):
+    """Token-level policy gradient: L = -mean_b adv_b * mean_t logp(t).
+
+    tokens: (B, T); loss_mask: (B, T) — 1 on *generated* positions (the
+    model predicts tokens[t] from tokens[:t], so mask position t means
+    "tokens[t] was sampled by the policy"); advantages: (B,) group-
+    normalized GRPO advantages computed by the Rust coordinator.
+    """
+    B, T = tokens.shape
+    seq_lens = jnp.full((B,), T, jnp.int32)
+    x, _, _ = _forward_seq(params, cfg, tokens, seq_lens)
+    x = _layernorm(x, params["lnf_g"], params["lnf_b"])
+    logits = jnp.dot(x, params["lm_head"])                     # (B, T, V)
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    tok_logp = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    mask = loss_mask[:, 1:].astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    seq_logp = jnp.sum(tok_logp * mask, axis=1) / denom        # (B,)
+    return -jnp.mean(advantages * seq_logp)
+
+
+def train_step(params, cfg, opt_state, step, tokens, loss_mask, advantages,
+               lr=3e-4, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step on the GRPO loss. Returns (params', opt', loss)."""
+    loss, grads = jax.value_and_grad(grpo_loss)(
+        params, cfg, tokens, loss_mask, advantages
+    )
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        p2 = p - lr * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        return p2, m2, v2
+
+    flat = jax.tree_util.tree_map(
+        upd, params, grads, opt_state["m"], opt_state["v"],
+        is_leaf=lambda x: isinstance(x, jnp.ndarray),
+    )
+    new_params = jax.tree_util.tree_map(lambda t3: t3[0], flat,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t3: t3[1], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda t3: t3[2], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, {"m": new_m, "v": new_v}, loss
+
+
+# ---------------------------------------------------------------------------
+# Entry-point factories: close over the static config for jit/lowering.
+# ---------------------------------------------------------------------------
+
+def make_entries(cfg, use_pallas=True):
+    """Returns a dict of name -> (fn, example_args) for AOT lowering."""
+    import numpy as np
+
+    B, P, T, G = cfg.batch, cfg.prefill_len, cfg.train_len, cfg.draft_width
+    S, L = cfg.max_seq, cfg.n_layers
+    from .params import init_params, init_opt_state
+    params = init_params(cfg)
+    opt = init_opt_state(params)
+
+    tok_p = np.zeros((B, P), np.int32)
+    tok_1 = np.zeros((B,), np.int32)
+    tok_g = np.zeros((B, G), np.int32)
+    lens = np.ones((B,), np.int32)
+    kc = np.zeros((L, B, cfg.n_heads, S, cfg.head_dim), np.float32)
+    tokens_t = np.zeros((B, T), np.int32)
+    mask_t = np.ones((B, T), np.int32)
+    adv = np.zeros((B,), np.float32)
+    step = np.int32(0)
+
+    def prefill_fn(params, tokens, seq_lens):
+        return prefill(params, cfg, tokens, seq_lens)
+
+    def prefill_one_fn(params, tokens, seq_lens):
+        return prefill_one(params, cfg, tokens, seq_lens)
+
+    def slot_update_fn(k_cache, v_cache, k1, v1, slot):
+        return slot_update(cfg, k_cache, v_cache, k1, v1, slot)
+
+    def slot_extract_fn(k_cache, v_cache, slot):
+        return slot_extract(cfg, k_cache, v_cache, slot)
+
+    def decode_fn(params, tokens, cache_lens, k_cache, v_cache):
+        return decode_step(params, cfg, tokens, cache_lens, k_cache, v_cache,
+                           use_pallas=use_pallas)
+
+    def verify_fn(params, draft_tokens, cache_lens, k_cache, v_cache):
+        return verify_step(params, cfg, draft_tokens, cache_lens,
+                           k_cache, v_cache, use_pallas=use_pallas)
+
+    def train_fn(params, opt_state, step, tokens, loss_mask, advantages):
+        return train_step(params, cfg, opt_state, step, tokens, loss_mask,
+                          advantages)
+
+    tok_p1 = np.zeros((1, P), np.int32)
+    lens1 = np.ones((1,), np.int32)
+    kc1 = np.zeros((L, 1, cfg.n_heads, S, cfg.head_dim), np.float32)
+    slot = np.int32(0)
+
+    return {
+        "prefill": (prefill_fn, (params, tok_p, lens)),
+        "prefill_one": (prefill_one_fn, (params, tok_p1, lens1)),
+        "slot_update": (slot_update_fn, (kc, kc, kc1, kc1, slot)),
+        "slot_extract": (slot_extract_fn, (kc, kc, slot)),
+        "decode_step": (decode_fn, (params, tok_1, lens, kc, kc)),
+        "verify_step": (verify_fn, (params, tok_g, lens, kc, kc)),
+        "train_step": (train_fn, (params, opt, step, tokens_t, mask_t, adv)),
+    }

@@ -1,0 +1,75 @@
+"""Parameter initialization and the canonical flattening order.
+
+The Rust runtime holds parameters as an opaque ordered list of buffers; the
+order is whatever ``jax.tree_util.tree_flatten`` yields for the params dict,
+which is deterministic (sorted dict keys). ``aot.py`` records every leaf's
+name/shape/dtype in the manifest so the Rust side can build, save and
+restore the list without re-deriving the pytree.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def init_params(cfg, seed=0):
+    """GPT-style decoder weights. Layout:
+
+    - tok_emb (V, d), pos_emb (S, d)
+    - per layer l: ln1_{g,b}, wqkv (d, 3d), wo (d, d), ln2_{g,b},
+      wi (d, 4d), wo_mlp (4d, d)
+    - lnf_{g,b}, lm_head (d, V)
+    """
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4 + 6 * cfg.n_layers)
+    d = cfg.d_model
+    std = 0.02
+
+    def norm(k, shape, scale=std):
+        return (jax.random.normal(k, shape) * scale).astype(jnp.float32)
+
+    params = {
+        "tok_emb": norm(ks[0], (cfg.vocab, d)),
+        "pos_emb": norm(ks[1], (cfg.max_seq, d)),
+        "lnf_g": jnp.ones((d,), jnp.float32),
+        "lnf_b": jnp.zeros((d,), jnp.float32),
+        "lm_head": norm(ks[2], (d, cfg.vocab)),
+        "layers": [],
+    }
+    resid_scale = std / (2 * cfg.n_layers) ** 0.5
+    for l in range(cfg.n_layers):
+        kk = ks[4 + 6 * l : 4 + 6 * (l + 1)]
+        params["layers"].append({
+            "ln1_g": jnp.ones((d,), jnp.float32),
+            "ln1_b": jnp.zeros((d,), jnp.float32),
+            "wqkv": norm(kk[0], (d, 3 * d)),
+            "wo": norm(kk[1], (d, d), resid_scale),
+            "ln2_g": jnp.ones((d,), jnp.float32),
+            "ln2_b": jnp.zeros((d,), jnp.float32),
+            "wi": norm(kk[2], (d, 4 * d)),
+            "wo_mlp": norm(kk[3], (4 * d, d), resid_scale),
+        })
+    return params
+
+
+def param_leaves(params):
+    """Flatten params into the canonical (path, leaf) list."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                        for p in path)
+        out.append((name, leaf))
+    return out
+
+
+def count_params(params):
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def init_opt_state(params):
+    """Adam first/second-moment state, mirroring the params pytree."""
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }

@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas flash-decode attention vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, block sizes and KV lengths; explicit
+regression cases pin the corner cases (single-token KV, full cache, masked
+tail tiles, bf16 inputs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import decode_attention_ref
+
+
+def _run_case(B, H, S, D, kv_block, lens, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, H, D), dtype)
+    k = jax.random.normal(k2, (B, H, S, D), dtype)
+    v = jax.random.normal(k3, (B, H, S, D), dtype)
+    lens = jnp.asarray(lens, jnp.int32)
+    out = decode_attention(q, k, v, lens, kv_block=kv_block)
+    ref = decode_attention_ref(q, k, v, lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 5),
+    H=st.integers(1, 4),
+    sblocks=st.integers(1, 4),
+    kv_block=st.sampled_from([8, 16, 32]),
+    D=st.sampled_from([8, 16, 32]),
+    data=st.data(),
+)
+def test_matches_ref_shape_sweep(B, H, sblocks, kv_block, D, data):
+    S = sblocks * kv_block
+    lens = data.draw(
+        st.lists(st.integers(1, S), min_size=B, max_size=B), label="lens"
+    )
+    _run_case(B, H, S, D, kv_block, lens, jnp.float32,
+              seed=data.draw(st.integers(0, 2**16), label="seed"))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    _run_case(3, 2, 64, 16, 16, [1, 33, 64], dtype)
+
+
+def test_single_token_kv():
+    # Only position 0 valid: output must equal v[:, :, 0, :].
+    B, H, S, D = 2, 2, 32, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, H, S, D))
+    v = jax.random.normal(k3, (B, H, S, D))
+    lens = jnp.ones((B,), jnp.int32)
+    out = decode_attention(q, k, v, lens, kv_block=8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, :, 0, :]),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_full_cache():
+    _run_case(2, 3, 96, 16, 32, [96, 96], jnp.float32)
+
+
+def test_len_one_less_than_tile_boundary():
+    # Exercises an almost-fully-masked trailing tile.
+    _run_case(1, 1, 64, 8, 16, [17], jnp.float32)
+
+
+def test_mask_excludes_tail_garbage():
+    # Poison the cache beyond lens with huge values: result must not change.
+    B, H, S, D = 2, 2, 48, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(k1, (B, H, D))
+    k = jax.random.normal(k2, (B, H, S, D))
+    v = jax.random.normal(k3, (B, H, S, D))
+    lens = jnp.array([10, 20], jnp.int32)
+    base = decode_attention(q, k, v, lens, kv_block=16)
+    mask = jnp.arange(S)[None, None, :, None] >= lens[:, None, None, None]
+    k_p = jnp.where(mask, 1e9, k)
+    v_p = jnp.where(mask, -1e9, v)
+    poisoned = decode_attention(q, k_p, v_p, lens, kv_block=16)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_under_jit():
+    B, H, S, D = 2, 2, 64, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    lens = jnp.array([5, 64], jnp.int32)
+    f = jax.jit(lambda q, k, v, l: decode_attention(q, k, v, l, kv_block=16))
+    np.testing.assert_allclose(
+        np.asarray(f(q, k, v, lens)),
+        np.asarray(decode_attention_ref(q, k, v, lens)),
+        rtol=2e-5, atol=2e-5,
+    )

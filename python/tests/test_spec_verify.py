@@ -1,0 +1,107 @@
+"""L1 correctness: Pallas verification attention vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.spec_verify import verify_attention
+from compile.kernels.decode_attention import decode_attention
+from compile.kernels.ref import verify_attention_ref
+
+
+def _run_case(B, H, G, S, D, kv_block, prefix_lens, dtype, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, H, G, D), dtype)
+    k = jax.random.normal(k2, (B, H, S, D), dtype)
+    v = jax.random.normal(k3, (B, H, S, D), dtype)
+    lens = jnp.asarray(prefix_lens, jnp.int32)
+    out = verify_attention(q, k, v, lens, kv_block=kv_block)
+    ref = verify_attention_ref(q, k, v, lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    B=st.integers(1, 4),
+    H=st.integers(1, 3),
+    G=st.integers(1, 6),
+    sblocks=st.integers(1, 4),
+    kv_block=st.sampled_from([8, 16, 32]),
+    D=st.sampled_from([8, 16]),
+    data=st.data(),
+)
+def test_matches_ref_shape_sweep(B, H, G, sblocks, kv_block, D, data):
+    S = sblocks * kv_block
+    # prefix + G draft positions must fit in the cache.
+    max_prefix = max(S - G, 1)
+    lens = data.draw(
+        st.lists(st.integers(0, max_prefix), min_size=B, max_size=B),
+        label="prefix_lens",
+    )
+    _run_case(B, H, G, S, D, kv_block, lens, jnp.float32,
+              seed=data.draw(st.integers(0, 2**16), label="seed"))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtypes(dtype):
+    _run_case(2, 2, 4, 64, 16, 16, [0, 40], dtype)
+
+
+def test_g1_equals_decode_attention():
+    # With one draft position, verify(prefix) == decode(prefix + 1).
+    B, H, S, D = 3, 2, 64, 16
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(k1, (B, H, 1, D))
+    k = jax.random.normal(k2, (B, H, S, D))
+    v = jax.random.normal(k3, (B, H, S, D))
+    lens = jnp.array([0, 10, 63], jnp.int32)
+    out = verify_attention(q, k, v, lens, kv_block=16)
+    dec = decode_attention(q[:, :, 0, :], k, v, lens + 1, kv_block=16)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0, :]), np.asarray(dec),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causal_within_draft():
+    # Draft position i must NOT see K/V at positions > prefix + i: poisoning
+    # the cache at position prefix+j must leave outputs of queries i<j
+    # unchanged.
+    B, H, G, S, D = 1, 1, 4, 32, 8
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (B, H, G, D))
+    k = jax.random.normal(k2, (B, H, S, D))
+    v = jax.random.normal(k3, (B, H, S, D))
+    prefix = jnp.array([8], jnp.int32)
+    base = verify_attention(q, k, v, prefix, kv_block=8)
+    j = 2
+    k_p = k.at[:, :, 8 + j, :].set(1e9)
+    v_p = v.at[:, :, 8 + j, :].set(-1e9)
+    poisoned = verify_attention(q, k_p, v_p, prefix, kv_block=8)
+    np.testing.assert_allclose(np.asarray(base[:, :, :j, :]),
+                               np.asarray(poisoned[:, :, :j, :]),
+                               rtol=1e-6, atol=1e-6)
+    # ...while queries at i >= j do see it.
+    assert not np.allclose(np.asarray(base[:, :, j, :]),
+                           np.asarray(poisoned[:, :, j, :]))
+
+
+def test_zero_prefix():
+    # prefix 0: query i attends only to draft positions [0, i].
+    _run_case(2, 1, 3, 16, 8, 8, [0, 0], jnp.float32)
+
+
+def test_under_jit():
+    B, H, G, S, D = 2, 2, 4, 64, 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, H, G, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, S, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, S, D))
+    lens = jnp.array([5, 50], jnp.int32)
+    f = jax.jit(lambda q, k, v, l: verify_attention(q, k, v, l, kv_block=16))
+    np.testing.assert_allclose(
+        np.asarray(f(q, k, v, lens)),
+        np.asarray(verify_attention_ref(q, k, v, lens)),
+        rtol=2e-5, atol=2e-5,
+    )

@@ -1,0 +1,79 @@
+//! Coordinator hot-path benchmarks: the Algorithm-2 scheduling decision
+//! loop, context-manager updates, and the request buffer — the L3 paths
+//! the §Perf pass optimizes.
+
+use seer::config::{SystemConfig, TaskPreset};
+use seer::coordinator::RequestBuffer;
+use seer::scheduler::{
+    ContextMode, InstanceView, SchedCtx, Scheduler, SeerScheduler,
+    VerlScheduler,
+};
+use seer::sim::clock::SimTime;
+use seer::util::bench::bench_val;
+use seer::workload::{generate_iteration, InstanceId};
+
+fn views(cfg: &seer::config::WorkloadConfig) -> Vec<InstanceView> {
+    (0..cfg.n_instances as u32)
+        .map(|i| InstanceView {
+            id: InstanceId(i),
+            free_kv_tokens: cfg.hw.kv_capacity_tokens / 2,
+            capacity_tokens: cfg.hw.kv_capacity_tokens,
+            running: 4,
+            max_batch: cfg.hw.max_batch,
+        })
+        .collect()
+}
+
+fn main() {
+    // Full paper-scale waiting set: 3200 requests, 32 instances.
+    let cfg = TaskPreset::Moonlight.workload();
+    let sys = SystemConfig::default();
+    let w = generate_iteration(&cfg, 1);
+    let buffer = RequestBuffer::from_groups(&w.groups);
+    let instances = views(&cfg);
+
+    let mut seer = SeerScheduler::new(ContextMode::Learned);
+    seer.init(&w.groups, &cfg, &sys);
+    bench_val("seer_schedule_3200_waiting_32_inst", || {
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        seer.schedule(&ctx)
+    });
+
+    let mut verl = VerlScheduler::new();
+    verl.init(&w.groups, &cfg, &sys);
+    bench_val("verl_schedule_3200_waiting_32_inst", || {
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        verl.schedule(&ctx)
+    });
+
+    // Context-manager update path.
+    let mut cm = seer::coordinator::ContextManager::new(cfg.max_gen_len);
+    cm.init_groups(&w.groups);
+    let mut i = 0u32;
+    bench_val("context_manager_on_finished", || {
+        let g = seer::workload::GroupId(i % cfg.n_groups() as u32);
+        cm.on_finished(g, 1000 + i);
+        i += 1;
+        cm.estimate(g)
+    });
+
+    // Buffer lifecycle churn.
+    let mut buf = RequestBuffer::from_groups(&w.groups);
+    let ids: Vec<_> = buf.waiting().take(1024).collect();
+    bench_val("buffer_schedule_unschedule_1024", || {
+        for &id in &ids {
+            buf.mark_scheduled(id);
+        }
+        for &id in &ids {
+            buf.mark_waiting(id);
+        }
+    });
+}

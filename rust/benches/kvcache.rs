@@ -1,0 +1,51 @@
+//! KVCache benchmarks: the paged allocator's grow/release cycle under a
+//! realistic batch, and global-pool store/fetch/spill churn.
+
+use seer::config::TaskPreset;
+use seer::kvcache::{GlobalKvPool, PagedAllocator};
+use seer::sim::Rng;
+use seer::util::bench::{bench, bench_val};
+use seer::workload::RequestId;
+
+fn main() {
+    // Paged allocator: 256-request batch growing one step.
+    let mut alloc = PagedAllocator::new(1_250_000, 64);
+    for i in 0..256u32 {
+        alloc.grow(RequestId(i), 2048);
+    }
+    let mut step = 0u32;
+    bench("paged_grow_256_requests_one_step", || {
+        for i in 0..256u32 {
+            alloc.grow_upto(RequestId(i), 2);
+        }
+        step += 1;
+        if step % 500 == 0 {
+            // Reset before capacity exhausts.
+            for i in 0..256u32 {
+                alloc.release(RequestId(i));
+                alloc.grow(RequestId(i), 2048);
+            }
+        }
+    });
+
+    bench_val("paged_utilization_query", || alloc.utilization());
+
+    // Global pool churn at Mooncake scale.
+    let hw = TaskPreset::Qwen2Vl72b.workload().hw;
+    let mut pool = GlobalKvPool::new(&hw, 16);
+    let mut rng = Rng::new(5);
+    let mut id = 0u32;
+    bench("pool_store_fetch_cycle", || {
+        let bytes = 1_000_000 + rng.below(500_000_000);
+        pool.store(RequestId(id % 4096), bytes);
+        if id % 3 == 0 {
+            let victim = RequestId(rng.below(id.max(1) as u64) as u32 % 4096);
+            let _ = pool.fetch(victim);
+        }
+        id += 1;
+    });
+    println!(
+        "pool state after churn: {:?} spills",
+        pool.stats().spills
+    );
+}

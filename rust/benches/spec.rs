@@ -1,0 +1,63 @@
+//! Speculative-decoding benchmarks: CST append/match/speculate (the DGDS
+//! critical path), multi-path drafting, and the MBA allocation loop.
+
+use seer::config::TaskPreset;
+use seer::engine::costmodel::CostModel;
+use seer::sim::clock::SimTime;
+use seer::spec::cst::Cst;
+use seer::spec::mba::{mba_allocate, MbaInputs};
+use seer::spec::multipath::speculate_multipath;
+use seer::util::bench::{bench, bench_val};
+use seer::workload::tokens::{GroupTokenGen, TokenGenConfig};
+
+fn main() {
+    let gen = GroupTokenGen::new(TokenGenConfig::default(), 3);
+    let streams: Vec<Vec<u32>> =
+        (0..8).map(|i| gen.response(i, 4000, 10 + i as u64)).collect();
+
+    // Append throughput (tokens/sec through the suffix automaton).
+    {
+        let mut req = 0u64;
+        bench("cst_append_4000_tokens", || {
+            let mut cst = Cst::new();
+            cst.append(req, 0, &streams[(req % 8) as usize]);
+            req += 1;
+        });
+    }
+
+    // Query path: pattern match + linear draft on a populated group CST.
+    let mut cst = Cst::new();
+    for (i, s) in streams.iter().enumerate() {
+        cst.append(i as u64, 0, s);
+    }
+    let target = gen.response(9, 2000, 99);
+    let mut pos = 100usize;
+    bench_val("cst_speculate_gamma8", || {
+        let pattern = &target[pos - 24..pos];
+        pos = 100 + (pos + 7) % 1800;
+        cst.speculate(pattern, 8, 24, 2)
+    });
+
+    let mut pos2 = 100usize;
+    bench_val("cst_multipath_k4_gamma8", || {
+        let pattern = &target[pos2 - 24..pos2];
+        pos2 = 100 + (pos2 + 7) % 1800;
+        speculate_multipath(&cst, pattern, 8, 24, 2, 4, 0.01)
+    });
+
+    // MBA allocation (runs once per replan interval per instance).
+    let cost = CostModel::new(&TaskPreset::Moonlight.workload().hw);
+    let inputs = MbaInputs {
+        batch_high: 8,
+        batch_low: 120,
+        beta: vec![0.6, 0.55, 0.5, 0.44, 0.38, 0.3, 0.22, 0.15],
+        gamma_max: 8,
+        lambda: 2.0,
+        alpha: 0.5,
+        kv_tokens: 800_000,
+        draft_cost_per_gamma: SimTime::from_micros(2),
+    };
+    bench_val("mba_allocate_128_batch", || {
+        mba_allocate(&cost, &inputs)
+    });
+}

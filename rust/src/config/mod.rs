@@ -1,0 +1,205 @@
+//! System + workload configuration, including the paper's Table 3 task
+//! presets (Moonlight, Qwen2-VL-72B, Kimi-K2) and scaled-down variants for
+//! tests and CI.
+
+pub mod presets;
+
+pub use presets::{TaskPreset, ALL_PRESETS};
+
+use crate::sim::clock::SimTime;
+
+/// Workload characteristics of one RL task (paper Table 3) plus the
+/// length-distribution calibration used by the generator (DESIGN.md §2).
+#[derive(Debug, Clone)]
+pub struct WorkloadConfig {
+    pub name: &'static str,
+    /// Number of inference instances (= total GPUs / GPUs per instance).
+    pub n_instances: usize,
+    pub gpus_per_instance: usize,
+    /// Requests per rollout iteration (= prompts × group size).
+    pub reqs_per_iter: usize,
+    /// GRPO group size G.
+    pub group_size: usize,
+    pub temperature: f64,
+    /// Hard cap on generation length (tokens).
+    pub max_gen_len: u32,
+    /// Target mean generation length (tokens) used for calibration.
+    pub avg_gen_len: u32,
+    /// Log-normal sigma of the *group-mean* length distribution; larger =
+    /// heavier tail (Figure 2's shape knob).
+    pub sigma_between: f64,
+    /// Log-normal sigma of lengths *within* a group around the group mean;
+    /// small = strong intra-group correlation (Figure 4).
+    pub sigma_within: f64,
+    /// Prompt length distribution (log-normal, mean tokens / sigma).
+    pub avg_prompt_len: u32,
+    pub sigma_prompt: f64,
+    /// Pattern richness of responses in (0, 1]: scales n-gram/CST SD
+    /// acceptance (math CoT < templated judge output).
+    pub sd_richness: f64,
+    pub hw: HardwareConfig,
+}
+
+/// Per-instance hardware/cost-model constants. These are the simulator's
+/// calibration knobs; DESIGN.md §2 documents how each maps to the paper's
+/// H800 testbed.
+#[derive(Debug, Clone)]
+pub struct HardwareConfig {
+    /// KVCache capacity per instance, in tokens.
+    pub kv_capacity_tokens: u64,
+    /// KVCache bytes per token (whole model, all layers).
+    pub kv_bytes_per_token: u64,
+    /// Fixed per-forward-step overhead (kernel launches, sampling, sync).
+    pub step_overhead: SimTime,
+    /// Time to stream the model weights once (memory-bound decode floor).
+    pub weight_read_time: SimTime,
+    /// HBM bandwidth available for KV reads, bytes/sec (aggregate over the
+    /// instance's GPUs).
+    pub hbm_bw: f64,
+    /// Dense compute throughput, effective FLOP/s for prefill/verify.
+    pub flops: f64,
+    /// Model forward FLOPs per token (≈ 2 × active params).
+    pub flops_per_token: f64,
+    /// Max requests the engine will co-batch in one step.
+    pub max_batch: usize,
+    /// RDMA bandwidth between nodes for KV migration (bytes/sec) and the
+    /// per-transfer latency — the Mooncake-style global pool.
+    pub rdma_bw: f64,
+    pub rdma_latency: SimTime,
+    /// DRAM+SSD capacity of the global KV pool, per node, in bytes.
+    pub pool_dram_bytes: u64,
+    pub pool_ssd_bytes: u64,
+    /// SSD bandwidth for pool spill (bytes/sec).
+    pub ssd_bw: f64,
+}
+
+/// Coordinator/system behaviour knobs (scheduler + SD settings).
+#[derive(Debug, Clone)]
+pub struct SystemConfig {
+    /// Divided-rollout chunk size (tokens of generation per lease).
+    pub chunk_size: u32,
+    /// Paged-KV block size in tokens.
+    pub kv_block_tokens: u32,
+    /// Maximum draft length per request (paper: gamma_max = 8).
+    pub gamma_max: u32,
+    /// MBA priority factor (paper: lambda = 2).
+    pub mba_lambda: f64,
+    /// DGDS draft-client fetch interval.
+    pub dgds_fetch_interval: SimTime,
+    /// Scheduler re-plan interval for MBA gamma adaptation.
+    pub mba_replan_interval: SimTime,
+    /// Fraction of scheduling cycles that pick an underserved group
+    /// regardless of the LFS estimate (anti-starvation safeguard, §3.3).
+    pub starvation_guard_frac: f64,
+    /// Target per-instance KV utilization the admission controller aims
+    /// for (headroom below 1.0 avoids immediate preemptions).
+    pub kv_target_util: f64,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            chunk_size: 2048,
+            kv_block_tokens: 64,
+            gamma_max: 8,
+            mba_lambda: 2.0,
+            dgds_fetch_interval: SimTime::from_millis(200),
+            mba_replan_interval: SimTime::from_secs(5),
+            starvation_guard_frac: 0.05,
+            kv_target_util: 0.92,
+        }
+    }
+}
+
+impl WorkloadConfig {
+    /// Total KV bytes a fully-generated request of length `gen` (plus its
+    /// prompt) occupies.
+    pub fn kv_bytes(&self, prompt: u32, gen: u32) -> u64 {
+        (prompt as u64 + gen as u64) * self.hw.kv_bytes_per_token
+    }
+
+    /// Number of prompt groups in one iteration.
+    pub fn n_groups(&self) -> usize {
+        self.reqs_per_iter / self.group_size
+    }
+
+    /// Scale the workload down for tests/CI: divide request count and
+    /// instance count by `f`, and generation lengths by `len_f`, keeping
+    /// per-instance memory pressure comparable.
+    pub fn scaled(&self, f: usize, len_f: u32) -> WorkloadConfig {
+        let mut c = self.clone();
+        c.n_instances = (self.n_instances / f).max(2);
+        c.reqs_per_iter =
+            ((self.reqs_per_iter / f).max(2 * self.group_size) / self.group_size)
+                * self.group_size;
+        c.max_gen_len = (self.max_gen_len / len_f).max(64);
+        c.avg_gen_len = (self.avg_gen_len / len_f).max(16);
+        c.avg_prompt_len = (self.avg_prompt_len / len_f).max(8);
+        c.hw.kv_capacity_tokens =
+            (self.hw.kv_capacity_tokens / len_f as u64).max(1024);
+        // max_batch is intentionally NOT scaled: the decode-vs-verify
+        // compute regime (which decides where SD pays off) depends on
+        // absolute batch size.
+        c.hw.pool_dram_bytes /= len_f as u64;
+        c.hw.pool_ssd_bytes /= len_f as u64;
+        c
+    }
+
+    /// With a different GRPO group size (Figure 7 sweeps 8 vs 16), keeping
+    /// the number of *requests* fixed.
+    pub fn with_group_size(&self, g: usize) -> WorkloadConfig {
+        let mut c = self.clone();
+        c.group_size = g;
+        c.reqs_per_iter = (self.reqs_per_iter / g).max(1) * g;
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use presets::TaskPreset;
+
+    #[test]
+    fn presets_sane() {
+        for p in ALL_PRESETS {
+            let c = p.workload();
+            assert!(c.n_instances >= 1);
+            assert_eq!(c.reqs_per_iter % c.group_size, 0);
+            assert!(c.avg_gen_len < c.max_gen_len);
+            assert!(c.hw.kv_capacity_tokens > c.max_gen_len as u64);
+            assert!(c.hw.flops > 0.0 && c.hw.hbm_bw > 0.0);
+        }
+    }
+
+    #[test]
+    fn table3_values_match_paper() {
+        let m = TaskPreset::Moonlight.workload();
+        assert_eq!(m.reqs_per_iter, 3200);
+        assert_eq!(m.group_size, 8);
+        assert_eq!(m.max_gen_len, 65536);
+        assert_eq!(m.avg_gen_len, 22386);
+        let q = TaskPreset::Qwen2Vl72b.workload();
+        assert_eq!(q.n_instances, 16);
+        assert_eq!(q.group_size, 16);
+        assert_eq!(q.temperature, 0.8);
+        let k = TaskPreset::KimiK2.workload();
+        assert_eq!(k.gpus_per_instance, 32);
+        assert_eq!(k.max_gen_len, 98304);
+    }
+
+    #[test]
+    fn scaled_preserves_group_multiple() {
+        let c = TaskPreset::Moonlight.workload().scaled(16, 32);
+        assert_eq!(c.reqs_per_iter % c.group_size, 0);
+        assert!(c.n_instances >= 2);
+        assert!(c.avg_gen_len >= 16);
+    }
+
+    #[test]
+    fn with_group_size_keeps_requests() {
+        let c = TaskPreset::Moonlight.workload().with_group_size(16);
+        assert_eq!(c.group_size, 16);
+        assert_eq!(c.reqs_per_iter % 16, 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Context manager (paper §3.3): learns per-group output-length estimates
+//! online from the speculative probe requests and finished siblings.
+//!
+//! Estimate semantics follow the paper exactly: a group with no finished
+//! request is conservatively assumed to be a potential long-tail case
+//! (estimate = generation-length upper bound); once requests finish, the
+//! estimate is the maximum observed finished length, which converges to
+//! the true group maximum from above-or-below as more siblings finish.
+
+use std::collections::BTreeMap;
+
+use crate::workload::{GroupId, GroupSpec};
+
+#[derive(Debug, Clone, Copy)]
+struct GroupCtx {
+    /// Current length estimate (tokens).
+    estimate: u32,
+    /// Finished request count.
+    finished: usize,
+    /// Total requests in the group.
+    size: usize,
+    /// Scheduling credits served (for the starvation guard).
+    served_chunks: u64,
+}
+
+/// Online group-length estimator.
+#[derive(Debug, Default)]
+pub struct ContextManager {
+    groups: BTreeMap<GroupId, GroupCtx>,
+    upper_bound: u32,
+}
+
+impl ContextManager {
+    pub fn new(upper_bound: u32) -> Self {
+        ContextManager {
+            groups: BTreeMap::new(),
+            upper_bound,
+        }
+    }
+
+    pub fn init_groups(&mut self, groups: &[GroupSpec]) {
+        self.groups.clear();
+        for g in groups {
+            self.groups.insert(
+                g.id,
+                GroupCtx {
+                    estimate: self.upper_bound,
+                    finished: 0,
+                    size: g.requests.len(),
+                    served_chunks: 0,
+                },
+            );
+        }
+    }
+
+    /// UPDATEESTIMATE (paper Alg. 2 line 3): a request of `group`
+    /// finished at `len` tokens.
+    pub fn on_finished(&mut self, group: GroupId, len: u32) {
+        let g = self
+            .groups
+            .get_mut(&group)
+            .expect("finished request from unknown group");
+        if g.finished == 0 {
+            // First completion replaces the conservative upper bound.
+            g.estimate = len;
+        } else {
+            g.estimate = g.estimate.max(len);
+        }
+        g.finished += 1;
+        debug_assert!(g.finished <= g.size);
+    }
+
+    /// Current length estimate for LFS ordering.
+    pub fn estimate(&self, group: GroupId) -> u32 {
+        self.groups
+            .get(&group)
+            .map(|g| g.estimate)
+            .unwrap_or(self.upper_bound)
+    }
+
+    /// True once at least one sibling finished (the estimate is "learned"
+    /// rather than the conservative bound).
+    pub fn has_signal(&self, group: GroupId) -> bool {
+        self.groups.map_or_false(group, |g| g.finished > 0)
+    }
+
+    pub fn finished_count(&self, group: GroupId) -> usize {
+        self.groups.get(&group).map(|g| g.finished).unwrap_or(0)
+    }
+
+    /// Record that a chunk of this group was scheduled (starvation guard
+    /// bookkeeping).
+    pub fn on_scheduled(&mut self, group: GroupId) {
+        if let Some(g) = self.groups.get_mut(&group) {
+            g.served_chunks += 1;
+        }
+    }
+
+    /// The group with the fewest served chunks (ties by id) — the
+    /// anti-starvation candidate.
+    pub fn most_underserved(
+        &self,
+        candidates: impl Iterator<Item = GroupId>,
+    ) -> Option<GroupId> {
+        candidates.min_by_key(|g| {
+            (
+                self.groups.get(g).map(|c| c.served_chunks).unwrap_or(0),
+                g.0,
+            )
+        })
+    }
+}
+
+trait MapExt<K, V> {
+    fn map_or_false(&self, k: K, f: impl Fn(&V) -> bool) -> bool;
+}
+
+impl<K: Ord, V> MapExt<K, V> for BTreeMap<K, V> {
+    fn map_or_false(&self, k: K, f: impl Fn(&V) -> bool) -> bool {
+        self.get(&k).map(f).unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{GroupSpec, RequestId, RequestSpec};
+
+    fn group(id: u32, lens: &[u32]) -> GroupSpec {
+        GroupSpec {
+            id: GroupId(id),
+            prompt_len: 10,
+            requests: lens
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| RequestSpec {
+                    id: RequestId(id * 100 + i as u32),
+                    group: GroupId(id),
+                    prompt_len: 10,
+                    gen_len: l,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn starts_at_upper_bound() {
+        let mut cm = ContextManager::new(65536);
+        cm.init_groups(&[group(0, &[100, 200])]);
+        assert_eq!(cm.estimate(GroupId(0)), 65536);
+        assert!(!cm.has_signal(GroupId(0)));
+    }
+
+    #[test]
+    fn first_finish_replaces_bound_then_max() {
+        let mut cm = ContextManager::new(65536);
+        cm.init_groups(&[group(0, &[100, 200, 300])]);
+        cm.on_finished(GroupId(0), 100);
+        assert_eq!(cm.estimate(GroupId(0)), 100);
+        cm.on_finished(GroupId(0), 300);
+        assert_eq!(cm.estimate(GroupId(0)), 300);
+        cm.on_finished(GroupId(0), 200);
+        assert_eq!(cm.estimate(GroupId(0)), 300); // monotone max
+        assert_eq!(cm.finished_count(GroupId(0)), 3);
+    }
+
+    #[test]
+    fn underserved_picks_least_scheduled() {
+        let mut cm = ContextManager::new(1000);
+        cm.init_groups(&[group(0, &[1]), group(1, &[1]), group(2, &[1])]);
+        cm.on_scheduled(GroupId(0));
+        cm.on_scheduled(GroupId(0));
+        cm.on_scheduled(GroupId(2));
+        let candidates = [GroupId(0), GroupId(1), GroupId(2)];
+        assert_eq!(
+            cm.most_underserved(candidates.iter().copied()),
+            Some(GroupId(1))
+        );
+    }
+
+    #[test]
+    fn unknown_group_falls_back_to_bound() {
+        let cm = ContextManager::new(4242);
+        assert_eq!(cm.estimate(GroupId(9)), 4242);
+    }
+}

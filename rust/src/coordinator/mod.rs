@@ -1,0 +1,11 @@
+//! The rollout coordinator: request/chunk state machine, the global
+//! request buffer, and the context manager that learns group-level length
+//! estimates online (the paper's "Group-Aware Context Learning").
+
+pub mod buffer;
+pub mod context;
+pub mod request;
+
+pub use buffer::RequestBuffer;
+pub use context::ContextManager;
+pub use request::{KvLocation, Phase, ReqState};

@@ -1,0 +1,149 @@
+//! Request lifecycle state.
+//!
+//! Divided rollout (paper §3.2) makes the schedulable unit a *chunk*: a
+//! bounded lease of generation progress on one instance. A request cycles
+//! Waiting → Running(chunk on instance i) → Paused (KV parked in the
+//! global pool) → Running(chunk on instance j) → ... → Finished. Systems
+//! without divided rollout (veRL/StreamRL baselines) simply use one
+//! whole-request chunk and never enter Paused except via preemption.
+
+use crate::sim::clock::SimTime;
+use crate::workload::{GroupId, InstanceId, RequestId, RequestSpec};
+
+/// Where a request's KVCache currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvLocation {
+    /// Nothing materialized (fresh request, or dropped by preemption).
+    Nowhere,
+    /// Resident on an instance's HBM.
+    Instance(InstanceId),
+    /// Parked in the global Mooncake-like pool.
+    Pool,
+}
+
+/// Scheduling phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the request buffer, never run or between chunks.
+    Waiting,
+    /// Actively generating on an instance.
+    Running(InstanceId),
+    /// Done (reached its true generation length).
+    Finished,
+}
+
+/// Full per-request coordinator state.
+#[derive(Debug, Clone)]
+pub struct ReqState {
+    pub spec: RequestSpec,
+    pub phase: Phase,
+    /// Tokens generated so far.
+    pub generated: u32,
+    /// KV tokens currently materialized somewhere (prompt + generated, or
+    /// 0 after a preemption drop).
+    pub kv_tokens: u64,
+    pub kv_location: KvLocation,
+    /// True if the next time this request runs it must recompute its KV
+    /// from scratch (it was preempted without pool backing).
+    pub needs_reprefill: bool,
+    /// Tokens still allowed in the current chunk lease (Running only).
+    pub chunk_remaining: u32,
+    /// Designated speculative probe of its group (paper §3.3).
+    pub is_probe: bool,
+    pub first_scheduled: Option<SimTime>,
+    pub finished_at: Option<SimTime>,
+    /// Number of chunks this request has been scheduled as.
+    pub chunks_run: u32,
+    /// Number of times preempted.
+    pub preemptions: u32,
+}
+
+impl ReqState {
+    pub fn new(spec: RequestSpec, is_probe: bool) -> Self {
+        ReqState {
+            spec,
+            phase: Phase::Waiting,
+            generated: 0,
+            kv_tokens: 0,
+            kv_location: KvLocation::Nowhere,
+            needs_reprefill: true,
+            chunk_remaining: 0,
+            is_probe,
+            first_scheduled: None,
+            finished_at: None,
+            chunks_run: 0,
+            preemptions: 0,
+        }
+    }
+
+    pub fn id(&self) -> RequestId {
+        self.spec.id
+    }
+
+    pub fn group(&self) -> GroupId {
+        self.spec.group
+    }
+
+    /// Tokens left to generate (ground truth — only the engine may call
+    /// this; schedulers other than Oracle must not).
+    pub fn remaining_true(&self) -> u32 {
+        self.spec.gen_len.saturating_sub(self.generated)
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.phase, Phase::Running(_))
+    }
+
+    /// KV tokens the request will need on an instance to run a chunk of
+    /// `chunk` tokens: existing KV plus new growth (and prompt, if the KV
+    /// must be rebuilt).
+    pub fn kv_demand(&self, chunk: u32) -> u64 {
+        let base = if self.needs_reprefill {
+            self.spec.prompt_len as u64 + self.generated as u64
+        } else {
+            self.kv_tokens
+        };
+        base + chunk as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> RequestSpec {
+        RequestSpec {
+            id: RequestId(1),
+            group: GroupId(0),
+            prompt_len: 100,
+            gen_len: 1000,
+        }
+    }
+
+    #[test]
+    fn new_request_needs_prefill() {
+        let r = ReqState::new(spec(), true);
+        assert!(r.needs_reprefill);
+        assert_eq!(r.kv_location, KvLocation::Nowhere);
+        assert_eq!(r.remaining_true(), 1000);
+        assert!(r.is_probe);
+    }
+
+    #[test]
+    fn kv_demand_accounts_for_reprefill() {
+        let mut r = ReqState::new(spec(), false);
+        r.generated = 400;
+        // Preempted state: KV dropped, must rebuild prompt+generated.
+        r.needs_reprefill = true;
+        r.kv_tokens = 0;
+        assert_eq!(r.kv_demand(256), 100 + 400 + 256);
+        // Paused-with-pool state: KV intact.
+        r.needs_reprefill = false;
+        r.kv_tokens = 500;
+        assert_eq!(r.kv_demand(256), 756);
+    }
+}

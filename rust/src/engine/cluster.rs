@@ -1,0 +1,884 @@
+//! The cluster rollout simulation driver.
+//!
+//! Owns the instance fleet, the request buffer, the global KV pool, the
+//! active scheduling policy and SD strategy, and advances virtual time
+//! with a discrete-event loop. The coordinator/scheduler/spec code under
+//! test is the production code; only token generation is replaced by the
+//! fluid expected-rate model (DESIGN.md §2).
+
+use std::collections::BTreeMap;
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::coordinator::{KvLocation, Phase, RequestBuffer};
+use crate::engine::costmodel::CostModel;
+use crate::engine::instance::{Instance, Interval, RunningReq};
+use crate::kvcache::GlobalKvPool;
+use crate::metrics::{Completion, LoadSample, RolloutMetrics};
+use crate::scheduler::{InstanceView, SchedCtx, Scheduler};
+use crate::sim::clock::SimTime;
+use crate::sim::events::EventQueue;
+use crate::spec::mba::{mba_allocate, MbaInputs};
+use crate::spec::simmodel::{SdStrategy, SpecCtx, SpecSim};
+use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
+
+/// Events driving the simulation.
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// End of a planned macro-interval on an instance.
+    Wake { instance: InstanceId, epoch: u64 },
+    /// A scheduled request's KV transfer / (re)prefill completed.
+    Arrive { req: RequestId },
+    /// Periodic telemetry sampling.
+    Sample,
+}
+
+/// Result of a rollout run.
+pub struct RolloutOutcome {
+    pub metrics: RolloutMetrics,
+    pub buffer: RequestBuffer,
+}
+
+/// Per-group live progress used for SD context (how many reference
+/// streams the CST would hold).
+#[derive(Debug, Clone, Copy, Default)]
+struct GroupProgress {
+    finished: usize,
+    running: usize,
+}
+
+pub struct ClusterSim {
+    cfg: WorkloadConfig,
+    sys: SystemConfig,
+    cost: CostModel,
+    instances: Vec<Instance>,
+    buffer: RequestBuffer,
+    pool: GlobalKvPool,
+    scheduler: Box<dyn Scheduler>,
+    spec: SpecSim,
+    metrics: RolloutMetrics,
+    queue: EventQueue<Event>,
+    group_progress: BTreeMap<GroupId, GroupProgress>,
+    /// Last instance each request ran on (for migration counting).
+    last_instance: BTreeMap<RequestId, InstanceId>,
+    /// Partial Rollout: stop after this many completions.
+    stop_after: Option<usize>,
+    sample_interval: SimTime,
+    /// Acceptance-length bookkeeping: Σ rate·steps and Σ steps over all
+    /// running request-intervals (for the τ metric).
+    accept_len_weighted: f64,
+    accept_steps: f64,
+    /// Upper bound on events (runaway guard).
+    max_events: u64,
+    schedule_dirty: bool,
+}
+
+impl ClusterSim {
+    pub fn new(
+        cfg: WorkloadConfig,
+        sys: SystemConfig,
+        groups: Vec<GroupSpec>,
+        mut scheduler: Box<dyn Scheduler>,
+        sd: SdStrategy,
+    ) -> Self {
+        scheduler.init(&groups, &cfg, &sys);
+        let buffer = RequestBuffer::from_groups(&groups);
+        let instances = (0..cfg.n_instances)
+            .map(|i| {
+                Instance::new(
+                    InstanceId(i as u32),
+                    cfg.hw.kv_capacity_tokens,
+                    sys.kv_block_tokens,
+                )
+            })
+            .collect();
+        let pool = GlobalKvPool::new(&cfg.hw, cfg.n_instances.max(1));
+        let metrics = RolloutMetrics::new(cfg.n_instances);
+        let mut group_progress = BTreeMap::new();
+        for g in &groups {
+            group_progress.insert(g.id, GroupProgress::default());
+        }
+        ClusterSim {
+            cost: CostModel::new(&cfg.hw),
+            spec: SpecSim::new(sd).with_richness(cfg.sd_richness),
+            cfg,
+            sys,
+            instances,
+            buffer,
+            pool,
+            scheduler,
+            metrics,
+            queue: EventQueue::new(),
+            group_progress,
+            last_instance: BTreeMap::new(),
+            stop_after: None,
+            sample_interval: SimTime::from_secs(10),
+            accept_len_weighted: 0.0,
+            accept_steps: 0.0,
+            max_events: 50_000_000,
+            schedule_dirty: true,
+        }
+    }
+
+    /// Partial Rollout mode: terminate the iteration after `n`
+    /// completions (remaining requests carry over — §4.4.3).
+    pub fn stop_after(mut self, n: usize) -> Self {
+        self.stop_after = Some(n);
+        self
+    }
+
+    pub fn sample_interval(mut self, t: SimTime) -> Self {
+        self.sample_interval = t;
+        self
+    }
+
+    /// Run the rollout to completion. Panics if the event loop stalls
+    /// (a scheduling deadlock — treated as a bug, not a result).
+    pub fn run(mut self) -> RolloutOutcome {
+        let debug = std::env::var("SEER_DEBUG").is_ok();
+        self.try_schedule();
+        self.queue.schedule_in(self.sample_interval, Event::Sample);
+        let mut events = 0u64;
+        while !self.done() {
+            if debug && events % 200_000 == 0 && events > 0 {
+                eprintln!(
+                    "[sim] events={} t={:.1}s finished={}/{} waiting={} preempt={} tokens={}",
+                    events,
+                    self.queue.now().as_secs_f64(),
+                    self.buffer.n_finished(),
+                    self.buffer.len(),
+                    self.buffer.n_waiting(),
+                    self.metrics.preemptions,
+                    self.metrics.tokens_generated,
+                );
+                for inst in &self.instances {
+                    eprintln!(
+                        "  [inst {}] running={} pending={} used={}/{} free_tok={} interval={:?}",
+                        inst.id.0,
+                        inst.running.len(),
+                        inst.pending.len(),
+                        inst.alloc.used_blocks(),
+                        inst.alloc.capacity_blocks(),
+                        inst.alloc.free_tokens(),
+                        inst.interval.map(|iv| (iv.step_us, iv.steps)),
+                    );
+                }
+            }
+            let Some(ev) = self.queue.pop() else {
+                // Nothing in flight but requests remain: scheduling must
+                // make progress, otherwise the configuration is infeasible.
+                self.schedule_dirty = true;
+                self.try_schedule();
+                if self.queue.is_empty() {
+                    panic!(
+                        "rollout stalled: {} waiting, {} finished of {}",
+                        self.buffer.n_waiting(),
+                        self.buffer.n_finished(),
+                        self.buffer.len()
+                    );
+                }
+                continue;
+            };
+            events += 1;
+            assert!(
+                events < self.max_events,
+                "event budget exceeded — runaway simulation"
+            );
+            let now = self.queue.now();
+            match ev.payload {
+                Event::Wake { instance, epoch } => {
+                    let idx = instance.0 as usize;
+                    if self.instances[idx].epoch != epoch {
+                        continue; // stale wake
+                    }
+                    self.commit_and_handle(idx, now);
+                    self.try_schedule();
+                    self.plan_interval(idx, now);
+                }
+                Event::Arrive { req } => {
+                    self.handle_arrival(req, now);
+                }
+                Event::Sample => {
+                    self.record_sample(now);
+                    if !self.done() {
+                        self.queue
+                            .schedule_in(self.sample_interval, Event::Sample);
+                    }
+                }
+            }
+        }
+        self.finalize();
+        RolloutOutcome {
+            metrics: self.metrics,
+            buffer: self.buffer,
+        }
+    }
+
+    fn done(&self) -> bool {
+        if let Some(n) = self.stop_after {
+            if self.buffer.n_finished() >= n {
+                return true;
+            }
+        }
+        self.buffer.all_finished()
+    }
+
+    fn finalize(&mut self) {
+        let last_completion = self
+            .metrics
+            .completions
+            .iter()
+            .map(|c| c.finished_at)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        self.metrics.makespan = last_completion;
+        for (i, inst) in self.instances.iter().enumerate() {
+            self.metrics.busy_time[i] = inst.busy;
+            self.metrics.engine_steps += inst.steps_total;
+        }
+        self.metrics.tau = if self.accept_steps > 0.0 {
+            self.accept_len_weighted / self.accept_steps
+        } else {
+            1.0
+        };
+    }
+
+    // ------------------------------------------------------------------
+    // Interval planning: decide SD budgets and the next boundary.
+    // ------------------------------------------------------------------
+
+    fn plan_interval(&mut self, idx: usize, now: SimTime) {
+        let inst = &self.instances[idx];
+        if inst.interval.is_some() || inst.running.is_empty() {
+            return;
+        }
+
+        // --- SD decision ------------------------------------------------
+        let batch = inst.running.len();
+        let ids: Vec<RequestId> = inst.running.keys().copied().collect();
+        let mut high = 0usize;
+        let mut ctxs: Vec<(RequestId, SpecCtx, bool)> = Vec::with_capacity(batch);
+        for id in &ids {
+            let r = self.buffer.get(*id);
+            let gp = self.group_progress.get(&r.group()).copied().unwrap_or_default();
+            // References the group CST holds: finished siblings plus
+            // concurrently-running ones (their prefixes are aggregated).
+            let refs = gp.finished + gp.running.saturating_sub(1);
+            let hp = r.is_probe && gp.finished == 0;
+            if hp {
+                high += 1;
+            }
+            // Multi-path drafting pays off in the low-concurrency tail.
+            let top_k = if batch <= 8 { 4 } else { 1 };
+            ctxs.push((
+                *id,
+                SpecCtx {
+                    generated: r.generated,
+                    group_refs: refs,
+                    top_k,
+                },
+                hp,
+            ));
+        }
+
+        let kv_tokens = inst.alloc.used_tokens();
+        let (gamma_h, gamma_l) = match self.spec.strategy {
+            SdStrategy::None => (0, 0),
+            SdStrategy::GroupedCst => {
+                // MBA (paper Alg. 1) with the batch-mean β profile.
+                let mean_ctx = SpecCtx {
+                    generated: ctxs
+                        .iter()
+                        .map(|(_, c, _)| c.generated as u64)
+                        .sum::<u64>() as u32
+                        / batch as u32,
+                    group_refs: ctxs
+                        .iter()
+                        .map(|(_, c, _)| c.group_refs)
+                        .sum::<usize>()
+                        / batch,
+                    top_k: ctxs[0].1.top_k,
+                };
+                let beta =
+                    self.spec.beta_profile(&mean_ctx, self.sys.gamma_max);
+                let alpha = self.spec.alpha(&mean_ctx);
+                let d = mba_allocate(
+                    &self.cost,
+                    &MbaInputs {
+                        batch_high: high,
+                        batch_low: batch - high,
+                        beta,
+                        gamma_max: self.sys.gamma_max,
+                        lambda: self.sys.mba_lambda,
+                        alpha,
+                        kv_tokens,
+                        draft_cost_per_gamma: SimTime::from_micros(2),
+                    },
+                );
+                (d.gamma_high, d.gamma_low)
+            }
+            _ => {
+                // Vanilla strategies with uniform adaptive γ (the paper
+                // grants baselines adaptive draft lengths, §4.2.1).
+                let mean_ctx = ctxs[0].1;
+                let alpha = self.spec.alpha(&mean_ctx);
+                let mut best = (0u32, self
+                    .cost
+                    .step_time(batch, kv_tokens, batch as u64)
+                    .as_secs_f64());
+                for g in 1..=self.spec.static_gamma() {
+                    let t = self.cost.t_sd(
+                        batch,
+                        kv_tokens,
+                        g,
+                        alpha,
+                        self.spec.draft_cost(batch, g),
+                    );
+                    if t < best.1 {
+                        best = (g, t);
+                    }
+                }
+                (best.0, best.0)
+            }
+        };
+
+        // --- Rates -------------------------------------------------------
+        let inst = &mut self.instances[idx];
+        let mut min_steps = u64::MAX;
+        for (id, ctx, hp) in &ctxs {
+            let gamma = if *hp { gamma_h } else { gamma_l };
+            let alpha = self.spec.alpha(ctx);
+            let rate = if gamma == 0 {
+                1.0
+            } else {
+                CostModel::expected_accept_len(gamma, alpha)
+            };
+            let r = self.buffer.get(*id);
+            let budget =
+                r.remaining_true().min(r.chunk_remaining).max(1);
+            let rr = inst.running.get_mut(id).unwrap();
+            rr.rate = rate;
+            rr.gamma = gamma;
+            rr.high_priority = *hp;
+            rr.interval_budget = budget;
+            let steps = ((budget as f64 - rr.frac) / rate).ceil() as u64;
+            min_steps = min_steps.min(steps.max(1));
+        }
+
+        // --- KV headroom: preempt until one step fits --------------------
+        // Worst-case token growth over one step is batch + Σrate (each
+        // request carries < 1 fractional token). Block-rounding overshoot
+        // is absorbed by `grow_upto` clamping at commit time.
+        loop {
+            let inst = &self.instances[idx];
+            let b = inst.running.len() as u64;
+            let total_rate: f64 =
+                inst.running.values().map(|r| r.rate).sum();
+            let need = b + total_rate.ceil() as u64;
+            if inst.alloc.free_tokens() >= need || inst.running.len() <= 1 {
+                break;
+            }
+            let running: Vec<(RequestId, SimTime)> = inst
+                .running
+                .iter()
+                .map(|(id, r)| (*id, r.started_at))
+                .collect();
+            let victim = self
+                .scheduler
+                .preempt_victim(&running, &self.buffer)
+                .expect("no preemption victim");
+            self.evict(idx, victim, now, true);
+            self.schedule_dirty = true;
+        }
+        let inst = &mut self.instances[idx];
+        if inst.running.is_empty() {
+            return;
+        }
+        let batch = inst.running.len();
+        let mut positions = 0u64;
+        let mut max_gamma = 0u32;
+        let mut total_rate = 0.0f64;
+        for rr in inst.running.values() {
+            positions += rr.gamma as u64 + 1;
+            max_gamma = max_gamma.max(rr.gamma);
+            total_rate += rr.rate;
+        }
+        let kv_tokens = inst.alloc.used_tokens();
+
+        // KV boundary: after n steps total token growth is at most
+        // batch + n·Σrate; stop the interval before free runs out.
+        let free = inst.alloc.free_tokens();
+        let kv_steps = ((free.saturating_sub(batch as u64)) as f64
+            / total_rate)
+            .floor() as u64;
+        let n = min_steps.min(kv_steps.max(1)).clamp(1, 256);
+
+        // Draft cost scales with the *mean* draft length over the batch
+        // (total draft tokens), not the max.
+        let mean_gamma = ((positions.saturating_sub(batch as u64)) as f64
+            / batch as f64)
+            .round() as u32;
+        let _ = max_gamma;
+        let step_time = self.cost.step_time(batch, kv_tokens, positions)
+            + self.spec.draft_cost(batch, mean_gamma);
+        let iv = Interval {
+            start: now,
+            step_us: step_time.as_micros().max(1),
+            steps: n,
+        };
+        let end = iv.end();
+        inst.set_interval(iv);
+        let epoch = inst.epoch;
+        self.queue.schedule_at(
+            end,
+            Event::Wake {
+                instance: InstanceId(idx as u32),
+                epoch,
+            },
+        );
+    }
+
+    /// Remove a request from an instance. `preempted`: true for OOM
+    /// eviction (vs. voluntary chunk-end parking).
+    fn evict(
+        &mut self,
+        idx: usize,
+        id: RequestId,
+        _now: SimTime,
+        preempted: bool,
+    ) {
+        let inst = &mut self.instances[idx];
+        inst.running.remove(&id).expect("evicting non-running request");
+        inst.epoch += 1;
+        let kv = inst.alloc.release(id);
+        let r = self.buffer.get_mut(id);
+        if self.scheduler.uses_global_pool() {
+            // Park in the Mooncake pool: resume is a cheap fetch.
+            let bytes = kv * self.cfg.hw.kv_bytes_per_token;
+            self.pool.store(id, bytes);
+            r.kv_location = KvLocation::Pool;
+            r.needs_reprefill = false;
+        } else {
+            // Conventional preemption: KV dropped, re-prefill later.
+            r.kv_location = KvLocation::Nowhere;
+            r.kv_tokens = 0;
+            r.needs_reprefill = true;
+        }
+        if preempted {
+            r.preemptions += 1;
+            self.metrics.preemptions += 1;
+        }
+        self.buffer.mark_waiting(id);
+        if let Some(gp) = self.group_progress.get_mut(&self.buffer.get(id).group())
+        {
+            gp.running = gp.running.saturating_sub(1);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Commit handling: apply token gains, detect completions/chunk ends.
+    // ------------------------------------------------------------------
+
+    fn commit_and_handle(&mut self, idx: usize, now: SimTime) {
+        let commit = self.instances[idx].commit_until(now);
+        if commit.gained.is_empty() {
+            return;
+        }
+        let mut completed = Vec::new();
+        let mut chunk_ended = Vec::new();
+        for (id, gain) in &commit.gained {
+            let inst = &mut self.instances[idx];
+            // τ accounting over SD-active request-steps only (the paper's
+            // acceptance-length metric is per verify step).
+            if let Some(rr) = inst.running.get(id) {
+                if rr.gamma > 0 {
+                    self.accept_steps += commit.steps;
+                    self.accept_len_weighted += *gain as f64;
+                }
+            }
+            // Clamp to KV capacity: tokens beyond the granted amount are
+            // lost (the step stalled at the memory wall; the fluid model
+            // charges the time but not the progress).
+            let granted = if *gain > 0 {
+                inst.alloc.grow_upto(*id, *gain as u64) as u32
+            } else {
+                0
+            };
+            let r = self.buffer.get_mut(*id);
+            r.generated += granted;
+            r.kv_tokens += granted as u64;
+            debug_assert!(r.generated <= r.spec.gen_len);
+            r.chunk_remaining = r.chunk_remaining.saturating_sub(granted);
+            self.metrics.tokens_generated += granted as u64;
+            if r.generated >= r.spec.gen_len {
+                completed.push(*id);
+            } else if r.chunk_remaining == 0 {
+                chunk_ended.push(*id);
+            }
+        }
+        self.metrics.spec_accepted_tokens +=
+            commit.accepted_tokens.round() as u64;
+
+        for id in completed {
+            self.finish_request(idx, id, now);
+        }
+        for id in chunk_ended {
+            let r = self.buffer.get(id);
+            debug_assert!(!r.is_finished());
+            self.evict(idx, id, now, false);
+            let r = self.buffer.get(id).clone();
+            self.scheduler.on_chunk_end(&r);
+            self.schedule_dirty = true;
+        }
+    }
+
+    fn finish_request(&mut self, idx: usize, id: RequestId, now: SimTime) {
+        let inst = &mut self.instances[idx];
+        inst.running.remove(&id).expect("finishing non-running request");
+        inst.epoch += 1;
+        inst.alloc.release(id);
+        self.pool.remove(id);
+        let r = self.buffer.get_mut(id);
+        r.finished_at = Some(now);
+        r.kv_location = KvLocation::Nowhere;
+        let first = r.first_scheduled.unwrap_or(now);
+        let gen_len = r.generated;
+        let group = r.group();
+        self.buffer.mark_finished(id);
+        self.metrics.completions.push(Completion {
+            id,
+            finished_at: now,
+            first_scheduled_at: first,
+            gen_len,
+        });
+        let gp = self.group_progress.get_mut(&group).unwrap();
+        gp.finished += 1;
+        gp.running = gp.running.saturating_sub(1);
+        let r = self.buffer.get(id).clone();
+        self.scheduler.on_finished(&r);
+        self.schedule_dirty = true;
+    }
+
+    // ------------------------------------------------------------------
+    // Scheduling + arrivals.
+    // ------------------------------------------------------------------
+
+    fn try_schedule(&mut self) {
+        if !self.schedule_dirty || self.buffer.n_waiting() == 0 {
+            return;
+        }
+        self.schedule_dirty = false;
+        let now = self.queue.now();
+        let views: Vec<InstanceView> = self
+            .instances
+            .iter()
+            .map(|inst| InstanceView {
+                id: inst.id,
+                free_kv_tokens: inst.admission_headroom(self.sys.kv_target_util),
+                capacity_tokens: inst.capacity_tokens,
+                running: inst.running.len() + inst.pending.len(),
+                max_batch: self.cfg.hw.max_batch,
+            })
+            .collect();
+        let assignments = {
+            let ctx = SchedCtx {
+                now,
+                instances: &views,
+                buffer: &self.buffer,
+            };
+            self.scheduler.schedule(&ctx)
+        };
+        for a in assignments {
+            let idx = a.instance.0 as usize;
+            let r = self.buffer.get(a.req);
+            debug_assert!(matches!(r.phase, Phase::Waiting));
+            let demand = r.kv_demand(a.chunk.min(self.sys.chunk_size.max(a.chunk)));
+            // Defense in depth: re-validate against live headroom.
+            if self.instances[idx].admission_headroom(1.0) < demand {
+                self.schedule_dirty = true;
+                continue;
+            }
+            let chunk = a.chunk.min(
+                self.cfg.max_gen_len, // lease can't exceed the cap
+            );
+            // Transfer / prefill delay before the request joins the batch.
+            let r = self.buffer.get_mut(a.req);
+            let delay = if r.needs_reprefill {
+                let tokens = r.spec.prompt_len as u64 + r.generated as u64;
+                if r.generated > 0 {
+                    self.metrics.re_prefill_tokens += tokens;
+                }
+                r.kv_tokens = tokens; // will materialize on arrival
+                self.cost.prefill_time(tokens)
+            } else if r.kv_location == KvLocation::Pool {
+                let t = self
+                    .pool
+                    .fetch(a.req)
+                    .expect("pool lost a parked request");
+                let moved = self.last_instance.get(&a.req) != Some(&a.instance);
+                if moved {
+                    self.metrics.migrations += 1;
+                    self.metrics.migrated_bytes +=
+                        r.kv_tokens * self.cfg.hw.kv_bytes_per_token;
+                }
+                t
+            } else {
+                SimTime::from_micros(100)
+            };
+            r.chunk_remaining = chunk;
+            r.phase = Phase::Running(a.instance);
+            r.kv_location = KvLocation::Instance(a.instance);
+            if r.first_scheduled.is_none() {
+                r.first_scheduled = Some(now);
+            }
+            let base_kv = r.kv_tokens;
+            self.buffer.mark_scheduled(a.req);
+            self.instances[idx].pending.insert(a.req, base_kv + chunk as u64);
+            self.last_instance.insert(a.req, a.instance);
+            self.queue
+                .schedule_at(now + delay, Event::Arrive { req: a.req });
+        }
+    }
+
+    fn handle_arrival(&mut self, id: RequestId, now: SimTime) {
+        let r = self.buffer.get(id);
+        let Phase::Running(inst_id) = r.phase else {
+            return; // cancelled in flight (should not happen)
+        };
+        let idx = inst_id.0 as usize;
+        // Close the in-flight interval before batch composition changes.
+        self.commit_and_handle(idx, now);
+
+        let inst = &mut self.instances[idx];
+        inst.pending.remove(&id);
+        let r = self.buffer.get_mut(id);
+        let base = r.kv_tokens.max(r.spec.prompt_len as u64);
+        r.kv_tokens = base;
+        if !self.instances[idx].alloc.grow(id, base) {
+            // Capacity was consumed while in flight: bounce back.
+            let r = self.buffer.get_mut(id);
+            r.phase = Phase::Waiting;
+            r.kv_location = if self.scheduler.uses_global_pool()
+                && !r.needs_reprefill
+            {
+                let bytes = r.kv_tokens * self.cfg.hw.kv_bytes_per_token;
+                self.pool.store(id, bytes);
+                KvLocation::Pool
+            } else {
+                r.kv_tokens = 0;
+                r.needs_reprefill = true;
+                KvLocation::Nowhere
+            };
+            self.buffer.mark_waiting(id);
+            self.schedule_dirty = true;
+            self.try_schedule();
+            // The commit above closed the running interval — re-plan so
+            // the resident batch keeps generating.
+            self.plan_interval(idx, now);
+            return;
+        }
+        let r = self.buffer.get_mut(id);
+        r.needs_reprefill = false;
+        let inst = &mut self.instances[idx];
+        inst.running.insert(
+            id,
+            RunningReq {
+                rate: 1.0,
+                gamma: 0,
+                frac: 0.0,
+                interval_budget: 0,
+                high_priority: false,
+                started_at: now,
+            },
+        );
+        inst.epoch += 1;
+        let group = self.buffer.get(id).group();
+        if let Some(gp) = self.group_progress.get_mut(&group) {
+            gp.running += 1;
+        }
+        self.plan_interval(idx, now);
+    }
+
+    fn record_sample(&mut self, now: SimTime) {
+        for inst in &self.instances {
+            self.metrics.load_samples.push(LoadSample {
+                t: now,
+                instance: inst.id,
+                kv_utilization: inst.kv_utilization(),
+                running: inst.running.len(),
+            });
+        }
+    }
+
+    /// Mean acceptance length over the whole run (τ, Figure 11).
+    pub fn mean_acceptance(&self) -> f64 {
+        if self.accept_steps == 0.0 {
+            1.0
+        } else {
+            self.accept_len_weighted / self.accept_steps
+        }
+    }
+}
+
+/// Convenience: run one iteration of `cfg` under `scheduler`/`sd` and
+/// return the outcome. Seeds the workload with `seed`.
+pub fn run_rollout(
+    cfg: &WorkloadConfig,
+    sys: &SystemConfig,
+    scheduler: Box<dyn Scheduler>,
+    sd: SdStrategy,
+    seed: u64,
+) -> RolloutOutcome {
+    let w = crate::workload::generate_iteration(cfg, seed);
+    let expected = w.n_requests();
+    let sim = ClusterSim::new(cfg.clone(), sys.clone(), w.groups, scheduler, sd);
+    let out = sim.run();
+    out.metrics.check_complete(expected);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+    use crate::scheduler::{ContextMode, SeerScheduler, VerlScheduler};
+
+    fn quick_run(
+        preset: TaskPreset,
+        sched: Box<dyn Scheduler>,
+        sd: SdStrategy,
+    ) -> RolloutOutcome {
+        let cfg = preset.workload_for_test();
+        let sys = SystemConfig {
+            chunk_size: 128,
+            ..Default::default()
+        };
+        let w = crate::workload::generate_iteration(&cfg, 42);
+        ClusterSim::new(cfg, sys, w.groups, sched, sd)
+            .sample_interval(SimTime::from_secs(2))
+            .run()
+    }
+
+    #[test]
+    fn verl_completes_all_requests() {
+        let out = quick_run(
+            TaskPreset::Moonlight,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        );
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter);
+        assert!(out.metrics.makespan > SimTime::ZERO);
+        assert!(out.metrics.tokens_generated > 0);
+        out.buffer.check_invariants();
+    }
+
+    #[test]
+    fn seer_completes_all_requests() {
+        let out = quick_run(
+            TaskPreset::Moonlight,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        );
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter);
+        out.buffer.check_invariants();
+    }
+
+    #[test]
+    fn generated_tokens_match_workload() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 7);
+        let expected = w.total_gen_tokens();
+        let sim = ClusterSim::new(
+            cfg,
+            SystemConfig {
+                chunk_size: 128,
+                ..Default::default()
+            },
+            w.groups,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+        );
+        let out = sim.run();
+        assert_eq!(out.metrics.tokens_generated, expected);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let a = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        );
+        let b = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        );
+        assert_eq!(a.metrics.makespan, b.metrics.makespan);
+        assert_eq!(a.metrics.tokens_generated, b.metrics.tokens_generated);
+        assert_eq!(a.metrics.preemptions, b.metrics.preemptions);
+    }
+
+    #[test]
+    fn seer_beats_verl_on_memory_constrained_task() {
+        let verl = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        );
+        let seer = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+        );
+        assert!(
+            seer.metrics.makespan < verl.metrics.makespan,
+            "seer {:?} vs verl {:?}",
+            seer.metrics.makespan,
+            verl.metrics.makespan
+        );
+    }
+
+    #[test]
+    fn partial_rollout_stops_early() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 3);
+        let target = cfg.reqs_per_iter / 2;
+        let out = ClusterSim::new(
+            cfg,
+            SystemConfig::default(),
+            w.groups,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        )
+        .stop_after(target)
+        .run();
+        assert!(out.metrics.completions.len() >= target);
+        assert!(out.metrics.completions.len() < out.buffer.len());
+    }
+
+    #[test]
+    fn verl_preempts_under_pressure_seer_does_not() {
+        let verl = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        );
+        let seer = quick_run(
+            TaskPreset::Qwen2Vl72b,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+        );
+        assert!(
+            verl.metrics.preemptions > 0,
+            "baseline should preempt on a memory-constrained task"
+        );
+        assert!(
+            seer.metrics.preemptions * 10 <= verl.metrics.preemptions.max(10),
+            "seer {} vs verl {}",
+            seer.metrics.preemptions,
+            verl.metrics.preemptions
+        );
+    }
+}

@@ -1,0 +1,156 @@
+//! Engine step-time cost model.
+//!
+//! Decode is memory-bound: every forward step streams the (active) weights
+//! once and reads the KV of all batched requests; verification adds a
+//! compute term that grows with the number of processed token positions
+//! (B × (γ+1)). Prefill is compute-bound. The paper's throughput model in
+//! §3.4.1 — T_SD = (1-α)(D + T(B,γ)) / (1-α^{γ+1}) — is evaluated on top
+//! of these primitives by the MBA policy.
+
+use crate::config::HardwareConfig;
+use crate::sim::clock::SimTime;
+
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    hw: HardwareConfig,
+}
+
+impl CostModel {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        CostModel { hw: hw.clone() }
+    }
+
+    /// One engine forward step over `batch` requests whose KV totals
+    /// `kv_tokens`, processing `positions` token positions in total
+    /// (= batch for plain decode; = Σ(γ_i + 1) for verification).
+    pub fn step_time(
+        &self,
+        batch: usize,
+        kv_tokens: u64,
+        positions: u64,
+    ) -> SimTime {
+        if batch == 0 {
+            return SimTime::ZERO;
+        }
+        let kv_bytes = kv_tokens as f64 * self.hw.kv_bytes_per_token as f64;
+        let mem = self.hw.weight_read_time.as_secs_f64()
+            + kv_bytes / self.hw.hbm_bw;
+        let compute =
+            positions as f64 * self.hw.flops_per_token / self.hw.flops;
+        self.hw.step_overhead + SimTime::from_secs_f64(mem.max(compute))
+    }
+
+    /// Prefill (or re-prefill after preemption) of `tokens` tokens:
+    /// compute-bound, floor of one weight stream.
+    pub fn prefill_time(&self, tokens: u64) -> SimTime {
+        let compute =
+            tokens as f64 * self.hw.flops_per_token / self.hw.flops;
+        self.hw.step_overhead
+            + SimTime::from_secs_f64(
+                compute.max(self.hw.weight_read_time.as_secs_f64()),
+            )
+    }
+
+    /// The §3.4.1 expected time for SD to produce one token per request:
+    /// T_SD = (1-α)(D + T(B,γ)) / (1-α^{γ+1}).
+    pub fn t_sd(
+        &self,
+        batch: usize,
+        kv_tokens: u64,
+        gamma: u32,
+        alpha: f64,
+        draft_cost: SimTime,
+    ) -> f64 {
+        let t = self
+            .step_time(batch, kv_tokens, batch as u64 * (gamma as u64 + 1));
+        let alpha = alpha.clamp(0.0, 0.999);
+        let accept = (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha);
+        (t.as_secs_f64() + draft_cost.as_secs_f64()) / accept
+    }
+
+    /// Expected generated tokens per verify step at acceptance rate alpha
+    /// with draft length gamma (including the bonus token).
+    pub fn expected_accept_len(gamma: u32, alpha: f64) -> f64 {
+        let alpha = alpha.clamp(0.0, 0.999);
+        (1.0 - alpha.powi(gamma as i32 + 1)) / (1.0 - alpha)
+    }
+
+    pub fn hw(&self) -> &HardwareConfig {
+        &self.hw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    fn cm() -> CostModel {
+        CostModel::new(&TaskPreset::Moonlight.workload().hw)
+    }
+
+    #[test]
+    fn decode_memory_bound_grows_with_kv() {
+        let m = cm();
+        let a = m.step_time(32, 100_000, 32);
+        let b = m.step_time(32, 1_000_000, 32);
+        assert!(b > a, "{a:?} vs {b:?}");
+    }
+
+    #[test]
+    fn small_batch_verify_nearly_free() {
+        // §3.4.1: when B is small, T(B, γ) ≈ T(B, 1) — verification of a
+        // few positions hides under the weight-stream floor.
+        let m = cm();
+        let t1 = m.step_time(1, 50_000, 1);
+        let t8 = m.step_time(1, 50_000, 8);
+        let ratio = t8.as_secs_f64() / t1.as_secs_f64();
+        assert!(ratio < 1.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn large_batch_verify_costs() {
+        // At large batch (modest KV) the compute term dominates and γ
+        // matters.
+        let m = cm();
+        let t1 = m.step_time(256, 500_000, 256);
+        let t8 = m.step_time(256, 500_000, 256 * 8);
+        assert!(
+            t8.as_secs_f64() > 1.5 * t1.as_secs_f64(),
+            "{t1:?} vs {t8:?}"
+        );
+    }
+
+    #[test]
+    fn prefill_scales_with_tokens() {
+        let m = cm();
+        let a = m.prefill_time(1_000);
+        let b = m.prefill_time(100_000);
+        assert!(b.as_secs_f64() > 10.0 * a.as_secs_f64());
+    }
+
+    #[test]
+    fn t_sd_beneficial_at_small_batch_only() {
+        let m = cm();
+        let kv = 200_000;
+        // Small batch: SD at γ=4, α=0.7 beats plain decode.
+        let plain_small = m.step_time(4, kv, 4).as_secs_f64();
+        let sd_small = m.t_sd(4, kv, 4, 0.7, SimTime::from_micros(200));
+        assert!(sd_small < plain_small, "{sd_small} vs {plain_small}");
+        // Huge batch: same SD config loses (compute-bound verification).
+        let plain_big = m.step_time(512, kv, 512).as_secs_f64();
+        let sd_big = m.t_sd(512, kv, 4, 0.7, SimTime::from_micros(200));
+        assert!(sd_big > plain_big, "{sd_big} vs {plain_big}");
+    }
+
+    #[test]
+    fn expected_accept_len_formula() {
+        assert!((CostModel::expected_accept_len(0, 0.9) - 1.0).abs() < 1e-9);
+        // γ=1, α=0.5: 1 + 0.5 = 1.5.
+        assert!(
+            (CostModel::expected_accept_len(1, 0.5) - 1.5).abs() < 1e-9
+        );
+        // γ→∞, α=0.5 → 2.0.
+        assert!((CostModel::expected_accept_len(30, 0.5) - 2.0).abs() < 1e-6);
+    }
+}

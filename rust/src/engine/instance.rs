@@ -1,0 +1,279 @@
+//! One simulated inference instance: continuous batching over a paged KV
+//! allocator, advanced in *macro-intervals* — between two scheduling
+//! boundaries every running request generates tokens at its expected
+//! per-step rate (1 + expected accepted draft tokens), so the simulator
+//! pays one event per boundary instead of one per token. The cluster
+//! driver (`cluster.rs`) plans intervals, commits progress and handles
+//! completions/chunk-expiries/preemptions.
+
+use std::collections::BTreeMap;
+
+use crate::kvcache::PagedAllocator;
+use crate::sim::clock::SimTime;
+use crate::workload::{InstanceId, RequestId};
+
+/// Per-running-request state within an instance.
+#[derive(Debug, Clone)]
+pub struct RunningReq {
+    /// Expected tokens per engine step in the current interval
+    /// (1.0 for plain decode; (1-α^{γ+1})/(1-α) with SD).
+    pub rate: f64,
+    /// Draft length assigned for this interval.
+    pub gamma: u32,
+    /// Fractional token progress carried across intervals.
+    pub frac: f64,
+    /// Max whole tokens this request may gain in the current interval
+    /// (min of chunk lease remainder and true remaining length).
+    pub interval_budget: u32,
+    /// Probe / high-priority flag at interval planning time.
+    pub high_priority: bool,
+    pub started_at: SimTime,
+}
+
+/// An in-flight macro-interval.
+#[derive(Debug, Clone, Copy)]
+pub struct Interval {
+    pub start: SimTime,
+    /// Engine step time in microseconds (incl. draft cost amortized).
+    pub step_us: u64,
+    /// Planned number of engine steps.
+    pub steps: u64,
+}
+
+impl Interval {
+    pub fn end(&self) -> SimTime {
+        SimTime::from_micros(self.start.as_micros() + self.step_us * self.steps)
+    }
+}
+
+/// Result of committing an interval (possibly partially).
+#[derive(Debug, Default)]
+pub struct Commit {
+    /// (request, tokens gained) for every running request.
+    pub gained: Vec<(RequestId, u32)>,
+    /// Engine steps executed (fractional during partial commits).
+    pub steps: f64,
+    /// Wall time spent.
+    pub elapsed: SimTime,
+    /// Tokens gained in excess of one-per-step (speculative gains).
+    pub accepted_tokens: f64,
+}
+
+#[derive(Debug)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub capacity_tokens: u64,
+    pub alloc: PagedAllocator,
+    pub running: BTreeMap<RequestId, RunningReq>,
+    /// KV tokens reserved for assignments whose transfer/prefill is still
+    /// in flight (request -> reserved tokens).
+    pub pending: BTreeMap<RequestId, u64>,
+    pub interval: Option<Interval>,
+    /// Bumped on every state change; stale wake events are ignored.
+    pub epoch: u64,
+    pub busy: SimTime,
+    pub steps_total: u64,
+}
+
+impl Instance {
+    pub fn new(id: InstanceId, capacity_tokens: u64, block_tokens: u32) -> Self {
+        Instance {
+            id,
+            capacity_tokens,
+            alloc: PagedAllocator::new(capacity_tokens, block_tokens),
+            running: BTreeMap::new(),
+            pending: BTreeMap::new(),
+            interval: None,
+            epoch: 0,
+            busy: SimTime::ZERO,
+            steps_total: 0,
+        }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Tokens of admission headroom: capacity × target_util minus used
+    /// minus in-flight reservations.
+    pub fn admission_headroom(&self, target_util: f64) -> u64 {
+        let budget = (self.capacity_tokens as f64 * target_util) as u64;
+        // Count real block consumption (not raw tokens) and leave one
+        // block of rounding slack per resident/incoming request, so that
+        // admitted chunks can always grow to their reservation.
+        let block = self.alloc.block_tokens() as u64;
+        let slack =
+            (self.running.len() + self.pending.len() + 1) as u64 * block;
+        let used = self.alloc.used_block_tokens()
+            + self.pending.values().sum::<u64>()
+            + slack;
+        budget.saturating_sub(used)
+    }
+
+    /// Commit the current interval's progress up to `now`. Does NOT
+    /// mutate the allocator or request states — the driver applies the
+    /// returned gains so it can interleave pool/buffer bookkeeping.
+    pub fn commit_until(&mut self, now: SimTime) -> Commit {
+        let Some(iv) = self.interval.take() else {
+            return Commit::default();
+        };
+        let elapsed_us = now.as_micros().saturating_sub(iv.start.as_micros());
+        let steps =
+            (elapsed_us as f64 / iv.step_us as f64).min(iv.steps as f64);
+        let mut commit = Commit {
+            steps,
+            elapsed: SimTime::from_micros(elapsed_us.min(iv.step_us * iv.steps)),
+            ..Default::default()
+        };
+        for (id, r) in self.running.iter_mut() {
+            let raw = r.frac + r.rate * steps;
+            let gain = (raw.floor() as u64).min(r.interval_budget as u64) as u32;
+            r.frac = if (raw.floor() as u64) <= r.interval_budget as u64 {
+                raw - raw.floor()
+            } else {
+                0.0 // budget-clipped: discard overshoot
+            };
+            commit.gained.push((*id, gain));
+            commit.accepted_tokens += (gain as f64 - steps).max(0.0);
+        }
+        self.busy += commit.elapsed;
+        self.steps_total += steps.round() as u64;
+        self.epoch += 1;
+        commit
+    }
+
+    /// Install a new interval (driver computed rates/boundaries).
+    pub fn set_interval(&mut self, iv: Interval) {
+        debug_assert!(self.interval.is_none(), "interval already in flight");
+        debug_assert!(iv.steps >= 1 && iv.step_us >= 1);
+        self.interval = Some(iv);
+        self.epoch += 1;
+    }
+
+    pub fn kv_utilization(&self) -> f64 {
+        self.alloc.utilization()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> Instance {
+        Instance::new(InstanceId(0), 10_000, 16)
+    }
+
+    fn run_req(rate: f64, budget: u32) -> RunningReq {
+        RunningReq {
+            rate,
+            gamma: 0,
+            frac: 0.0,
+            interval_budget: budget,
+            high_priority: false,
+            started_at: SimTime::ZERO,
+        }
+    }
+
+    #[test]
+    fn full_commit_gains_rate_times_steps() {
+        let mut i = inst();
+        i.running.insert(RequestId(1), run_req(1.0, 1000));
+        i.running.insert(RequestId(2), run_req(2.5, 1000));
+        i.set_interval(Interval {
+            start: SimTime::ZERO,
+            step_us: 1000,
+            steps: 10,
+        });
+        let c = i.commit_until(SimTime::from_micros(10_000));
+        assert_eq!(c.steps, 10.0);
+        let gains: BTreeMap<_, _> = c.gained.into_iter().collect();
+        assert_eq!(gains[&RequestId(1)], 10);
+        assert_eq!(gains[&RequestId(2)], 25);
+        assert!((c.accepted_tokens - 15.0).abs() < 1e-9);
+        assert_eq!(i.busy, SimTime::from_micros(10_000));
+    }
+
+    #[test]
+    fn partial_commit_prorates() {
+        let mut i = inst();
+        i.running.insert(RequestId(1), run_req(2.0, 1000));
+        i.set_interval(Interval {
+            start: SimTime::ZERO,
+            step_us: 1000,
+            steps: 10,
+        });
+        let c = i.commit_until(SimTime::from_micros(5_500));
+        assert!((c.steps - 5.5).abs() < 1e-9);
+        assert_eq!(c.gained[0].1, 11);
+        assert!(i.interval.is_none());
+    }
+
+    #[test]
+    fn budget_clips_gain() {
+        let mut i = inst();
+        i.running.insert(RequestId(1), run_req(3.0, 7));
+        i.set_interval(Interval {
+            start: SimTime::ZERO,
+            step_us: 100,
+            steps: 10,
+        });
+        let c = i.commit_until(SimTime::from_micros(1_000));
+        assert_eq!(c.gained[0].1, 7);
+    }
+
+    #[test]
+    fn fractional_progress_carries() {
+        let mut i = inst();
+        i.running.insert(RequestId(1), run_req(1.5, 1000));
+        i.set_interval(Interval {
+            start: SimTime::ZERO,
+            step_us: 1000,
+            steps: 1,
+        });
+        let c1 = i.commit_until(SimTime::from_micros(1000));
+        assert_eq!(c1.gained[0].1, 1); // 1.5 -> 1 token + 0.5 carried
+        i.set_interval(Interval {
+            start: SimTime::from_micros(1000),
+            step_us: 1000,
+            steps: 1,
+        });
+        let c2 = i.commit_until(SimTime::from_micros(2000));
+        assert_eq!(c2.gained[0].1, 2); // 0.5 + 1.5 = 2.0
+    }
+
+    #[test]
+    fn epoch_bumps_on_changes() {
+        let mut i = inst();
+        let e0 = i.epoch;
+        i.running.insert(RequestId(1), run_req(1.0, 10));
+        i.set_interval(Interval {
+            start: SimTime::ZERO,
+            step_us: 1,
+            steps: 1,
+        });
+        assert!(i.epoch > e0);
+        let e1 = i.epoch;
+        i.commit_until(SimTime::from_micros(1));
+        assert!(i.epoch > e1);
+    }
+
+    #[test]
+    fn admission_headroom_counts_pending_and_block_slack() {
+        let mut i = inst();
+        // Empty: full budget minus one block of rounding slack.
+        assert_eq!(i.admission_headroom(1.0), 10_000 - 16);
+        i.alloc.grow(RequestId(1), 4000); // exactly 250 blocks
+        i.running.insert(
+            RequestId(1),
+            run_req(1.0, 10),
+        );
+        i.pending.insert(RequestId(2), 1000);
+        // budget 10000 − used 4000 − pending 1000 − slack 3×16.
+        assert_eq!(i.admission_headroom(1.0), 5_000 - 48);
+        // 50% target utilization: budget 5000 < charges -> 0.
+        assert_eq!(i.admission_headroom(0.5), 0);
+        // Block rounding is charged: one more token -> one more block.
+        i.alloc.grow(RequestId(1), 1);
+        assert_eq!(i.admission_headroom(1.0), 5_000 - 48 - 16);
+    }
+}

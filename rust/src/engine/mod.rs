@@ -1,0 +1,12 @@
+//! The inference-engine substrate: a vLLM-like instance model with
+//! continuous batching, paged KV, preemption, and a calibrated step-time
+//! cost model — plus the cluster simulation driver that advances a fleet
+//! of instances through a rollout iteration under a pluggable scheduler.
+
+pub mod cluster;
+pub mod costmodel;
+pub mod instance;
+
+pub use cluster::{ClusterSim, RolloutOutcome};
+pub use costmodel::CostModel;
+pub use instance::{Instance, RunningReq};

@@ -1,0 +1,101 @@
+//! Shared experiment plumbing: workload scaling (full paper scale vs the
+//! fast CI scale), run helpers, and result records.
+
+use crate::config::{SystemConfig, TaskPreset, WorkloadConfig};
+use crate::engine::cluster::{run_rollout, RolloutOutcome};
+use crate::scheduler::Scheduler;
+use crate::spec::simmodel::SdStrategy;
+use crate::util::cli::Args;
+
+/// Scale selector: experiments run at a reduced-but-faithful scale by
+/// default (`fast`), or closer to paper scale with `--full`.
+#[derive(Debug, Clone, Copy)]
+pub struct Scale {
+    pub fast: bool,
+    pub seed: u64,
+    /// Iterations to average (paper: 5).
+    pub iters: usize,
+}
+
+impl Scale {
+    pub fn from_args(fast: bool, args: &Args) -> Scale {
+        Scale {
+            fast: fast || !args.has_flag("full"),
+            seed: args.get_u64("seed", 42),
+            iters: args.get_usize("iters", if fast { 1 } else { 3 }),
+        }
+    }
+
+    pub fn fast_default() -> Scale {
+        Scale {
+            fast: true,
+            seed: 42,
+            iters: 1,
+        }
+    }
+
+    /// The workload for `preset` at this scale.
+    pub fn workload(&self, preset: TaskPreset) -> WorkloadConfig {
+        if self.fast {
+            // Faithful-shape reduction: keeps the memory-pressure regime,
+            // the tail shape AND the groups-per-instance statistics that
+            // drive inter-instance imbalance (DESIGN.md §2). Instance
+            // counts shrink only 2x so extreme-value effects survive.
+            match preset {
+                TaskPreset::Moonlight => preset.workload().scaled(2, 16),
+                TaskPreset::Qwen2Vl72b => preset.workload().scaled(2, 8),
+                TaskPreset::KimiK2 => preset.workload().scaled(2, 16),
+            }
+        } else {
+            preset.workload()
+        }
+    }
+
+    pub fn sys(&self, cfg: &WorkloadConfig) -> SystemConfig {
+        let mut sys = SystemConfig::default();
+        if self.fast {
+            // Chunk size scales with generation length.
+            sys.chunk_size = (cfg.avg_gen_len / 4).clamp(64, 2048);
+        }
+        sys
+    }
+}
+
+/// One (scheduler, SD) rollout measurement.
+pub struct RunResult {
+    pub label: String,
+    pub outcome: RolloutOutcome,
+}
+
+pub fn measure(
+    scale: &Scale,
+    preset: TaskPreset,
+    label: &str,
+    make_sched: impl Fn() -> Box<dyn Scheduler>,
+    sd: SdStrategy,
+) -> RunResult {
+    let cfg = scale.workload(preset);
+    let sys = scale.sys(&cfg);
+    let outcome = run_rollout(&cfg, &sys, make_sched(), sd, scale.seed);
+    RunResult {
+        label: label.to_string(),
+        outcome,
+    }
+}
+
+/// Multi-iteration mean throughput (tokens/s).
+pub fn mean_throughput(
+    scale: &Scale,
+    preset: TaskPreset,
+    make_sched: &dyn Fn() -> Box<dyn Scheduler>,
+    sd: SdStrategy,
+) -> f64 {
+    let cfg = scale.workload(preset);
+    let sys = scale.sys(&cfg);
+    let mut total = 0.0;
+    for i in 0..scale.iters {
+        let out = run_rollout(&cfg, &sys, make_sched(), sd, scale.seed + i as u64);
+        total += out.metrics.throughput();
+    }
+    total / scale.iters as f64
+}

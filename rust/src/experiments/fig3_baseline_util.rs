@@ -1,0 +1,71 @@
+//! Figure 3: KVCache utilization, running request count, and preemptions
+//! during a baseline (veRL) rollout of the Qwen2-VL-72B task — the
+//! motivating pathology: early-phase preemption storms, late-phase
+//! long-tail idleness.
+
+use crate::config::TaskPreset;
+use crate::scheduler::VerlScheduler;
+use crate::spec::simmodel::SdStrategy;
+
+use super::common::{measure, Scale};
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let res = measure(
+        scale,
+        TaskPreset::Qwen2Vl72b,
+        "verl",
+        || Box::new(VerlScheduler::new()),
+        SdStrategy::None,
+    );
+    print_utilization_series("Figure 3 (veRL baseline, Qwen2-VL)", &res.outcome);
+    println!(
+        "preemption events: {}   re-prefilled tokens: {}",
+        res.outcome.metrics.preemptions, res.outcome.metrics.re_prefill_tokens
+    );
+    let tail = res.outcome.metrics.tail_time(0.10);
+    let total = res.outcome.metrics.makespan;
+    println!(
+        "long-tail (last 10% of requests): {:.0}s of {:.0}s total ({:.0}%)",
+        tail.as_secs_f64(),
+        total.as_secs_f64(),
+        100.0 * tail.as_secs_f64() / total.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}
+
+/// Shared with Figure 9: render the KV-utilization + running-request
+/// time series, averaged across instances, in ~30 buckets.
+pub fn print_utilization_series(
+    title: &str,
+    outcome: &crate::engine::cluster::RolloutOutcome,
+) {
+    println!("\n# {title}");
+    let m = &outcome.metrics;
+    if m.load_samples.is_empty() {
+        println!("(no load samples — rollout too short for the sample interval)");
+        return;
+    }
+    let end = m.makespan.as_secs_f64().max(1e-9);
+    const BUCKETS: usize = 30;
+    let mut util = vec![(0.0f64, 0usize); BUCKETS];
+    let mut running = vec![(0.0f64, 0usize); BUCKETS];
+    for s in &m.load_samples {
+        let b = ((s.t.as_secs_f64() / end) * BUCKETS as f64) as usize;
+        let b = b.min(BUCKETS - 1);
+        util[b].0 += s.kv_utilization;
+        util[b].1 += 1;
+        running[b].0 += s.running as f64;
+        running[b].1 += 1;
+    }
+    println!("{:>8} {:>10} {:>12}", "t", "kv-util", "running/inst");
+    for b in 0..BUCKETS {
+        if util[b].1 == 0 {
+            continue;
+        }
+        let t = end * (b as f64 + 0.5) / BUCKETS as f64;
+        let u = util[b].0 / util[b].1 as f64;
+        let r = running[b].0 / running[b].1 as f64;
+        let bar = "#".repeat((u * 32.0) as usize);
+        println!("{t:>7.0}s {u:>9.2} {r:>12.1}  |{bar}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Figure 4: length correlation within response groups — the heatmap's
+//! statistic (within-group vs between-group spread of log lengths) plus a
+//! sample of group "columns" like the paper's visual.
+
+use crate::config::TaskPreset;
+use crate::workload::{generate_iteration, lengths::group_length_spread};
+
+use super::common::Scale;
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    for preset in [TaskPreset::Moonlight, TaskPreset::Qwen2Vl72b] {
+        let cfg = scale.workload(preset);
+        let w = generate_iteration(&cfg, scale.seed);
+        let groups: Vec<Vec<u32>> = w
+            .groups
+            .iter()
+            .map(|g| g.requests.iter().map(|r| r.gen_len).collect())
+            .collect();
+        let (within, between) = group_length_spread(&groups);
+        println!("\n# Figure 4 — {}", cfg.name);
+        println!(
+            "std of log-lengths: within-group {:.3}, between-group {:.3} \
+             (ratio {:.2} — strong intra-group correlation)",
+            within,
+            between,
+            between / within.max(1e-9)
+        );
+        println!("sample group columns (each row = one group, cells = lengths):");
+        for g in groups.iter().take(8) {
+            let cells: Vec<String> =
+                g.iter().map(|l| format!("{l:>6}")).collect();
+            println!("  [{}]", cells.join(" "));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Figure 7: end-to-end rollout throughput of RL systems across tasks and
+//! group sizes — veRL, veRL+vanilla-SD, StreamRL-Oracle, and SEER.
+
+use crate::config::{TaskPreset, ALL_PRESETS};
+use crate::engine::cluster::run_rollout;
+use crate::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use crate::spec::simmodel::SdStrategy;
+use crate::util::table::{fmt_x, Table};
+
+use super::common::Scale;
+
+/// The paper's per-task vanilla SD baseline (§4.1).
+pub fn vanilla_sd_for(preset: TaskPreset) -> SdStrategy {
+    match preset {
+        TaskPreset::Moonlight => SdStrategy::SuffixDecoding,
+        TaskPreset::Qwen2Vl72b => SdStrategy::DraftModel,
+        TaskPreset::KimiK2 => SdStrategy::Mtp,
+    }
+}
+
+pub fn systems(preset: TaskPreset) -> Vec<(&'static str, fn() -> Box<dyn Scheduler>, SdStrategy)> {
+    let vanilla = vanilla_sd_for(preset);
+    vec![
+        ("veRL", (|| Box::new(VerlScheduler::new()) as Box<dyn Scheduler>) as fn() -> _, SdStrategy::None),
+        ("veRL+SD", || Box::new(VerlScheduler::new()), vanilla),
+        ("StreamRL-Oracle", || Box::new(StreamRlOracle::new()), SdStrategy::None),
+        ("SEER", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst),
+    ]
+}
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    for preset in ALL_PRESETS {
+        let base = scale.workload(preset);
+        let group_sizes: &[usize] = &[8, 16];
+        let mut t = Table::new(
+            &format!("Figure 7 — rollout throughput, {}", base.name),
+            &["System", "G=8 tok/s", "G=8 vs veRL", "G=16 tok/s", "G=16 vs veRL"],
+        );
+        let mut rows: Vec<Vec<String>> = vec![];
+        let mut base_tp = [0.0f64; 2];
+        for (name, mk, sd) in systems(preset) {
+            let mut cells = vec![name.to_string()];
+            for (gi, &g) in group_sizes.iter().enumerate() {
+                let cfg = base.with_group_size(g);
+                let sys = scale.sys(&cfg);
+                let mut tp = 0.0;
+                for i in 0..scale.iters {
+                    let out = run_rollout(&cfg, &sys, mk(), sd, scale.seed + i as u64);
+                    tp += out.metrics.throughput();
+                }
+                tp /= scale.iters as f64;
+                if name == "veRL" {
+                    base_tp[gi] = tp;
+                }
+                cells.push(format!("{tp:.0}"));
+                cells.push(fmt_x(tp / base_tp[gi].max(1e-9)));
+            }
+            rows.push(cells);
+        }
+        for r in &rows {
+            t.row(r);
+        }
+        t.note("paper: SEER gains 44-104% over veRL; StreamRL-Oracle can lose to veRL on kimi-k2");
+        t.print();
+    }
+    Ok(())
+}

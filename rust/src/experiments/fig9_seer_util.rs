@@ -1,0 +1,35 @@
+//! Figure 9: the same utilization series as Figure 3, with SEER — the
+//! preemption storm disappears and the tail compresses.
+
+use crate::config::TaskPreset;
+use crate::scheduler::{ContextMode, SeerScheduler};
+use crate::spec::simmodel::SdStrategy;
+
+use super::common::{measure, Scale};
+use super::fig3_baseline_util::print_utilization_series;
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let res = measure(
+        scale,
+        TaskPreset::Qwen2Vl72b,
+        "seer",
+        || Box::new(SeerScheduler::new(ContextMode::Learned)),
+        SdStrategy::GroupedCst,
+    );
+    print_utilization_series("Figure 9 (SEER, Qwen2-VL)", &res.outcome);
+    println!(
+        "preemption events: {}   migrations: {}   migrated GiB: {:.1}",
+        res.outcome.metrics.preemptions,
+        res.outcome.metrics.migrations,
+        res.outcome.metrics.migrated_bytes as f64 / (1u64 << 30) as f64,
+    );
+    let tail = res.outcome.metrics.tail_time(0.10);
+    let total = res.outcome.metrics.makespan;
+    println!(
+        "long-tail (last 10%): {:.0}s of {:.0}s total ({:.0}%)",
+        tail.as_secs_f64(),
+        total.as_secs_f64(),
+        100.0 * tail.as_secs_f64() / total.as_secs_f64().max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! The experiment harness: one module per table/figure of the paper's
+//! evaluation section (DESIGN.md §5 maps each to its modules). Every
+//! experiment prints the same rows/series the paper reports and returns
+//! machine-readable results for the smoke tests.
+
+pub mod common;
+pub mod fig10_context;
+pub mod fig11_sd;
+pub mod fig12_partial;
+pub mod fig2_lengths;
+pub mod fig3_baseline_util;
+pub mod fig4_correlation;
+pub mod fig7_throughput;
+pub mod fig8_tail;
+pub mod fig9_seer_util;
+pub mod table1_phases;
+pub mod table2_acceptance;
+pub mod table3_config;
+pub mod table4_ablation;
+
+use crate::util::cli::Args;
+
+/// Run an experiment by id ("table1", "fig7", ... or "all").
+pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+    let fast = args.has_flag("fast") || std::env::var("SEER_FAST").is_ok();
+    let scale = common::Scale::from_args(fast, args);
+    match id {
+        "table1" => table1_phases::run(&scale),
+        "table2" => table2_acceptance::run(&scale),
+        "table3" => table3_config::run(),
+        "table4" => table4_ablation::run(&scale),
+        "fig2" => fig2_lengths::run(&scale),
+        "fig3" => fig3_baseline_util::run(&scale),
+        "fig4" => fig4_correlation::run(&scale),
+        "fig7" => fig7_throughput::run(&scale),
+        "fig8" => fig8_tail::run(&scale),
+        "fig9" => fig9_seer_util::run(&scale),
+        "fig10" => fig10_context::run(&scale),
+        "fig11" => fig11_sd::run(&scale),
+        "fig12" => fig12_partial::run(&scale),
+        "all" => {
+            for id in ALL_IDS {
+                println!("\n================ {id} ================");
+                run(id, args)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; one of {ALL_IDS:?} or 'all'"
+        ),
+    }
+}
+
+pub const ALL_IDS: [&str; 13] = [
+    "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
+    "fig9", "table4", "fig10", "fig11", "fig12",
+];

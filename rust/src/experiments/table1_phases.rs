@@ -1,0 +1,51 @@
+//! Table 1: time distribution across RL training phases (rollout /
+//! training / weight update) per workload, with rollout measured on the
+//! veRL baseline and the other phases from the calibrated phase model.
+
+use crate::config::ALL_PRESETS;
+use crate::rl::phases::PhaseModel;
+use crate::scheduler::VerlScheduler;
+use crate::spec::simmodel::SdStrategy;
+use crate::util::table::{fmt_pct, Table};
+
+use super::common::{measure, Scale};
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Table 1: Time distribution across RL training phases",
+        &["Workload", "Rollout", "Training", "Weight Update", "Iter total"],
+    );
+    // Paper reference rows: Moonlight 84/14/2, Qwen 63/31/6, Kimi 87/10/3.
+    let paper = [
+        ("moonlight", 0.84, 0.14, 0.02),
+        ("qwen2-vl-72b", 0.63, 0.31, 0.06),
+        ("kimi-k2", 0.87, 0.10, 0.03),
+    ];
+    for preset in ALL_PRESETS {
+        let res = measure(
+            scale,
+            preset,
+            "verl",
+            || Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        );
+        let cfg = scale.workload(preset);
+        let model = PhaseModel::for_workload(&cfg);
+        let split = model.split(
+            res.outcome.metrics.makespan,
+            res.outcome.metrics.tokens_generated,
+        );
+        let (r, tr, u) = split.fractions();
+        t.row(&[
+            cfg.name.to_string(),
+            fmt_pct(r),
+            fmt_pct(tr),
+            fmt_pct(u),
+            crate::util::table::fmt_secs(split.total().as_secs_f64()),
+        ]);
+    }
+    t.note("paper: moonlight 84/14/2, qwen2-vl 63/31/6, kimi-k2 87/10/3 — rollout dominates everywhere");
+    t.print();
+    let _ = paper;
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Table 2: mean acceptance length of n-gram speculative decoding with
+//! grouped pattern references — measured on the *real* CST (not the sim
+//! profile): we generate group-correlated token streams, build the CST
+//! from n sibling reference streams plus the target's own history, replay
+//! the target stream, and count accepted draft tokens per step.
+
+use crate::spec::cst::Cst;
+use crate::spec::multipath::speculate_multipath;
+use crate::util::table::Table;
+use crate::workload::tokens::{GroupTokenGen, TokenGenConfig};
+
+use super::common::Scale;
+
+/// Accepted tokens for one draft vs the true continuation.
+fn accepted(draft: &[u32], truth: &[u32]) -> usize {
+    draft
+        .iter()
+        .zip(truth)
+        .take_while(|(d, t)| d == t)
+        .count()
+}
+
+/// Replay speculation over a target stream. Returns the mean acceptance
+/// length including the bonus token (paper's metric).
+pub fn replay(
+    refs: &[Vec<u32>],
+    target: &[u32],
+    gamma: usize,
+    top_k: usize,
+) -> f64 {
+    let mut cst = Cst::new();
+    for (i, r) in refs.iter().enumerate() {
+        cst.append(i as u64 + 1, 0, r);
+    }
+    let own: u64 = 0;
+    let mut pos = 16usize.min(target.len());
+    cst.append(own, 0, &target[..pos]);
+    let mut total = 0usize;
+    let mut steps = 0usize;
+    while pos + 1 < target.len() {
+        let pattern_start = pos.saturating_sub(24);
+        let pattern = &target[pattern_start..pos];
+        let acc = if top_k <= 1 {
+            let draft = cst.speculate(pattern, gamma, 24, 2);
+            accepted(&draft, &target[pos..])
+        } else {
+            speculate_multipath(&cst, pattern, gamma, 24, 2, top_k, 0.0)
+                .iter()
+                .map(|p| accepted(&p.tokens, &target[pos..]))
+                .max()
+                .unwrap_or(0)
+        };
+        // Advance by accepted drafts + the bonus token.
+        let advance = (acc + 1).min(target.len() - pos);
+        cst.append(own, pos, &target[pos..pos + advance]);
+        pos += advance;
+        total += advance;
+        steps += 1;
+    }
+    total as f64 / steps.max(1) as f64
+}
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let n_groups = if scale.fast { 8 } else { 20 };
+    let resp_len = if scale.fast { 1200 } else { 4000 };
+    let gamma = 16;
+    let ref_counts = [0usize, 1, 5, 15];
+    let modes = [("Linear", 1usize), ("Multi-Path (k=2)", 2), ("Multi-Path (k=4)", 4)];
+
+    let mut t = Table::new(
+        "Table 2: mean acceptance length vs grouped references",
+        &["Ref. Count", "Linear", "Multi-Path (k=2)", "Multi-Path (k=4)"],
+    );
+    for &n in &ref_counts {
+        let mut row = vec![format!("n = {n}")];
+        for (_, k) in modes {
+            let mut total = 0.0;
+            for g in 0..n_groups {
+                let gen = GroupTokenGen::new(
+                    TokenGenConfig::default(),
+                    scale.seed ^ (g as u64) << 8,
+                );
+                let target = gen.response(0, resp_len, scale.seed + g as u64);
+                let refs: Vec<Vec<u32>> = (0..n)
+                    .map(|i| gen.response(i + 1, resp_len, scale.seed ^ 0xB0B + i as u64))
+                    .collect();
+                total += replay(&refs, &target, gamma, k);
+            }
+            row.push(format!("{:.2}", total / n_groups as f64));
+        }
+        t.row(&row);
+    }
+    t.note("paper: 1.70/1.77/1.85 at n=0 rising to 2.53/2.69/2.85 at n=15 — acceptance grows with grouped references and multi-path drafting");
+    t.print();
+    Ok(())
+}

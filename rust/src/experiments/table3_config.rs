@@ -1,0 +1,42 @@
+//! Table 3: model configurations and RL workload characteristics (the
+//! preset definitions themselves — printed for completeness and checked
+//! against the paper's numbers by the preset tests).
+
+use crate::config::ALL_PRESETS;
+use crate::util::table::Table;
+
+pub fn run() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Table 3: Model configurations and RL workload characteristics",
+        &[
+            "Metric",
+            "Moonlight",
+            "Qwen2-VL-72B",
+            "Kimi-K2",
+        ],
+    );
+    let w: Vec<_> = ALL_PRESETS.iter().map(|p| p.workload()).collect();
+    let row = |name: &str, f: &dyn Fn(usize) -> String| {
+        vec![name.to_string(), f(0), f(1), f(2)]
+    };
+    t.row(&row("Total GPUs", &|i| {
+        (w[i].n_instances * w[i].gpus_per_instance).to_string()
+    }));
+    t.row(&row("GPUs per Instance", &|i| {
+        w[i].gpus_per_instance.to_string()
+    }));
+    t.row(&row("Reqs per Iter", &|i| w[i].reqs_per_iter.to_string()));
+    t.row(&row("Group Size", &|i| w[i].group_size.to_string()));
+    t.row(&row("Temperature", &|i| format!("{}", w[i].temperature)));
+    t.row(&row("Max. Gen. Length", &|i| w[i].max_gen_len.to_string()));
+    t.row(&row("Avg. Gen. Length", &|i| w[i].avg_gen_len.to_string()));
+    t.row(&row("KV bytes/token", &|i| {
+        format!("{}K", w[i].hw.kv_bytes_per_token / 1024)
+    }));
+    t.row(&row("KV capacity (tokens/inst)", &|i| {
+        w[i].hw.kv_capacity_tokens.to_string()
+    }));
+    t.note("paper values reproduced exactly; last two rows are this repo's calibration (DESIGN.md §2)");
+    t.print();
+    Ok(())
+}

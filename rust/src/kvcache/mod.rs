@@ -1,0 +1,9 @@
+//! KVCache management: the paged per-instance allocator (vLLM-style) and
+//! the Mooncake-derived global KVCache pool that makes divided rollout's
+//! chunk-level migration cheap (paper §3.2).
+
+pub mod paged;
+pub mod pool;
+
+pub use paged::PagedAllocator;
+pub use pool::{GlobalKvPool, PoolStats, Tier};

@@ -1,0 +1,253 @@
+//! Per-instance paged KV allocator.
+//!
+//! Tokens are stored in fixed-size blocks (vLLM's PagedAttention layout);
+//! the allocator tracks per-request block counts and enforces the
+//! instance's capacity. The engine asks it two questions: "does request r
+//! fit if it grows by n tokens?" and "how many tokens of headroom remain?".
+
+use std::collections::BTreeMap;
+
+use crate::workload::RequestId;
+
+#[derive(Debug, Clone)]
+pub struct PagedAllocator {
+    /// Block size in tokens.
+    block_tokens: u32,
+    /// Total capacity in blocks.
+    capacity_blocks: u64,
+    used_blocks: u64,
+    /// Per-request (blocks, tokens) accounting.
+    requests: BTreeMap<RequestId, ReqAlloc>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct ReqAlloc {
+    blocks: u64,
+    tokens: u64,
+}
+
+impl PagedAllocator {
+    pub fn new(capacity_tokens: u64, block_tokens: u32) -> Self {
+        assert!(block_tokens > 0);
+        PagedAllocator {
+            block_tokens,
+            capacity_blocks: capacity_tokens / block_tokens as u64,
+            used_blocks: 0,
+            requests: BTreeMap::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: u64) -> u64 {
+        tokens.div_ceil(self.block_tokens as u64)
+    }
+
+    /// Grow request `id` by `tokens`. Returns false (and changes nothing)
+    /// if capacity would be exceeded.
+    pub fn grow(&mut self, id: RequestId, tokens: u64) -> bool {
+        let cur = self.requests.get(&id).copied().unwrap_or_default();
+        let new_blocks = self.blocks_for(cur.tokens + tokens);
+        let delta = new_blocks - cur.blocks;
+        if self.used_blocks + delta > self.capacity_blocks {
+            return false;
+        }
+        self.used_blocks += delta;
+        self.requests.insert(
+            id,
+            ReqAlloc {
+                blocks: new_blocks,
+                tokens: cur.tokens + tokens,
+            },
+        );
+        true
+    }
+
+    /// Grow request `id` by *up to* `tokens`, clamping to what fits.
+    /// Returns the granted token count (0 if nothing fits).
+    pub fn grow_upto(&mut self, id: RequestId, tokens: u64) -> u64 {
+        let cur = self.requests.get(&id).copied().unwrap_or_default();
+        let bt = self.block_tokens as u64;
+        // Room inside the request's current partial block...
+        let slack = cur.blocks * bt - cur.tokens;
+        // ...plus whole free blocks.
+        let free_blocks = self.capacity_blocks - self.used_blocks;
+        let can = slack + free_blocks * bt;
+        let granted = tokens.min(can);
+        if granted > 0 {
+            let ok = self.grow(id, granted);
+            debug_assert!(ok, "grow_upto internal miscount");
+        }
+        granted
+    }
+
+    /// Whether growing `id` by `tokens` would fit.
+    pub fn fits(&self, id: RequestId, tokens: u64) -> bool {
+        let cur = self.requests.get(&id).copied().unwrap_or_default();
+        let delta = self.blocks_for(cur.tokens + tokens) - cur.blocks;
+        self.used_blocks + delta <= self.capacity_blocks
+    }
+
+    /// Release all of `id`'s blocks (request finished, migrated away, or
+    /// preempted). Returns the freed token count.
+    pub fn release(&mut self, id: RequestId) -> u64 {
+        if let Some(a) = self.requests.remove(&id) {
+            debug_assert!(self.used_blocks >= a.blocks);
+            self.used_blocks -= a.blocks;
+            a.tokens
+        } else {
+            0
+        }
+    }
+
+    pub fn tokens_of(&self, id: RequestId) -> u64 {
+        self.requests.get(&id).map(|a| a.tokens).unwrap_or(0)
+    }
+
+    pub fn holds(&self, id: RequestId) -> bool {
+        self.requests.contains_key(&id)
+    }
+
+    pub fn used_blocks(&self) -> u64 {
+        self.used_blocks
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    /// Tokens actually consumed including block rounding.
+    pub fn used_block_tokens(&self) -> u64 {
+        self.used_blocks * self.block_tokens as u64
+    }
+
+    pub fn capacity_blocks(&self) -> u64 {
+        self.capacity_blocks
+    }
+
+    pub fn used_tokens(&self) -> u64 {
+        self.requests.values().map(|a| a.tokens).sum()
+    }
+
+    pub fn free_tokens(&self) -> u64 {
+        (self.capacity_blocks - self.used_blocks) * self.block_tokens as u64
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.capacity_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks as f64 / self.capacity_blocks as f64
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn request_ids(&self) -> impl Iterator<Item = RequestId> + '_ {
+        self.requests.keys().copied()
+    }
+
+    /// Internal-consistency check used by the invariant tests.
+    pub fn check_invariants(&self) {
+        let sum: u64 = self.requests.values().map(|a| a.blocks).sum();
+        assert_eq!(sum, self.used_blocks, "block accounting drift");
+        assert!(self.used_blocks <= self.capacity_blocks, "over capacity");
+        for (id, a) in &self.requests {
+            assert_eq!(
+                a.blocks,
+                self.blocks_for(a.tokens),
+                "request {id:?} block/token mismatch"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+
+    fn rid(i: u32) -> RequestId {
+        RequestId(i)
+    }
+
+    #[test]
+    fn grow_and_release() {
+        let mut a = PagedAllocator::new(1000, 10);
+        assert!(a.grow(rid(1), 25)); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        assert_eq!(a.tokens_of(rid(1)), 25);
+        assert!(a.grow(rid(1), 5)); // exactly 3 blocks still
+        assert_eq!(a.used_blocks(), 3);
+        assert!(a.grow(rid(1), 1)); // spills into 4th block
+        assert_eq!(a.used_blocks(), 4);
+        assert_eq!(a.release(rid(1)), 31);
+        assert_eq!(a.used_blocks(), 0);
+    }
+
+    #[test]
+    fn rejects_over_capacity() {
+        let mut a = PagedAllocator::new(100, 10);
+        assert!(a.grow(rid(1), 95));
+        assert!(!a.fits(rid(2), 10));
+        assert!(!a.grow(rid(2), 10));
+        assert_eq!(a.used_blocks(), 10);
+        assert_eq!(a.tokens_of(rid(2)), 0);
+        // Fits exactly within the last partial block of r1? No: r1 holds
+        // all 10 blocks already.
+        assert!(a.fits(rid(1), 5));
+        assert!(a.grow(rid(1), 5));
+    }
+
+    #[test]
+    fn free_tokens_matches_blocks() {
+        let mut a = PagedAllocator::new(100, 10);
+        a.grow(rid(1), 11);
+        assert_eq!(a.used_blocks(), 2);
+        assert_eq!(a.free_tokens(), 80);
+        assert!((a.utilization() - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn release_unknown_is_zero() {
+        let mut a = PagedAllocator::new(100, 10);
+        assert_eq!(a.release(rid(9)), 0);
+    }
+
+    #[test]
+    fn prop_accounting_never_drifts() {
+        check(
+            "paged allocator accounting",
+            PropConfig {
+                cases: 64,
+                max_size: 200,
+                ..Default::default()
+            },
+            |c| {
+                let mut a = PagedAllocator::new(10_000, 16);
+                let mut live: Vec<u32> = vec![];
+                for step in 0..c.size {
+                    match c.rng.below(3) {
+                        0 => {
+                            let id = step as u32;
+                            let tokens = c.rng.range_u64(1, 300);
+                            if a.grow(rid(id), tokens) {
+                                live.push(id);
+                            }
+                        }
+                        1 if !live.is_empty() => {
+                            let i = c.rng.range_usize(0, live.len() - 1);
+                            let tokens = c.rng.range_u64(1, 200);
+                            let _ = a.grow(rid(live[i]), tokens);
+                        }
+                        _ if !live.is_empty() => {
+                            let i = c.rng.range_usize(0, live.len() - 1);
+                            a.release(rid(live.swap_remove(i)));
+                        }
+                        _ => {}
+                    }
+                    a.check_invariants();
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,286 @@
+//! Mooncake-derived global KVCache pool (paper §3.2).
+//!
+//! When divided rollout pauses a request between chunks or migrates it to
+//! another instance, its KVCache moves into a hierarchical global store
+//! (DRAM tier, spilling to SSD) instead of being recomputed. Fetching it
+//! back onto an instance costs transfer time (RDMA bandwidth + latency,
+//! plus SSD read if spilled) — orders of magnitude cheaper than the
+//! re-prefill a preemption-based system pays.
+//!
+//! The pool models capacity and transfer cost; actual KV bytes live on the
+//! engine side (simulation) or in PJRT buffers (real-model path).
+
+use std::collections::BTreeMap;
+
+use crate::config::HardwareConfig;
+use crate::sim::clock::SimTime;
+use crate::workload::RequestId;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Dram,
+    Ssd,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    bytes: u64,
+    tier: Tier,
+    /// Insertion order for FIFO spill (proxy for LRU: paused requests are
+    /// not re-read until rescheduled).
+    seq: u64,
+}
+
+/// Aggregate pool statistics, sampled by the metrics timeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    pub dram_bytes: u64,
+    pub ssd_bytes: u64,
+    pub entries: usize,
+    pub spills: u64,
+    pub fetches: u64,
+    pub stores: u64,
+}
+
+#[derive(Debug)]
+pub struct GlobalKvPool {
+    dram_capacity: u64,
+    ssd_capacity: u64,
+    rdma_bw: f64,
+    rdma_latency: SimTime,
+    ssd_bw: f64,
+    entries: BTreeMap<RequestId, Entry>,
+    dram_used: u64,
+    ssd_used: u64,
+    next_seq: u64,
+    stats: PoolStats,
+}
+
+impl GlobalKvPool {
+    /// Build from hardware config; capacities aggregate over `n_nodes`.
+    pub fn new(hw: &HardwareConfig, n_nodes: usize) -> Self {
+        GlobalKvPool {
+            dram_capacity: hw.pool_dram_bytes * n_nodes as u64,
+            ssd_capacity: hw.pool_ssd_bytes * n_nodes as u64,
+            rdma_bw: hw.rdma_bw,
+            rdma_latency: hw.rdma_latency,
+            ssd_bw: hw.ssd_bw,
+            entries: BTreeMap::new(),
+            dram_used: 0,
+            ssd_used: 0,
+            next_seq: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Store (or update) a paused request's KV. Returns the transfer time
+    /// to push it over RDMA. Spills oldest DRAM entries to SSD if needed;
+    /// panics if even SSD is exhausted (sized so this cannot happen for
+    /// the paper workloads — an assert, not a failure mode).
+    pub fn store(&mut self, id: RequestId, bytes: u64) -> SimTime {
+        // Replace any previous entry (chunk boundaries re-store grown KV).
+        self.remove(id);
+        while self.dram_used + bytes > self.dram_capacity {
+            self.spill_oldest();
+        }
+        self.dram_used += bytes;
+        self.entries.insert(
+            id,
+            Entry {
+                bytes,
+                tier: Tier::Dram,
+                seq: self.next_seq,
+            },
+        );
+        self.next_seq += 1;
+        self.stats.stores += 1;
+        self.transfer_time(bytes, Tier::Dram)
+    }
+
+    /// Fetch a request's KV onto an instance. Returns Some(transfer time)
+    /// and removes the entry; None if the pool never had it (request's
+    /// first chunk, nothing to fetch).
+    pub fn fetch(&mut self, id: RequestId) -> Option<SimTime> {
+        let e = self.entries.get(&id).copied()?;
+        self.remove(id);
+        self.stats.fetches += 1;
+        Some(self.transfer_time(e.bytes, e.tier))
+    }
+
+    /// Tier the request currently sits in (None if absent).
+    pub fn tier_of(&self, id: RequestId) -> Option<Tier> {
+        self.entries.get(&id).map(|e| e.tier)
+    }
+
+    pub fn holds(&self, id: RequestId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Drop a request's KV (finished or aborted).
+    pub fn remove(&mut self, id: RequestId) {
+        if let Some(e) = self.entries.remove(&id) {
+            match e.tier {
+                Tier::Dram => self.dram_used -= e.bytes,
+                Tier::Ssd => self.ssd_used -= e.bytes,
+            }
+        }
+    }
+
+    fn spill_oldest(&mut self) {
+        let oldest = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.tier == Tier::Dram)
+            .min_by_key(|(_, e)| e.seq)
+            .map(|(id, _)| *id)
+            .expect("DRAM over capacity but nothing to spill");
+        let e = self.entries.get_mut(&oldest).unwrap();
+        assert!(
+            self.ssd_used + e.bytes <= self.ssd_capacity,
+            "global KV pool exhausted (SSD tier full)"
+        );
+        self.dram_used -= e.bytes;
+        self.ssd_used += e.bytes;
+        e.tier = Tier::Ssd;
+        self.stats.spills += 1;
+    }
+
+    fn transfer_time(&self, bytes: u64, tier: Tier) -> SimTime {
+        let rdma = bytes as f64 / self.rdma_bw;
+        let extra = match tier {
+            Tier::Dram => 0.0,
+            Tier::Ssd => bytes as f64 / self.ssd_bw,
+        };
+        self.rdma_latency + SimTime::from_secs_f64(rdma + extra)
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            dram_bytes: self.dram_used,
+            ssd_bytes: self.ssd_used,
+            entries: self.entries.len(),
+            ..self.stats
+        }
+    }
+
+    pub fn check_invariants(&self) {
+        let (mut dram, mut ssd) = (0u64, 0u64);
+        for e in self.entries.values() {
+            match e.tier {
+                Tier::Dram => dram += e.bytes,
+                Tier::Ssd => ssd += e.bytes,
+            }
+        }
+        assert_eq!(dram, self.dram_used, "dram accounting drift");
+        assert_eq!(ssd, self.ssd_used, "ssd accounting drift");
+        assert!(self.dram_used <= self.dram_capacity);
+        assert!(self.ssd_used <= self.ssd_capacity);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+    use crate::util::prop::{check, PropConfig};
+
+    fn pool(dram: u64, ssd: u64) -> GlobalKvPool {
+        let mut hw = TaskPreset::Moonlight.workload().hw;
+        hw.pool_dram_bytes = dram;
+        hw.pool_ssd_bytes = ssd;
+        GlobalKvPool::new(&hw, 1)
+    }
+
+    fn rid(i: u32) -> RequestId {
+        RequestId(i)
+    }
+
+    #[test]
+    fn store_fetch_roundtrip() {
+        let mut p = pool(1000, 1000);
+        let t_store = p.store(rid(1), 500);
+        assert!(t_store > SimTime::ZERO);
+        assert!(p.holds(rid(1)));
+        let t_fetch = p.fetch(rid(1)).unwrap();
+        assert!(t_fetch >= t_store); // same bytes, same tier
+        assert!(!p.holds(rid(1)));
+        assert!(p.fetch(rid(1)).is_none());
+    }
+
+    #[test]
+    fn spills_to_ssd_in_fifo_order() {
+        let mut p = pool(1000, 10_000);
+        p.store(rid(1), 600);
+        p.store(rid(2), 600); // forces rid(1) to SSD
+        assert_eq!(p.tier_of(rid(1)), Some(Tier::Ssd));
+        assert_eq!(p.tier_of(rid(2)), Some(Tier::Dram));
+        assert_eq!(p.stats().spills, 1);
+    }
+
+    #[test]
+    fn ssd_fetch_slower_than_dram() {
+        // GB-scale entries so the bandwidth terms dominate the fixed
+        // RDMA latency (µs resolution).
+        let gb = 1u64 << 30;
+        let mut p = pool(gb, 10 * gb);
+        p.store(rid(1), gb * 3 / 4);
+        p.store(rid(2), gb * 3 / 4); // rid(1) spilled
+        let t_ssd = p.fetch(rid(1)).unwrap();
+        let t_dram = p.fetch(rid(2)).unwrap();
+        assert!(t_ssd > t_dram, "{t_ssd:?} vs {t_dram:?}");
+    }
+
+    #[test]
+    fn restore_replaces_entry() {
+        let mut p = pool(10_000, 10_000);
+        p.store(rid(1), 100);
+        p.store(rid(1), 900); // grown KV at next chunk boundary
+        assert_eq!(p.stats().dram_bytes, 900);
+        assert_eq!(p.stats().entries, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn panics_when_both_tiers_full() {
+        let mut p = pool(100, 100);
+        p.store(rid(1), 90);
+        p.store(rid(2), 90);
+        p.store(rid(3), 90); // dram full, ssd full -> panic
+    }
+
+    #[test]
+    fn prop_pool_accounting() {
+        check(
+            "global pool accounting",
+            PropConfig {
+                cases: 48,
+                max_size: 150,
+                ..Default::default()
+            },
+            |c| {
+                let mut p = pool(50_000, 500_000);
+                let mut live: Vec<u32> = vec![];
+                for step in 0..c.size {
+                    match c.rng.below(4) {
+                        0 | 1 => {
+                            let id = step as u32;
+                            let bytes = c.rng.range_u64(100, 2000);
+                            p.store(rid(id), bytes);
+                            live.push(id);
+                        }
+                        2 if !live.is_empty() => {
+                            let i = c.rng.range_usize(0, live.len() - 1);
+                            let _ = p.fetch(rid(live.swap_remove(i)));
+                        }
+                        _ if !live.is_empty() => {
+                            let i = c.rng.range_usize(0, live.len() - 1);
+                            p.remove(rid(live.swap_remove(i)));
+                        }
+                        _ => {}
+                    }
+                    p.check_invariants();
+                }
+            },
+        );
+    }
+}

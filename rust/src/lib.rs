@@ -1,0 +1,53 @@
+//! # seer — synchronous LLM RL rollout with online context learning
+//!
+//! Reproduction of *"Seer: Online Context Learning for Fast Synchronous LLM
+//! Reinforcement Learning"* (CS.DC 2025) as a three-layer Rust + JAX +
+//! Pallas stack. This crate is layer 3: the coordinator that owns the
+//! rollout event loop, request/group/chunk state, the global KVCache pool,
+//! context-aware scheduling, and the distributed grouped draft server
+//! (DGDS). Layers 2 (JAX model) and 1 (Pallas kernels) are AOT-compiled to
+//! HLO-text artifacts at build time and executed through [`runtime`];
+//! Python never runs on the request path.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! * [`sim`] — deterministic discrete-event core (clock, event queue, RNG).
+//! * [`util`] — in-tree substrates for the offline environment: JSON
+//!   parser, CLI, stats helpers, property-test harness.
+//! * [`config`] — system/workload configuration and the paper's Table 3
+//!   task presets.
+//! * [`workload`] — group-correlated length mixtures and token streams.
+//! * [`kvcache`] — paged per-instance allocator + Mooncake-like global pool.
+//! * [`engine`] — vLLM-like inference instances with continuous batching,
+//!   preemption and a calibrated step-time cost model.
+//! * [`coordinator`] — request buffer, context manager, divided rollout.
+//! * [`scheduler`] — pluggable policies: Seer (paper Alg. 2) and baselines
+//!   (veRL group-RR, StreamRL-Oracle, Partial Rollout, No-Context, Oracle).
+//! * [`spec`] — CST (suffix-automaton implementation), DGDS, MBA adaptive
+//!   speculation (paper Alg. 1), multi-path drafting, vanilla SD baselines.
+//! * [`metrics`] — timelines, histograms, tail-time accounting.
+//! * [`runtime`] — PJRT artifact loading/execution via the `xla` crate.
+//! * [`rollout`] — the real-model rollout engine (tiny transformer driven
+//!   through the coordinator, token by token, with real grouped SD).
+//! * [`rl`] — the synchronous GRPO loop: rollout → reward → advantage →
+//!   train_step → weight update.
+//! * [`experiments`] — regenerates every table and figure of the paper's
+//!   evaluation section.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod experiments;
+pub mod kvcache;
+pub mod metrics;
+pub mod rl;
+pub mod rollout;
+pub mod runtime;
+pub mod scheduler;
+pub mod sim;
+pub mod spec;
+pub mod util;
+pub mod workload;
+
+pub use config::{SystemConfig, TaskPreset, WorkloadConfig};
+pub use sim::clock::SimTime;

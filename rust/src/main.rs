@@ -1,0 +1,156 @@
+//! `seer` — CLI entrypoint for the rollout coordinator, experiment
+//! harness, and end-to-end GRPO training.
+//!
+//! Subcommands:
+//!   seer experiment <id|all> [--full] [--seed N] [--iters N]
+//!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>]
+//!   seer train [--preset small] [--iters N] [--artifacts DIR]
+//!   seer info
+
+use anyhow::Result;
+use seer::config::TaskPreset;
+use seer::engine::cluster::run_rollout;
+use seer::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use seer::spec::simmodel::SdStrategy;
+use seer::util::cli::Args;
+
+const USAGE: &str = "\
+seer — reproduction of 'Seer: Online Context Learning for Fast Synchronous \
+LLM Reinforcement Learning'
+
+USAGE:
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|all>
+       [--full] [--seed N] [--iters N]
+  seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
+       [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
+  seer train [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
+  seer info
+";
+
+fn make_scheduler(name: &str) -> Result<Box<dyn Scheduler>> {
+    Ok(match name {
+        "seer" => Box::new(SeerScheduler::new(ContextMode::Learned)),
+        "no-context" => Box::new(SeerScheduler::new(ContextMode::None)),
+        "oracle" => Box::new(SeerScheduler::new(ContextMode::Oracle)),
+        "verl" => Box::new(VerlScheduler::new()),
+        "streamrl" => Box::new(StreamRlOracle::new()),
+        other => anyhow::bail!("unknown scheduler '{other}'"),
+    })
+}
+
+fn make_sd(name: &str) -> Result<SdStrategy> {
+    Ok(match name {
+        "none" => SdStrategy::None,
+        "grouped-cst" => SdStrategy::GroupedCst,
+        "suffix-decoding" => SdStrategy::SuffixDecoding,
+        "draft-model" => SdStrategy::DraftModel,
+        "mtp" => SdStrategy::Mtp,
+        other => anyhow::bail!("unknown SD strategy '{other}'"),
+    })
+}
+
+fn cmd_rollout(args: &Args) -> Result<()> {
+    let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --task"))?;
+    let scale = seer::experiments::common::Scale::from_args(
+        !args.has_flag("full"),
+        args,
+    );
+    let cfg = scale.workload(preset);
+    let sys = scale.sys(&cfg);
+    let sched = make_scheduler(args.get_or("scheduler", "seer"))?;
+    let sd = make_sd(args.get_or("sd", "grouped-cst"))?;
+    let name = sched.name();
+    println!(
+        "rollout: task={} scheduler={} sd={} reqs={} instances={}",
+        cfg.name, name, sd.name(), cfg.reqs_per_iter, cfg.n_instances
+    );
+    let out = run_rollout(&cfg, &sys, sched, sd, scale.seed);
+    let m = &out.metrics;
+    println!(
+        "makespan {:.1}s  throughput {:.0} tok/s  tail(10%) {:.1}s  \
+         preemptions {}  migrations {}  util {:.2}  τ {:.2}",
+        m.makespan.as_secs_f64(),
+        m.throughput(),
+        m.tail_time(0.10).as_secs_f64(),
+        m.preemptions,
+        m.migrations,
+        m.mean_utilization(),
+        m.mean_acceptance_len(),
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    use seer::rl::{GrpoConfig, GrpoTrainer};
+    use seer::runtime::manifest::default_artifact_dir;
+    use seer::runtime::ModelRuntime;
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifact_dir);
+    let preset = args.get_or("preset", "small");
+    let iters = args.get_usize("iters", 30);
+    println!("loading artifacts '{preset}' from {dir:?}");
+    let model = ModelRuntime::load(&dir, preset)?;
+    println!("platform: {}  params: {} leaves", model.platform(), model.n_param_leaves());
+    let cfg = GrpoConfig {
+        use_spec: args.has_flag("spec"),
+        seed: args.get_u64("seed", 0),
+        ..Default::default()
+    };
+    let mut trainer = GrpoTrainer::new(model, cfg);
+    for i in 0..iters {
+        let s = trainer.run_iteration(i)?;
+        println!(
+            "iter {:>3}  reward {:.3}  loss {:+.4}  tokens {}  rollout {:.2}s  train {:.2}s",
+            s.iter, s.mean_reward, s.mean_loss, s.tokens, s.rollout_secs, s.train_secs
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("seer {} — DESIGN.md documents the architecture;", env!("CARGO_PKG_VERSION"));
+    println!("EXPERIMENTS.md records paper-vs-measured for every table/figure.");
+    match seer::runtime::Runtime::cpu() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    let dir = seer::runtime::manifest::default_artifact_dir();
+    for preset in ["tiny", "small", "medium"] {
+        match seer::runtime::Manifest::load(&dir, preset) {
+            Ok(m) => println!(
+                "artifacts[{preset}]: {} entries, {} params, pallas={}",
+                m.entries.len(),
+                m.n_params,
+                m.use_pallas
+            ),
+            Err(_) => println!("artifacts[{preset}]: not built"),
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env(&["full", "fast", "spec"]);
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("experiment") => {
+            let id = args
+                .positionals
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            seer::experiments::run(id, &args)
+        }
+        Some("rollout") => cmd_rollout(&args),
+        Some("train") => cmd_train(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

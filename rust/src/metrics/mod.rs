@@ -1,0 +1,178 @@
+//! Rollout telemetry: completion records, per-instance utilization
+//! timelines, preemption counters, and the paper's tail-time metric
+//! (§4.2.2: tail time = time spent *solely* processing the last 10% of
+//! requests to complete).
+
+use crate::sim::clock::SimTime;
+use crate::util::stats::Summary;
+use crate::workload::{InstanceId, RequestId};
+
+/// Per-request completion record.
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub id: RequestId,
+    pub finished_at: SimTime,
+    pub first_scheduled_at: SimTime,
+    pub gen_len: u32,
+}
+
+/// A sampled point of one instance's load.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSample {
+    pub t: SimTime,
+    pub instance: InstanceId,
+    pub kv_utilization: f64,
+    pub running: usize,
+}
+
+/// Everything a rollout run reports; consumed by the experiment harness.
+#[derive(Debug, Default)]
+pub struct RolloutMetrics {
+    pub completions: Vec<Completion>,
+    pub load_samples: Vec<LoadSample>,
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub re_prefill_tokens: u64,
+    pub migrated_bytes: u64,
+    /// Total tokens generated (the throughput numerator).
+    pub tokens_generated: u64,
+    /// Tokens accepted from speculative drafts (subset of generated).
+    pub spec_accepted_tokens: u64,
+    /// Draft tokens proposed (for acceptance-rate reporting).
+    pub spec_draft_tokens: u64,
+    /// Engine-forward-step count across instances.
+    pub engine_steps: u64,
+    /// Mean accepted tokens per request-step including the bonus token
+    /// (τ, Figure 11); 1.0 when SD is off. Set by the driver.
+    pub tau: f64,
+    /// Per-instance busy time (forward passes running).
+    pub busy_time: Vec<SimTime>,
+    pub makespan: SimTime,
+}
+
+impl RolloutMetrics {
+    pub fn new(n_instances: usize) -> Self {
+        RolloutMetrics {
+            busy_time: vec![SimTime::ZERO; n_instances],
+            ..Default::default()
+        }
+    }
+
+    /// Output tokens per second over the whole rollout.
+    pub fn throughput(&self) -> f64 {
+        if self.makespan == SimTime::ZERO {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.makespan.as_secs_f64()
+    }
+
+    /// Paper §4.2.2: time between the (100-p)% completion point and the
+    /// end of rollout. Default p = 10 (last 10% of requests).
+    pub fn tail_time(&self, tail_frac: f64) -> SimTime {
+        if self.completions.is_empty() {
+            return SimTime::ZERO;
+        }
+        let mut times: Vec<SimTime> =
+            self.completions.iter().map(|c| c.finished_at).collect();
+        times.sort();
+        // Index of the (1-tail_frac) completion quantile: the moment the
+        // first (1-frac)·n requests have finished.
+        let k = ((times.len() as f64) * (1.0 - tail_frac)).ceil() as usize;
+        let cut = k.clamp(1, times.len()) - 1;
+        self.makespan.saturating_sub(times[cut])
+    }
+
+    /// Mean instance utilization: busy time / makespan.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.makespan == SimTime::ZERO || self.busy_time.is_empty() {
+            return 0.0;
+        }
+        let total: f64 =
+            self.busy_time.iter().map(|t| t.as_secs_f64()).sum();
+        total / (self.makespan.as_secs_f64() * self.busy_time.len() as f64)
+    }
+
+    /// Mean accepted tokens per request-step, including the bonus token —
+    /// the paper's tau (Figure 11).
+    pub fn mean_acceptance_len(&self) -> f64 {
+        if self.tau > 0.0 {
+            self.tau
+        } else {
+            1.0
+        }
+    }
+
+    /// Completion-time summary.
+    pub fn completion_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        s.extend(
+            self.completions
+                .iter()
+                .map(|c| c.finished_at.as_secs_f64()),
+        );
+        s
+    }
+
+    /// Difference between the earliest- and latest-finishing instance's
+    /// last completion — the §4.2.2 inter-instance imbalance stat.
+    pub fn check_complete(&self, expected: usize) {
+        assert_eq!(
+            self.completions.len(),
+            expected,
+            "rollout lost requests: {} of {expected} completed",
+            self.completions.len()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cpl(id: u32, t: f64) -> Completion {
+        Completion {
+            id: RequestId(id),
+            finished_at: SimTime::from_secs_f64(t),
+            first_scheduled_at: SimTime::ZERO,
+            gen_len: 100,
+        }
+    }
+
+    #[test]
+    fn tail_time_last_10pct() {
+        let mut m = RolloutMetrics::new(1);
+        // 10 requests, 9 finish by t=10, the last at t=100.
+        for i in 0..9 {
+            m.completions.push(cpl(i, (i + 1) as f64));
+        }
+        m.completions.push(cpl(9, 100.0));
+        m.makespan = SimTime::from_secs_f64(100.0);
+        let tail = m.tail_time(0.10);
+        // 90% cut is at the 9th completion (t=9): tail = 91s.
+        assert!((tail.as_secs_f64() - 91.0).abs() < 1e-6, "{tail:?}");
+    }
+
+    #[test]
+    fn throughput_simple() {
+        let mut m = RolloutMetrics::new(2);
+        m.tokens_generated = 5000;
+        m.makespan = SimTime::from_secs_f64(10.0);
+        assert!((m.throughput() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn utilization_averages_instances() {
+        let mut m = RolloutMetrics::new(2);
+        m.makespan = SimTime::from_secs_f64(10.0);
+        m.busy_time[0] = SimTime::from_secs_f64(10.0);
+        m.busy_time[1] = SimTime::from_secs_f64(5.0);
+        assert!((m.mean_utilization() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "lost requests")]
+    fn check_complete_panics_on_loss() {
+        let m = RolloutMetrics::new(1);
+        m.check_complete(5);
+    }
+}

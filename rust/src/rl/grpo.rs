@@ -1,0 +1,185 @@
+//! The end-to-end synchronous GRPO trainer over the real model runtime.
+//!
+//! One iteration = rollout (real tokens through the coordinator-driven
+//! slot engine) → programmatic reward → group-normalized advantages →
+//! `train_step` HLO (loss + Adam update, parameters replaced in place =
+//! the weight-update phase) → next iteration rolls out with the new
+//! weights. Strictly on-policy, matching the paper's synchronous setting.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::rollout::engine::{
+    RealRollout, RealRolloutConfig, SeqRequest, StopRule,
+};
+use crate::runtime::ModelRuntime;
+use crate::sim::Rng;
+
+use super::grpo_advantages;
+use super::task::CopyTask;
+
+#[derive(Debug, Clone)]
+pub struct GrpoConfig {
+    /// Prompts per iteration; each expands into `group_size` requests.
+    pub prompts_per_iter: usize,
+    pub group_size: usize,
+    pub max_gen: usize,
+    pub temperature: f64,
+    pub use_spec: bool,
+    pub context_aware: bool,
+    pub chunk_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for GrpoConfig {
+    fn default() -> Self {
+        GrpoConfig {
+            prompts_per_iter: 4,
+            group_size: 4,
+            max_gen: 24,
+            temperature: 1.0,
+            use_spec: false,
+            context_aware: true,
+            chunk_tokens: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-iteration training statistics.
+#[derive(Debug, Clone, Copy)]
+pub struct IterStats {
+    pub iter: usize,
+    pub mean_reward: f32,
+    /// Strict (unshaped) accuracy — the evaluation metric.
+    pub mean_accuracy: f32,
+    pub mean_loss: f32,
+    pub tokens: u64,
+    pub rollout_secs: f64,
+    pub train_secs: f64,
+}
+
+pub struct GrpoTrainer {
+    pub model: ModelRuntime,
+    pub task: CopyTask,
+    pub cfg: GrpoConfig,
+    pub rng: Rng,
+    pub history: Vec<IterStats>,
+}
+
+impl GrpoTrainer {
+    pub fn new(model: ModelRuntime, cfg: GrpoConfig) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0x62F0);
+        GrpoTrainer {
+            model,
+            task: CopyTask::default(),
+            cfg,
+            rng,
+            history: vec![],
+        }
+    }
+
+    /// One synchronous RL iteration: rollout → reward → train.
+    pub fn run_iteration(&mut self, iter: usize) -> Result<IterStats> {
+        // ---- rollout (current policy) --------------------------------
+        let mut prompts = Vec::new();
+        let mut patterns = Vec::new();
+        for _ in 0..self.cfg.prompts_per_iter {
+            let (p, pat) = self.task.sample_prompt(&mut self.rng);
+            prompts.push(p);
+            patterns.push(pat);
+        }
+        let mut requests = Vec::new();
+        for (gi, p) in prompts.iter().enumerate() {
+            for _ in 0..self.cfg.group_size {
+                requests.push(SeqRequest {
+                    group: gi,
+                    prompt: p.clone(),
+                    stop: StopRule::MaxTokens(self.cfg.max_gen),
+                });
+            }
+        }
+        let t0 = Instant::now();
+        let mut roller = RealRollout::new(
+            &self.model,
+            RealRolloutConfig {
+                temperature: self.cfg.temperature,
+                use_spec: self.cfg.use_spec,
+                chunk_tokens: self.cfg.chunk_tokens,
+                context_aware: self.cfg.context_aware,
+                seed: self.cfg.seed ^ (iter as u64) << 16,
+                max_gen: self.cfg.max_gen,
+            },
+        );
+        let report = roller.run(requests)?;
+        let rollout_secs = t0.elapsed().as_secs_f64();
+
+        // ---- rewards + advantages ------------------------------------
+        let mut rewards = Vec::with_capacity(report.results.len());
+        let mut groups = Vec::with_capacity(report.results.len());
+        let mut acc_sum = 0f32;
+        for r in &report.results {
+            rewards.push(self.task.reward(&patterns[r.group], &r.tokens));
+            acc_sum += self.task.accuracy(&patterns[r.group], &r.tokens);
+            groups.push(r.group);
+        }
+        let mean_accuracy = acc_sum / report.results.len().max(1) as f32;
+        let advantages = grpo_advantages(&rewards, &groups);
+        let mean_reward =
+            rewards.iter().sum::<f32>() / rewards.len().max(1) as f32;
+
+        // ---- training (experience → train_step batches) ---------------
+        let t1 = Instant::now();
+        let d = self.model.manifest.dims;
+        let (bsz, tlen) = (d.batch, d.train_len);
+        let mut loss_sum = 0f32;
+        let mut n_batches = 0usize;
+        let results = &report.results;
+        let idx_chunks: Vec<Vec<usize>> = (0..results.len())
+            .collect::<Vec<_>>()
+            .chunks(bsz)
+            .map(|c| c.to_vec())
+            .collect();
+        for chunk in idx_chunks {
+            // Short final chunks leave zero-advantage padding rows, which
+            // contribute nothing to the policy gradient.
+            let mut tokens = vec![0i32; bsz * tlen];
+            let mut mask = vec![0i32; bsz * tlen];
+            let mut adv = vec![0f32; bsz];
+            for (row, &ri) in chunk.iter().enumerate() {
+                let r = &results[ri];
+                let full: Vec<u32> = {
+                    let p = &prompts[r.group];
+                    p.iter().chain(r.tokens.iter()).copied().collect()
+                };
+                for (t, &tok) in full.iter().take(tlen).enumerate() {
+                    tokens[row * tlen + t] = tok as i32;
+                }
+                let gen_start = r.prompt_len;
+                let gen_end = (r.prompt_len + r.tokens.len()).min(tlen);
+                for t in gen_start..gen_end {
+                    mask[row * tlen + t] = 1;
+                }
+                adv[row] = advantages[ri];
+            }
+            let loss = self.model.train(&tokens, &mask, &adv)?;
+            loss_sum += loss;
+            n_batches += 1;
+        }
+        let train_secs = t1.elapsed().as_secs_f64();
+
+        let stats = IterStats {
+            iter,
+            mean_reward,
+            mean_accuracy,
+            mean_loss: loss_sum / n_batches.max(1) as f32,
+            tokens: report.tokens_generated,
+            rollout_secs,
+            train_secs,
+        };
+        self.history.push(stats);
+        Ok(stats)
+    }
+}
+

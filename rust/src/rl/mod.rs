@@ -1,0 +1,70 @@
+//! The synchronous GRPO loop: rollout → reward → group-normalized
+//! advantages → train_step → (in-place) weight update. Strictly on-policy:
+//! every training sequence comes from the current parameters.
+
+pub mod grpo;
+pub mod phases;
+pub mod task;
+
+pub use grpo::{GrpoConfig, GrpoTrainer, IterStats};
+pub use phases::{PhaseModel, PhaseSplit};
+pub use task::CopyTask;
+
+/// Group-normalized GRPO advantages: (r - mean_g) / (std_g + eps).
+pub fn grpo_advantages(rewards: &[f32], group_of: &[usize]) -> Vec<f32> {
+    assert_eq!(rewards.len(), group_of.len());
+    let n_groups = group_of.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut sum = vec![0f64; n_groups];
+    let mut cnt = vec![0usize; n_groups];
+    for (&r, &g) in rewards.iter().zip(group_of) {
+        sum[g] += r as f64;
+        cnt[g] += 1;
+    }
+    let mean: Vec<f64> = sum
+        .iter()
+        .zip(&cnt)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect();
+    let mut var = vec![0f64; n_groups];
+    for (&r, &g) in rewards.iter().zip(group_of) {
+        let d = r as f64 - mean[g];
+        var[g] += d * d;
+    }
+    let std: Vec<f64> = var
+        .iter()
+        .zip(&cnt)
+        .map(|(v, &c)| if c > 0 { (v / c as f64).sqrt() } else { 0.0 })
+        .collect();
+    rewards
+        .iter()
+        .zip(group_of)
+        .map(|(&r, &g)| ((r as f64 - mean[g]) / (std[g] + 1e-6)) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advantages_are_group_centered() {
+        let rewards = [1.0f32, 0.0, 1.0, 1.0];
+        let groups = [0usize, 0, 1, 1];
+        let adv = grpo_advantages(&rewards, &groups);
+        // Group 0: mean 0.5, std 0.5 -> ±1.
+        assert!((adv[0] - 1.0).abs() < 1e-3);
+        assert!((adv[1] + 1.0).abs() < 1e-3);
+        // Group 1: zero variance -> ~0 advantages.
+        assert!(adv[2].abs() < 1e-3 && adv[3].abs() < 1e-3);
+    }
+
+    #[test]
+    fn group_sums_to_zero() {
+        let rewards = [0.2f32, 0.9, 0.5, 0.1, 0.7, 0.7];
+        let groups = [0usize, 0, 0, 1, 1, 1];
+        let adv = grpo_advantages(&rewards, &groups);
+        let s0: f32 = adv[..3].iter().sum();
+        let s1: f32 = adv[3..].iter().sum();
+        assert!(s0.abs() < 1e-4 && s1.abs() < 1e-4);
+    }
+}

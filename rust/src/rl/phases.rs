@@ -1,0 +1,116 @@
+//! RL iteration phase model (Table 1): rollout / training / weight-update
+//! time split. Rollout time comes from the cluster simulation; training
+//! and weight-update are modeled from the workload's scale (the paper's
+//! point is precisely that these phases are small and well-optimized
+//! already — veRL colocation, checkpoint-engine distribution).
+
+use crate::config::WorkloadConfig;
+use crate::sim::clock::SimTime;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PhaseSplit {
+    pub rollout: SimTime,
+    pub training: SimTime,
+    pub weight_update: SimTime,
+}
+
+impl PhaseSplit {
+    pub fn total(&self) -> SimTime {
+        self.rollout + self.training + self.weight_update
+    }
+
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total().as_secs_f64().max(1e-9);
+        (
+            self.rollout.as_secs_f64() / t,
+            self.training.as_secs_f64() / t,
+            self.weight_update.as_secs_f64() / t,
+        )
+    }
+}
+
+/// Calibrated per-task phase model.
+#[derive(Debug, Clone)]
+pub struct PhaseModel {
+    /// Training FLOPs per generated token ≈ 3 × forward (fwd + bwd), with
+    /// the trainer's efficiency factor folded in.
+    pub train_flops_per_token: f64,
+    /// Aggregate training compute across the cluster (FLOP/s).
+    pub train_flops: f64,
+    /// Weight bytes to broadcast and the fabric bandwidth.
+    pub weight_bytes: u64,
+    pub broadcast_bw: f64,
+    /// Fixed overheads (checkpoint conversion, optimizer sync).
+    pub train_overhead: SimTime,
+    pub update_overhead: SimTime,
+}
+
+impl PhaseModel {
+    pub fn for_workload(cfg: &WorkloadConfig) -> Self {
+        let total_gpus = (cfg.n_instances * cfg.gpus_per_instance) as f64;
+        // Model size proxy: kv_bytes_per_token correlates poorly with
+        // weights; use flops_per_token (≈ 2 x active params) instead and
+        // a dense-equivalent factor for MoE total weights.
+        let active_params = cfg.hw.flops_per_token / 2.0;
+        let weight_bytes = match cfg.name {
+            "moonlight" => 32u64 << 30,
+            "qwen2-vl-72b" => 146u64 << 30,
+            "kimi-k2" => 1u64 << 40,
+            _ => (active_params * 2.0) as u64,
+        };
+        // Fixed overheads (checkpoint conversion, optimizer sync, dataset
+        // shuffling) scale with iteration size so that scaled-down test
+        // workloads keep the paper's phase *fractions*.
+        let rel = (cfg.reqs_per_iter as f64 * cfg.avg_gen_len as f64)
+            / (3200.0 * 22386.0);
+        let rel = rel.clamp(0.005, 2.0);
+        PhaseModel {
+            train_flops_per_token: 6.0 * active_params, // fwd+bwd ≈ 3 x 2P
+            train_flops: total_gpus * 700e12 * 0.35,
+            weight_bytes: ((weight_bytes as f64) * rel.min(1.0)) as u64,
+            broadcast_bw: total_gpus / 8.0 * 50e9, // NICs per node
+            train_overhead: SimTime::from_secs_f64(20.0 * rel),
+            update_overhead: SimTime::from_secs_f64(5.0 * rel),
+        }
+    }
+
+    /// Phase split for one iteration that generated `tokens` tokens with
+    /// the given rollout makespan.
+    pub fn split(&self, rollout: SimTime, tokens: u64) -> PhaseSplit {
+        let train = tokens as f64 * self.train_flops_per_token / self.train_flops;
+        let update = self.weight_bytes as f64 / self.broadcast_bw;
+        PhaseSplit {
+            rollout,
+            training: self.train_overhead + SimTime::from_secs_f64(train),
+            weight_update: self.update_overhead
+                + SimTime::from_secs_f64(update),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    #[test]
+    fn rollout_dominates_when_long() {
+        let cfg = TaskPreset::Moonlight.workload();
+        let m = PhaseModel::for_workload(&cfg);
+        let tokens = cfg.reqs_per_iter as u64 * cfg.avg_gen_len as u64;
+        let split = m.split(SimTime::from_secs(3000), tokens);
+        let (r, t, u) = split.fractions();
+        assert!(r > 0.6, "rollout frac {r}");
+        assert!(t < 0.4 && u < 0.1);
+        assert!((r + t + u - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn training_scales_with_tokens() {
+        let cfg = TaskPreset::Qwen2Vl72b.workload();
+        let m = PhaseModel::for_workload(&cfg);
+        let a = m.split(SimTime::from_secs(100), 1_000_000);
+        let b = m.split(SimTime::from_secs(100), 100_000_000);
+        assert!(b.training > a.training);
+    }
+}

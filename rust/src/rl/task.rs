@@ -1,0 +1,127 @@
+//! Synthetic RL task with a programmatic reward: pattern continuation.
+//!
+//! Prompt: `[BOS, p_1..p_k, SEP]` with a random pattern over a small
+//! alphabet. The "correct" continuation repeats the pattern cyclically.
+//! Reward = fraction of generated tokens matching the target continuation.
+//! Policy-gradient learning on this task is easy enough for a ~0.5–4M
+//! parameter model to show a rising reward curve within a few hundred
+//! steps, which is what the end-to-end example (EXPERIMENTS.md §E2E)
+//! records.
+
+use crate::sim::Rng;
+
+pub const BOS: u32 = 2;
+pub const SEP: u32 = 3;
+/// Pattern alphabet starts here (avoids BOS/SEP/PAD collisions).
+pub const ALPHA0: u32 = 8;
+
+#[derive(Debug, Clone)]
+pub struct CopyTask {
+    /// Pattern length range (inclusive).
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Alphabet size (tokens ALPHA0 .. ALPHA0+alphabet).
+    pub alphabet: u32,
+}
+
+impl Default for CopyTask {
+    fn default() -> Self {
+        CopyTask {
+            k_min: 3,
+            k_max: 6,
+            alphabet: 12,
+        }
+    }
+}
+
+impl CopyTask {
+    /// Sample a prompt. Returns (prompt tokens, pattern).
+    pub fn sample_prompt(&self, rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+        let k = rng.range_usize(self.k_min, self.k_max);
+        let pattern: Vec<u32> = (0..k)
+            .map(|_| ALPHA0 + rng.below(self.alphabet as u64) as u32)
+            .collect();
+        let mut prompt = Vec::with_capacity(k + 2);
+        prompt.push(BOS);
+        prompt.extend_from_slice(&pattern);
+        prompt.push(SEP);
+        (prompt, pattern)
+    }
+
+    /// Target continuation of length `n`: the pattern repeated.
+    pub fn target(&self, pattern: &[u32], n: usize) -> Vec<u32> {
+        (0..n).map(|i| pattern[i % pattern.len()]).collect()
+    }
+
+    /// Shaped reward in [0, 1]: full credit for exactly matching the
+    /// cyclic target, partial credit (0.25) for emitting *some* pattern
+    /// token — the graded signal policy gradient needs to climb out of a
+    /// random-init policy over a large vocabulary (without shaping, early
+    /// groups are all-zero and GRPO advantages vanish).
+    pub fn reward(&self, pattern: &[u32], generated: &[u32]) -> f32 {
+        if generated.is_empty() {
+            return 0.0;
+        }
+        let target = self.target(pattern, generated.len());
+        let mut score = 0f32;
+        for (g, t) in generated.iter().zip(&target) {
+            if g == t {
+                score += 1.0;
+            } else if pattern.contains(g) {
+                score += 0.25;
+            }
+        }
+        score / generated.len() as f32
+    }
+
+    /// Strict accuracy (no shaping): the evaluation metric the e2e
+    /// example reports alongside the shaped training reward.
+    pub fn accuracy(&self, pattern: &[u32], generated: &[u32]) -> f32 {
+        if generated.is_empty() {
+            return 0.0;
+        }
+        let target = self.target(pattern, generated.len());
+        let hits = generated
+            .iter()
+            .zip(&target)
+            .filter(|(a, b)| a == b)
+            .count();
+        hits as f32 / generated.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompt_shape() {
+        let t = CopyTask::default();
+        let mut rng = Rng::new(1);
+        let (prompt, pattern) = t.sample_prompt(&mut rng);
+        assert_eq!(prompt[0], BOS);
+        assert_eq!(*prompt.last().unwrap(), SEP);
+        assert_eq!(prompt.len(), pattern.len() + 2);
+        assert!(pattern.iter().all(|&p| p >= ALPHA0));
+    }
+
+    #[test]
+    fn reward_perfect_and_zero() {
+        let t = CopyTask::default();
+        let pattern = vec![10, 11, 12];
+        let perfect = t.target(&pattern, 7);
+        assert_eq!(t.reward(&pattern, &perfect), 1.0);
+        let wrong = vec![9; 7];
+        assert_eq!(t.reward(&pattern, &wrong), 0.0);
+        assert_eq!(t.reward(&pattern, &[]), 0.0);
+    }
+
+    #[test]
+    fn reward_partial() {
+        let t = CopyTask::default();
+        let pattern = vec![10, 11];
+        // Target for 4: [10, 11, 10, 11]; match half.
+        let gen = vec![10, 9, 10, 9];
+        assert!((t.reward(&pattern, &gen) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,583 @@
+//! Real-model rollout engine: one "instance" = the artifact's B batch
+//! slots, driven token-by-token through the AOT HLO entry points.
+//!
+//! This is the end-to-end composition proof for the three-layer stack: the
+//! L3 coordinator ideas run for real here —
+//!
+//! * **divided rollout**: slot leases of `chunk_tokens`; an expiring lease
+//!   extracts the slot's KV (`slot_extract`) into a host-side pool (the
+//!   Mooncake analogue) and re-admits later via `slot_update` — no
+//!   re-prefill;
+//! * **context-aware scheduling**: the first request of each group is a
+//!   probe; groups without signal run first (SFS), the rest approximate
+//!   LFS on learned group estimates;
+//! * **adaptive grouped speculative decoding**: drafts come from the DGDS
+//!   per-group CSTs; verification uses the Pallas verify kernel artifact;
+//!   acceptance is exact sampling (sample from the true distribution,
+//!   accept while it reproduces the draft).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::runtime::ModelRuntime;
+use crate::sim::Rng;
+use crate::spec::dgds::{DraftClient, DraftServer, SpeculationArgs};
+
+/// Stop rule for a generated sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopRule {
+    /// Stop after exactly this many generated tokens.
+    MaxTokens(usize),
+    /// Stop at this token id (or at the config's max_gen cap).
+    Eos(u32),
+}
+
+/// One input request.
+#[derive(Debug, Clone)]
+pub struct SeqRequest {
+    pub group: usize,
+    pub prompt: Vec<u32>,
+    pub stop: StopRule,
+}
+
+/// One finished sequence.
+#[derive(Debug, Clone)]
+pub struct SeqResult {
+    pub group: usize,
+    pub prompt_len: usize,
+    pub tokens: Vec<u32>,
+    /// Engine decode/verify forward passes this request was resident for.
+    pub steps_resident: u64,
+    /// Times the request was parked and re-admitted (divided rollout).
+    pub migrations: u32,
+}
+
+/// Rollout configuration.
+#[derive(Debug, Clone)]
+pub struct RealRolloutConfig {
+    pub temperature: f64,
+    /// Grouped speculative decoding through the DGDS.
+    pub use_spec: bool,
+    /// Slot lease length in generated tokens (divided rollout); 0 = no
+    /// chunking (requests hold slots to completion).
+    pub chunk_tokens: usize,
+    /// Context-aware ordering (probe-first + LFS estimates) vs FCFS.
+    pub context_aware: bool,
+    pub seed: u64,
+    /// Hard cap on generated tokens per request.
+    pub max_gen: usize,
+}
+
+impl Default for RealRolloutConfig {
+    fn default() -> Self {
+        RealRolloutConfig {
+            temperature: 1.0,
+            use_spec: true,
+            chunk_tokens: 0,
+            context_aware: true,
+            seed: 0,
+            max_gen: 64,
+        }
+    }
+}
+
+/// Aggregate statistics of one rollout run.
+#[derive(Debug, Clone, Default)]
+pub struct RolloutReport {
+    pub results: Vec<SeqResult>,
+    pub engine_steps: u64,
+    pub verify_steps: u64,
+    pub draft_tokens_proposed: u64,
+    pub draft_tokens_accepted: u64,
+    pub tokens_generated: u64,
+    pub migrations: u64,
+    pub wall_secs: f64,
+}
+
+impl RolloutReport {
+    pub fn throughput(&self) -> f64 {
+        if self.wall_secs == 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.wall_secs
+        }
+    }
+
+    pub fn mean_acceptance_len(&self) -> f64 {
+        if self.verify_steps == 0 {
+            1.0
+        } else {
+            1.0 + self.draft_tokens_accepted as f64 / self.verify_steps as f64
+        }
+    }
+}
+
+enum ReqState {
+    Waiting,
+    /// Parked between chunk leases: KV held host-side.
+    Parked {
+        kc1: Literal,
+        vc1: Literal,
+        cache_len: i32,
+        cur_token: u32,
+    },
+    #[allow(dead_code)] // slot recorded for debugging/symmetry
+    Active(usize),
+    Done,
+}
+
+struct ReqRt {
+    spec: SeqRequest,
+    state: ReqState,
+    generated: Vec<u32>,
+    /// Tokens already pushed to the DGDS.
+    dgds_sent: usize,
+    steps_resident: u64,
+    migrations: u32,
+}
+
+#[derive(Clone)]
+struct SlotState {
+    req: usize,
+    cache_len: i32,
+    cur_token: u32,
+    chunk_left: usize,
+}
+
+/// The engine itself.
+pub struct RealRollout<'m> {
+    pub model: &'m ModelRuntime,
+    pub cfg: RealRolloutConfig,
+    pub rng: Rng,
+}
+
+impl<'m> RealRollout<'m> {
+    pub fn new(model: &'m ModelRuntime, cfg: RealRolloutConfig) -> Self {
+        let rng = Rng::new(cfg.seed ^ 0xD0_11_00);
+        RealRollout { model, cfg, rng }
+    }
+
+    pub fn run(&mut self, requests: Vec<SeqRequest>) -> Result<RolloutReport> {
+        let start = Instant::now();
+        let d = self.model.manifest.dims;
+        let (b, g, p, s, v) =
+            (d.batch, d.draft_width, d.prefill_len, d.max_seq, d.vocab);
+        for r in &requests {
+            if r.prompt.is_empty() || r.prompt.len() > p {
+                bail!("prompt length {} not in [1, {p}]", r.prompt.len());
+            }
+            let cap = match r.stop {
+                StopRule::MaxTokens(n) => n,
+                StopRule::Eos(_) => self.cfg.max_gen,
+            };
+            if r.prompt.len() + cap + g + 1 > s {
+                bail!(
+                    "prompt {} + max_gen {cap} + draft {g} exceeds cache {s}",
+                    r.prompt.len()
+                );
+            }
+        }
+
+        let mut reqs: Vec<ReqRt> = requests
+            .into_iter()
+            .map(|spec| ReqRt {
+                spec,
+                state: ReqState::Waiting,
+                generated: vec![],
+                dgds_sent: 0,
+                steps_resident: 0,
+                migrations: 0,
+            })
+            .collect();
+
+        // Group context: probe = lowest request index per group; estimate
+        // = max finished length (None until a sibling finishes).
+        let mut probe_of: BTreeMap<usize, usize> = BTreeMap::new();
+        for (i, r) in reqs.iter().enumerate() {
+            probe_of.entry(r.spec.group).or_insert(i);
+        }
+        let mut estimate: BTreeMap<usize, usize> = BTreeMap::new();
+
+        // DGDS.
+        let server = DraftServer::spawn();
+        let mut client = DraftClient::new();
+        let group_ids: Vec<String> = {
+            let mut gs: Vec<usize> =
+                reqs.iter().map(|r| r.spec.group).collect();
+            gs.sort();
+            gs.dedup();
+            for gid in &gs {
+                server.register_group(&format!("g{gid}"), 3600);
+            }
+            gs.iter().map(|gi| format!("g{gi}")).collect()
+        };
+
+        // Batch caches: start zeroed via a dummy whole-batch prefill.
+        let zero_tokens = vec![0i32; b * p];
+        let one_lens = vec![1i32; b];
+        let (_, mut kc, mut vc) =
+            self.model.prefill(&zero_tokens, &one_lens)?;
+        let mut slots: Vec<Option<SlotState>> = vec![None; b];
+        let mut cache_lens = vec![1i32; b];
+
+        let mut report = RolloutReport::default();
+        let spec_args = SpeculationArgs {
+            max_spec_tokens: g - 1,
+            pattern_lookup_max: 24,
+            pattern_lookup_min: 2,
+            top_k: 1,
+        };
+
+        loop {
+            // ---------------- admissions -------------------------------
+            loop {
+                let Some(slot) = slots.iter().position(Option::is_none)
+                else {
+                    break;
+                };
+                let Some(next) = self.pick_next(&reqs, &probe_of, &estimate)
+                else {
+                    break;
+                };
+                let st = match std::mem::replace(
+                    &mut reqs[next].state,
+                    ReqState::Active(slot),
+                ) {
+                    ReqState::Waiting => {
+                        // Fresh admission: single-sequence prefill.
+                        let prompt = reqs[next].spec.prompt.clone();
+                        let mut padded = vec![0i32; p];
+                        for (i, &t) in prompt.iter().enumerate() {
+                            padded[i] = t as i32;
+                        }
+                        let (logits, kc1, vc1) = self
+                            .model
+                            .prefill_one(&padded, prompt.len() as i32)?;
+                        let (nkc, nvc) = self.model.slot_update(
+                            &kc, &vc, &kc1, &vc1, slot as i32,
+                        )?;
+                        kc = nkc;
+                        vc = nvc;
+                        let tok = self.rng.sample_softmax(
+                            &logits[..v],
+                            self.cfg.temperature,
+                        ) as u32;
+                        reqs[next].generated.push(tok);
+                        report.tokens_generated += 1;
+                        SlotState {
+                            req: next,
+                            cache_len: prompt.len() as i32,
+                            cur_token: tok,
+                            chunk_left: self.chunk_budget(),
+                        }
+                    }
+                    ReqState::Parked {
+                        kc1,
+                        vc1,
+                        cache_len,
+                        cur_token,
+                    } => {
+                        // Re-admission from the pool: no re-prefill.
+                        let (nkc, nvc) = self.model.slot_update(
+                            &kc, &vc, &kc1, &vc1, slot as i32,
+                        )?;
+                        kc = nkc;
+                        vc = nvc;
+                        reqs[next].migrations += 1;
+                        report.migrations += 1;
+                        SlotState {
+                            req: next,
+                            cache_len,
+                            cur_token,
+                            chunk_left: self.chunk_budget(),
+                        }
+                    }
+                    other => {
+                        reqs[next].state = other;
+                        break;
+                    }
+                };
+                cache_lens[slot] = st.cache_len;
+                slots[slot] = Some(st);
+            }
+
+            if slots.iter().all(Option::is_none) {
+                break; // everything finished
+            }
+
+            // ---------------- one engine step --------------------------
+            // Refresh draft contexts periodically (cheap in-process).
+            if self.cfg.use_spec {
+                client.fetch(&server, &group_ids);
+            }
+
+            // Collect drafts.
+            let mut drafts: Vec<Vec<u32>> = vec![vec![]; b];
+            if self.cfg.use_spec {
+                let mut queries = vec![];
+                let mut qslots = vec![];
+                let mut gids: Vec<String> = vec![];
+                let mut patterns: Vec<Vec<u32>> = vec![];
+                for (slot, st) in slots.iter().enumerate() {
+                    let Some(st) = st else { continue };
+                    let r = &reqs[st.req];
+                    let mut pattern: Vec<u32> = r
+                        .spec
+                        .prompt
+                        .iter()
+                        .chain(r.generated.iter())
+                        .copied()
+                        .collect();
+                    let keep = pattern.len().saturating_sub(32);
+                    pattern.drain(..keep);
+                    gids.push(format!("g{}", r.spec.group));
+                    patterns.push(pattern);
+                    qslots.push(slot);
+                }
+                for i in 0..qslots.len() {
+                    queries.push((
+                        gids[i].as_str(),
+                        patterns[i].as_slice(),
+                        spec_args,
+                    ));
+                }
+                let answers = client.batch_speculate(&queries);
+                for (i, paths) in answers.into_iter().enumerate() {
+                    if let Some(best) = paths.into_iter().next() {
+                        drafts[qslots[i]] = best.tokens;
+                    }
+                }
+            }
+
+            let any_draft = drafts.iter().any(|d| !d.is_empty());
+            let mut new_tokens_per_slot: Vec<Vec<u32>> = vec![vec![]; b];
+
+            if any_draft {
+                // Verify path: one forward scores G positions per slot.
+                let mut draft_tokens = vec![0i32; b * g];
+                for (slot, st) in slots.iter().enumerate() {
+                    if let Some(st) = st {
+                        draft_tokens[slot * g] = st.cur_token as i32;
+                        for (i, &t) in
+                            drafts[slot].iter().take(g - 1).enumerate()
+                        {
+                            draft_tokens[slot * g + 1 + i] = t as i32;
+                        }
+                    }
+                }
+                let (logits, nkc, nvc) =
+                    self.model.verify(&draft_tokens, &cache_lens, &kc, &vc)?;
+                kc = nkc;
+                vc = nvc;
+                report.verify_steps += 1;
+                for (slot, st) in slots.iter_mut().enumerate() {
+                    let Some(st) = st else { continue };
+                    let d = &drafts[slot];
+                    report.draft_tokens_proposed += d.len() as u64;
+                    let mut accepted = 0usize;
+                    let mut toks = vec![];
+                    for i in 0..=d.len().min(g - 1) {
+                        let row = &logits
+                            [(slot * g + i) * v..(slot * g + i + 1) * v];
+                        let t = self
+                            .rng
+                            .sample_softmax(row, self.cfg.temperature)
+                            as u32;
+                        toks.push(t);
+                        if i < d.len() && t == d[i] {
+                            accepted += 1;
+                        } else {
+                            break;
+                        }
+                    }
+                    report.draft_tokens_accepted += accepted as u64;
+                    // Committed KV: cur_token + accepted drafts.
+                    st.cache_len += 1 + accepted as i32;
+                    st.cur_token = *toks.last().unwrap();
+                    new_tokens_per_slot[slot] = toks;
+                }
+            } else {
+                // Plain decode step.
+                let mut cur = vec![0i32; b];
+                for (slot, st) in slots.iter().enumerate() {
+                    if let Some(st) = st {
+                        cur[slot] = st.cur_token as i32;
+                    }
+                }
+                let (logits, nkc, nvc) =
+                    self.model.decode(&cur, &cache_lens, &kc, &vc)?;
+                kc = nkc;
+                vc = nvc;
+                for (slot, st) in slots.iter_mut().enumerate() {
+                    let Some(st) = st else { continue };
+                    let row = &logits[slot * v..(slot + 1) * v];
+                    let t =
+                        self.rng.sample_softmax(row, self.cfg.temperature)
+                            as u32;
+                    st.cache_len += 1;
+                    st.cur_token = t;
+                    new_tokens_per_slot[slot] = vec![t];
+                }
+            }
+            report.engine_steps += 1;
+
+            // ---------------- commit + lifecycle ------------------------
+            for slot in 0..b {
+                let Some(st) = slots[slot].clone() else { continue };
+                let toks = std::mem::take(&mut new_tokens_per_slot[slot]);
+                if toks.is_empty() {
+                    continue;
+                }
+                let req = st.req;
+                let n = toks.len();
+                reqs[req].generated.extend(&toks);
+                reqs[req].steps_resident += 1;
+                report.tokens_generated += n as u64;
+                cache_lens[slot] = st.cache_len;
+                {
+                    let stm = slots[slot].as_mut().unwrap();
+                    stm.chunk_left = stm.chunk_left.saturating_sub(n);
+                }
+
+                // Push new tokens to the DGDS (async append).
+                if self.cfg.use_spec {
+                    let r = &mut reqs[req];
+                    let full: Vec<u32> = r
+                        .spec
+                        .prompt
+                        .iter()
+                        .chain(r.generated.iter())
+                        .copied()
+                        .collect();
+                    server.update_cst(
+                        &format!("g{}", r.spec.group),
+                        req as u64,
+                        r.dgds_sent,
+                        &full[r.dgds_sent..],
+                    );
+                    r.dgds_sent = full.len();
+                }
+
+                // Completion?
+                let done = {
+                    let r = &reqs[req];
+                    match r.spec.stop {
+                        StopRule::MaxTokens(nmax) => {
+                            r.generated.len() >= nmax
+                        }
+                        StopRule::Eos(eos) => {
+                            r.generated.contains(&eos)
+                                || r.generated.len() >= self.cfg.max_gen
+                        }
+                    }
+                };
+                if done {
+                    // Trim past-stop tokens for MaxTokens semantics.
+                    if let StopRule::MaxTokens(nmax) = reqs[req].spec.stop {
+                        reqs[req].generated.truncate(nmax);
+                    }
+                    let glen = reqs[req].generated.len();
+                    let group = reqs[req].spec.group;
+                    let e = estimate.entry(group).or_insert(0);
+                    *e = (*e).max(glen);
+                    reqs[req].state = ReqState::Done;
+                    slots[slot] = None;
+                    cache_lens[slot] = 1;
+                    continue;
+                }
+
+                // Chunk lease expiry (divided rollout): park only if
+                // someone is waiting for the slot.
+                let lease_up = self.cfg.chunk_tokens > 0
+                    && slots[slot].as_ref().unwrap().chunk_left == 0;
+                let someone_waiting = reqs
+                    .iter()
+                    .any(|r| matches!(r.state, ReqState::Waiting | ReqState::Parked { .. }));
+                if lease_up && someone_waiting {
+                    let st = slots[slot].take().unwrap();
+                    let (kc1, vc1) =
+                        self.model.slot_extract(&kc, &vc, slot as i32)?;
+                    reqs[req].state = ReqState::Parked {
+                        kc1,
+                        vc1,
+                        cache_len: st.cache_len,
+                        cur_token: st.cur_token,
+                    };
+                    cache_lens[slot] = 1;
+                }
+            }
+        }
+
+        report.results = reqs
+            .into_iter()
+            .map(|r| SeqResult {
+                group: r.spec.group,
+                prompt_len: r.spec.prompt.len(),
+                tokens: r.generated,
+                steps_resident: r.steps_resident,
+                migrations: r.migrations,
+            })
+            .collect();
+        report.wall_secs = start.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    fn chunk_budget(&self) -> usize {
+        if self.cfg.chunk_tokens == 0 {
+            usize::MAX
+        } else {
+            self.cfg.chunk_tokens
+        }
+    }
+
+    /// Scheduling order: probes of signal-less groups first (SFS), then
+    /// LFS on group estimates; FCFS when context is off.
+    fn pick_next(
+        &self,
+        reqs: &[ReqRt],
+        probe_of: &BTreeMap<usize, usize>,
+        estimate: &BTreeMap<usize, usize>,
+    ) -> Option<usize> {
+        let waiting = |i: &usize| {
+            matches!(
+                reqs[*i].state,
+                ReqState::Waiting | ReqState::Parked { .. }
+            )
+        };
+        let idxs: Vec<usize> =
+            (0..reqs.len()).filter(|i| waiting(i)).collect();
+        if idxs.is_empty() {
+            return None;
+        }
+        if !self.cfg.context_aware {
+            return idxs.first().copied();
+        }
+        // Probe path.
+        let mut probes: Vec<usize> = idxs
+            .iter()
+            .copied()
+            .filter(|&i| {
+                probe_of.get(&reqs[i].spec.group) == Some(&i)
+                    && !estimate.contains_key(&reqs[i].spec.group)
+            })
+            .collect();
+        if !probes.is_empty() {
+            probes.sort_by_key(|&i| (reqs[i].generated.len(), i));
+            return probes.first().copied();
+        }
+        // Approximate LFS: largest (estimate − progress) first; groups
+        // without estimates are conservatively "long".
+        idxs.into_iter().max_by_key(|&i| {
+            let est = estimate
+                .get(&reqs[i].spec.group)
+                .copied()
+                .unwrap_or(self.cfg.max_gen);
+            let remaining =
+                est.saturating_sub(reqs[i].generated.len());
+            (remaining, usize::MAX - i)
+        })
+    }
+}

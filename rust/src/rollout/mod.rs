@@ -1,0 +1,8 @@
+//! The real-model rollout engine: drives the tiny transformer (AOT HLO
+//! artifacts via [`crate::runtime`]) through the Seer coordinator at
+//! batch-slot granularity — divided rollout as slot leases, probe-first
+//! context scheduling, and grouped speculative decoding through the DGDS.
+
+pub mod engine;
+
+pub use engine::{RealRollout, RealRolloutConfig, RolloutReport, SeqResult};

@@ -1,0 +1,268 @@
+//! Artifact manifest: the JSON sidecar `aot.py` writes next to the HLO
+//! text files, describing every entry point's flattened argument/result
+//! layout and the parameter ordering.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .expect("shape")
+            .as_arr()
+            .ok_or_else(|| anyhow!("shape not an array"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .expect("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("dtype not a string"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+}
+
+/// Static model dimensions baked into the artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub batch: usize,
+    pub prefill_len: usize,
+    pub train_len: usize,
+    pub draft_width: usize,
+    pub kv_block: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dims: ModelDims,
+    pub use_pallas: bool,
+    pub entries: BTreeMap<String, EntrySpec>,
+    /// (name, spec) in the canonical flattening order.
+    pub param_layout: Vec<(String, TensorSpec)>,
+    pub n_params: usize,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/<preset>.manifest.json`.
+    pub fn load(dir: &Path, preset: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{preset}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let cfg = j.expect("config");
+        let dim = |k: &str| -> Result<usize> {
+            cfg.expect(k)
+                .as_usize()
+                .ok_or_else(|| anyhow!("config.{k} not an int"))
+        };
+        let dims = ModelDims {
+            vocab: dim("vocab")?,
+            d_model: dim("d_model")?,
+            n_layers: dim("n_layers")?,
+            n_heads: dim("n_heads")?,
+            head_dim: dim("head_dim")?,
+            max_seq: dim("max_seq")?,
+            batch: dim("batch")?,
+            prefill_len: dim("prefill_len")?,
+            train_len: dim("train_len")?,
+            draft_width: dim("draft_width")?,
+            kv_block: dim("kv_block")?,
+        };
+
+        let mut entries = BTreeMap::new();
+        for (name, spec) in j
+            .expect("entries")
+            .as_obj()
+            .ok_or_else(|| anyhow!("entries not an object"))?
+        {
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                spec.expect(key)
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("{key} not an array"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            entries.insert(
+                name.clone(),
+                EntrySpec {
+                    name: name.clone(),
+                    file: spec
+                        .expect("file")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("file not a string"))?
+                        .to_string(),
+                    args: parse_list("args")?,
+                    results: parse_list("results")?,
+                },
+            );
+        }
+
+        let param_layout = j
+            .expect("param_layout")
+            .as_arr()
+            .ok_or_else(|| anyhow!("param_layout not an array"))?
+            .iter()
+            .map(|e| {
+                let name = e
+                    .expect("name")
+                    .as_str()
+                    .ok_or_else(|| anyhow!("param name"))?
+                    .to_string();
+                Ok((name, TensorSpec::from_json(e)?))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let n_params = j
+            .expect("n_params")
+            .as_usize()
+            .ok_or_else(|| anyhow!("n_params"))?;
+        let total: usize = param_layout.iter().map(|(_, s)| s.elements()).sum();
+        if total != n_params {
+            bail!("param layout totals {total}, manifest says {n_params}");
+        }
+
+        Ok(Manifest {
+            preset: j
+                .expect("preset")
+                .as_str()
+                .ok_or_else(|| anyhow!("preset"))?
+                .to_string(),
+            dims,
+            use_pallas: j
+                .expect("use_pallas")
+                .as_bool()
+                .unwrap_or(true),
+            entries,
+            param_layout,
+            n_params,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("no entry '{name}' in manifest"))
+    }
+
+    pub fn hlo_path(&self, entry: &EntrySpec) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    pub fn params_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.params.bin", self.preset))
+    }
+
+    /// Load the initial parameter blob as per-leaf f32 vectors.
+    pub fn load_params(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.params_path();
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() != 4 * self.n_params {
+            bail!(
+                "params blob is {} bytes, expected {}",
+                bytes.len(),
+                4 * self.n_params
+            );
+        }
+        let mut out = Vec::with_capacity(self.param_layout.len());
+        let mut off = 0usize;
+        for (_, spec) in &self.param_layout {
+            let n = spec.elements();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + 4 * i..off + 4 * i + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += 4 * n;
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Default artifact directory: `$SEER_ARTIFACTS` or `artifacts/` relative
+/// to the crate root.
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("SEER_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    manifest_dir.join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        default_artifact_dir().join("tiny.manifest.json").exists()
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_artifact_dir(), "tiny").unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert!(m.entries.contains_key("decode_step"));
+        assert!(m.entries.contains_key("train_step"));
+        let d = m.entry("decode_step").unwrap();
+        // params + (tokens, cache_lens, k_cache, v_cache)
+        assert_eq!(d.args.len(), m.param_layout.len() + 4);
+        assert_eq!(d.results.len(), 3);
+        // logits (B, V)
+        assert_eq!(d.results[0].shape, vec![m.dims.batch, m.dims.vocab]);
+    }
+
+    #[test]
+    fn loads_param_blob() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&default_artifact_dir(), "tiny").unwrap();
+        let params = m.load_params().unwrap();
+        assert_eq!(params.len(), m.param_layout.len());
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        assert_eq!(total, m.n_params);
+        // Embeddings should be small random values, not zeros.
+        let emb = &params[params.len() - 1]; // tok_emb sorts last
+        assert!(emb.iter().any(|&x| x != 0.0));
+        assert!(emb.iter().all(|&x| x.abs() < 1.0));
+    }
+}

@@ -1,0 +1,414 @@
+//! Typed wrappers over the model's AOT entry points, holding the live
+//! parameter/optimizer state as XLA literals.
+//!
+//! The weight-update phase of the synchronous RL loop is "free" here: the
+//! train_step artifact returns the new parameter leaves, which replace the
+//! in-memory list used by the very next rollout step — the same
+//! checkpoint-engine semantics the paper's pipeline relies on, minus the
+//! multi-node broadcast.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::Literal;
+
+use super::manifest::{Manifest, TensorSpec};
+use super::Runtime;
+
+pub struct ModelRuntime {
+    rt: Runtime,
+    pub manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Parameter leaves in manifest order, resident on device.
+    ///
+    /// Perf + correctness note (EXPERIMENTS.md §Perf): all executions go
+    /// through `execute_b` with buffers this struct uploads and drops
+    /// explicitly. The crate's literal-based `execute` leaks its internal
+    /// literal→buffer conversions (~3.5 MB per decode call, OOM within
+    /// ~100 training iterations) and re-uploads the parameters on every
+    /// call; device-resident parameter buffers fix both.
+    params: Vec<xla::PjRtBuffer>,
+    opt_m: Vec<xla::PjRtBuffer>,
+    opt_v: Vec<xla::PjRtBuffer>,
+    step: i32,
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+/// Build an f32 literal of the given shape.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+    }
+    Literal::vec1(data)
+        .reshape(&dims_i64(shape))
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("shape {shape:?} needs {n} elements, got {}", data.len());
+    }
+    Literal::vec1(data)
+        .reshape(&dims_i64(shape))
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Upload raw f32 data to a device buffer (single host→device copy).
+fn upload_f32(rt: &Runtime, data: &[f32], shape: &[usize]) -> Result<xla::PjRtBuffer> {
+    rt.client()
+        .buffer_from_host_buffer(data, shape, None)
+        .map_err(|e| anyhow!("upload: {e:?}"))
+}
+
+/// Upload a host literal to a device buffer.
+fn upload_literal(rt: &Runtime, lit: &Literal) -> Result<xla::PjRtBuffer> {
+    rt.client()
+        .buffer_from_host_literal(None, lit)
+        .map_err(|e| anyhow!("upload literal: {e:?}"))
+}
+
+impl ModelRuntime {
+    /// Load + compile every entry of `<dir>/<preset>.*` and initialize
+    /// parameters from the emitted blob.
+    pub fn load(dir: &Path, preset: &str) -> Result<Self> {
+        let rt = Runtime::cpu()?;
+        let manifest = Manifest::load(dir, preset)?;
+        let mut exes = BTreeMap::new();
+        for (name, entry) in &manifest.entries {
+            let exe = rt
+                .load_hlo(&manifest.hlo_path(entry))
+                .with_context(|| format!("loading entry '{name}'"))?;
+            exes.insert(name.clone(), exe);
+        }
+        let raw = manifest.load_params()?;
+        let mut params = Vec::with_capacity(raw.len());
+        let mut opt_m = Vec::with_capacity(raw.len());
+        let mut opt_v = Vec::with_capacity(raw.len());
+        for ((_, spec), leaf) in manifest.param_layout.iter().zip(&raw) {
+            params.push(upload_f32(&rt, leaf, &spec.shape)?);
+            let zeros = vec![0f32; leaf.len()];
+            opt_m.push(upload_f32(&rt, &zeros, &spec.shape)?);
+            opt_v.push(upload_f32(&rt, &zeros, &spec.shape)?);
+        }
+        Ok(ModelRuntime {
+            rt,
+            manifest,
+            exes,
+            params,
+            opt_m,
+            opt_v,
+            step: 0,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.rt.platform()
+    }
+
+    pub fn n_param_leaves(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Execute `entry` with `extra` inputs appended after the parameter
+    /// leaves, returning the flattened result literals.
+    fn call(&self, entry: &str, extra: &[&Literal]) -> Result<Vec<Literal>> {
+        self.call_with_prefix(entry, &[], extra)
+    }
+
+    /// Execute a parameter-less entry (cache plumbing like slot_update).
+    fn call_raw(&self, entry: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.entry(entry)?;
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow!("entry '{entry}' not compiled"))?;
+        if args.len() != spec.args.len() {
+            bail!(
+                "entry '{entry}' wants {} args, got {}",
+                spec.args.len(),
+                args.len()
+            );
+        }
+        let uploaded: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|l| upload_literal(&self.rt, l))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = uploaded.iter().collect();
+        let outputs = exe
+            .execute_b::<&xla::PjRtBuffer>(&refs)
+            .map_err(|e| anyhow!("execute {entry}: {e:?}"))?;
+        self.collect_results(entry, outputs)
+    }
+
+    /// Execute with device-resident `mid` buffers between the parameter
+    /// leaves and the host `extra` literals: arguments are
+    /// params ++ mid ++ extra (train_step passes the optimizer state as
+    /// `mid`; inference entries pass none).
+    fn call_with_prefix(
+        &self,
+        entry: &str,
+        mid: &[&xla::PjRtBuffer],
+        extra: &[&Literal],
+    ) -> Result<Vec<Literal>> {
+        let spec = self.manifest.entry(entry)?;
+        let exe = self
+            .exes
+            .get(entry)
+            .ok_or_else(|| anyhow!("entry '{entry}' not compiled"))?;
+        // Upload the host-literal inputs; params and `mid` are already
+        // device-resident.
+        let uploaded: Vec<xla::PjRtBuffer> = extra
+            .iter()
+            .map(|l| upload_literal(&self.rt, l))
+            .collect::<Result<_>>()?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            Vec::with_capacity(spec.args.len());
+        args.extend(self.params.iter());
+        args.extend_from_slice(mid);
+        args.extend(uploaded.iter());
+        if args.len() != spec.args.len() {
+            bail!(
+                "entry '{entry}' wants {} args, got {}",
+                spec.args.len(),
+                args.len()
+            );
+        }
+        let outputs = exe
+            .execute_b::<&xla::PjRtBuffer>(&args)
+            .map_err(|e| anyhow!("execute {entry}: {e:?}"))?;
+        self.collect_results(entry, outputs)
+    }
+
+    fn collect_results(
+        &self,
+        entry: &str,
+        outputs: Vec<Vec<xla::PjRtBuffer>>,
+    ) -> Result<Vec<Literal>> {
+        let spec = self.manifest.entry(entry)?;
+        let row = outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("no output replica"))?;
+        let mut lits = Vec::new();
+        for buf in row {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+            lits.push(lit);
+        }
+        // jax lowers with return_tuple=True: a single tuple literal holds
+        // all results. Untuple if so.
+        if lits.len() == 1 {
+            let mut only = lits.pop().unwrap();
+            match only.decompose_tuple() {
+                Ok(parts) if !parts.is_empty() => lits = parts,
+                _ => lits.push(only),
+            }
+        }
+        if lits.len() != spec.results.len() {
+            bail!(
+                "entry '{entry}' returned {} literals, manifest says {}",
+                lits.len(),
+                spec.results.len()
+            );
+        }
+        Ok(lits)
+    }
+
+    // ------------------------------------------------------------------
+    // Entry points.
+    // ------------------------------------------------------------------
+
+    /// Prefill the whole batch. `tokens`: B×P row-major; `seq_lens`: B.
+    /// Returns (last-token logits B×V, k_cache, v_cache).
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        seq_lens: &[i32],
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let d = &self.manifest.dims;
+        let t = lit_i32(tokens, &[d.batch, d.prefill_len])?;
+        let l = lit_i32(seq_lens, &[d.batch])?;
+        let mut out = self.call("prefill", &[&t, &l])?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kc, vc))
+    }
+
+    /// Prefill one sequence (B=1 entry). Returns (logits V, kc1, vc1).
+    pub fn prefill_one(
+        &self,
+        tokens: &[i32],
+        seq_len: i32,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let d = &self.manifest.dims;
+        let t = lit_i32(tokens, &[1, d.prefill_len])?;
+        let l = lit_i32(&[seq_len], &[1])?;
+        let mut out = self.call("prefill_one", &[&t, &l])?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kc, vc))
+    }
+
+    /// Insert a single-sequence cache (from `prefill_one` or
+    /// `slot_extract`) into batch slot `slot` of (k_cache, v_cache).
+    pub fn slot_update(
+        &self,
+        kc: &Literal,
+        vc: &Literal,
+        kc1: &Literal,
+        vc1: &Literal,
+        slot: i32,
+    ) -> Result<(Literal, Literal)> {
+        let s = Literal::scalar(slot);
+        let mut out = self.call_raw("slot_update", &[kc, vc, kc1, vc1, &s])?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        Ok((kc, vc))
+    }
+
+    /// Extract one slot's cache pair (L, 1, H, S, Dh) — parked in the
+    /// host-side KV pool between chunk leases (divided rollout).
+    pub fn slot_extract(
+        &self,
+        kc: &Literal,
+        vc: &Literal,
+        slot: i32,
+    ) -> Result<(Literal, Literal)> {
+        let s = Literal::scalar(slot);
+        let mut out = self.call_raw("slot_extract", &[kc, vc, &s])?;
+        let vc = out.pop().unwrap();
+        let kc = out.pop().unwrap();
+        Ok((kc, vc))
+    }
+
+    /// One decode step. Returns (logits B×V, k_cache, v_cache).
+    pub fn decode(
+        &self,
+        tokens: &[i32],
+        cache_lens: &[i32],
+        kc: &Literal,
+        vc: &Literal,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let d = &self.manifest.dims;
+        let t = lit_i32(tokens, &[d.batch])?;
+        let l = lit_i32(cache_lens, &[d.batch])?;
+        let mut out = self.call("decode_step", &[&t, &l, kc, vc])?;
+        let vc_o = out.pop().unwrap();
+        let kc_o = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kc_o, vc_o))
+    }
+
+    /// Verify G draft positions per sequence. `draft_tokens`: B×G
+    /// row-major (position 0 = last accepted token). Returns
+    /// (logits B×G×V, k_cache, v_cache).
+    pub fn verify(
+        &self,
+        draft_tokens: &[i32],
+        cache_lens: &[i32],
+        kc: &Literal,
+        vc: &Literal,
+    ) -> Result<(Vec<f32>, Literal, Literal)> {
+        let d = &self.manifest.dims;
+        let t = lit_i32(draft_tokens, &[d.batch, d.draft_width])?;
+        let l = lit_i32(cache_lens, &[d.batch])?;
+        let mut out = self.call("verify_step", &[&t, &l, kc, vc])?;
+        let vc_o = out.pop().unwrap();
+        let kc_o = out.pop().unwrap();
+        let logits = out.pop().unwrap().to_vec::<f32>()
+            .map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok((logits, kc_o, vc_o))
+    }
+
+    /// One GRPO training step over a B×T window; updates parameters and
+    /// optimizer state in place and returns the loss.
+    pub fn train(
+        &mut self,
+        tokens: &[i32],
+        loss_mask: &[i32],
+        advantages: &[f32],
+    ) -> Result<f32> {
+        let d = &self.manifest.dims;
+        let t = lit_i32(tokens, &[d.batch, d.train_len])?;
+        let m = lit_i32(loss_mask, &[d.batch, d.train_len])?;
+        let a = lit_f32(advantages, &[d.batch])?;
+        let step = Literal::scalar(self.step);
+        let mid: Vec<&xla::PjRtBuffer> = self
+            .opt_m
+            .iter()
+            .chain(self.opt_v.iter())
+            .collect();
+        let out = self.call_with_prefix(
+            "train_step",
+            &mid,
+            &[&step, &t, &m, &a],
+        )?;
+        let n = self.params.len();
+        if out.len() != 3 * n + 1 {
+            bail!("train_step returned {} results, want {}", out.len(), 3 * n + 1);
+        }
+        // Re-upload the updated weights/optimizer state as the new
+        // device-resident buffers (the in-place weight update of the
+        // synchronous loop). Round-trip through raw f32 host data:
+        // literals decomposed out of an execution's result tuple are not
+        // accepted by buffer_from_host_literal (xla_extension asserts on
+        // their size metadata), while raw uploads are always safe.
+        let mut it = out.into_iter();
+        let reupload = |rt: &Runtime,
+                        lits: &mut dyn Iterator<Item = Literal>,
+                        layout: &[(String, TensorSpec)]|
+         -> Result<Vec<xla::PjRtBuffer>> {
+            let mut bufs = Vec::with_capacity(layout.len());
+            for (lit, (_, spec)) in lits.take(layout.len()).zip(layout) {
+                let data = lit
+                    .to_vec::<f32>()
+                    .map_err(|e| anyhow!("download leaf: {e:?}"))?;
+                bufs.push(upload_f32(rt, &data, &spec.shape)?);
+            }
+            Ok(bufs)
+        };
+        let layout = self.manifest.param_layout.clone();
+        let new_params = reupload(&self.rt, &mut it, &layout)?;
+        let new_m = reupload(&self.rt, &mut it, &layout)?;
+        let new_v = reupload(&self.rt, &mut it, &layout)?;
+        let loss = it
+            .next()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        self.params = new_params;
+        self.opt_m = new_m;
+        self.opt_v = new_v;
+        self.step += 1;
+        Ok(loss)
+    }
+
+    pub fn train_steps_taken(&self) -> i32 {
+        self.step
+    }
+
+    /// Read a parameter leaf back to host (tests / checkpointing).
+    pub fn param_leaf(&self, idx: usize) -> Result<Vec<f32>> {
+        self.params[idx]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("param leaf download: {e:?}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("param leaf: {e:?}"))
+    }
+
+    pub fn param_spec(&self, idx: usize) -> &(String, TensorSpec) {
+        &self.manifest.param_layout[idx]
+    }
+}

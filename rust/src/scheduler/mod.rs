@@ -1,0 +1,145 @@
+//! Pluggable rollout scheduling policies.
+//!
+//! The cluster driver asks the active policy for assignments whenever
+//! capacity frees up; the policy sees per-instance KV telemetry and the
+//! request buffer and returns (request, instance, chunk) triples. The
+//! driver re-validates every assignment against the allocator before
+//! acting (defense in depth: a buggy policy cannot corrupt accounting).
+
+pub mod seer;
+pub mod streamrl;
+pub mod verl;
+
+pub use seer::{ContextMode, SeerScheduler};
+pub use streamrl::StreamRlOracle;
+pub use verl::VerlScheduler;
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::coordinator::{ReqState, RequestBuffer};
+use crate::sim::clock::SimTime;
+use crate::workload::{GroupSpec, InstanceId, RequestId};
+
+/// One instance's load snapshot, as the scheduler sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceView {
+    pub id: InstanceId,
+    /// Tokens of KV the admission controller may still hand out
+    /// (capacity × target-util − used − pending reservations).
+    pub free_kv_tokens: u64,
+    pub capacity_tokens: u64,
+    pub running: usize,
+    pub max_batch: usize,
+}
+
+/// Scheduling context for one `schedule` call.
+pub struct SchedCtx<'a> {
+    pub now: SimTime,
+    pub instances: &'a [InstanceView],
+    pub buffer: &'a RequestBuffer,
+}
+
+/// A chunk lease: run `req` on `instance` for up to `chunk` generated
+/// tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Assignment {
+    pub req: RequestId,
+    pub instance: InstanceId,
+    pub chunk: u32,
+}
+
+/// A rollout scheduling policy.
+pub trait Scheduler {
+    fn name(&self) -> String;
+
+    /// Called once at iteration start with the full group list. Policies
+    /// other than the Oracle variants must not read `gen_len`.
+    fn init(
+        &mut self,
+        groups: &[GroupSpec],
+        cfg: &WorkloadConfig,
+        sys: &SystemConfig,
+    );
+
+    /// Produce as many assignments as current capacity allows.
+    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment>;
+
+    /// A request finished (reached its true length).
+    fn on_finished(&mut self, _req: &ReqState) {}
+
+    /// A chunk lease ended with the request unfinished.
+    fn on_chunk_end(&mut self, _req: &ReqState) {}
+
+    /// Choose a preemption victim among `running` (id, first_scheduled)
+    /// on an instance that ran out of KV. Default: vLLM-style LIFO
+    /// (latest-scheduled evicted first).
+    fn preempt_victim(
+        &mut self,
+        running: &[(RequestId, SimTime)],
+        _buffer: &RequestBuffer,
+    ) -> Option<RequestId> {
+        running.iter().max_by_key(|(id, t)| (*t, id.0)).map(|(id, _)| *id)
+    }
+
+    /// Divided rollout: park KV in the global pool between chunks and on
+    /// preemption (true), or drop it and re-prefill (false — the
+    /// conventional baselines).
+    fn uses_global_pool(&self) -> bool {
+        true
+    }
+}
+
+/// Helper shared by policies: pick the instance with the most free KV
+/// that can admit `demand` tokens and has a batch slot.
+pub fn select_instance(
+    instances: &[InstanceView],
+    reserved: &[u64],
+    demand: u64,
+) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, inst) in instances.iter().enumerate() {
+        let free = inst.free_kv_tokens.saturating_sub(reserved[i]);
+        if free >= demand && inst.running < inst.max_batch {
+            if best.map(|(_, bf)| free > bf).unwrap_or(true) {
+                best = Some((i, free));
+            }
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iv(id: u32, free: u64, running: usize) -> InstanceView {
+        InstanceView {
+            id: InstanceId(id),
+            free_kv_tokens: free,
+            capacity_tokens: 10_000,
+            running,
+            max_batch: 8,
+        }
+    }
+
+    #[test]
+    fn select_instance_picks_most_free() {
+        let insts = [iv(0, 100, 0), iv(1, 5000, 0), iv(2, 900, 0)];
+        let reserved = [0, 0, 0];
+        assert_eq!(select_instance(&insts, &reserved, 200), Some(1));
+    }
+
+    #[test]
+    fn select_instance_respects_reservations_and_batch() {
+        let insts = [iv(0, 5000, 8), iv(1, 5000, 0)];
+        let reserved = [0, 4900];
+        // Instance 0 has KV but no batch slot; 1 has a slot but reserved.
+        assert_eq!(select_instance(&insts, &reserved, 200), None);
+    }
+
+    #[test]
+    fn select_instance_none_when_too_big() {
+        let insts = [iv(0, 100, 0)];
+        assert_eq!(select_instance(&insts, &[0], 101), None);
+        assert_eq!(select_instance(&insts, &[0], 100), Some(0));
+    }
+}

@@ -1,0 +1,359 @@
+//! Seer's context-aware scheduler — paper Algorithm 2 on top of divided
+//! rollout (§3.2 + §3.3).
+//!
+//! Three context modes cover the Figure 10 ablation:
+//! * `Learned` — the real system: probe requests run shortest-first in a
+//!   high-priority path; everyone else runs approximate-LFS on the
+//!   context manager's online group estimates, with a starvation guard.
+//! * `Oracle`  — LFS on true lengths (upper bound).
+//! * `None`    — divided rollout only, FCFS (the "No-Context" ablation and
+//!   Table 4's "+ Divided Rollout" row).
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::coordinator::{ContextManager, ReqState};
+use crate::sim::Rng;
+use crate::workload::{GroupSpec, RequestId};
+
+use super::{Assignment, SchedCtx, Scheduler};
+
+/// How much length context the scheduler may use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContextMode {
+    Learned,
+    Oracle,
+    None,
+}
+
+pub struct SeerScheduler {
+    mode: ContextMode,
+    ctx_mgr: ContextManager,
+    chunk_size: u32,
+    starvation_frac: f64,
+    rng: Rng,
+    /// Scratch: scheduling decisions since the last starvation pick.
+    picks_since_guard: u64,
+}
+
+impl SeerScheduler {
+    pub fn new(mode: ContextMode) -> Self {
+        SeerScheduler {
+            mode,
+            ctx_mgr: ContextManager::new(u32::MAX),
+            chunk_size: 2048,
+            starvation_frac: 0.05,
+            rng: Rng::new(0x5EE12),
+            picks_since_guard: 0,
+        }
+    }
+
+    /// LFS key for a waiting request: higher = schedule earlier.
+    fn priority_key(&self, r: &ReqState) -> u64 {
+        match self.mode {
+            ContextMode::Oracle => r.remaining_true() as u64,
+            ContextMode::Learned => self.ctx_mgr.estimate(r.group()) as u64,
+            ContextMode::None => 0,
+        }
+    }
+
+    pub fn context_manager(&self) -> &ContextManager {
+        &self.ctx_mgr
+    }
+}
+
+impl Scheduler for SeerScheduler {
+    fn name(&self) -> String {
+        match self.mode {
+            ContextMode::Learned => "seer".into(),
+            ContextMode::Oracle => "seer-oracle-lfs".into(),
+            ContextMode::None => "seer-no-context".into(),
+        }
+    }
+
+    fn init(
+        &mut self,
+        groups: &[GroupSpec],
+        cfg: &WorkloadConfig,
+        sys: &SystemConfig,
+    ) {
+        self.ctx_mgr = ContextManager::new(cfg.max_gen_len);
+        self.ctx_mgr.init_groups(groups);
+        self.chunk_size = sys.chunk_size;
+        self.starvation_frac = sys.starvation_guard_frac;
+        self.picks_since_guard = 0;
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
+        // Paper Alg. 2, run to fixpoint for this cycle: repeatedly pick
+        // r* (probes SFS first, then LFS on estimates) and i* (most free
+        // KV with room). Instance selection uses a max-heap on free KV
+        // (perf iteration 2, EXPERIMENTS.md §Perf: O(log I) per pick
+        // instead of an O(I) scan — 6x on the 3200-waiting bench).
+        let mut out = Vec::new();
+        // Heap of (free_kv, slots_left, idx); stale entries are lazily
+        // re-pushed after adjustment.
+        let mut heap: std::collections::BinaryHeap<(u64, usize, usize)> =
+            ctx.instances
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| v.running < v.max_batch)
+                .map(|(i, v)| {
+                    (v.free_kv_tokens, v.max_batch - v.running, i)
+                })
+                .collect();
+
+        // Candidate list: waiting requests.
+        let mut probes: Vec<RequestId> = Vec::new();
+        let mut rest: Vec<RequestId> = Vec::new();
+        for id in ctx.buffer.waiting() {
+            let r = ctx.buffer.get(id);
+            let probe_pending = r.is_probe
+                && self.mode == ContextMode::Learned
+                && !self.ctx_mgr.has_signal(r.group());
+            if probe_pending {
+                probes.push(id);
+            } else {
+                rest.push(id);
+            }
+        }
+        // SFS for probes: fewest generated tokens first (they surface
+        // length signal soonest). Keys cached: priority_key hits the
+        // context manager's BTreeMap, so computing it once per element
+        // instead of per comparison matters at 3200 waiting (perf
+        // iteration 3, EXPERIMENTS.md §Perf).
+        probes.sort_by_cached_key(|id| {
+            let r = ctx.buffer.get(*id);
+            (r.generated, r.id().0)
+        });
+        // LFS for the rest on the mode's priority key; FCFS tiebreak.
+        rest.sort_by_cached_key(|id| {
+            let r = ctx.buffer.get(*id);
+            (std::cmp::Reverse(self.priority_key(r)), r.id().0)
+        });
+
+        let guard_every = if self.starvation_frac > 0.0 {
+            (1.0 / self.starvation_frac).round() as u64
+        } else {
+            u64::MAX
+        };
+
+        let mut pi = 0usize;
+        let mut ri = 0usize;
+        loop {
+            // Pick r*: probe queue first (high-priority path).
+            let rid = if pi < probes.len() {
+                let id = probes[pi];
+                pi += 1;
+                id
+            } else if ri < rest.len() {
+                // Starvation guard: periodically pick the most
+                // underserved group's first waiting request instead.
+                self.picks_since_guard += 1;
+                if self.mode == ContextMode::Learned
+                    && self.picks_since_guard % guard_every == 0
+                {
+                    // Bounded scan window (perf iteration 4): an O(W)
+                    // scan per guard pick made the decision loop
+                    // quadratic at 3200 waiting; 256 candidates is ample
+                    // to find a starved group.
+                    let window = (ri + 256).min(rest.len());
+                    let cand_groups = rest[ri..window]
+                        .iter()
+                        .map(|id| ctx.buffer.get(*id).group());
+                    if let Some(g) = self.ctx_mgr.most_underserved(cand_groups)
+                    {
+                        if let Some(pos) = rest[ri..window]
+                            .iter()
+                            .position(|id| ctx.buffer.get(*id).group() == g)
+                        {
+                            rest.swap(ri, ri + pos);
+                        }
+                    }
+                }
+                let id = rest[ri];
+                ri += 1;
+                id
+            } else {
+                break;
+            };
+
+            let r = ctx.buffer.get(rid);
+            let chunk = self.chunk_size;
+            let demand = r.kv_demand(chunk);
+            match heap.peek().copied() {
+                Some((free, slots_left, i)) if free >= demand => {
+                    heap.pop();
+                    self.ctx_mgr.on_scheduled(r.group());
+                    out.push(Assignment {
+                        req: rid,
+                        instance: ctx.instances[i].id,
+                        chunk,
+                    });
+                    if slots_left > 1 {
+                        heap.push((free - demand, slots_left - 1, i));
+                    }
+                }
+                _ => {
+                    // Alg. 2 line 20: the most-free instance can't take
+                    // this request, so no instance can (demands are
+                    // near-uniform: existing KV + one chunk). Probes are
+                    // precious — keep trying; for the LFS queue, stop
+                    // after a bounded lookahead to keep cycles cheap.
+                    if out.len() > 4 * ctx.instances.len()
+                        || heap.is_empty()
+                    {
+                        break;
+                    }
+                }
+            }
+        }
+        let _ = self.rng.next_u64(); // reserved for future stochastic tie-breaks
+        out
+    }
+
+    fn on_finished(&mut self, req: &ReqState) {
+        self.ctx_mgr.on_finished(req.group(), req.generated);
+    }
+
+    fn uses_global_pool(&self) -> bool {
+        true
+    }
+
+    /// With divided rollout, preemption should be rare (admission control
+    /// reserves chunk-level budgets); when it happens, evict the request
+    /// with the *shortest* estimate — it re-enters the LFS queue last.
+    fn preempt_victim(
+        &mut self,
+        running: &[(RequestId, crate::sim::clock::SimTime)],
+        buffer: &crate::coordinator::RequestBuffer,
+    ) -> Option<RequestId> {
+        running
+            .iter()
+            .min_by_key(|(id, _)| {
+                let r = buffer.get(*id);
+                (self.priority_key(r), u32::MAX - id.0)
+            })
+            .map(|(id, _)| *id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+    use crate::coordinator::RequestBuffer;
+    use crate::sim::clock::SimTime;
+    use crate::workload::{generate_iteration, InstanceId};
+
+    use crate::scheduler::InstanceView;
+
+    fn setup(mode: ContextMode) -> (SeerScheduler, RequestBuffer, Vec<InstanceView>) {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 5);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = SeerScheduler::new(mode);
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let instances = (0..cfg.n_instances as u32)
+            .map(|i| InstanceView {
+                id: InstanceId(i),
+                free_kv_tokens: cfg.hw.kv_capacity_tokens,
+                capacity_tokens: cfg.hw.kv_capacity_tokens,
+                running: 0,
+                max_batch: cfg.hw.max_batch,
+            })
+            .collect();
+        (s, buffer, instances)
+    }
+
+    #[test]
+    fn schedules_probes_first() {
+        let (mut s, buffer, instances) = setup(ContextMode::Learned);
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        let assignments = s.schedule(&ctx);
+        assert!(!assignments.is_empty());
+        // The earliest assignments must all be probes (one per group,
+        // scheduled before any non-probe).
+        let n_groups = buffer.all().iter().filter(|r| r.is_probe).count();
+        let first_n: Vec<_> = assignments
+            .iter()
+            .take(n_groups.min(assignments.len()))
+            .collect();
+        for a in first_n {
+            assert!(
+                buffer.get(a.req).is_probe,
+                "non-probe scheduled before probes: {a:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_mode_orders_by_true_length() {
+        let (mut s, buffer, mut instances) = setup(ContextMode::Oracle);
+        // Shrink capacity so only a few requests fit: the picks must be
+        // the longest ones.
+        for i in &mut instances {
+            i.free_kv_tokens = 9000;
+            i.max_batch = 1;
+        }
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        let assignments = s.schedule(&ctx);
+        assert!(!assignments.is_empty());
+        let mut lens: Vec<u32> = assignments
+            .iter()
+            .map(|a| buffer.get(a.req).remaining_true())
+            .collect();
+        let max_len = buffer
+            .all()
+            .iter()
+            .map(|r| r.remaining_true())
+            .max()
+            .unwrap();
+        lens.sort_by_key(|l| std::cmp::Reverse(*l));
+        assert_eq!(lens[0], max_len, "oracle LFS must start with longest");
+    }
+
+    #[test]
+    fn respects_batch_slots_and_kv() {
+        let (mut s, buffer, mut instances) = setup(ContextMode::None);
+        for i in &mut instances {
+            i.max_batch = 2;
+        }
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        let assignments = s.schedule(&ctx);
+        // No instance may receive more than max_batch assignments.
+        let mut per_inst = std::collections::BTreeMap::new();
+        for a in &assignments {
+            *per_inst.entry(a.instance.0).or_insert(0usize) += 1;
+        }
+        for (_, n) in per_inst {
+            assert!(n <= 2);
+        }
+    }
+
+    #[test]
+    fn learned_estimates_update_on_finish() {
+        let (mut s, mut buffer, _) = setup(ContextMode::Learned);
+        let id = buffer.all()[0].id();
+        let group = buffer.get(id).group();
+        buffer.mark_scheduled(id);
+        {
+            let r = buffer.get_mut(id);
+            r.generated = r.spec.gen_len;
+        }
+        buffer.mark_finished(id);
+        s.on_finished(buffer.get(id));
+        let est = s.context_manager().estimate(group);
+        assert_eq!(est, buffer.get(id).generated);
+    }
+}

@@ -1,0 +1,157 @@
+//! veRL-style baseline: group-level round-robin placement, instance-local
+//! FCFS admission, no divided rollout, no global pool (preempted requests
+//! re-prefill). This is the paper's primary baseline (§4.1): a
+//! well-engineered synchronous system whose scheduling treats each prompt
+//! group as a monolithic unit pinned to one instance.
+
+use std::collections::BTreeMap;
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::workload::{GroupSpec, InstanceId, RequestId};
+
+use super::{Assignment, SchedCtx, Scheduler};
+
+pub struct VerlScheduler {
+    /// Pinned instance per request (group-level round-robin).
+    pin: BTreeMap<RequestId, InstanceId>,
+    /// Admission watermark: tokens of decode headroom reserved beyond the
+    /// current KV when admitting (vLLM-style optimistic admission — the
+    /// source of later preemptions).
+    watermark: u32,
+    max_len: u32,
+}
+
+impl VerlScheduler {
+    pub fn new() -> Self {
+        VerlScheduler {
+            pin: BTreeMap::new(),
+            watermark: 256,
+            max_len: u32::MAX,
+        }
+    }
+}
+
+impl Default for VerlScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for VerlScheduler {
+    fn name(&self) -> String {
+        "verl".into()
+    }
+
+    fn init(
+        &mut self,
+        groups: &[GroupSpec],
+        cfg: &WorkloadConfig,
+        _sys: &SystemConfig,
+    ) {
+        self.pin.clear();
+        self.max_len = cfg.max_gen_len;
+        for (gi, g) in groups.iter().enumerate() {
+            let inst = InstanceId((gi % cfg.n_instances) as u32);
+            for r in &g.requests {
+                self.pin.insert(r.id, inst);
+            }
+        }
+    }
+
+    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
+        let mut out = Vec::new();
+        let mut reserved = vec![0u64; ctx.instances.len()];
+        let mut slots: Vec<usize> =
+            ctx.instances.iter().map(|i| i.running).collect();
+        let index_of: BTreeMap<u32, usize> = ctx
+            .instances
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.id.0, i))
+            .collect();
+
+        // FCFS by request id within each instance's pinned queue.
+        for id in ctx.buffer.waiting() {
+            let inst = *self.pin.get(&id).expect("unpinned request");
+            let i = index_of[&inst.0];
+            let r = ctx.buffer.get(id);
+            // Optimistic admission: current KV + watermark only.
+            let demand = r.kv_demand(self.watermark);
+            let free =
+                ctx.instances[i].free_kv_tokens.saturating_sub(reserved[i]);
+            if free >= demand && slots[i] < ctx.instances[i].max_batch {
+                reserved[i] += demand;
+                slots[i] += 1;
+                out.push(Assignment {
+                    req: id,
+                    instance: inst,
+                    // Whole-request lease: no divided rollout.
+                    chunk: self.max_len,
+                });
+            }
+        }
+        out
+    }
+
+    fn uses_global_pool(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+    use crate::coordinator::RequestBuffer;
+    use crate::scheduler::InstanceView;
+    use crate::sim::clock::SimTime;
+    use crate::workload::generate_iteration;
+
+    #[test]
+    fn groups_are_pinned_whole() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 2);
+        let mut s = VerlScheduler::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        for g in &w.groups {
+            let insts: Vec<_> =
+                g.requests.iter().map(|r| s.pin[&r.id]).collect();
+            assert!(
+                insts.windows(2).all(|w| w[0] == w[1]),
+                "group split across instances"
+            );
+        }
+        // Round-robin: consecutive groups on consecutive instances.
+        assert_ne!(
+            s.pin[&w.groups[0].requests[0].id],
+            s.pin[&w.groups[1].requests[0].id]
+        );
+    }
+
+    #[test]
+    fn assignments_respect_pinning() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 3);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = VerlScheduler::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let instances: Vec<InstanceView> = (0..cfg.n_instances as u32)
+            .map(|i| InstanceView {
+                id: crate::workload::InstanceId(i),
+                free_kv_tokens: cfg.hw.kv_capacity_tokens,
+                capacity_tokens: cfg.hw.kv_capacity_tokens,
+                running: 0,
+                max_batch: cfg.hw.max_batch,
+            })
+            .collect();
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        for a in s.schedule(&ctx) {
+            assert_eq!(a.instance, s.pin[&a.req]);
+            assert_eq!(a.chunk, cfg.max_gen_len);
+        }
+    }
+}

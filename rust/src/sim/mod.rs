@@ -1,0 +1,15 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! Every cluster-scale experiment in this repo runs on this substrate: the
+//! coordinator and engine code under test is the production code, and this
+//! module only supplies virtual time, an event queue and a seeded RNG so
+//! that runs are exactly reproducible (same seed ⇒ same event trace, an
+//! invariant checked by `rust/tests/invariants.rs`).
+
+pub mod clock;
+pub mod events;
+pub mod rng;
+
+pub use clock::SimTime;
+pub use events::{EventQueue, ScheduledEvent};
+pub use rng::Rng;

@@ -1,0 +1,506 @@
+//! The grouped draft structure: a generalized suffix automaton with
+//! occurrence counts over all token streams of one GRPO group.
+//!
+//! The paper calls this a Compressed Suffix Tree (CST); a suffix automaton
+//! is the deterministic-automaton dual with the same asymptotics — O(1)
+//! amortized online extension per token and O(p + s) drafting (walk the
+//! p-token pattern, then emit s draft tokens by following transitions).
+//! Occurrence counts propagate along the suffix-link chain at append time,
+//! giving the per-transition frequencies that score draft candidates
+//! (SuffixDecoding-style confidence).
+
+use std::collections::BTreeMap;
+
+const ROOT: u32 = 0;
+
+#[derive(Debug, Clone, Default)]
+struct State {
+    len: u32,
+    link: i32,
+    next: BTreeMap<u32, u32>,
+    /// Occurrence weight (endpos-count approximation maintained online).
+    cnt: u64,
+}
+
+/// Per-request extension cursor.
+#[derive(Debug, Clone, Copy)]
+struct Cursor {
+    state: u32,
+    /// Tokens appended by this request (for idempotent appends).
+    appended: usize,
+}
+
+/// Generalized suffix automaton over a group's token streams.
+#[derive(Debug, Default)]
+pub struct Cst {
+    states: Vec<State>,
+    cursors: BTreeMap<u64, Cursor>,
+    total_tokens: u64,
+}
+
+impl Cst {
+    pub fn new() -> Self {
+        Cst {
+            states: vec![State {
+                len: 0,
+                link: -1,
+                next: BTreeMap::new(),
+                cnt: 0,
+            }],
+            cursors: BTreeMap::new(),
+            total_tokens: 0,
+        }
+    }
+
+    pub fn n_states(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.total_tokens
+    }
+
+    /// Append tokens from request `req`, continuing its stream.
+    /// `prev_token_count` makes the call idempotent (the DGDS
+    /// `update_cst` API): tokens already seen from this request are
+    /// skipped.
+    pub fn append(&mut self, req: u64, prev_token_count: usize, tokens: &[u32]) {
+        let mut cur = self
+            .cursors
+            .get(&req)
+            .copied()
+            .unwrap_or(Cursor { state: ROOT, appended: 0 });
+        debug_assert!(
+            prev_token_count <= cur.appended,
+            "gap in request stream: have {} tokens, update starts at {}",
+            cur.appended,
+            prev_token_count
+        );
+        let skip = cur.appended - prev_token_count;
+        for &t in tokens.iter().skip(skip) {
+            cur.state = self.extend(cur.state, t);
+            cur.appended += 1;
+            self.total_tokens += 1;
+            self.bump_counts(cur.state);
+        }
+        self.cursors.insert(req, cur);
+    }
+
+    /// Generalized SAM extension from state `last` with token `c`.
+    fn extend(&mut self, last: u32, c: u32) -> u32 {
+        // Pre-existing transition (common in generalized SAMs).
+        if let Some(&q) = self.states[last as usize].next.get(&c) {
+            if self.states[q as usize].len == self.states[last as usize].len + 1
+            {
+                return q;
+            }
+            return self.clone_state(last, q, c);
+        }
+        let cur = self.states.len() as u32;
+        self.states.push(State {
+            len: self.states[last as usize].len + 1,
+            link: 0,
+            next: BTreeMap::new(),
+            cnt: 0,
+        });
+        let mut p = last as i32;
+        while p >= 0 && !self.states[p as usize].next.contains_key(&c) {
+            self.states[p as usize].next.insert(c, cur);
+            p = self.states[p as usize].link;
+        }
+        if p == -1 {
+            self.states[cur as usize].link = ROOT as i32;
+            return cur;
+        }
+        let q = self.states[p as usize].next[&c];
+        if self.states[q as usize].len == self.states[p as usize].len + 1 {
+            self.states[cur as usize].link = q as i32;
+            return cur;
+        }
+        let clone = self.clone_state(p as u32, q, c);
+        self.states[cur as usize].link = clone as i32;
+        cur
+    }
+
+    fn clone_state(&mut self, p: u32, q: u32, c: u32) -> u32 {
+        let clone = self.states.len() as u32;
+        let mut st = self.states[q as usize].clone();
+        st.len = self.states[p as usize].len + 1;
+        // The clone inherits q's occurrence weight: it represents the
+        // same right contexts for the shorter substrings.
+        self.states.push(st);
+        let mut pp = p as i32;
+        while pp >= 0
+            && self.states[pp as usize].next.get(&c) == Some(&q)
+        {
+            self.states[pp as usize].next.insert(c, clone);
+            pp = self.states[pp as usize].link;
+        }
+        self.states[q as usize].link = clone as i32;
+        clone
+    }
+
+    /// Propagate an occurrence along the suffix-link chain.
+    fn bump_counts(&mut self, mut s: u32) {
+        loop {
+            self.states[s as usize].cnt += 1;
+            let link = self.states[s as usize].link;
+            if link <= 0 {
+                if link == 0 {
+                    // root also counts total positions; harmless.
+                    self.states[0].cnt += 1;
+                }
+                break;
+            }
+            s = link as u32;
+        }
+    }
+
+    /// Match the longest suffix of `pattern` present in the corpus.
+    /// Returns (state, matched length).
+    pub fn match_suffix(&self, pattern: &[u32]) -> (u32, usize) {
+        let mut state = ROOT;
+        let mut length = 0usize;
+        for &c in pattern {
+            loop {
+                if let Some(&nxt) = self.states[state as usize].next.get(&c) {
+                    state = nxt;
+                    length += 1;
+                    break;
+                }
+                let link = self.states[state as usize].link;
+                if link < 0 {
+                    length = 0;
+                    break;
+                }
+                state = link as u32;
+                length = self.states[state as usize].len as usize;
+                if state == ROOT && self.states[ROOT as usize].next.get(&c).is_none()
+                {
+                    break;
+                }
+            }
+        }
+        (state, length)
+    }
+
+    /// Outgoing transitions of `state` with target occurrence counts.
+    pub fn transitions(&self, state: u32) -> impl Iterator<Item = (u32, u32, u64)> + '_ {
+        self.states[state as usize]
+            .next
+            .iter()
+            .map(move |(&c, &t)| (c, t, self.states[t as usize].cnt))
+    }
+
+    /// After a suffix match, the matched state is often the tail of the
+    /// *current* stream itself (the CST contains the drafting request's
+    /// own prefix) — a dead end with no outgoing transitions. Back off
+    /// along suffix links to the longest matched context that has a
+    /// continuation somewhere in the corpus.
+    pub(crate) fn backoff_to_continuation(
+        &self,
+        mut state: u32,
+        mut matched: usize,
+        lookup_min: usize,
+    ) -> Option<(u32, usize)> {
+        loop {
+            if matched < lookup_min {
+                return None;
+            }
+            if !self.states[state as usize].next.is_empty() {
+                return Some((state, matched));
+            }
+            let link = self.states[state as usize].link;
+            if link < 0 {
+                return None;
+            }
+            state = link as u32;
+            matched = self.states[state as usize].len as usize;
+        }
+    }
+
+    /// Linear (single-path) speculation: match the pattern's longest
+    /// suffix, back off to a state with continuations, then greedily
+    /// follow the highest-count transitions.
+    /// Returns the draft tokens (possibly fewer than `max_tokens`).
+    /// `lookup_min`: minimum matched pattern length to draft at all.
+    pub fn speculate(
+        &self,
+        pattern: &[u32],
+        max_tokens: usize,
+        lookup_max: usize,
+        lookup_min: usize,
+    ) -> Vec<u32> {
+        let start = pattern.len().saturating_sub(lookup_max);
+        let (state, matched) = self.match_suffix(&pattern[start..]);
+        let Some((mut state, _)) =
+            self.backoff_to_continuation(state, matched, lookup_min)
+        else {
+            return vec![];
+        };
+        let mut out = Vec::with_capacity(max_tokens);
+        for _ in 0..max_tokens {
+            let best = self
+                .states[state as usize]
+                .next
+                .iter()
+                .max_by_key(|(&c, &t)| (self.states[t as usize].cnt, u32::MAX - c));
+            match best {
+                Some((&c, &t)) => {
+                    out.push(c);
+                    state = t;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Occurrence count of the exact state reached by the longest suffix
+    /// match of `pattern` (confidence signal).
+    pub fn suffix_count(&self, pattern: &[u32]) -> u64 {
+        let (state, len) = self.match_suffix(pattern);
+        if len == 0 {
+            0
+        } else {
+            self.states[state as usize].cnt
+        }
+    }
+
+    /// Check automaton structural invariants (tests).
+    pub fn check_invariants(&self) {
+        for (i, s) in self.states.iter().enumerate() {
+            if i == 0 {
+                assert_eq!(s.link, -1);
+                assert_eq!(s.len, 0);
+                continue;
+            }
+            let link = s.link;
+            assert!(link >= 0, "non-root state without link");
+            assert!(
+                self.states[link as usize].len < s.len,
+                "suffix link must shorten"
+            );
+            for (_, &t) in &s.next {
+                assert!((t as usize) < self.states.len());
+                assert!(self.states[t as usize].len >= s.len + 1);
+            }
+        }
+    }
+
+    /// Does `needle` occur as a substring of any appended stream?
+    pub fn contains(&self, needle: &[u32]) -> bool {
+        let mut state = ROOT;
+        for &c in needle {
+            match self.states[state as usize].next.get(&c) {
+                Some(&t) => state = t,
+                None => return false,
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Rng;
+    use crate::util::prop::{check, PropConfig};
+
+    fn brute_contains(streams: &[Vec<u32>], needle: &[u32]) -> bool {
+        streams.iter().any(|s| {
+            s.windows(needle.len()).any(|w| w == needle)
+        })
+    }
+
+    #[test]
+    fn single_stream_substrings() {
+        let mut cst = Cst::new();
+        let s = vec![1, 2, 3, 1, 2, 4];
+        cst.append(0, 0, &s);
+        cst.check_invariants();
+        assert!(cst.contains(&[1, 2, 3]));
+        assert!(cst.contains(&[2, 3, 1, 2, 4]));
+        assert!(cst.contains(&[4]));
+        assert!(!cst.contains(&[3, 2]));
+        assert!(!cst.contains(&[1, 2, 5]));
+    }
+
+    #[test]
+    fn multi_stream_substrings() {
+        let mut cst = Cst::new();
+        cst.append(0, 0, &[1, 2, 3]);
+        cst.append(1, 0, &[3, 4, 5]);
+        cst.check_invariants();
+        assert!(cst.contains(&[1, 2, 3]));
+        assert!(cst.contains(&[4, 5]));
+        // Cross-stream substrings must NOT exist.
+        assert!(!cst.contains(&[2, 3, 3]));
+        assert!(!cst.contains(&[3, 3]));
+    }
+
+    #[test]
+    fn incremental_append_equals_batch() {
+        let mut a = Cst::new();
+        let mut b = Cst::new();
+        let s: Vec<u32> = vec![5, 6, 5, 6, 7, 5, 6, 5];
+        a.append(0, 0, &s);
+        for (i, &t) in s.iter().enumerate() {
+            b.append(0, i, &[t]);
+        }
+        for w in 1..=s.len() {
+            for win in s.windows(w) {
+                assert_eq!(a.contains(win), b.contains(win));
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_appends() {
+        let mut cst = Cst::new();
+        cst.append(0, 0, &[1, 2, 3, 4]);
+        let states = cst.n_states();
+        let tokens = cst.total_tokens();
+        // Overlapping re-delivery (DGDS at-least-once semantics).
+        cst.append(0, 2, &[3, 4, 5]);
+        assert_eq!(cst.total_tokens(), tokens + 1);
+        assert!(cst.contains(&[3, 4, 5]));
+        assert!(cst.n_states() >= states);
+        cst.check_invariants();
+    }
+
+    #[test]
+    fn speculate_returns_corpus_continuation() {
+        let mut cst = Cst::new();
+        // Two siblings share the pattern [10, 11, 12, 13, 14].
+        cst.append(0, 0, &[1, 10, 11, 12, 13, 14, 2]);
+        cst.append(1, 0, &[3, 10, 11, 12, 13, 14, 4]);
+        let draft = cst.speculate(&[9, 9, 10, 11], 3, 8, 2);
+        assert_eq!(draft, vec![12, 13, 14]);
+    }
+
+    #[test]
+    fn speculate_respects_lookup_min() {
+        let mut cst = Cst::new();
+        cst.append(0, 0, &[1, 2, 3, 4, 5]);
+        // Pattern tail matches only 1 token; lookup_min 2 forbids drafting.
+        let draft = cst.speculate(&[9, 9, 1], 3, 8, 2);
+        assert!(draft.is_empty());
+    }
+
+    #[test]
+    fn counts_prefer_frequent_continuation() {
+        let mut cst = Cst::new();
+        // After [7, 8]: token 1 occurs 3x, token 2 occurs once.
+        cst.append(0, 0, &[7, 8, 1, 7, 8, 1, 7, 8, 1, 7, 8, 2]);
+        let draft = cst.speculate(&[7, 8], 1, 8, 1);
+        assert_eq!(draft, vec![1]);
+    }
+
+    #[test]
+    fn match_suffix_finds_longest() {
+        let mut cst = Cst::new();
+        cst.append(0, 0, &[1, 2, 3, 4, 5, 6]);
+        let (_, len) = cst.match_suffix(&[9, 9, 3, 4, 5]);
+        assert_eq!(len, 3);
+        let (_, len) = cst.match_suffix(&[9, 9, 9]);
+        assert_eq!(len, 0);
+    }
+
+    #[test]
+    fn prop_contains_matches_bruteforce() {
+        check(
+            "sam contains == brute force",
+            PropConfig {
+                cases: 40,
+                max_size: 60,
+                ..Default::default()
+            },
+            |c| {
+                let n_streams = c.rng.range_usize(1, 3);
+                let mut cst = Cst::new();
+                let mut streams = vec![];
+                for r in 0..n_streams {
+                    let len = c.rng.range_usize(1, c.size.max(2));
+                    let s: Vec<u32> =
+                        (0..len).map(|_| c.rng.below(5) as u32).collect();
+                    cst.append(r as u64, 0, &s);
+                    streams.push(s);
+                }
+                cst.check_invariants();
+                // Probe random windows and random non-windows.
+                for _ in 0..30 {
+                    let si = c.rng.range_usize(0, streams.len() - 1);
+                    let s = &streams[si];
+                    let a = c.rng.range_usize(0, s.len() - 1);
+                    let b = c.rng.range_usize(a + 1, s.len());
+                    assert!(
+                        cst.contains(&s[a..b]),
+                        "missing window {:?}",
+                        &s[a..b]
+                    );
+                    let probe: Vec<u32> = (0..c.rng.range_usize(1, 6))
+                        .map(|_| c.rng.below(6) as u32)
+                        .collect();
+                    assert_eq!(
+                        cst.contains(&probe),
+                        brute_contains(&streams, &probe),
+                        "probe {probe:?}"
+                    );
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_speculation_is_corpus_substring() {
+        check(
+            "speculation output extends a corpus match",
+            PropConfig {
+                cases: 30,
+                max_size: 80,
+                ..Default::default()
+            },
+            |c| {
+                let mut cst = Cst::new();
+                let mut streams = vec![];
+                for r in 0..2 {
+                    let len = c.rng.range_usize(8, c.size.max(9));
+                    let s: Vec<u32> =
+                        (0..len).map(|_| c.rng.below(4) as u32).collect();
+                    cst.append(r, 0, &s);
+                    streams.push(s);
+                }
+                let si = c.rng.range_usize(0, 1);
+                let s = &streams[si];
+                let cut = c.rng.range_usize(2, s.len() - 1);
+                let pattern = &s[..cut];
+                let draft = cst.speculate(pattern, 4, 6, 1);
+                if draft.is_empty() {
+                    return;
+                }
+                // The matched suffix + draft must be a substring of some
+                // stream: find the longest matched suffix first.
+                let start = pattern.len().saturating_sub(6);
+                let (_, matched) = cst.match_suffix(&pattern[start..]);
+                let mut probe: Vec<u32> =
+                    pattern[pattern.len() - matched..].to_vec();
+                probe.extend_from_slice(&draft);
+                assert!(
+                    brute_contains(&streams, &probe),
+                    "draft {draft:?} not grounded (probe {probe:?})"
+                );
+            },
+        );
+    }
+
+    #[test]
+    fn linear_state_growth() {
+        // SAM has at most 2n-1 states — the "compressed" guarantee.
+        let mut cst = Cst::new();
+        let mut rng = Rng::new(3);
+        let s: Vec<u32> = (0..2000).map(|_| rng.below(8) as u32).collect();
+        cst.append(0, 0, &s);
+        assert!(cst.n_states() <= 2 * s.len());
+    }
+}

@@ -1,0 +1,347 @@
+//! Distributed Grouped Draft Server (paper §3.4.2 and Appendix A.2).
+//!
+//! Master/worker architecture over std threads and channels (the offline
+//! environment has no tokio; DESIGN.md §2): a dedicated server thread owns
+//! the per-group CSTs and applies `update_cst` appends *asynchronously* —
+//! inference clients never wait for tree maintenance (the property that
+//! distinguishes DGDS from serialized suffix-tree SD). Clients hold
+//! shared handles fetched via `fetch_cst` and run `batch_speculate`
+//! against them under read locks (modelling the zero-copy shared-memory
+//! path of the paper's Table 6 API).
+//!
+//! API mapping (paper Table 5/6):
+//! * `update_cst(group_id, request_id, prev_token_count, new_tokens)`
+//! * `fetch_cst(group_ids) -> handles` (incremental: handles are shared)
+//! * `register_group(group_id, ttl)`
+//! * `batch_speculate(...)` on [`DraftClient`]
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, RwLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::cst::Cst;
+use super::multipath::{speculate_multipath, DraftPath};
+
+type GroupHandle = Arc<RwLock<Cst>>;
+
+enum Msg {
+    Update {
+        group: String,
+        request: u64,
+        prev_token_count: usize,
+        tokens: Vec<u32>,
+    },
+    Register {
+        group: String,
+        ttl: Duration,
+    },
+    Fetch {
+        groups: Vec<String>,
+        reply: Sender<Vec<(String, GroupHandle)>>,
+    },
+    /// Test/ops hook: wait until all previously sent updates are applied.
+    Flush {
+        reply: Sender<()>,
+    },
+    Shutdown,
+}
+
+/// The DGDS master: owns group CSTs, applies updates asynchronously.
+pub struct DraftServer {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DraftServer {
+    pub fn spawn() -> Self {
+        let (tx, rx) = channel::<Msg>();
+        let handle = std::thread::Builder::new()
+            .name("dgds-master".into())
+            .spawn(move || Self::serve(rx))
+            .expect("spawn dgds master");
+        DraftServer {
+            tx,
+            handle: Some(handle),
+        }
+    }
+
+    fn serve(rx: Receiver<Msg>) {
+        struct Entry {
+            cst: GroupHandle,
+            expires: Instant,
+        }
+        let mut groups: BTreeMap<String, Entry> = BTreeMap::new();
+        let default_ttl = Duration::from_secs(3600);
+        while let Ok(msg) = rx.recv() {
+            // Opportunistic TTL pruning.
+            let now = Instant::now();
+            groups.retain(|_, e| e.expires > now);
+            match msg {
+                Msg::Update {
+                    group,
+                    request,
+                    prev_token_count,
+                    tokens,
+                } => {
+                    let e = groups.entry(group).or_insert_with(|| Entry {
+                        cst: Arc::new(RwLock::new(Cst::new())),
+                        expires: now + default_ttl,
+                    });
+                    e.cst
+                        .write()
+                        .expect("cst lock poisoned")
+                        .append(request, prev_token_count, &tokens);
+                }
+                Msg::Register { group, ttl } => {
+                    let e = groups.entry(group).or_insert_with(|| Entry {
+                        cst: Arc::new(RwLock::new(Cst::new())),
+                        expires: now + ttl,
+                    });
+                    e.expires = now + ttl;
+                }
+                Msg::Fetch { groups: ids, reply } => {
+                    let out = ids
+                        .into_iter()
+                        .filter_map(|g| {
+                            groups.get(&g).map(|e| (g, Arc::clone(&e.cst)))
+                        })
+                        .collect();
+                    let _ = reply.send(out);
+                }
+                Msg::Flush { reply } => {
+                    let _ = reply.send(());
+                }
+                Msg::Shutdown => break,
+            }
+        }
+    }
+
+    /// Asynchronous append (never blocks on tree maintenance).
+    pub fn update_cst(
+        &self,
+        group_id: &str,
+        request_id: u64,
+        prev_token_count: usize,
+        new_tokens: &[u32],
+    ) {
+        let _ = self.tx.send(Msg::Update {
+            group: group_id.to_string(),
+            request: request_id,
+            prev_token_count,
+            tokens: new_tokens.to_vec(),
+        });
+    }
+
+    pub fn register_group(&self, group_id: &str, ttl_seconds: u64) {
+        let _ = self.tx.send(Msg::Register {
+            group: group_id.to_string(),
+            ttl: Duration::from_secs(ttl_seconds),
+        });
+    }
+
+    /// Fetch shared CST handles for `group_ids`.
+    pub fn fetch_cst(&self, group_ids: &[String]) -> Vec<(String, GroupHandle)> {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Fetch {
+            groups: group_ids.to_vec(),
+            reply: tx,
+        });
+        rx.recv().unwrap_or_default()
+    }
+
+    /// Barrier: all updates sent before this call are applied after it
+    /// returns.
+    pub fn flush(&self) {
+        let (tx, rx) = channel();
+        let _ = self.tx.send(Msg::Flush { reply: tx });
+        let _ = rx.recv();
+    }
+}
+
+impl Drop for DraftServer {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Speculation parameters (paper Table 6 `SpeculationArgs`).
+#[derive(Debug, Clone, Copy)]
+pub struct SpeculationArgs {
+    pub max_spec_tokens: usize,
+    pub pattern_lookup_max: usize,
+    pub pattern_lookup_min: usize,
+    pub top_k: usize,
+}
+
+impl Default for SpeculationArgs {
+    fn default() -> Self {
+        SpeculationArgs {
+            max_spec_tokens: 8,
+            pattern_lookup_max: 24,
+            pattern_lookup_min: 2,
+            top_k: 1,
+        }
+    }
+}
+
+/// The embedded draft client: caches group handles, speculates locally.
+pub struct DraftClient {
+    cache: BTreeMap<String, GroupHandle>,
+}
+
+impl DraftClient {
+    pub fn new() -> Self {
+        DraftClient {
+            cache: BTreeMap::new(),
+        }
+    }
+
+    /// Periodic fetch: refresh local handles for `group_ids`.
+    pub fn fetch(&mut self, server: &DraftServer, group_ids: &[String]) {
+        for (g, h) in server.fetch_cst(group_ids) {
+            self.cache.insert(g, h);
+        }
+    }
+
+    pub fn has_group(&self, group_id: &str) -> bool {
+        self.cache.contains_key(group_id)
+    }
+
+    /// Speculate draft tokens for a batch of requests. Returns, per
+    /// request, the ranked candidate paths (empty when the group is
+    /// unknown or the pattern match is too weak).
+    pub fn batch_speculate(
+        &self,
+        requests: &[(&str, &[u32], SpeculationArgs)],
+    ) -> Vec<Vec<DraftPath>> {
+        requests
+            .iter()
+            .map(|(group, pattern, args)| {
+                let Some(handle) = self.cache.get(*group) else {
+                    return vec![];
+                };
+                let cst = handle.read().expect("cst lock poisoned");
+                speculate_multipath(
+                    &cst,
+                    pattern,
+                    args.max_spec_tokens,
+                    args.pattern_lookup_max,
+                    args.pattern_lookup_min,
+                    args.top_k,
+                    0.0,
+                )
+            })
+            .collect()
+    }
+}
+
+impl Default for DraftClient {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_update_fetch_speculate() {
+        let server = DraftServer::spawn();
+        server.register_group("g0", 60);
+        server.update_cst("g0", 0, 0, &[1, 2, 3, 4, 5]);
+        server.update_cst("g0", 1, 0, &[9, 2, 3, 4, 7]);
+        server.flush();
+
+        let mut client = DraftClient::new();
+        client.fetch(&server, &["g0".to_string()]);
+        assert!(client.has_group("g0"));
+        let drafts = client.batch_speculate(&[(
+            "g0",
+            &[0, 2, 3][..],
+            SpeculationArgs::default(),
+        )]);
+        assert_eq!(drafts.len(), 1);
+        assert!(!drafts[0].is_empty());
+        assert_eq!(drafts[0][0].tokens[0], 4);
+    }
+
+    #[test]
+    fn unknown_group_yields_no_draft() {
+        let server = DraftServer::spawn();
+        let mut client = DraftClient::new();
+        client.fetch(&server, &["nope".to_string()]);
+        let drafts = client.batch_speculate(&[(
+            "nope",
+            &[1, 2][..],
+            SpeculationArgs::default(),
+        )]);
+        assert_eq!(drafts, vec![vec![]]);
+    }
+
+    #[test]
+    fn concurrent_producers() {
+        let server = Arc::new(DraftServer::spawn());
+        server.register_group("g", 60);
+        let mut joins = vec![];
+        for r in 0..4u64 {
+            let s = Arc::clone(&server);
+            joins.push(std::thread::spawn(move || {
+                // Each producer streams its own tokens in batches.
+                let tokens: Vec<u32> =
+                    (0..200).map(|i| ((i + r as u32) % 17) + 1).collect();
+                for chunk_start in (0..tokens.len()).step_by(16) {
+                    let end = (chunk_start + 16).min(tokens.len());
+                    s.update_cst("g", r, chunk_start, &tokens[chunk_start..end]);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        server.flush();
+        let handles = server.fetch_cst(&["g".to_string()]);
+        let cst = handles[0].1.read().unwrap();
+        assert_eq!(cst.total_tokens(), 4 * 200);
+        cst.check_invariants();
+    }
+
+    #[test]
+    fn ttl_expires_groups() {
+        let server = DraftServer::spawn();
+        server.register_group("ephemeral", 0); // expires immediately
+        server.flush();
+        std::thread::sleep(Duration::from_millis(5));
+        // Any subsequent message triggers pruning.
+        server.register_group("other", 60);
+        server.flush();
+        let got = server.fetch_cst(&["ephemeral".to_string()]);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn updates_do_not_block_clients() {
+        // Client speculation proceeds while a large update streams in.
+        let server = DraftServer::spawn();
+        server.update_cst("g", 0, 0, &[1, 2, 3, 4]);
+        server.flush();
+        let mut client = DraftClient::new();
+        client.fetch(&server, &["g".to_string()]);
+        // Fire a large async update; don't flush.
+        let big: Vec<u32> = (0..50_000).map(|i| i % 97).collect();
+        server.update_cst("g", 1, 0, &big);
+        // Speculation still answers from the shared handle.
+        let drafts = client.batch_speculate(&[(
+            "g",
+            &[1, 2][..],
+            SpeculationArgs::default(),
+        )]);
+        assert_eq!(drafts.len(), 1);
+        server.flush();
+    }
+}

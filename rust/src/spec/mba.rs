@@ -1,0 +1,220 @@
+//! Marginal-Benefit-Aware adaptive speculation — paper Algorithm 1,
+//! verbatim.
+//!
+//! Given the high/low-priority batch sizes, the per-position acceptance
+//! probabilities β[1..], a per-request budget cap γ_max and the priority
+//! factor λ, choose draft lengths (γ_h, γ_l):
+//!
+//! 1. γ* = argmin_γ T_SD(B, γ) for the combined batch — the
+//!    throughput-optimal uniform draft length;
+//! 2. Γ* = γ*·B is the total token budget;
+//! 3. if Γ* can't even give every high-priority request one draft token,
+//!    disable SD entirely;
+//! 4. otherwise allocate greedily by marginal benefit
+//!    B_h·(β[γ_h] − β[γ_h+1])  vs  λ · B_l·(β[γ_l] − β[γ_l+1]).
+
+use crate::engine::costmodel::CostModel;
+use crate::sim::clock::SimTime;
+
+/// Inputs to one MBA invocation (collected online by the coordinator).
+#[derive(Debug, Clone)]
+pub struct MbaInputs {
+    pub batch_high: usize,
+    pub batch_low: usize,
+    /// β[k] = acceptance probability at draft position k (1-indexed via
+    /// `beta(k)`; β[0] is unused). Must be non-increasing.
+    pub beta: Vec<f64>,
+    pub gamma_max: u32,
+    pub lambda: f64,
+    /// Mean acceptance rate α = E(β), for the T_SD model.
+    pub alpha: f64,
+    /// Total KV tokens currently batched (for the step-time model).
+    pub kv_tokens: u64,
+    /// Draft cost as a function of γ (flat per invocation here; the
+    /// caller folds per-strategy shape in).
+    pub draft_cost_per_gamma: SimTime,
+}
+
+impl MbaInputs {
+    fn beta(&self, k: u32) -> f64 {
+        // β beyond the profiled horizon decays to 0 (no benefit).
+        self.beta.get(k as usize - 1).copied().unwrap_or(0.0)
+    }
+}
+
+/// Result: draft token counts for high- and low-priority requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MbaDecision {
+    pub gamma_high: u32,
+    pub gamma_low: u32,
+}
+
+/// Paper Algorithm 1.
+pub fn mba_allocate(cost: &CostModel, inp: &MbaInputs) -> MbaDecision {
+    let b = inp.batch_high + inp.batch_low;
+    if b == 0 {
+        return MbaDecision {
+            gamma_high: 0,
+            gamma_low: 0,
+        };
+    }
+
+    // Line 2: γ* = argmin_γ T_SD(B, γ). γ = 0 means plain decode.
+    let draft_cost = |gamma: u32| {
+        SimTime::from_micros(
+            inp.draft_cost_per_gamma.as_micros() * gamma as u64,
+        )
+    };
+    let t_plain = cost.step_time(b, inp.kv_tokens, b as u64).as_secs_f64();
+    let mut best_gamma = 0u32;
+    let mut best_t = t_plain;
+    for gamma in 1..=inp.gamma_max {
+        let t = cost.t_sd(b, inp.kv_tokens, gamma, inp.alpha, draft_cost(gamma));
+        if t < best_t {
+            best_t = t;
+            best_gamma = gamma;
+        }
+    }
+
+    // Line 3: total token budget.
+    let budget = best_gamma as u64 * b as u64;
+
+    // Line 4-5: not enough budget to serve high priority at all.
+    if budget < inp.batch_high as u64 {
+        return MbaDecision {
+            gamma_high: 0,
+            gamma_low: 0,
+        };
+    }
+
+    // Lines 7-18: greedy marginal-benefit allocation.
+    let (bh, bl) = (inp.batch_high as u64, inp.batch_low as u64);
+    let mut gamma_h = 1u32;
+    let mut gamma_l = 0u32;
+    let mut remaining = budget - bh;
+    while remaining > 0 {
+        let benefit_h = bh as f64
+            * (inp.beta(gamma_h) - inp.beta(gamma_h + 1)).max(0.0);
+        let benefit_l = if bl > 0 {
+            bl as f64 * (inp.beta(gamma_l.max(1)) - inp.beta(gamma_l + 1)).max(0.0)
+        } else {
+            0.0
+        };
+        if benefit_h > inp.lambda * benefit_l
+            && gamma_h < inp.gamma_max
+            && remaining >= bh
+        {
+            gamma_h += 1;
+            remaining -= bh;
+        } else if bl > 0 && gamma_l < inp.gamma_max && remaining >= bl {
+            gamma_l += 1;
+            remaining -= bl;
+        } else {
+            break;
+        }
+    }
+    MbaDecision {
+        gamma_high: gamma_h,
+        gamma_low: gamma_l,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    fn cost() -> CostModel {
+        CostModel::new(&TaskPreset::Moonlight.workload().hw)
+    }
+
+    fn inputs(bh: usize, bl: usize) -> MbaInputs {
+        MbaInputs {
+            batch_high: bh,
+            batch_low: bl,
+            beta: vec![0.7, 0.6, 0.5, 0.4, 0.3, 0.22, 0.15, 0.1],
+            gamma_max: 8,
+            lambda: 2.0,
+            alpha: 0.55,
+            kv_tokens: 100_000,
+            draft_cost_per_gamma: SimTime::from_micros(30),
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_noop() {
+        let d = mba_allocate(&cost(), &inputs(0, 0));
+        assert_eq!(d, MbaDecision { gamma_high: 0, gamma_low: 0 });
+    }
+
+    #[test]
+    fn small_batch_gets_generous_budget() {
+        // Small batch: SD is cheap, both classes get drafts; high ≥ low.
+        let d = mba_allocate(&cost(), &inputs(2, 6));
+        assert!(d.gamma_high >= 1);
+        assert!(d.gamma_high >= d.gamma_low, "{d:?}");
+        assert!(d.gamma_high <= 8 && d.gamma_low <= 8);
+    }
+
+    #[test]
+    fn huge_batch_disables_sd() {
+        // Compute-bound regime (large batch, modest KV): γ* = 0 ⇒
+        // budget below B_h ⇒ (0, 0).
+        let mut inp = inputs(600, 3000);
+        inp.kv_tokens = 1_000_000;
+        let d = mba_allocate(&cost(), &inp);
+        assert_eq!(d, MbaDecision { gamma_high: 0, gamma_low: 0 });
+    }
+
+    #[test]
+    fn high_priority_dominates_when_lambda_large() {
+        // Mid-size batch: the verify compute term makes γ* < γ_max, so
+        // the budget is scarce; λ→∞ routes nearly all of it high.
+        let mut inp = inputs(100, 100);
+        inp.kv_tokens = 2_000_000;
+        inp.lambda = 1000.0;
+        let d = mba_allocate(&cost(), &inp);
+        assert!(
+            d.gamma_high > d.gamma_low,
+            "high priority must dominate: {d:?}"
+        );
+        assert!(d.gamma_low <= 2, "{d:?}");
+    }
+
+    #[test]
+    fn lambda_one_balances() {
+        let mut inp = inputs(4, 4);
+        inp.lambda = 1.0;
+        let d = mba_allocate(&cost(), &inp);
+        // With symmetric batches and λ=1 the split is near-even.
+        assert!(
+            (d.gamma_high as i64 - d.gamma_low as i64).abs() <= 2,
+            "{d:?}"
+        );
+    }
+
+    #[test]
+    fn budget_and_caps_respected() {
+        for (bh, bl) in [(1, 0), (1, 31), (16, 16), (0, 8), (5, 200)] {
+            let inp = inputs(bh, bl);
+            let d = mba_allocate(&cost(), &inp);
+            assert!(d.gamma_high <= inp.gamma_max);
+            assert!(d.gamma_low <= inp.gamma_max);
+            if bh == 0 {
+                // Degenerate: all budget flows to low priority; γ_h is
+                // meaningless but must stay bounded.
+                continue;
+            }
+            // Reconstruct budget bound: γh·Bh + γl·Bl ≤ γ*·B for the γ*
+            // the algorithm chose; we can't see γ* directly, but the cap
+            // γ ≤ γ_max bounds both.
+        }
+    }
+
+    #[test]
+    fn only_high_priority_present() {
+        let d = mba_allocate(&cost(), &inputs(8, 0));
+        assert!(d.gamma_high >= 1);
+        assert_eq!(d.gamma_low, 0);
+    }
+}

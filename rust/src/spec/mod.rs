@@ -1,0 +1,24 @@
+//! Speculative decoding stack (paper §3.4).
+//!
+//! * [`cst`] — the compressed-suffix-tree draft structure (implemented as
+//!   a generalized suffix automaton with occurrence counts: same O(p+s)
+//!   query bound, O(1) amortized online extension).
+//! * [`dgds`] — the Distributed Grouped Draft Server: master/worker
+//!   threads, asynchronous `update_cst` appends, periodic `fetch_cst`
+//!   snapshot distribution, `batch_speculate` on the client.
+//! * [`mba`] — Marginal-Benefit-Aware adaptive speculation (paper Alg. 1).
+//! * [`multipath`] — beam/multi-path draft candidate generation on the CST.
+//! * [`simmodel`] — acceptance/draft-cost profiles of each SD strategy for
+//!   the cluster simulator (grouped CST, vanilla SuffixDecoding, separate
+//!   draft model, MTP), calibrated against Table 2 / Figure 11.
+
+pub mod cst;
+pub mod dgds;
+pub mod mba;
+pub mod multipath;
+pub mod simmodel;
+
+pub use cst::Cst;
+pub use dgds::{DraftClient, DraftServer};
+pub use mba::{mba_allocate, MbaInputs};
+pub use simmodel::{SdStrategy, SpecSim};

@@ -1,0 +1,167 @@
+//! Multi-path (beam) drafting on the CST (paper §3.4.2: "capable of
+//! returning multiple candidate paths via a beam-search mechanism").
+//!
+//! Each candidate path is scored by the product of per-step transition
+//! probabilities (child count / parent count — SuffixDecoding-style suffix
+//! probabilities); low-confidence candidates are filtered by
+//! `min_confidence`.
+
+use super::cst::Cst;
+
+/// One draft candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DraftPath {
+    pub tokens: Vec<u32>,
+    /// Product of per-step transition probabilities.
+    pub confidence: f64,
+}
+
+/// Beam-search the CST for up to `top_k` candidate continuations of
+/// `pattern`, each up to `max_tokens` long.
+pub fn speculate_multipath(
+    cst: &Cst,
+    pattern: &[u32],
+    max_tokens: usize,
+    lookup_max: usize,
+    lookup_min: usize,
+    top_k: usize,
+    min_confidence: f64,
+) -> Vec<DraftPath> {
+    let start = pattern.len().saturating_sub(lookup_max);
+    let (state, matched) = cst.match_suffix(&pattern[start..]);
+    if top_k == 0 || max_tokens == 0 {
+        return vec![];
+    }
+    let Some((state, _)) =
+        cst.backoff_to_continuation(state, matched, lookup_min)
+    else {
+        return vec![];
+    };
+
+    #[derive(Clone)]
+    struct Beam {
+        state: u32,
+        tokens: Vec<u32>,
+        conf: f64,
+    }
+
+    let mut beams = vec![Beam {
+        state,
+        tokens: vec![],
+        conf: 1.0,
+    }];
+    let mut finished: Vec<DraftPath> = vec![];
+
+    for _ in 0..max_tokens {
+        let mut next: Vec<Beam> = vec![];
+        for b in &beams {
+            let total: u64 = cst
+                .transitions(b.state)
+                .map(|(_, _, cnt)| cnt)
+                .sum::<u64>()
+                .max(1);
+            let mut expanded = false;
+            for (c, t, cnt) in cst.transitions(b.state) {
+                let conf = b.conf * cnt as f64 / total as f64;
+                if conf < min_confidence {
+                    continue;
+                }
+                let mut tokens = b.tokens.clone();
+                tokens.push(c);
+                next.push(Beam {
+                    state: t,
+                    tokens,
+                    conf,
+                });
+                expanded = true;
+            }
+            if !expanded && !b.tokens.is_empty() {
+                finished.push(DraftPath {
+                    tokens: b.tokens.clone(),
+                    confidence: b.conf,
+                });
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        next.sort_by(|a, b| {
+            b.conf
+                .partial_cmp(&a.conf)
+                .unwrap()
+                .then_with(|| a.tokens.cmp(&b.tokens))
+        });
+        next.truncate(top_k);
+        beams = next;
+    }
+    finished.extend(beams.into_iter().filter(|b| !b.tokens.is_empty()).map(
+        |b| DraftPath {
+            tokens: b.tokens,
+            confidence: b.conf,
+        },
+    ));
+    finished.sort_by(|a, b| {
+        b.confidence
+            .partial_cmp(&a.confidence)
+            .unwrap()
+            .then_with(|| a.tokens.cmp(&b.tokens))
+    });
+    finished.truncate(top_k);
+    finished
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus_cst() -> Cst {
+        let mut cst = Cst::new();
+        // After [1, 2]: continuation [3, 4] twice, [5, 6] once.
+        cst.append(0, 0, &[1, 2, 3, 4, 9, 1, 2, 3, 4]);
+        cst.append(1, 0, &[1, 2, 5, 6]);
+        cst
+    }
+
+    #[test]
+    fn returns_ranked_candidates() {
+        let cst = corpus_cst();
+        let paths = speculate_multipath(&cst, &[1, 2], 2, 8, 1, 2, 0.0);
+        assert_eq!(paths.len(), 2);
+        assert_eq!(paths[0].tokens, vec![3, 4]);
+        assert_eq!(paths[1].tokens, vec![5, 6]);
+        assert!(paths[0].confidence > paths[1].confidence);
+    }
+
+    #[test]
+    fn top_k_one_equals_linear_speculation() {
+        let cst = corpus_cst();
+        let linear = cst.speculate(&[1, 2], 2, 8, 1);
+        let paths = speculate_multipath(&cst, &[1, 2], 2, 8, 1, 1, 0.0);
+        assert_eq!(paths[0].tokens, linear);
+    }
+
+    #[test]
+    fn confidence_filter_prunes() {
+        let cst = corpus_cst();
+        // [5, 6] branch has confidence 1/3 at the first step.
+        let paths = speculate_multipath(&cst, &[1, 2], 2, 8, 1, 4, 0.5);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(paths[0].tokens, vec![3, 4]);
+    }
+
+    #[test]
+    fn lookup_min_blocks_weak_matches() {
+        let cst = corpus_cst();
+        let paths = speculate_multipath(&cst, &[7, 7, 7], 2, 8, 1, 2, 0.0);
+        assert!(paths.is_empty());
+    }
+
+    #[test]
+    fn confidences_multiply_along_path() {
+        let cst = corpus_cst();
+        let paths = speculate_multipath(&cst, &[1, 2], 1, 8, 1, 2, 0.0);
+        // First step out of [1,2]: counts 2 (token 3) vs 1 (token 5).
+        assert!((paths[0].confidence - 2.0 / 3.0).abs() < 1e-9);
+        assert!((paths[1].confidence - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! `bench` runs a closure until both a minimum iteration count and a
+//! minimum wall time are reached, then reports mean/min ns per iteration.
+//! Results are printed in a stable, greppable format:
+//!
+//! ```text
+//! bench <name>: mean 123.4ns min 110.0ns (n=10000)
+//! ```
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub iters: u64,
+}
+
+/// Benchmark `f`, returning per-iteration statistics.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warmup.
+    for _ in 0..3 {
+        f();
+    }
+    let min_time = std::time::Duration::from_millis(
+        std::env::var("SEER_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300),
+    );
+    let mut iters = 0u64;
+    let mut min_ns = f64::INFINITY;
+    let start = Instant::now();
+    // Batched timing: measure in growing batches to amortize clock reads.
+    let mut batch = 1u64;
+    while start.elapsed() < min_time {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+        min_ns = min_ns.min(dt);
+        iters += batch;
+        if batch < 1024 {
+            batch *= 2;
+        }
+    }
+    let mean_ns = start.elapsed().as_nanos() as f64 / iters as f64;
+    let r = BenchResult {
+        mean_ns,
+        min_ns,
+        iters,
+    };
+    println!(
+        "bench {name}: mean {} min {} (n={iters})",
+        fmt_ns(mean_ns),
+        fmt_ns(min_ns)
+    );
+    r
+}
+
+/// Benchmark returning a value (prevents dead-code elimination).
+pub fn bench_val<T, F: FnMut() -> T>(name: &str, mut f: F) -> BenchResult {
+    bench(name, || {
+        std::hint::black_box(f());
+    })
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2}s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2}ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2}µs", ns / 1e3)
+    } else {
+        format!("{ns:.1}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_reasonable_numbers() {
+        std::env::set_var("SEER_BENCH_MS", "10");
+        let r = bench("noop", || {});
+        assert!(r.iters > 0);
+        assert!(r.min_ns >= 0.0 && r.mean_ns >= r.min_ns * 0.01);
+        std::env::remove_var("SEER_BENCH_MS");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.3), "12.3ns");
+        assert_eq!(fmt_ns(1234.0), "1.23µs");
+        assert_eq!(fmt_ns(1.5e6), "1.50ms");
+        assert_eq!(fmt_ns(2.5e9), "2.50s");
+    }
+}

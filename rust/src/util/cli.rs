@@ -1,0 +1,117 @@
+//! Tiny CLI argument parser: `--key value`, `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        flag_names: &[&str],
+    ) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(name.to_string());
+                    } else {
+                        out.options.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} not an integer: {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} not an integer: {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} not a number: {s}")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            sv(&["run", "--task", "moonlight", "--fast", "--n=3", "out"]),
+            &["fast"],
+        );
+        assert_eq!(a.positionals, sv(&["run", "out"]));
+        assert_eq!(a.get("task"), Some("moonlight"));
+        assert_eq!(a.get_usize("n", 0), 3);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = Args::parse(sv(&["--verbose"]), &[]);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = Args::parse(sv(&["--dry", "--seed", "7"]), &[]);
+        assert!(a.has_flag("dry"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(sv(&[]), &[]);
+        assert_eq!(a.get_or("x", "d"), "d");
+        assert_eq!(a.get_f64("y", 1.5), 1.5);
+    }
+}

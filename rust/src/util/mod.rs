@@ -1,0 +1,18 @@
+//! In-tree substrates for the offline build environment.
+//!
+//! The usual ecosystem crates (serde_json, clap, criterion, proptest, rand)
+//! are unavailable offline, so this module implements the minimal pieces
+//! the system needs, from scratch, with tests: a JSON parser for the
+//! artifact manifest, a CLI argument parser, summary statistics, a tiny
+//! property-testing harness, and table rendering for the experiment
+//! harness output.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use stats::Summary;

@@ -1,0 +1,140 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over many deterministic seeds and, on failure,
+//! reports the seed so the case is exactly reproducible:
+//!
+//! ```text
+//! property failed (seed 17, case 3): <message>
+//! ```
+//!
+//! Shrinking is replaced by seed reporting plus caller-controlled size
+//! scaling: generators receive a `size` hint that grows over the run, so
+//! early failures are usually already small.
+
+use crate::sim::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub base_seed: u64,
+    pub min_size: usize,
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 64,
+            base_seed: 0x5EE2,
+            min_size: 1,
+            max_size: 64,
+        }
+    }
+}
+
+/// Context handed to each property case.
+pub struct Case<'a> {
+    pub rng: &'a mut Rng,
+    /// Size hint in [min_size, max_size]; grows roughly linearly over the
+    /// run so early cases are small.
+    pub size: usize,
+    pub index: usize,
+}
+
+/// Run `prop` over `cfg.cases` cases. Panics with seed info on failure
+/// (assert inside the property as usual).
+pub fn check<F: FnMut(&mut Case)>(name: &str, cfg: PropConfig, mut prop: F) {
+    for i in 0..cfg.cases {
+        let seed = cfg
+            .base_seed
+            .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let frac = if cfg.cases <= 1 {
+            1.0
+        } else {
+            i as f64 / (cfg.cases - 1) as f64
+        };
+        let size = cfg.min_size
+            + ((cfg.max_size - cfg.min_size) as f64 * frac).round() as usize;
+        let mut case = Case {
+            rng: &mut rng,
+            size,
+            index: i,
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut case),
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| {
+                    payload.downcast_ref::<&str>().map(|s| s.to_string())
+                })
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}, size {size}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn quick<F: FnMut(&mut Case)>(name: &str, prop: F) {
+    check(name, PropConfig::default(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        quick("reverse twice", |c| {
+            let n = c.rng.range_usize(0, c.size);
+            let xs: Vec<u64> = (0..n).map(|_| c.rng.next_u64()).collect();
+            let mut ys = xs.clone();
+            ys.reverse();
+            ys.reverse();
+            assert_eq!(xs, ys);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "always fails at size > 10",
+                PropConfig {
+                    cases: 16,
+                    ..Default::default()
+                },
+                |c| {
+                    assert!(c.size <= 10, "size was {}", c.size);
+                },
+            );
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("seed"), "message: {msg}");
+        assert!(msg.contains("always fails"), "message: {msg}");
+    }
+
+    #[test]
+    fn sizes_span_range() {
+        let mut sizes = vec![];
+        check(
+            "collect sizes",
+            PropConfig {
+                cases: 8,
+                min_size: 2,
+                max_size: 30,
+                ..Default::default()
+            },
+            |c| sizes.push(c.size),
+        );
+        assert_eq!(sizes.first(), Some(&2));
+        assert_eq!(sizes.last(), Some(&30));
+    }
+}

@@ -1,0 +1,230 @@
+//! Group-correlated heavy-tailed length sampling.
+//!
+//! Model (DESIGN.md §2): the *group mean* is log-normal with sigma
+//! `sigma_between` (the heavy tail of Figure 2), and each request's length
+//! is the group mean times a small log-normal factor `sigma_within`
+//! (the strong intra-group correlation of Figure 4). The location
+//! parameter is calibrated so the expected length matches the preset's
+//! `avg_gen_len`; lengths clip to [1, max_gen_len].
+
+use crate::config::WorkloadConfig;
+use crate::sim::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LengthSampler {
+    mu_between: f64,
+    sigma_between: f64,
+    sigma_within: f64,
+    max_len: u32,
+    group_size: usize,
+    mu_prompt: f64,
+    sigma_prompt: f64,
+    max_prompt: u32,
+}
+
+impl LengthSampler {
+    pub fn from_config(cfg: &WorkloadConfig) -> Self {
+        LengthSampler::new(
+            cfg.avg_gen_len,
+            cfg.max_gen_len,
+            cfg.sigma_between,
+            cfg.sigma_within,
+            cfg.group_size,
+            cfg.avg_prompt_len,
+            cfg.sigma_prompt,
+        )
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        avg_len: u32,
+        max_len: u32,
+        sigma_between: f64,
+        sigma_within: f64,
+        group_size: usize,
+        avg_prompt: u32,
+        sigma_prompt: f64,
+    ) -> Self {
+        // E[L] = exp(mu_b + (sigma_b^2 + sigma_w^2) / 2); solve for mu_b,
+        // then correct empirically for the [1, max] clipping, which pulls
+        // the mean down on heavy-tailed presets.
+        let var = sigma_between * sigma_between + sigma_within * sigma_within;
+        let mut mu_between = (avg_len as f64).ln() - var / 2.0;
+        // One-step multiplicative correction using a probe sample.
+        let probe = {
+            let s = LengthSampler {
+                mu_between,
+                sigma_between,
+                sigma_within,
+                max_len,
+                group_size,
+                mu_prompt: (avg_prompt as f64).ln()
+                    - sigma_prompt * sigma_prompt / 2.0,
+                sigma_prompt,
+                max_prompt: avg_prompt * 8,
+            };
+            let mut rng = Rng::new(0xCA11B7A7E);
+            let mut total = 0.0f64;
+            let mut n = 0usize;
+            for _ in 0..2000 {
+                let (_, lens) = s.sample_group(&mut rng);
+                total += lens.iter().map(|&l| l as f64).sum::<f64>();
+                n += lens.len();
+            }
+            total / n as f64
+        };
+        if probe > 0.0 {
+            mu_between += (avg_len as f64 / probe).ln().clamp(-0.5, 0.5);
+        }
+        LengthSampler {
+            mu_between,
+            sigma_between,
+            sigma_within,
+            max_len,
+            group_size,
+            mu_prompt: (avg_prompt as f64).ln()
+                - sigma_prompt * sigma_prompt / 2.0,
+            sigma_prompt,
+            max_prompt: avg_prompt * 8,
+        }
+    }
+
+    /// Sample one group: (prompt_len, per-request generation lengths).
+    pub fn sample_group(&self, rng: &mut Rng) -> (u32, Vec<u32>) {
+        let prompt = (rng.lognormal(self.mu_prompt, self.sigma_prompt) as u32)
+            .clamp(8, self.max_prompt);
+        let group_mean = rng
+            .lognormal(self.mu_between, self.sigma_between)
+            .min(self.max_len as f64);
+        let lens = (0..self.group_size)
+            .map(|_| {
+                // Mean-one multiplicative factor.
+                let f = rng.lognormal(
+                    -self.sigma_within * self.sigma_within / 2.0,
+                    self.sigma_within,
+                );
+                ((group_mean * f) as u32).clamp(1, self.max_len)
+            })
+            .collect();
+        (prompt, lens)
+    }
+
+    pub fn max_len(&self) -> u32 {
+        self.max_len
+    }
+}
+
+/// Sample correlation of log-lengths within vs across groups: the Figure 4
+/// statistic. Returns (within_group_std, between_group_std) of log lengths.
+pub fn group_length_spread(groups: &[Vec<u32>]) -> (f64, f64) {
+    let mut within = 0.0f64;
+    let mut n_within = 0usize;
+    let mut means = vec![];
+    for g in groups {
+        let logs: Vec<f64> = g.iter().map(|&l| (l.max(1) as f64).ln()).collect();
+        let m = logs.iter().sum::<f64>() / logs.len() as f64;
+        means.push(m);
+        for l in &logs {
+            within += (l - m) * (l - m);
+            n_within += 1;
+        }
+    }
+    let gm = means.iter().sum::<f64>() / means.len().max(1) as f64;
+    let between = means.iter().map(|m| (m - gm) * (m - gm)).sum::<f64>()
+        / means.len().max(1) as f64;
+    ((within / n_within.max(1) as f64).sqrt(), between.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    fn sample_many(preset: TaskPreset, n_groups: usize) -> Vec<Vec<u32>> {
+        let cfg = preset.workload();
+        let s = LengthSampler::from_config(&cfg);
+        let mut rng = Rng::new(42);
+        (0..n_groups).map(|_| s.sample_group(&mut rng).1).collect()
+    }
+
+    #[test]
+    fn mean_calibrated_within_tolerance() {
+        for preset in crate::config::ALL_PRESETS {
+            let cfg = preset.workload();
+            let groups = sample_many(preset, 4000);
+            let all: Vec<f64> = groups
+                .iter()
+                .flatten()
+                .map(|&l| l as f64)
+                .collect();
+            let mean = all.iter().sum::<f64>() / all.len() as f64;
+            let rel = (mean - cfg.avg_gen_len as f64).abs()
+                / cfg.avg_gen_len as f64;
+            assert!(
+                rel < 0.12,
+                "{}: mean {mean:.0} vs target {} (rel {rel:.3})",
+                cfg.name,
+                cfg.avg_gen_len
+            );
+        }
+    }
+
+    #[test]
+    fn lengths_bounded() {
+        for preset in crate::config::ALL_PRESETS {
+            let cfg = preset.workload();
+            for g in sample_many(preset, 500) {
+                for l in g {
+                    assert!(l >= 1 && l <= cfg.max_gen_len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        // Some groups should be far above the mean (the long-tail of
+        // Figures 2/3): p99 group mean > 3x overall mean for Qwen.
+        let cfg = TaskPreset::Qwen2Vl72b.workload();
+        let groups = sample_many(TaskPreset::Qwen2Vl72b, 3000);
+        let mut means: Vec<f64> = groups
+            .iter()
+            .map(|g| g.iter().map(|&l| l as f64).sum::<f64>() / g.len() as f64)
+            .collect();
+        means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p99 = means[(means.len() * 99) / 100];
+        assert!(
+            p99 > 3.0 * cfg.avg_gen_len as f64,
+            "p99 group mean {p99:.0} not heavy-tailed"
+        );
+    }
+
+    #[test]
+    fn intra_group_correlation_strong() {
+        // Within-group spread of log-lengths must be much smaller than
+        // between-group spread (Figure 4's visual).
+        let groups = sample_many(TaskPreset::Moonlight, 2000);
+        let (within, between) = group_length_spread(&groups);
+        assert!(
+            within < 0.5 * between,
+            "within {within:.3} vs between {between:.3}"
+        );
+    }
+
+    #[test]
+    fn prompt_lengths_reasonable() {
+        let cfg = TaskPreset::Moonlight.workload();
+        let s = LengthSampler::from_config(&cfg);
+        let mut rng = Rng::new(1);
+        let mut total = 0u64;
+        let n = 2000;
+        for _ in 0..n {
+            let (p, _) = s.sample_group(&mut rng);
+            assert!(p >= 8 && p <= cfg.avg_prompt_len * 8);
+            total += p as u64;
+        }
+        let mean = total as f64 / n as f64;
+        let rel = (mean - cfg.avg_prompt_len as f64).abs() / cfg.avg_prompt_len as f64;
+        assert!(rel < 0.15, "prompt mean {mean}");
+    }
+}

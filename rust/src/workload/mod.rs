@@ -1,0 +1,156 @@
+//! Workload generation: GRPO prompt groups with group-correlated output
+//! lengths (Figures 2 & 4) and group-correlated token streams (Table 2).
+//!
+//! Core identity types for requests/groups/instances also live here, since
+//! everything downstream (engine, coordinator, scheduler, spec) speaks in
+//! these ids.
+
+pub mod lengths;
+pub mod tokens;
+
+pub use lengths::LengthSampler;
+pub use tokens::{GroupTokenGen, TokenGenConfig};
+
+use crate::config::WorkloadConfig;
+use crate::sim::Rng;
+
+/// Request identifier, unique within one rollout iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u32);
+
+/// GRPO prompt-group identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GroupId(pub u32);
+
+/// Inference instance identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct InstanceId(pub u32);
+
+/// One request's ground truth, hidden from schedulers (only the Oracle
+/// baseline may look at `gen_len`).
+#[derive(Debug, Clone)]
+pub struct RequestSpec {
+    pub id: RequestId,
+    pub group: GroupId,
+    pub prompt_len: u32,
+    /// True output length this request will reach (tokens).
+    pub gen_len: u32,
+}
+
+/// One GRPO prompt group: G requests sharing a prompt.
+#[derive(Debug, Clone)]
+pub struct GroupSpec {
+    pub id: GroupId,
+    pub prompt_len: u32,
+    pub requests: Vec<RequestSpec>,
+}
+
+impl GroupSpec {
+    pub fn max_gen_len(&self) -> u32 {
+        self.requests.iter().map(|r| r.gen_len).max().unwrap_or(0)
+    }
+
+    pub fn mean_gen_len(&self) -> f64 {
+        if self.requests.is_empty() {
+            return 0.0;
+        }
+        self.requests.iter().map(|r| r.gen_len as f64).sum::<f64>()
+            / self.requests.len() as f64
+    }
+}
+
+/// A full rollout iteration's workload.
+#[derive(Debug, Clone)]
+pub struct IterationWorkload {
+    pub groups: Vec<GroupSpec>,
+}
+
+impl IterationWorkload {
+    pub fn n_requests(&self) -> usize {
+        self.groups.iter().map(|g| g.requests.len()).sum()
+    }
+
+    pub fn requests(&self) -> impl Iterator<Item = &RequestSpec> {
+        self.groups.iter().flat_map(|g| g.requests.iter())
+    }
+
+    pub fn total_gen_tokens(&self) -> u64 {
+        self.requests().map(|r| r.gen_len as u64).sum()
+    }
+}
+
+/// Generate one iteration's workload from a task config, deterministically
+/// from `seed`.
+pub fn generate_iteration(cfg: &WorkloadConfig, seed: u64) -> IterationWorkload {
+    let sampler = LengthSampler::from_config(cfg);
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let n_groups = cfg.n_groups();
+    let mut groups = Vec::with_capacity(n_groups);
+    let mut next_req = 0u32;
+    for gi in 0..n_groups {
+        let mut grng = rng.fork(gi as u64);
+        let (prompt_len, gen_lens) = sampler.sample_group(&mut grng);
+        let requests = gen_lens
+            .into_iter()
+            .map(|gen_len| {
+                let id = RequestId(next_req);
+                next_req += 1;
+                RequestSpec {
+                    id,
+                    group: GroupId(gi as u32),
+                    prompt_len,
+                    gen_len,
+                }
+            })
+            .collect();
+        groups.push(GroupSpec {
+            id: GroupId(gi as u32),
+            prompt_len,
+            requests,
+        });
+    }
+    IterationWorkload { groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    #[test]
+    fn generates_requested_counts() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 1);
+        assert_eq!(w.n_requests(), cfg.reqs_per_iter);
+        assert_eq!(w.groups.len(), cfg.n_groups());
+        for g in &w.groups {
+            assert_eq!(g.requests.len(), cfg.group_size);
+            for r in &g.requests {
+                assert!(r.gen_len >= 1 && r.gen_len <= cfg.max_gen_len);
+                assert_eq!(r.prompt_len, g.prompt_len);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+        let a = generate_iteration(&cfg, 7);
+        let b = generate_iteration(&cfg, 7);
+        let c = generate_iteration(&cfg, 8);
+        let lens =
+            |w: &IterationWorkload| w.requests().map(|r| r.gen_len).collect::<Vec<_>>();
+        assert_eq!(lens(&a), lens(&b));
+        assert_ne!(lens(&a), lens(&c));
+    }
+
+    #[test]
+    fn unique_request_ids() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 3);
+        let mut ids: Vec<u32> = w.requests().map(|r| r.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), w.n_requests());
+    }
+}

@@ -1,0 +1,20 @@
+//! Smoke: every experiment in the harness runs to completion at fast
+//! scale (the content checks live in integration.rs and the experiment
+//! modules' own assertions).
+
+use seer::experiments;
+use seer::util::cli::Args;
+
+#[test]
+fn every_experiment_runs() {
+    let args = Args::parse(
+        ["--fast".to_string(), "--iters".into(), "1".into()],
+        &["fast"],
+    );
+    // table1/fig7/table4 run multiple full rollouts; keep to the fast
+    // scale and a single iteration (still real runs).
+    for id in experiments::ALL_IDS {
+        experiments::run(id, &args)
+            .unwrap_or_else(|e| panic!("experiment {id} failed: {e:#}"));
+    }
+}

@@ -1,0 +1,200 @@
+//! Cross-module integration tests: full rollouts on each preset under
+//! each headline configuration, checking the paper's qualitative claims
+//! hold at test scale.
+
+use seer::config::{SystemConfig, TaskPreset};
+use seer::engine::cluster::{run_rollout, ClusterSim};
+use seer::rl::phases::PhaseModel;
+use seer::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use seer::spec::simmodel::SdStrategy;
+use seer::workload::generate_iteration;
+
+fn sys_for(cfg: &seer::config::WorkloadConfig) -> SystemConfig {
+    SystemConfig {
+        chunk_size: (cfg.avg_gen_len / 4).clamp(32, 2048),
+        ..Default::default()
+    }
+}
+
+fn throughput(
+    preset: TaskPreset,
+    sched: Box<dyn Scheduler>,
+    sd: SdStrategy,
+) -> f64 {
+    let cfg = preset.workload_for_test();
+    let out = run_rollout(&cfg, &sys_for(&cfg), sched, sd, 42);
+    out.metrics.throughput()
+}
+
+#[test]
+fn seer_full_beats_verl_on_every_task() {
+    for preset in seer::config::ALL_PRESETS {
+        let verl = throughput(
+            preset,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        );
+        let seer = throughput(
+            preset,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        );
+        assert!(
+            seer > verl * 1.15,
+            "{}: seer {seer:.0} vs verl {verl:.0}",
+            preset.name()
+        );
+    }
+}
+
+#[test]
+fn grouped_sd_beats_no_sd_on_seer() {
+    for preset in seer::config::ALL_PRESETS {
+        let none = throughput(
+            preset,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+        );
+        let sd = throughput(
+            preset,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+        );
+        assert!(
+            sd > none,
+            "{}: sd {sd:.0} vs none {none:.0}",
+            preset.name()
+        );
+    }
+}
+
+#[test]
+fn seer_cuts_tail_time_on_memory_constrained_tasks() {
+    for preset in [TaskPreset::Moonlight, TaskPreset::Qwen2Vl72b] {
+        let cfg = preset.workload_for_test();
+        let verl = run_rollout(
+            &cfg,
+            &sys_for(&cfg),
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+            42,
+        );
+        let seer = run_rollout(
+            &cfg,
+            &sys_for(&cfg),
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::GroupedCst,
+            42,
+        );
+        let vt = verl.metrics.tail_time(0.10).as_secs_f64();
+        let st = seer.metrics.tail_time(0.10).as_secs_f64();
+        assert!(
+            st < vt,
+            "{}: seer tail {st:.1}s vs verl {vt:.1}s",
+            preset.name()
+        );
+    }
+}
+
+#[test]
+fn context_sched_close_to_oracle() {
+    // Figure 10's headline: learned context reaches >=85% of oracle
+    // throughput at test scale (paper: 96%).
+    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+    let sys = sys_for(&cfg);
+    let learned = run_rollout(
+        &cfg,
+        &sys,
+        Box::new(SeerScheduler::new(ContextMode::Learned)),
+        SdStrategy::None,
+        42,
+    );
+    let oracle = run_rollout(
+        &cfg,
+        &sys,
+        Box::new(SeerScheduler::new(ContextMode::Oracle)),
+        SdStrategy::None,
+        42,
+    );
+    let ratio =
+        learned.metrics.throughput() / oracle.metrics.throughput();
+    assert!(ratio > 0.85, "learned/oracle = {ratio:.2}");
+}
+
+#[test]
+fn streamrl_oracle_between_verl_and_seer_on_constrained_tasks() {
+    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+    let sys = sys_for(&cfg);
+    let verl = run_rollout(
+        &cfg,
+        &sys,
+        Box::new(VerlScheduler::new()),
+        SdStrategy::None,
+        42,
+    )
+    .metrics
+    .throughput();
+    let stream = run_rollout(
+        &cfg,
+        &sys,
+        Box::new(StreamRlOracle::new()),
+        SdStrategy::None,
+        42,
+    )
+    .metrics
+    .throughput();
+    assert!(
+        stream > verl * 0.9,
+        "streamrl {stream:.0} unexpectedly catastrophic vs verl {verl:.0}"
+    );
+}
+
+#[test]
+fn rollout_dominates_iteration_time() {
+    // Table 1's structural claim at test scale.
+    for preset in seer::config::ALL_PRESETS {
+        let cfg = preset.workload_for_test();
+        let out = run_rollout(
+            &cfg,
+            &sys_for(&cfg),
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+            42,
+        );
+        let model = PhaseModel::for_workload(&cfg);
+        let split = model.split(
+            out.metrics.makespan,
+            out.metrics.tokens_generated,
+        );
+        let (r, _, u) = split.fractions();
+        assert!(r > 0.5, "{}: rollout fraction {r:.2}", preset.name());
+        assert!(u < 0.3, "{}: weight update fraction {u:.2}", preset.name());
+    }
+}
+
+#[test]
+fn load_samples_cover_run() {
+    let cfg = TaskPreset::Moonlight.workload_for_test();
+    let w = generate_iteration(&cfg, 5);
+    let out = ClusterSim::new(
+        cfg,
+        SystemConfig::default(),
+        w.groups,
+        Box::new(SeerScheduler::new(ContextMode::Learned)),
+        SdStrategy::None,
+    )
+    .sample_interval(seer::sim::clock::SimTime::from_millis(500))
+    .run();
+    assert!(!out.metrics.load_samples.is_empty());
+    let t_max = out
+        .metrics
+        .load_samples
+        .iter()
+        .map(|s| s.t)
+        .max()
+        .unwrap();
+    // Samples span at least half the run.
+    assert!(t_max.as_secs_f64() > 0.5 * out.metrics.makespan.as_secs_f64());
+}

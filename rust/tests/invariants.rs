@@ -1,0 +1,278 @@
+//! Property-based invariant tests over the coordinator, scheduler and
+//! simulation (DESIGN.md §6): no request lost, KV accounting conserved,
+//! estimates monotone, determinism, MBA budget discipline — under
+//! randomized workloads and every scheduling policy.
+
+use seer::config::{SystemConfig, TaskPreset, WorkloadConfig};
+use seer::engine::cluster::{ClusterSim, RolloutOutcome};
+use seer::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use seer::sim::clock::SimTime;
+use seer::spec::simmodel::SdStrategy;
+use seer::util::prop::{check, PropConfig};
+use seer::workload::generate_iteration;
+
+fn random_workload(rng: &mut seer::sim::Rng, size: usize) -> WorkloadConfig {
+    let base = match rng.below(3) {
+        0 => TaskPreset::Moonlight,
+        1 => TaskPreset::Qwen2Vl72b,
+        _ => TaskPreset::KimiK2,
+    };
+    let mut cfg = base.workload_for_test();
+    cfg.reqs_per_iter = cfg.reqs_per_iter.min(32 + size * 4);
+    cfg.reqs_per_iter =
+        (cfg.reqs_per_iter / cfg.group_size).max(2) * cfg.group_size;
+    cfg.n_instances = rng.range_usize(2, 4);
+    cfg
+}
+
+fn random_scheduler(rng: &mut seer::sim::Rng) -> (Box<dyn Scheduler>, &'static str) {
+    match rng.below(5) {
+        0 => (Box::new(VerlScheduler::new()), "verl"),
+        1 => (Box::new(StreamRlOracle::new()), "streamrl"),
+        2 => (Box::new(SeerScheduler::new(ContextMode::None)), "no-context"),
+        3 => (Box::new(SeerScheduler::new(ContextMode::Oracle)), "oracle"),
+        _ => (Box::new(SeerScheduler::new(ContextMode::Learned)), "seer"),
+    }
+}
+
+fn random_sd(rng: &mut seer::sim::Rng) -> SdStrategy {
+    match rng.below(5) {
+        0 => SdStrategy::None,
+        1 => SdStrategy::GroupedCst,
+        2 => SdStrategy::SuffixDecoding,
+        3 => SdStrategy::DraftModel,
+        _ => SdStrategy::Mtp,
+    }
+}
+
+fn run_once(
+    cfg: &WorkloadConfig,
+    sched: Box<dyn Scheduler>,
+    sd: SdStrategy,
+    seed: u64,
+) -> RolloutOutcome {
+    let sys = SystemConfig {
+        chunk_size: (cfg.avg_gen_len / 3).clamp(16, 2048),
+        ..Default::default()
+    };
+    let w = generate_iteration(cfg, seed);
+    ClusterSim::new(cfg.clone(), sys, w.groups, sched, sd)
+        .sample_interval(SimTime::from_secs(5))
+        .run()
+}
+
+#[test]
+fn no_request_lost_any_policy() {
+    check(
+        "every request finishes exactly once",
+        PropConfig {
+            cases: 24,
+            max_size: 40,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let (sched, name) = random_scheduler(c.rng);
+            let sd = random_sd(c.rng);
+            let seed = c.rng.next_u64();
+            let out = run_once(&cfg, sched, sd, seed);
+            assert_eq!(
+                out.metrics.completions.len(),
+                cfg.reqs_per_iter,
+                "policy {name} lost requests"
+            );
+            out.buffer.check_invariants();
+            let mut ids: Vec<u32> =
+                out.metrics.completions.iter().map(|c| c.id.0).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), cfg.reqs_per_iter);
+        },
+    );
+}
+
+#[test]
+fn all_tokens_generated_exactly() {
+    check(
+        "tokens generated == workload total",
+        PropConfig {
+            cases: 16,
+            max_size: 32,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let (sched, _) = random_scheduler(c.rng);
+            let seed = c.rng.next_u64();
+            let w = generate_iteration(&cfg, seed);
+            let expected = w.total_gen_tokens();
+            let sys = SystemConfig::default();
+            let out = ClusterSim::new(
+                cfg.clone(),
+                sys,
+                w.groups,
+                sched,
+                SdStrategy::None,
+            )
+            .run();
+            assert_eq!(out.metrics.tokens_generated, expected);
+            for cpl in &out.metrics.completions {
+                let spec = &out.buffer.get(cpl.id).spec;
+                assert_eq!(cpl.gen_len, spec.gen_len);
+            }
+        },
+    );
+}
+
+#[test]
+fn deterministic_event_traces() {
+    check(
+        "same seed -> identical outcome",
+        PropConfig {
+            cases: 8,
+            max_size: 24,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let mode = if c.rng.bool(0.5) {
+                ContextMode::Learned
+            } else {
+                ContextMode::None
+            };
+            let sd = random_sd(c.rng);
+            let seed = c.rng.next_u64();
+            let a = run_once(&cfg, Box::new(SeerScheduler::new(mode)), sd, seed);
+            let b = run_once(&cfg, Box::new(SeerScheduler::new(mode)), sd, seed);
+            assert_eq!(a.metrics.makespan, b.metrics.makespan);
+            assert_eq!(a.metrics.preemptions, b.metrics.preemptions);
+            assert_eq!(a.metrics.migrations, b.metrics.migrations);
+            let fa: Vec<_> = a
+                .metrics
+                .completions
+                .iter()
+                .map(|x| (x.id, x.finished_at))
+                .collect();
+            let fb: Vec<_> = b
+                .metrics
+                .completions
+                .iter()
+                .map(|x| (x.id, x.finished_at))
+                .collect();
+            assert_eq!(fa, fb);
+        },
+    );
+}
+
+#[test]
+fn seer_never_catastrophically_worse() {
+    check(
+        "seer no worse than baseline",
+        PropConfig {
+            cases: 10,
+            max_size: 32,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let seed = c.rng.next_u64();
+            let verl =
+                run_once(&cfg, Box::new(VerlScheduler::new()), SdStrategy::None, seed);
+            let seer = run_once(
+                &cfg,
+                Box::new(SeerScheduler::new(ContextMode::Learned)),
+                SdStrategy::None,
+                seed,
+            );
+            let v = verl.metrics.makespan.as_secs_f64();
+            let s = seer.metrics.makespan.as_secs_f64();
+            assert!(
+                s <= v * 1.30 + 1.0,
+                "seer {s:.1}s vs verl {v:.1}s on {}",
+                cfg.name
+            );
+        },
+    );
+}
+
+#[test]
+fn oracle_lfs_at_least_as_good_as_no_context() {
+    check(
+        "oracle >= no-context (within tolerance)",
+        PropConfig {
+            cases: 8,
+            max_size: 24,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let seed = c.rng.next_u64();
+            let none = run_once(
+                &cfg,
+                Box::new(SeerScheduler::new(ContextMode::None)),
+                SdStrategy::None,
+                seed,
+            );
+            let oracle = run_once(
+                &cfg,
+                Box::new(SeerScheduler::new(ContextMode::Oracle)),
+                SdStrategy::None,
+                seed,
+            );
+            let n = none.metrics.makespan.as_secs_f64();
+            let o = oracle.metrics.makespan.as_secs_f64();
+            assert!(
+                o <= n * 1.15 + 0.5,
+                "oracle {o:.1}s vs no-context {n:.1}s"
+            );
+        },
+    );
+}
+
+#[test]
+fn partial_rollout_biases_against_long_outputs() {
+    // Statistical property: averaged over several seeds, the completed
+    // set under 2x over-issue + early stop has a lower mean length than
+    // the full synchronous completion set (Figure 12b). Individual seeds
+    // can tie at test scale, so aggregate.
+    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+    let mut full_sum = 0.0;
+    let mut part_sum = 0.0;
+    for seed in 0..5u64 {
+        let full = run_once(
+            &cfg,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+            seed,
+        );
+        let mut big = cfg.clone();
+        big.reqs_per_iter *= 2;
+        let sys = SystemConfig::default();
+        let w = generate_iteration(&big, seed);
+        let partial = ClusterSim::new(
+            big,
+            sys,
+            w.groups,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        )
+        .stop_after(cfg.reqs_per_iter)
+        .run();
+        let mean = |o: &RolloutOutcome| {
+            o.metrics
+                .completions
+                .iter()
+                .map(|c| c.gen_len as f64)
+                .sum::<f64>()
+                / o.metrics.completions.len() as f64
+        };
+        full_sum += mean(&full);
+        part_sum += mean(&partial);
+    }
+    assert!(
+        part_sum < full_sum * 0.98,
+        "partial {part_sum:.0} vs full {full_sum:.0} (aggregated)"
+    );
+}
