@@ -6,8 +6,7 @@
 //! Run:  cargo run --release --example longtail_study
 
 use seer::config::{SystemConfig, TaskPreset};
-use seer::engine::cluster::run_rollout;
-use seer::scheduler::{ContextMode, Scheduler, SeerScheduler, VerlScheduler};
+use seer::rollout::RolloutSession;
 use seer::spec::simmodel::SdStrategy;
 use seer::util::cli::Args;
 use seer::util::table::Table;
@@ -23,16 +22,19 @@ fn main() {
 
     // ---- completion-time CDF: veRL vs SEER --------------------------
     println!("# Completion-time CDF (Qwen2-VL, scaled)");
-    let runs: Vec<(&str, Box<dyn Scheduler>, SdStrategy)> = vec![
-        ("veRL", Box::new(VerlScheduler::new()), SdStrategy::None),
-        (
-            "SEER",
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-        ),
+    let runs: Vec<(&str, &str, SdStrategy)> = vec![
+        ("veRL", "verl", SdStrategy::None),
+        ("SEER", "seer", SdStrategy::GroupedCst),
     ];
     for (name, sched, sd) in runs {
-        let out = run_rollout(&cfg, &sys, sched, sd, seed);
+        let out = RolloutSession::builder()
+            .workload(cfg.clone())
+            .system(sys.clone())
+            .scheduler(sched)
+            .sd_strategy(sd)
+            .seed(seed)
+            .run()
+            .expect("rollout session failed");
         let mut s = out.metrics.completion_summary();
         println!(
             "{name:>6}: p50 {:>6.1}s  p90 {:>6.1}s  p99 {:>6.1}s  max {:>6.1}s  (makespan {:.1}s)",
@@ -54,13 +56,14 @@ fn main() {
             chunk_size: chunk,
             ..Default::default()
         };
-        let out = run_rollout(
-            &cfg,
-            &sys,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::None,
-            seed,
-        );
+        let out = RolloutSession::builder()
+            .workload(cfg.clone())
+            .system(sys)
+            .scheduler("seer")
+            .sd_strategy(SdStrategy::None)
+            .seed(seed)
+            .run()
+            .expect("rollout session failed");
         let m = &out.metrics;
         t.row(&[
             chunk.to_string(),
@@ -83,13 +86,14 @@ fn main() {
             starvation_guard_frac: guard,
             ..Default::default()
         };
-        let out = run_rollout(
-            &cfg,
-            &sys,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::None,
-            seed,
-        );
+        let out = RolloutSession::builder()
+            .workload(cfg.clone())
+            .system(sys)
+            .scheduler("seer")
+            .sd_strategy(SdStrategy::None)
+            .seed(seed)
+            .run()
+            .expect("rollout session failed");
         let mut s = out.metrics.completion_summary();
         t2.row(&[
             format!("{guard}"),

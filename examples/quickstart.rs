@@ -1,17 +1,17 @@
 //! Quickstart: load the AOT artifacts, run a real-model rollout through
-//! the Seer slot engine (probe-first scheduling + grouped speculative
+//! the unified session API (probe-first scheduling + grouped speculative
 //! decoding), and print throughput/acceptance statistics.
 //!
 //! Run with:  `make artifacts && cargo run --release --example quickstart`
 
 use anyhow::Result;
 use seer::rl::task::CopyTask;
-use seer::rollout::engine::{
-    RealRollout, RealRolloutConfig, SeqRequest, StopRule,
-};
+use seer::rollout::engine::{RealRolloutConfig, SeqRequest, StopRule};
+use seer::rollout::RolloutSession;
 use seer::runtime::manifest::default_artifact_dir;
 use seer::runtime::ModelRuntime;
 use seer::sim::Rng;
+use seer::workload::GroupId;
 
 fn main() -> Result<()> {
     let dir = default_artifact_dir();
@@ -28,46 +28,49 @@ fn main() -> Result<()> {
     let task = CopyTask::default();
     let mut rng = Rng::new(7);
     let mut requests = vec![];
-    for group in 0..2 {
+    for group in 0..2u32 {
         let (prompt, _) = task.sample_prompt(&mut rng);
         for _ in 0..4 {
             requests.push(SeqRequest {
-                group,
+                group: GroupId(group),
                 prompt: prompt.clone(),
                 stop: StopRule::MaxTokens(32),
             });
         }
     }
 
-    let mut roller = RealRollout::new(
-        &model,
-        RealRolloutConfig {
-            use_spec: true,
-            context_aware: true,
-            chunk_tokens: 16, // divided rollout: 16-token slot leases
-            max_gen: 32,
-            ..Default::default()
-        },
-    );
-    let report = roller.run(requests)?;
+    let report = RolloutSession::builder()
+        .real(
+            &model,
+            RealRolloutConfig {
+                use_spec: true,
+                context_aware: true,
+                chunk_tokens: 16, // divided rollout: 16-token slot leases
+                max_gen: 32,
+                ..Default::default()
+            },
+        )
+        .requests(requests)
+        .run()?;
 
     println!(
         "\ngenerated {} tokens over {} engine steps ({} verify) in {:.2}s",
-        report.tokens_generated,
-        report.engine_steps,
-        report.verify_steps,
+        report.metrics.tokens_generated,
+        report.metrics.engine_steps,
+        report.metrics.verify_steps,
         report.wall_secs
     );
     println!(
         "throughput {:.0} tok/s  |  mean acceptance length {:.2}  |  {} slot migrations",
         report.throughput(),
         report.mean_acceptance_len(),
-        report.migrations
+        report.metrics.migrations
     );
-    for (i, r) in report.results.iter().enumerate() {
+    for r in &report.sequences {
         println!(
-            "  seq {i}: group {} prompt {} -> {} tokens ({} migrations)",
-            r.group,
+            "  seq {}: group {} prompt {} -> {} tokens ({} migrations)",
+            r.id.0,
+            r.group.0,
             r.prompt_len,
             r.tokens.len(),
             r.migrations

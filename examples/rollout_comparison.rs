@@ -1,14 +1,12 @@
 //! Cluster-scale scheduler comparison on the paper's three production
 //! workloads (a compact Figure 7): veRL vs StreamRL-Oracle vs SEER
-//! variants, with and without grouped speculative decoding.
+//! variants, with and without grouped speculative decoding. All runs go
+//! through the unified `RolloutSession` builder with registry names.
 //!
 //! Run:  cargo run --release --example rollout_comparison -- [--full]
 
 use seer::config::{SystemConfig, TaskPreset, ALL_PRESETS};
-use seer::engine::cluster::run_rollout;
-use seer::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
-};
+use seer::rollout::RolloutSession;
 use seer::spec::simmodel::SdStrategy;
 use seer::util::cli::Args;
 use seer::util::table::{fmt_pct, fmt_x, Table};
@@ -33,11 +31,11 @@ fn main() {
             sys.chunk_size = (cfg.avg_gen_len / 4).clamp(64, 2048);
         }
 
-        let systems: Vec<(&str, fn() -> Box<dyn Scheduler>, SdStrategy)> = vec![
-            ("veRL", (|| Box::new(VerlScheduler::new()) as Box<dyn Scheduler>) as fn() -> _, SdStrategy::None),
-            ("StreamRL-Oracle", || Box::new(StreamRlOracle::new()), SdStrategy::None),
-            ("SEER (no SD)", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::None),
-            ("SEER", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst),
+        let systems: Vec<(&str, &str, SdStrategy)> = vec![
+            ("veRL", "verl", SdStrategy::None),
+            ("StreamRL-Oracle", "streamrl", SdStrategy::None),
+            ("SEER (no SD)", "seer", SdStrategy::None),
+            ("SEER", "seer", SdStrategy::GroupedCst),
         ];
 
         let mut t = Table::new(
@@ -47,8 +45,15 @@ fn main() {
               "Preempt", "Migrations", "Util"],
         );
         let mut base = 0.0;
-        for (name, mk, sd) in systems {
-            let out = run_rollout(&cfg, &sys, mk(), sd, seed);
+        for (name, sched, sd) in systems {
+            let out = RolloutSession::builder()
+                .workload(cfg.clone())
+                .system(sys.clone())
+                .scheduler(sched)
+                .sd_strategy(sd)
+                .seed(seed)
+                .run()
+                .expect("rollout session failed");
             let m = &out.metrics;
             let tp = m.throughput();
             if base == 0.0 {

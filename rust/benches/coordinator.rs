@@ -4,10 +4,8 @@
 
 use seer::config::{SystemConfig, TaskPreset};
 use seer::coordinator::RequestBuffer;
-use seer::scheduler::{
-    ContextMode, InstanceView, SchedCtx, Scheduler, SeerScheduler,
-    VerlScheduler,
-};
+use seer::rollout::PolicyRegistry;
+use seer::scheduler::{InstanceView, SchedCtx, Scheduler};
 use seer::sim::clock::SimTime;
 use seer::util::bench::bench_val;
 use seer::workload::{generate_iteration, InstanceId};
@@ -32,7 +30,9 @@ fn main() {
     let buffer = RequestBuffer::from_groups(&w.groups);
     let instances = views(&cfg);
 
-    let mut seer = SeerScheduler::new(ContextMode::Learned);
+    // Policies come from the registry, like every other front door.
+    let registry = PolicyRegistry::builtin();
+    let mut seer = registry.scheduler("seer").unwrap();
     seer.init(&w.groups, &cfg, &sys);
     bench_val("seer_schedule_3200_waiting_32_inst", || {
         let ctx = SchedCtx {
@@ -43,7 +43,7 @@ fn main() {
         seer.schedule(&ctx)
     });
 
-    let mut verl = VerlScheduler::new();
+    let mut verl = registry.scheduler("verl").unwrap();
     verl.init(&w.groups, &cfg, &sys);
     bench_val("verl_schedule_3200_waiting_32_inst", || {
         let ctx = SchedCtx {

@@ -2,37 +2,35 @@
 //! configuration (test scale), reporting sim-seconds simulated per
 //! wall-second — the whole-simulator hot path that the §Perf pass
 //! optimizes. Run the `experiment` CLI for the full-scale numbers.
-
-use std::time::Instant;
+//!
+//! Rollouts are constructed through the unified `RolloutSession` builder
+//! with registry policy names, like every other front door.
 
 use seer::config::{SystemConfig, TaskPreset, ALL_PRESETS};
-use seer::engine::cluster::run_rollout;
-use seer::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
-};
-use seer::spec::simmodel::SdStrategy;
+use seer::rollout::RolloutSession;
 
-fn time_one(
-    label: &str,
-    preset: TaskPreset,
-    sched: Box<dyn Scheduler>,
-    sd: SdStrategy,
-) {
+fn time_one(label: &str, preset: TaskPreset, scheduler: &str, sd: &str) {
     let cfg = preset.workload_for_test();
     let sys = SystemConfig {
         chunk_size: (cfg.avg_gen_len / 4).clamp(32, 2048),
         ..Default::default()
     };
-    let t0 = Instant::now();
-    let out = run_rollout(&cfg, &sys, sched, sd, 42);
-    let wall = t0.elapsed().as_secs_f64();
-    let sim = out.metrics.makespan.as_secs_f64();
+    let report = RolloutSession::builder()
+        .workload(cfg)
+        .system(sys)
+        .scheduler(scheduler)
+        .sd(sd)
+        .seed(42)
+        .run()
+        .expect("rollout session failed");
+    let wall = report.wall_secs;
+    let sim = report.metrics.makespan.as_secs_f64();
     println!(
         "bench e2e_{label}: wall {wall:.3}s sim {sim:.1}s speedup {:.0}x \
          ({} reqs, {} tokens)",
         sim / wall.max(1e-9),
-        out.metrics.completions.len(),
-        out.metrics.tokens_generated
+        report.metrics.completions.len(),
+        report.metrics.tokens_generated
     );
 }
 
@@ -40,29 +38,9 @@ fn main() {
     // Table 4 ladder on each preset (the per-table end-to-end benches).
     for preset in ALL_PRESETS {
         let name = preset.name().replace('-', "_");
-        time_one(
-            &format!("{name}_verl"),
-            preset,
-            Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-        );
-        time_one(
-            &format!("{name}_streamrl"),
-            preset,
-            Box::new(StreamRlOracle::new()),
-            SdStrategy::None,
-        );
-        time_one(
-            &format!("{name}_seer_nosd"),
-            preset,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::None,
-        );
-        time_one(
-            &format!("{name}_seer_full"),
-            preset,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-        );
+        time_one(&format!("{name}_verl"), preset, "verl", "none");
+        time_one(&format!("{name}_streamrl"), preset, "streamrl", "none");
+        time_one(&format!("{name}_seer_nosd"), preset, "seer", "none");
+        time_one(&format!("{name}_seer_full"), preset, "seer", "grouped-cst");
     }
 }

@@ -56,6 +56,8 @@ pub struct ReqState {
     pub chunks_run: u32,
     /// Number of times preempted.
     pub preemptions: u32,
+    /// Times its KV moved through the pool to a different instance.
+    pub migrations: u32,
 }
 
 impl ReqState {
@@ -73,6 +75,7 @@ impl ReqState {
             finished_at: None,
             chunks_run: 0,
             preemptions: 0,
+            migrations: 0,
         }
     }
 

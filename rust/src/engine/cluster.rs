@@ -5,6 +5,11 @@
 //! with a discrete-event loop. The coordinator/scheduler/spec code under
 //! test is the production code; only token generation is replaced by the
 //! fluid expected-rate model (DESIGN.md §2).
+//!
+//! This is the simulated substrate behind the unified session API —
+//! construct runs through [`crate::rollout::RolloutSession`] rather than
+//! driving `ClusterSim` directly; lifecycle transitions stream to the
+//! session's observers.
 
 use std::collections::BTreeMap;
 
@@ -14,6 +19,7 @@ use crate::engine::costmodel::CostModel;
 use crate::engine::instance::{Instance, Interval, RunningReq};
 use crate::kvcache::GlobalKvPool;
 use crate::metrics::{Completion, LoadSample, RolloutMetrics};
+use crate::rollout::observer::{ObserverHub, RolloutEvent};
 use crate::scheduler::{InstanceView, SchedCtx, Scheduler};
 use crate::sim::clock::SimTime;
 use crate::sim::events::EventQueue;
@@ -70,6 +76,9 @@ pub struct ClusterSim {
     /// Upper bound on events (runaway guard).
     max_events: u64,
     schedule_dirty: bool,
+    /// Streaming lifecycle-event sinks (the session layer's observer
+    /// API); empty by default and free when empty.
+    observers: ObserverHub,
 }
 
 impl ClusterSim {
@@ -116,7 +125,14 @@ impl ClusterSim {
             accept_steps: 0.0,
             max_events: 50_000_000,
             schedule_dirty: true,
+            observers: ObserverHub::new(),
         }
+    }
+
+    /// Attach the streaming observers events are narrated into.
+    pub fn with_observers(mut self, observers: ObserverHub) -> Self {
+        self.observers = observers;
+        self
     }
 
     /// Partial Rollout mode: terminate the iteration after `n`
@@ -443,7 +459,7 @@ impl ClusterSim {
         &mut self,
         idx: usize,
         id: RequestId,
-        _now: SimTime,
+        now: SimTime,
         preempted: bool,
     ) {
         let inst = &mut self.instances[idx];
@@ -472,6 +488,12 @@ impl ClusterSim {
         {
             gp.running = gp.running.saturating_sub(1);
         }
+        self.observers.emit(RolloutEvent::ChunkEnd {
+            req: id,
+            instance: InstanceId(idx as u32),
+            preempted,
+            now,
+        });
     }
 
     // ------------------------------------------------------------------
@@ -485,6 +507,7 @@ impl ClusterSim {
         }
         let mut completed = Vec::new();
         let mut chunk_ended = Vec::new();
+        let mut granted_total = 0u64;
         for (id, gain) in &commit.gained {
             let inst = &mut self.instances[idx];
             // τ accounting over SD-active request-steps only (the paper's
@@ -509,6 +532,7 @@ impl ClusterSim {
             debug_assert!(r.generated <= r.spec.gen_len);
             r.chunk_remaining = r.chunk_remaining.saturating_sub(granted);
             self.metrics.tokens_generated += granted as u64;
+            granted_total += granted as u64;
             if r.generated >= r.spec.gen_len {
                 completed.push(*id);
             } else if r.chunk_remaining == 0 {
@@ -517,6 +541,12 @@ impl ClusterSim {
         }
         self.metrics.spec_accepted_tokens +=
             commit.accepted_tokens.round() as u64;
+        self.observers.emit(RolloutEvent::Step {
+            instance: InstanceId(idx as u32),
+            steps: commit.steps.round() as u64,
+            tokens: granted_total,
+            now,
+        });
 
         for id in completed {
             self.finish_request(idx, id, now);
@@ -556,6 +586,11 @@ impl ClusterSim {
         let r = self.buffer.get(id).clone();
         self.scheduler.on_finished(&r);
         self.schedule_dirty = true;
+        self.observers.emit(RolloutEvent::Finished {
+            req: id,
+            gen_len,
+            now,
+        });
     }
 
     // ------------------------------------------------------------------
@@ -601,6 +636,7 @@ impl ClusterSim {
                 self.cfg.max_gen_len, // lease can't exceed the cap
             );
             // Transfer / prefill delay before the request joins the batch.
+            let mut migrated = false;
             let r = self.buffer.get_mut(a.req);
             let delay = if r.needs_reprefill {
                 let tokens = r.spec.prompt_len as u64 + r.generated as u64;
@@ -616,6 +652,8 @@ impl ClusterSim {
                     .expect("pool lost a parked request");
                 let moved = self.last_instance.get(&a.req) != Some(&a.instance);
                 if moved {
+                    migrated = true;
+                    r.migrations += 1;
                     self.metrics.migrations += 1;
                     self.metrics.migrated_bytes +=
                         r.kv_tokens * self.cfg.hw.kv_bytes_per_token;
@@ -625,6 +663,7 @@ impl ClusterSim {
                 SimTime::from_micros(100)
             };
             r.chunk_remaining = chunk;
+            r.chunks_run += 1;
             r.phase = Phase::Running(a.instance);
             r.kv_location = KvLocation::Instance(a.instance);
             if r.first_scheduled.is_none() {
@@ -636,6 +675,18 @@ impl ClusterSim {
             self.last_instance.insert(a.req, a.instance);
             self.queue
                 .schedule_at(now + delay, Event::Arrive { req: a.req });
+            self.observers.emit(RolloutEvent::Scheduled {
+                req: a.req,
+                instance: a.instance,
+                now,
+            });
+            if migrated {
+                self.observers.emit(RolloutEvent::Migration {
+                    req: a.req,
+                    to: a.instance,
+                    now,
+                });
+            }
         }
     }
 
@@ -717,23 +768,6 @@ impl ClusterSim {
             self.accept_len_weighted / self.accept_steps
         }
     }
-}
-
-/// Convenience: run one iteration of `cfg` under `scheduler`/`sd` and
-/// return the outcome. Seeds the workload with `seed`.
-pub fn run_rollout(
-    cfg: &WorkloadConfig,
-    sys: &SystemConfig,
-    scheduler: Box<dyn Scheduler>,
-    sd: SdStrategy,
-    seed: u64,
-) -> RolloutOutcome {
-    let w = crate::workload::generate_iteration(cfg, seed);
-    let expected = w.n_requests();
-    let sim = ClusterSim::new(cfg.clone(), sys.clone(), w.groups, scheduler, sd);
-    let out = sim.run();
-    out.metrics.check_complete(expected);
-    out
 }
 
 #[cfg(test)]

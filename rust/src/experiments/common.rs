@@ -1,9 +1,12 @@
 //! Shared experiment plumbing: workload scaling (full paper scale vs the
-//! fast CI scale), run helpers, and result records.
+//! fast CI scale), session-based run helpers, and result records.
+//!
+//! All measurements construct rollouts through
+//! [`crate::rollout::RolloutSession`], resolving policies by registry
+//! name — experiments never build schedulers by hand.
 
 use crate::config::{SystemConfig, TaskPreset, WorkloadConfig};
-use crate::engine::cluster::{run_rollout, RolloutOutcome};
-use crate::scheduler::Scheduler;
+use crate::rollout::{RolloutReport, RolloutSession};
 use crate::spec::simmodel::SdStrategy;
 use crate::util::cli::Args;
 
@@ -59,27 +62,45 @@ impl Scale {
         }
         sys
     }
+
+    /// A session builder pre-configured for `preset` at this scale.
+    pub fn session(
+        &self,
+        preset: TaskPreset,
+        scheduler: &str,
+        sd: SdStrategy,
+    ) -> crate::rollout::session::RolloutSessionBuilder<'static> {
+        let cfg = self.workload(preset);
+        let sys = self.sys(&cfg);
+        RolloutSession::builder()
+            .workload(cfg)
+            .system(sys)
+            .scheduler(scheduler)
+            .sd_strategy(sd)
+            .seed(self.seed)
+    }
 }
 
 /// One (scheduler, SD) rollout measurement.
 pub struct RunResult {
     pub label: String,
-    pub outcome: RolloutOutcome,
+    pub report: RolloutReport,
 }
 
 pub fn measure(
     scale: &Scale,
     preset: TaskPreset,
     label: &str,
-    make_sched: impl Fn() -> Box<dyn Scheduler>,
+    scheduler: &str,
     sd: SdStrategy,
 ) -> RunResult {
-    let cfg = scale.workload(preset);
-    let sys = scale.sys(&cfg);
-    let outcome = run_rollout(&cfg, &sys, make_sched(), sd, scale.seed);
+    let report = scale
+        .session(preset, scheduler, sd)
+        .run()
+        .expect("rollout session failed");
     RunResult {
         label: label.to_string(),
-        outcome,
+        report,
     }
 }
 
@@ -87,15 +108,17 @@ pub fn measure(
 pub fn mean_throughput(
     scale: &Scale,
     preset: TaskPreset,
-    make_sched: &dyn Fn() -> Box<dyn Scheduler>,
+    scheduler: &str,
     sd: SdStrategy,
 ) -> f64 {
-    let cfg = scale.workload(preset);
-    let sys = scale.sys(&cfg);
     let mut total = 0.0;
     for i in 0..scale.iters {
-        let out = run_rollout(&cfg, &sys, make_sched(), sd, scale.seed + i as u64);
-        total += out.metrics.throughput();
+        let report = scale
+            .session(preset, scheduler, sd)
+            .seed(scale.seed + i as u64)
+            .run()
+            .expect("rollout session failed");
+        total += report.metrics.throughput();
     }
     total / scale.iters as f64
 }

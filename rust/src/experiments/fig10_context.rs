@@ -3,7 +3,6 @@
 //! normalized throughput and normalized tail latency.
 
 use crate::config::TaskPreset;
-use crate::scheduler::{ContextMode, SeerScheduler, VerlScheduler};
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_pct, fmt_x, Table};
 
@@ -11,20 +10,16 @@ use super::common::{measure, Scale};
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
     let preset = TaskPreset::Qwen2Vl72b;
-    let baseline = measure(
-        scale,
-        preset,
-        "verl",
-        || Box::new(VerlScheduler::new()),
-        SdStrategy::None,
-    );
+    let baseline =
+        measure(scale, preset, "verl", "verl", SdStrategy::None);
+    // Registry names for the context ablation's scheduler variants.
     let variants = [
-        ("No-Context", ContextMode::None),
-        ("SEER", ContextMode::Learned),
-        ("Oracle", ContextMode::Oracle),
+        ("No-Context", "no-context"),
+        ("SEER", "seer"),
+        ("Oracle", "oracle"),
     ];
-    let base_tp = baseline.outcome.metrics.throughput();
-    let base_tail = baseline.outcome.metrics.tail_time(0.10).as_secs_f64();
+    let base_tp = baseline.report.metrics.throughput();
+    let base_tail = baseline.report.metrics.tail_time(0.10).as_secs_f64();
 
     let mut t = Table::new(
         "Figure 10 — impact of length context (Qwen2-VL-72B)",
@@ -38,16 +33,10 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
     ]);
     let mut oracle_tp = 0.0;
     let mut seer_tp = 0.0;
-    for (name, mode) in variants {
-        let res = measure(
-            scale,
-            preset,
-            name,
-            || Box::new(SeerScheduler::new(mode)),
-            SdStrategy::None,
-        );
-        let tp = res.outcome.metrics.throughput();
-        let tail = res.outcome.metrics.tail_time(0.10).as_secs_f64();
+    for (name, sched) in variants {
+        let res = measure(scale, preset, name, sched, SdStrategy::None);
+        let tp = res.report.metrics.throughput();
+        let tail = res.report.metrics.tail_time(0.10).as_secs_f64();
         if name == "Oracle" {
             oracle_tp = tp;
         }

@@ -4,11 +4,8 @@
 //! effect is isolated, as in the paper's ablation on veRL).
 
 use crate::config::ALL_PRESETS;
-use crate::engine::cluster::ClusterSim;
-use crate::scheduler::VerlScheduler;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_x, Table};
-use crate::workload::generate_iteration;
 
 use super::common::Scale;
 use super::fig7_throughput::vanilla_sd_for;
@@ -19,8 +16,7 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         &["Task", "Strategy", "Throughput", "vs no-SD", "τ (mean accept len)"],
     );
     for preset in ALL_PRESETS {
-        let cfg = scale.workload(preset);
-        let sys = scale.sys(&cfg);
+        let task_name = scale.workload(preset).name;
         let strategies = [
             SdStrategy::None,
             vanilla_sd_for(preset),
@@ -28,24 +24,16 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         ];
         let mut base = 0.0f64;
         for sd in strategies {
-            let w = generate_iteration(&cfg, scale.seed);
-            let sim = ClusterSim::new(
-                cfg.clone(),
-                sys.clone(),
-                w.groups,
-                Box::new(VerlScheduler::new()),
-                sd,
-            );
-            // (mean_acceptance needs the sim alive; compute before run
-            // consumes it — run returns outcome, so grab τ from metrics.)
-            let out = sim.run();
-            let tp = out.metrics.throughput();
+            // All on the same scheduler so the decoding effect is
+            // isolated, as in the paper's ablation.
+            let report = scale.session(preset, "verl", sd).run()?;
+            let tp = report.metrics.throughput();
             if sd == SdStrategy::None {
                 base = tp;
             }
-            let tau = out.metrics.mean_acceptance_len();
+            let tau = report.metrics.mean_acceptance_len();
             t.row(&[
-                cfg.name.to_string(),
+                task_name.to_string(),
                 sd.name().into(),
                 format!("{tp:.0}"),
                 fmt_x(tp / base.max(1e-9)),

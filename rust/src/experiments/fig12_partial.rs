@@ -3,12 +3,10 @@
 //! output-length-distribution bias Partial Rollout introduces.
 
 use crate::config::TaskPreset;
-use crate::engine::cluster::ClusterSim;
-use crate::scheduler::{ContextMode, SeerScheduler, VerlScheduler};
+use crate::rollout::RolloutSession;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::stats::Summary;
 use crate::util::table::{fmt_x, Table};
-use crate::workload::generate_iteration;
 
 use super::common::Scale;
 
@@ -18,30 +16,22 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
     let sys = scale.sys(&cfg);
 
     // SEER: strict synchronous, all requests complete.
-    let w = generate_iteration(&cfg, scale.seed);
-    let seer = ClusterSim::new(
-        cfg.clone(),
-        sys.clone(),
-        w.groups,
-        Box::new(SeerScheduler::new(ContextMode::Learned)),
-        SdStrategy::GroupedCst,
-    )
-    .run();
+    let seer = scale
+        .session(preset, "seer", SdStrategy::GroupedCst)
+        .run()?;
 
     // Partial Rollout (APRIL setup): over-issue 2x the requests, stop
     // once the target count completes; the rest would carry over.
     let mut big = cfg.clone();
     big.reqs_per_iter = cfg.reqs_per_iter * 2;
-    let w2 = generate_iteration(&big, scale.seed);
-    let partial = ClusterSim::new(
-        big,
-        sys,
-        w2.groups,
-        Box::new(VerlScheduler::new()),
-        SdStrategy::None,
-    )
-    .stop_after(cfg.reqs_per_iter)
-    .run();
+    let partial = RolloutSession::builder()
+        .workload(big)
+        .system(sys)
+        .scheduler("verl")
+        .sd_strategy(SdStrategy::None)
+        .seed(scale.seed)
+        .stop_after(cfg.reqs_per_iter)
+        .run()?;
 
     let mut t = Table::new(
         "Figure 12a — throughput: SEER vs Partial Rollout (Qwen2-VL)",

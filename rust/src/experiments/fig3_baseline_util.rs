@@ -4,7 +4,6 @@
 //! long-tail idleness.
 
 use crate::config::TaskPreset;
-use crate::scheduler::VerlScheduler;
 use crate::spec::simmodel::SdStrategy;
 
 use super::common::{measure, Scale};
@@ -14,16 +13,19 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         scale,
         TaskPreset::Qwen2Vl72b,
         "verl",
-        || Box::new(VerlScheduler::new()),
+        "verl",
         SdStrategy::None,
     );
-    print_utilization_series("Figure 3 (veRL baseline, Qwen2-VL)", &res.outcome);
+    print_utilization_series(
+        "Figure 3 (veRL baseline, Qwen2-VL)",
+        &res.report.metrics,
+    );
     println!(
         "preemption events: {}   re-prefilled tokens: {}",
-        res.outcome.metrics.preemptions, res.outcome.metrics.re_prefill_tokens
+        res.report.metrics.preemptions, res.report.metrics.re_prefill_tokens
     );
-    let tail = res.outcome.metrics.tail_time(0.10);
-    let total = res.outcome.metrics.makespan;
+    let tail = res.report.metrics.tail_time(0.10);
+    let total = res.report.metrics.makespan;
     println!(
         "long-tail (last 10% of requests): {:.0}s of {:.0}s total ({:.0}%)",
         tail.as_secs_f64(),
@@ -37,10 +39,9 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
 /// time series, averaged across instances, in ~30 buckets.
 pub fn print_utilization_series(
     title: &str,
-    outcome: &crate::engine::cluster::RolloutOutcome,
+    m: &crate::metrics::RolloutMetrics,
 ) {
     println!("\n# {title}");
-    let m = &outcome.metrics;
     if m.load_samples.is_empty() {
         println!("(no load samples — rollout too short for the sample interval)");
         return;

@@ -2,10 +2,7 @@
 //! group sizes — veRL, veRL+vanilla-SD, StreamRL-Oracle, and SEER.
 
 use crate::config::{TaskPreset, ALL_PRESETS};
-use crate::engine::cluster::run_rollout;
-use crate::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
-};
+use crate::rollout::RolloutSession;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_x, Table};
 
@@ -20,13 +17,16 @@ pub fn vanilla_sd_for(preset: TaskPreset) -> SdStrategy {
     }
 }
 
-pub fn systems(preset: TaskPreset) -> Vec<(&'static str, fn() -> Box<dyn Scheduler>, SdStrategy)> {
+/// The Figure 7 system matrix: (label, registry scheduler name, SD).
+pub fn systems(
+    preset: TaskPreset,
+) -> Vec<(&'static str, &'static str, SdStrategy)> {
     let vanilla = vanilla_sd_for(preset);
     vec![
-        ("veRL", (|| Box::new(VerlScheduler::new()) as Box<dyn Scheduler>) as fn() -> _, SdStrategy::None),
-        ("veRL+SD", || Box::new(VerlScheduler::new()), vanilla),
-        ("StreamRL-Oracle", || Box::new(StreamRlOracle::new()), SdStrategy::None),
-        ("SEER", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst),
+        ("veRL", "verl", SdStrategy::None),
+        ("veRL+SD", "verl", vanilla),
+        ("StreamRL-Oracle", "streamrl", SdStrategy::None),
+        ("SEER", "seer", SdStrategy::GroupedCst),
     ]
 }
 
@@ -40,15 +40,21 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         );
         let mut rows: Vec<Vec<String>> = vec![];
         let mut base_tp = [0.0f64; 2];
-        for (name, mk, sd) in systems(preset) {
+        for (name, sched, sd) in systems(preset) {
             let mut cells = vec![name.to_string()];
             for (gi, &g) in group_sizes.iter().enumerate() {
                 let cfg = base.with_group_size(g);
                 let sys = scale.sys(&cfg);
                 let mut tp = 0.0;
                 for i in 0..scale.iters {
-                    let out = run_rollout(&cfg, &sys, mk(), sd, scale.seed + i as u64);
-                    tp += out.metrics.throughput();
+                    let report = RolloutSession::builder()
+                        .workload(cfg.clone())
+                        .system(sys.clone())
+                        .scheduler(sched)
+                        .sd_strategy(sd)
+                        .seed(scale.seed + i as u64)
+                        .run()?;
+                    tp += report.metrics.throughput();
                 }
                 tp /= scale.iters as f64;
                 if name == "veRL" {

@@ -2,7 +2,6 @@
 //! and total rollout time, veRL vs SEER, across the three tasks.
 
 use crate::config::ALL_PRESETS;
-use crate::scheduler::{ContextMode, SeerScheduler, VerlScheduler};
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_pct, fmt_secs, Table};
 
@@ -17,25 +16,14 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         ],
     );
     for preset in ALL_PRESETS {
-        let verl = measure(
-            scale,
-            preset,
-            "verl",
-            || Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-        );
-        let seer = measure(
-            scale,
-            preset,
-            "seer",
-            || Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-        );
+        let verl = measure(scale, preset, "verl", "verl", SdStrategy::None);
+        let seer =
+            measure(scale, preset, "seer", "seer", SdStrategy::GroupedCst);
         let cfg = scale.workload(preset);
-        let vt = verl.outcome.metrics.tail_time(0.10).as_secs_f64();
-        let vtot = verl.outcome.metrics.makespan.as_secs_f64();
-        let st = seer.outcome.metrics.tail_time(0.10).as_secs_f64();
-        let stot = seer.outcome.metrics.makespan.as_secs_f64();
+        let vt = verl.report.metrics.tail_time(0.10).as_secs_f64();
+        let vtot = verl.report.metrics.makespan.as_secs_f64();
+        let st = seer.report.metrics.tail_time(0.10).as_secs_f64();
+        let stot = seer.report.metrics.makespan.as_secs_f64();
         t.row(&[
             cfg.name.to_string(),
             "veRL".into(),

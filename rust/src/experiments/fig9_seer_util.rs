@@ -2,7 +2,6 @@
 //! preemption storm disappears and the tail compresses.
 
 use crate::config::TaskPreset;
-use crate::scheduler::{ContextMode, SeerScheduler};
 use crate::spec::simmodel::SdStrategy;
 
 use super::common::{measure, Scale};
@@ -13,18 +12,18 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         scale,
         TaskPreset::Qwen2Vl72b,
         "seer",
-        || Box::new(SeerScheduler::new(ContextMode::Learned)),
+        "seer",
         SdStrategy::GroupedCst,
     );
-    print_utilization_series("Figure 9 (SEER, Qwen2-VL)", &res.outcome);
+    print_utilization_series("Figure 9 (SEER, Qwen2-VL)", &res.report.metrics);
     println!(
         "preemption events: {}   migrations: {}   migrated GiB: {:.1}",
-        res.outcome.metrics.preemptions,
-        res.outcome.metrics.migrations,
-        res.outcome.metrics.migrated_bytes as f64 / (1u64 << 30) as f64,
+        res.report.metrics.preemptions,
+        res.report.metrics.migrations,
+        res.report.metrics.migrated_bytes as f64 / (1u64 << 30) as f64,
     );
-    let tail = res.outcome.metrics.tail_time(0.10);
-    let total = res.outcome.metrics.makespan;
+    let tail = res.report.metrics.tail_time(0.10);
+    let total = res.report.metrics.makespan;
     println!(
         "long-tail (last 10%): {:.0}s of {:.0}s total ({:.0}%)",
         tail.as_secs_f64(),

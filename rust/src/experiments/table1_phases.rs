@@ -4,7 +4,6 @@
 
 use crate::config::ALL_PRESETS;
 use crate::rl::phases::PhaseModel;
-use crate::scheduler::VerlScheduler;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_pct, Table};
 
@@ -22,18 +21,12 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         ("kimi-k2", 0.87, 0.10, 0.03),
     ];
     for preset in ALL_PRESETS {
-        let res = measure(
-            scale,
-            preset,
-            "verl",
-            || Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-        );
+        let res = measure(scale, preset, "verl", "verl", SdStrategy::None);
         let cfg = scale.workload(preset);
         let model = PhaseModel::for_workload(&cfg);
         let split = model.split(
-            res.outcome.metrics.makespan,
-            res.outcome.metrics.tokens_generated,
+            res.report.metrics.makespan,
+            res.report.metrics.tokens_generated,
         );
         let (r, tr, u) = split.fractions();
         t.row(&[

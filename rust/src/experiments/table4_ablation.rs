@@ -2,28 +2,28 @@
 //! rollout, context-aware scheduling, and grouped speculative decoding.
 
 use crate::config::ALL_PRESETS;
-use crate::scheduler::{ContextMode, Scheduler, SeerScheduler, VerlScheduler};
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_x, Table};
 
 use super::common::{mean_throughput, Scale};
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
-    let stages: Vec<(&str, fn() -> Box<dyn Scheduler>, SdStrategy)> = vec![
-        ("Baseline (veRL)", (|| Box::new(VerlScheduler::new()) as Box<dyn Scheduler>) as fn() -> _, SdStrategy::None),
-        ("+ Divided Rollout", || Box::new(SeerScheduler::new(ContextMode::None)), SdStrategy::None),
-        ("+ Context Sched.", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::None),
-        ("+ Grouped SD", || Box::new(SeerScheduler::new(ContextMode::Learned)), SdStrategy::GroupedCst),
+    // (label, registry scheduler name, SD strategy), cumulative.
+    let stages: Vec<(&str, &str, SdStrategy)> = vec![
+        ("Baseline (veRL)", "verl", SdStrategy::None),
+        ("+ Divided Rollout", "no-context", SdStrategy::None),
+        ("+ Context Sched.", "seer", SdStrategy::None),
+        ("+ Grouped SD", "seer", SdStrategy::GroupedCst),
     ];
     let mut t = Table::new(
         "Table 4: Performance improvement breakdown (cumulative)",
         &["Method", "Moonlight", "Qwen2-VL-72B", "Kimi-K2"],
     );
     let mut base = [0.0f64; 3];
-    for (label, mk, sd) in stages {
+    for (label, sched, sd) in stages {
         let mut cells = vec![label.to_string()];
         for (pi, preset) in ALL_PRESETS.iter().enumerate() {
-            let tp = mean_throughput(scale, *preset, &|| mk(), sd);
+            let tp = mean_throughput(scale, *preset, sched, sd);
             if base[pi] == 0.0 {
                 base[pi] = tp;
             }

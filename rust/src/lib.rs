@@ -11,28 +11,41 @@
 //!
 //! Module map (see DESIGN.md for the full inventory):
 //!
+//! * [`rollout`] — **the front door**: the unified session layer.
+//!   [`rollout::RolloutSession`] is a builder over the
+//!   [`rollout::RolloutBackend`] trait, implemented by both execution
+//!   substrates — the discrete-event cluster simulator and the
+//!   real-model engine — and every run yields one unified
+//!   [`rollout::RolloutReport`]. Policies resolve by name through
+//!   [`rollout::PolicyRegistry`]; request lifecycle streams to
+//!   [`rollout::RolloutObserver`]s. The CLI, experiments, benches, and
+//!   the RL loop all construct rollouts here and nowhere else.
 //! * [`sim`] — deterministic discrete-event core (clock, event queue, RNG).
 //! * [`util`] — in-tree substrates for the offline environment: JSON
-//!   parser, CLI, stats helpers, property-test harness.
+//!   parser/serializer, CLI, stats helpers, property-test harness.
 //! * [`config`] — system/workload configuration and the paper's Table 3
 //!   task presets.
-//! * [`workload`] — group-correlated length mixtures and token streams.
+//! * [`workload`] — group-correlated length mixtures and token streams,
+//!   plus the id types (`RequestId`/`GroupId`/`InstanceId`) every layer
+//!   speaks.
 //! * [`kvcache`] — paged per-instance allocator + Mooncake-like global pool.
-//! * [`engine`] — vLLM-like inference instances with continuous batching,
-//!   preemption and a calibrated step-time cost model.
+//! * [`engine`] — the simulated substrate: vLLM-like inference instances
+//!   with continuous batching, preemption and a calibrated step-time cost
+//!   model, driven by `engine::cluster::ClusterSim`.
 //! * [`coordinator`] — request buffer, context manager, divided rollout.
 //! * [`scheduler`] — pluggable policies: Seer (paper Alg. 2) and baselines
-//!   (veRL group-RR, StreamRL-Oracle, Partial Rollout, No-Context, Oracle).
+//!   (veRL group-RR, StreamRL-Oracle, Partial Rollout, No-Context,
+//!   Oracle); constructed by registry name.
 //! * [`spec`] — CST (suffix-automaton implementation), DGDS, MBA adaptive
 //!   speculation (paper Alg. 1), multi-path drafting, vanilla SD baselines.
-//! * [`metrics`] — timelines, histograms, tail-time accounting.
+//! * [`metrics`] — timelines, histograms, tail-time accounting; consumes
+//!   the session event stream as an ordinary observer
+//!   ([`metrics::EventCounts`]).
 //! * [`runtime`] — PJRT artifact loading/execution via the `xla` crate.
-//! * [`rollout`] — the real-model rollout engine (tiny transformer driven
-//!   through the coordinator, token by token, with real grouped SD).
-//! * [`rl`] — the synchronous GRPO loop: rollout → reward → advantage →
-//!   train_step → weight update.
+//! * [`rl`] — the synchronous GRPO loop: rollout (through a real-backend
+//!   session) → reward → advantage → train_step → weight update.
 //! * [`experiments`] — regenerates every table and figure of the paper's
-//!   evaluation section.
+//!   evaluation section, measuring through sessions.
 
 pub mod config;
 pub mod coordinator;

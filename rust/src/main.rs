@@ -3,53 +3,38 @@
 //!
 //! Subcommands:
 //!   seer experiment <id|all> [--full] [--seed N] [--iters N]
-//!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>]
+//!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>] [--json]
 //!   seer train [--preset small] [--iters N] [--artifacts DIR]
 //!   seer info
+//!
+//! All rollout construction goes through `rollout::RolloutSession` and
+//! the policy registry — no scheduler/SD match arms live here.
 
 use anyhow::Result;
 use seer::config::TaskPreset;
-use seer::engine::cluster::run_rollout;
-use seer::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
-};
-use seer::spec::simmodel::SdStrategy;
+use seer::rollout::RolloutSession;
 use seer::util::cli::Args;
 
 const USAGE: &str = "\
 seer — reproduction of 'Seer: Online Context Learning for Fast Synchronous \
 LLM Reinforcement Learning'
 
+Rollouts are constructed through the unified session layer
+(rollout::session): one RolloutSession builder in front of both the
+discrete-event cluster simulator and the real-model engine, with
+schedulers and SD strategies resolved by name from the policy registry.
+
 USAGE:
   seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
-       [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
+       [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N] [--json]
   seer train [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
   seer info
+
+  rollout --json prints the unified RolloutReport as one JSON object for
+  bench/trajectory tooling instead of the human summary line.
 ";
-
-fn make_scheduler(name: &str) -> Result<Box<dyn Scheduler>> {
-    Ok(match name {
-        "seer" => Box::new(SeerScheduler::new(ContextMode::Learned)),
-        "no-context" => Box::new(SeerScheduler::new(ContextMode::None)),
-        "oracle" => Box::new(SeerScheduler::new(ContextMode::Oracle)),
-        "verl" => Box::new(VerlScheduler::new()),
-        "streamrl" => Box::new(StreamRlOracle::new()),
-        other => anyhow::bail!("unknown scheduler '{other}'"),
-    })
-}
-
-fn make_sd(name: &str) -> Result<SdStrategy> {
-    Ok(match name {
-        "none" => SdStrategy::None,
-        "grouped-cst" => SdStrategy::GroupedCst,
-        "suffix-decoding" => SdStrategy::SuffixDecoding,
-        "draft-model" => SdStrategy::DraftModel,
-        "mtp" => SdStrategy::Mtp,
-        other => anyhow::bail!("unknown SD strategy '{other}'"),
-    })
-}
 
 fn cmd_rollout(args: &Args) -> Result<()> {
     let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
@@ -60,15 +45,30 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     );
     let cfg = scale.workload(preset);
     let sys = scale.sys(&cfg);
-    let sched = make_scheduler(args.get_or("scheduler", "seer"))?;
-    let sd = make_sd(args.get_or("sd", "grouped-cst"))?;
-    let name = sched.name();
-    println!(
-        "rollout: task={} scheduler={} sd={} reqs={} instances={}",
-        cfg.name, name, sd.name(), cfg.reqs_per_iter, cfg.n_instances
-    );
-    let out = run_rollout(&cfg, &sys, sched, sd, scale.seed);
-    let m = &out.metrics;
+    let json = args.has_flag("json");
+    let session = RolloutSession::builder()
+        .workload(cfg.clone())
+        .system(sys)
+        .scheduler(args.get_or("scheduler", "seer"))
+        .sd(args.get_or("sd", "grouped-cst"))
+        .seed(scale.seed)
+        .build()?;
+    if !json {
+        println!(
+            "rollout: task={} scheduler={} sd={} reqs={} instances={}",
+            cfg.name,
+            session.scheduler_name(),
+            session.sd_name(),
+            cfg.reqs_per_iter,
+            cfg.n_instances
+        );
+    }
+    let report = session.run()?;
+    if json {
+        println!("{}", report.to_json());
+        return Ok(());
+    }
+    let m = &report.metrics;
     println!(
         "makespan {:.1}s  throughput {:.0} tok/s  tail(10%) {:.1}s  \
          preemptions {}  migrations {}  util {:.2}  τ {:.2}",
@@ -135,7 +135,7 @@ fn cmd_info() -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["full", "fast", "spec"]);
+    let args = Args::from_env(&["full", "fast", "spec", "json"]);
     match args.positionals.first().map(|s| s.as_str()) {
         Some("experiment") => {
             let id = args

@@ -1,8 +1,11 @@
 //! Rollout telemetry: completion records, per-instance utilization
 //! timelines, preemption counters, and the paper's tail-time metric
 //! (§4.2.2: tail time = time spent *solely* processing the last 10% of
-//! requests to complete).
+//! requests to complete). [`EventCounts`] consumes the session layer's
+//! streaming event API as an ordinary observer, cross-checking the
+//! driver-side counters.
 
+use crate::rollout::observer::{RolloutEvent, RolloutObserver};
 use crate::sim::clock::SimTime;
 use crate::util::stats::Summary;
 use crate::workload::{InstanceId, RequestId};
@@ -42,6 +45,9 @@ pub struct RolloutMetrics {
     pub spec_draft_tokens: u64,
     /// Engine-forward-step count across instances.
     pub engine_steps: u64,
+    /// Verification forward passes (real backend; the fluid simulator
+    /// folds verification into its step-time model and leaves this 0).
+    pub verify_steps: u64,
     /// Mean accepted tokens per request-step including the bonus token
     /// (τ, Figure 11); 1.0 when SD is off. Set by the driver.
     pub tau: f64,
@@ -125,6 +131,48 @@ impl RolloutMetrics {
     }
 }
 
+/// Event-stream tally: metrics as just another [`RolloutObserver`].
+///
+/// Counts the lifecycle events a rollout backend narrates; a consistent
+/// run satisfies `finished == completions.len()`, `migrations ==
+/// RolloutMetrics::migrations`, `preemptions == RolloutMetrics::
+/// preemptions`, and `tokens == RolloutMetrics::tokens_generated`
+/// (asserted by the session tests).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct EventCounts {
+    pub scheduled: u64,
+    pub chunk_ends: u64,
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub finished: u64,
+    pub steps: u64,
+    /// Generation progress committed by Step events.
+    pub tokens: u64,
+    /// All events, of any kind.
+    pub events: u64,
+}
+
+impl RolloutObserver for EventCounts {
+    fn on_event(&mut self, ev: &RolloutEvent) {
+        self.events += 1;
+        match ev {
+            RolloutEvent::Scheduled { .. } => self.scheduled += 1,
+            RolloutEvent::ChunkEnd { preempted, .. } => {
+                self.chunk_ends += 1;
+                if *preempted {
+                    self.preemptions += 1;
+                }
+            }
+            RolloutEvent::Migration { .. } => self.migrations += 1,
+            RolloutEvent::Finished { .. } => self.finished += 1,
+            RolloutEvent::Step { steps, tokens, .. } => {
+                self.steps += *steps;
+                self.tokens += *tokens;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -174,5 +222,41 @@ mod tests {
     fn check_complete_panics_on_loss() {
         let m = RolloutMetrics::new(1);
         m.check_complete(5);
+    }
+
+    #[test]
+    fn event_counts_tally_by_kind() {
+        let mut c = EventCounts::default();
+        let now = SimTime::ZERO;
+        let (req, inst) = (RequestId(0), InstanceId(0));
+        c.on_event(&RolloutEvent::Scheduled { req, instance: inst, now });
+        c.on_event(&RolloutEvent::ChunkEnd {
+            req,
+            instance: inst,
+            preempted: true,
+            now,
+        });
+        c.on_event(&RolloutEvent::ChunkEnd {
+            req,
+            instance: inst,
+            preempted: false,
+            now,
+        });
+        c.on_event(&RolloutEvent::Migration { req, to: inst, now });
+        c.on_event(&RolloutEvent::Finished { req, gen_len: 7, now });
+        c.on_event(&RolloutEvent::Step {
+            instance: inst,
+            steps: 3,
+            tokens: 12,
+            now,
+        });
+        assert_eq!(c.scheduled, 1);
+        assert_eq!(c.chunk_ends, 2);
+        assert_eq!(c.preemptions, 1);
+        assert_eq!(c.migrations, 1);
+        assert_eq!(c.finished, 1);
+        assert_eq!(c.steps, 3);
+        assert_eq!(c.tokens, 12);
+        assert_eq!(c.events, 6);
     }
 }

@@ -10,11 +10,11 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::rollout::engine::{
-    RealRollout, RealRolloutConfig, SeqRequest, StopRule,
-};
+use crate::rollout::engine::{RealRolloutConfig, SeqRequest, StopRule};
+use crate::rollout::session::RolloutSession;
 use crate::runtime::ModelRuntime;
 use crate::sim::Rng;
+use crate::workload::GroupId;
 
 use super::grpo_advantages;
 use super::task::CopyTask;
@@ -94,37 +94,40 @@ impl GrpoTrainer {
         for (gi, p) in prompts.iter().enumerate() {
             for _ in 0..self.cfg.group_size {
                 requests.push(SeqRequest {
-                    group: gi,
+                    group: GroupId(gi as u32),
                     prompt: p.clone(),
                     stop: StopRule::MaxTokens(self.cfg.max_gen),
                 });
             }
         }
         let t0 = Instant::now();
-        let mut roller = RealRollout::new(
-            &self.model,
-            RealRolloutConfig {
-                temperature: self.cfg.temperature,
-                use_spec: self.cfg.use_spec,
-                chunk_tokens: self.cfg.chunk_tokens,
-                context_aware: self.cfg.context_aware,
-                seed: self.cfg.seed ^ (iter as u64) << 16,
-                max_gen: self.cfg.max_gen,
-            },
-        );
-        let report = roller.run(requests)?;
+        let report = RolloutSession::builder()
+            .real(
+                &self.model,
+                RealRolloutConfig {
+                    temperature: self.cfg.temperature,
+                    use_spec: self.cfg.use_spec,
+                    chunk_tokens: self.cfg.chunk_tokens,
+                    context_aware: self.cfg.context_aware,
+                    seed: self.cfg.seed ^ (iter as u64) << 16,
+                    max_gen: self.cfg.max_gen,
+                },
+            )
+            .requests(requests)
+            .run()?;
         let rollout_secs = t0.elapsed().as_secs_f64();
 
         // ---- rewards + advantages ------------------------------------
-        let mut rewards = Vec::with_capacity(report.results.len());
-        let mut groups = Vec::with_capacity(report.results.len());
+        let mut rewards = Vec::with_capacity(report.sequences.len());
+        let mut groups = Vec::with_capacity(report.sequences.len());
         let mut acc_sum = 0f32;
-        for r in &report.results {
-            rewards.push(self.task.reward(&patterns[r.group], &r.tokens));
-            acc_sum += self.task.accuracy(&patterns[r.group], &r.tokens);
-            groups.push(r.group);
+        for r in &report.sequences {
+            let gi = r.group.0 as usize;
+            rewards.push(self.task.reward(&patterns[gi], &r.tokens));
+            acc_sum += self.task.accuracy(&patterns[gi], &r.tokens);
+            groups.push(gi);
         }
-        let mean_accuracy = acc_sum / report.results.len().max(1) as f32;
+        let mean_accuracy = acc_sum / report.sequences.len().max(1) as f32;
         let advantages = grpo_advantages(&rewards, &groups);
         let mean_reward =
             rewards.iter().sum::<f32>() / rewards.len().max(1) as f32;
@@ -135,7 +138,7 @@ impl GrpoTrainer {
         let (bsz, tlen) = (d.batch, d.train_len);
         let mut loss_sum = 0f32;
         let mut n_batches = 0usize;
-        let results = &report.results;
+        let results = &report.sequences;
         let idx_chunks: Vec<Vec<usize>> = (0..results.len())
             .collect::<Vec<_>>()
             .chunks(bsz)
@@ -150,14 +153,15 @@ impl GrpoTrainer {
             for (row, &ri) in chunk.iter().enumerate() {
                 let r = &results[ri];
                 let full: Vec<u32> = {
-                    let p = &prompts[r.group];
+                    let p = &prompts[r.group.0 as usize];
                     p.iter().chain(r.tokens.iter()).copied().collect()
                 };
                 for (t, &tok) in full.iter().take(tlen).enumerate() {
                     tokens[row * tlen + t] = tok as i32;
                 }
-                let gen_start = r.prompt_len;
-                let gen_end = (r.prompt_len + r.tokens.len()).min(tlen);
+                let gen_start = r.prompt_len as usize;
+                let gen_end =
+                    (r.prompt_len as usize + r.tokens.len()).min(tlen);
                 for t in gen_start..gen_end {
                     mask[row * tlen + t] = 1;
                 }
@@ -174,7 +178,7 @@ impl GrpoTrainer {
             mean_reward,
             mean_accuracy,
             mean_loss: loss_sum / n_batches.max(1) as f32,
-            tokens: report.tokens_generated,
+            tokens: report.metrics.tokens_generated,
             rollout_secs,
             train_secs,
         };

@@ -15,6 +15,12 @@
 //!   per-group CSTs; verification uses the Pallas verify kernel artifact;
 //!   acceptance is exact sampling (sample from the true distribution,
 //!   accept while it reproduces the draft).
+//!
+//! This is the real substrate behind the unified session API — construct
+//! runs through [`crate::rollout::RolloutSession`] with `.real(..)`. The
+//! engine speaks the same [`RolloutReport`]/[`SeqResult`] language as the
+//! simulator and narrates the same lifecycle events ("instances" here are
+//! batch slots).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -22,9 +28,15 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 use xla::Literal;
 
+use crate::metrics::{Completion, RolloutMetrics};
+use crate::rollout::observer::{ObserverHub, RolloutEvent};
+use crate::rollout::session::{RolloutReport, SeqResult};
 use crate::runtime::ModelRuntime;
+use crate::sim::clock::SimTime;
 use crate::sim::Rng;
 use crate::spec::dgds::{DraftClient, DraftServer, SpeculationArgs};
+use crate::spec::simmodel::SdStrategy;
+use crate::workload::{GroupId, InstanceId, RequestId};
 
 /// Stop rule for a generated sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,21 +50,9 @@ pub enum StopRule {
 /// One input request.
 #[derive(Debug, Clone)]
 pub struct SeqRequest {
-    pub group: usize,
+    pub group: GroupId,
     pub prompt: Vec<u32>,
     pub stop: StopRule,
-}
-
-/// One finished sequence.
-#[derive(Debug, Clone)]
-pub struct SeqResult {
-    pub group: usize,
-    pub prompt_len: usize,
-    pub tokens: Vec<u32>,
-    /// Engine decode/verify forward passes this request was resident for.
-    pub steps_resident: u64,
-    /// Times the request was parked and re-admitted (divided rollout).
-    pub migrations: u32,
 }
 
 /// Rollout configuration.
@@ -71,6 +71,27 @@ pub struct RealRolloutConfig {
     pub max_gen: usize,
 }
 
+impl RealRolloutConfig {
+    /// Name of the fixed scheduling policy this config selects (the slot
+    /// engine's analogue of a registry scheduler name).
+    pub fn scheduler_label(&self) -> &'static str {
+        if self.context_aware {
+            "probe-lfs"
+        } else {
+            "fcfs"
+        }
+    }
+
+    /// Name of the SD strategy this config selects.
+    pub fn sd_label(&self) -> &'static str {
+        if self.use_spec {
+            SdStrategy::GroupedCst.name()
+        } else {
+            SdStrategy::None.name()
+        }
+    }
+}
+
 impl Default for RealRolloutConfig {
     fn default() -> Self {
         RealRolloutConfig {
@@ -84,38 +105,8 @@ impl Default for RealRolloutConfig {
     }
 }
 
-/// Aggregate statistics of one rollout run.
-#[derive(Debug, Clone, Default)]
-pub struct RolloutReport {
-    pub results: Vec<SeqResult>,
-    pub engine_steps: u64,
-    pub verify_steps: u64,
-    pub draft_tokens_proposed: u64,
-    pub draft_tokens_accepted: u64,
-    pub tokens_generated: u64,
-    pub migrations: u64,
-    pub wall_secs: f64,
-}
-
-impl RolloutReport {
-    pub fn throughput(&self) -> f64 {
-        if self.wall_secs == 0.0 {
-            0.0
-        } else {
-            self.tokens_generated as f64 / self.wall_secs
-        }
-    }
-
-    pub fn mean_acceptance_len(&self) -> f64 {
-        if self.verify_steps == 0 {
-            1.0
-        } else {
-            1.0 + self.draft_tokens_accepted as f64 / self.verify_steps as f64
-        }
-    }
-}
-
-enum ReqState {
+/// Where a request's slot lease currently stands.
+enum SlotPhase {
     Waiting,
     /// Parked between chunk leases: KV held host-side.
     Parked {
@@ -131,12 +122,12 @@ enum ReqState {
 
 struct ReqRt {
     spec: SeqRequest,
-    state: ReqState,
+    state: SlotPhase,
     generated: Vec<u32>,
     /// Tokens already pushed to the DGDS.
     dgds_sent: usize,
-    steps_resident: u64,
     migrations: u32,
+    first_admitted: Option<SimTime>,
 }
 
 #[derive(Clone)]
@@ -160,8 +151,21 @@ impl<'m> RealRollout<'m> {
         RealRollout { model, cfg, rng }
     }
 
+    /// Run with no observers attached.
     pub fn run(&mut self, requests: Vec<SeqRequest>) -> Result<RolloutReport> {
+        self.run_observed(requests, &mut ObserverHub::new())
+    }
+
+    /// Run the rollout to completion, streaming lifecycle events into
+    /// `observers` (one "instance" per batch slot).
+    pub fn run_observed(
+        &mut self,
+        requests: Vec<SeqRequest>,
+        observers: &mut ObserverHub,
+    ) -> Result<RolloutReport> {
         let start = Instant::now();
+        let elapsed =
+            |start: &Instant| SimTime::from_secs_f64(start.elapsed().as_secs_f64());
         let d = self.model.manifest.dims;
         let (b, g, p, s, v) =
             (d.batch, d.draft_width, d.prefill_len, d.max_seq, d.vocab);
@@ -170,6 +174,11 @@ impl<'m> RealRollout<'m> {
                 bail!("prompt length {} not in [1, {p}]", r.prompt.len());
             }
             let cap = match r.stop {
+                StopRule::MaxTokens(0) => {
+                    // Admission always samples one token; a zero budget
+                    // would break the Step-token/metrics invariant.
+                    bail!("MaxTokens budget must be at least 1");
+                }
                 StopRule::MaxTokens(n) => n,
                 StopRule::Eos(_) => self.cfg.max_gen,
             };
@@ -185,34 +194,34 @@ impl<'m> RealRollout<'m> {
             .into_iter()
             .map(|spec| ReqRt {
                 spec,
-                state: ReqState::Waiting,
+                state: SlotPhase::Waiting,
                 generated: vec![],
                 dgds_sent: 0,
-                steps_resident: 0,
                 migrations: 0,
+                first_admitted: None,
             })
             .collect();
 
         // Group context: probe = lowest request index per group; estimate
         // = max finished length (None until a sibling finishes).
-        let mut probe_of: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut probe_of: BTreeMap<GroupId, usize> = BTreeMap::new();
         for (i, r) in reqs.iter().enumerate() {
             probe_of.entry(r.spec.group).or_insert(i);
         }
-        let mut estimate: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut estimate: BTreeMap<GroupId, usize> = BTreeMap::new();
 
         // DGDS.
         let server = DraftServer::spawn();
         let mut client = DraftClient::new();
         let group_ids: Vec<String> = {
-            let mut gs: Vec<usize> =
+            let mut gs: Vec<GroupId> =
                 reqs.iter().map(|r| r.spec.group).collect();
             gs.sort();
             gs.dedup();
             for gid in &gs {
-                server.register_group(&format!("g{gid}"), 3600);
+                server.register_group(&format!("g{}", gid.0), 3600);
             }
-            gs.iter().map(|gi| format!("g{gi}")).collect()
+            gs.iter().map(|gi| format!("g{}", gi.0)).collect()
         };
 
         // Batch caches: start zeroed via a dummy whole-batch prefill.
@@ -223,7 +232,10 @@ impl<'m> RealRollout<'m> {
         let mut slots: Vec<Option<SlotState>> = vec![None; b];
         let mut cache_lens = vec![1i32; b];
 
-        let mut report = RolloutReport::default();
+        let mut metrics = RolloutMetrics::new(1);
+        // Slot-occupancy accounting for mean_utilization: Σ over engine
+        // steps of the occupied-slot count (out of `b` per step).
+        let mut occupied_slot_steps: u64 = 0;
         let spec_args = SpeculationArgs {
             max_spec_tokens: g - 1,
             pattern_lookup_max: 24,
@@ -242,11 +254,12 @@ impl<'m> RealRollout<'m> {
                 else {
                     break;
                 };
+                let now = elapsed(&start);
                 let st = match std::mem::replace(
                     &mut reqs[next].state,
-                    ReqState::Active(slot),
+                    SlotPhase::Active(slot),
                 ) {
-                    ReqState::Waiting => {
+                    SlotPhase::Waiting => {
                         // Fresh admission: single-sequence prefill.
                         let prompt = reqs[next].spec.prompt.clone();
                         let mut padded = vec![0i32; p];
@@ -266,7 +279,20 @@ impl<'m> RealRollout<'m> {
                             self.cfg.temperature,
                         ) as u32;
                         reqs[next].generated.push(tok);
-                        report.tokens_generated += 1;
+                        reqs[next].first_admitted = Some(now);
+                        metrics.tokens_generated += 1;
+                        observers.emit(RolloutEvent::Scheduled {
+                            req: RequestId(next as u32),
+                            instance: InstanceId(slot as u32),
+                            now,
+                        });
+                        // The prefill forward pass sampled one token.
+                        observers.emit(RolloutEvent::Step {
+                            instance: InstanceId(slot as u32),
+                            steps: 1,
+                            tokens: 1,
+                            now,
+                        });
                         SlotState {
                             req: next,
                             cache_len: prompt.len() as i32,
@@ -274,7 +300,7 @@ impl<'m> RealRollout<'m> {
                             chunk_left: self.chunk_budget(),
                         }
                     }
-                    ReqState::Parked {
+                    SlotPhase::Parked {
                         kc1,
                         vc1,
                         cache_len,
@@ -287,7 +313,17 @@ impl<'m> RealRollout<'m> {
                         kc = nkc;
                         vc = nvc;
                         reqs[next].migrations += 1;
-                        report.migrations += 1;
+                        metrics.migrations += 1;
+                        observers.emit(RolloutEvent::Scheduled {
+                            req: RequestId(next as u32),
+                            instance: InstanceId(slot as u32),
+                            now,
+                        });
+                        observers.emit(RolloutEvent::Migration {
+                            req: RequestId(next as u32),
+                            to: InstanceId(slot as u32),
+                            now,
+                        });
                         SlotState {
                             req: next,
                             cache_len,
@@ -333,7 +369,7 @@ impl<'m> RealRollout<'m> {
                         .collect();
                     let keep = pattern.len().saturating_sub(32);
                     pattern.drain(..keep);
-                    gids.push(format!("g{}", r.spec.group));
+                    gids.push(format!("g{}", r.spec.group.0));
                     patterns.push(pattern);
                     qslots.push(slot);
                 }
@@ -372,11 +408,11 @@ impl<'m> RealRollout<'m> {
                     self.model.verify(&draft_tokens, &cache_lens, &kc, &vc)?;
                 kc = nkc;
                 vc = nvc;
-                report.verify_steps += 1;
+                metrics.verify_steps += 1;
                 for (slot, st) in slots.iter_mut().enumerate() {
                     let Some(st) = st else { continue };
                     let d = &drafts[slot];
-                    report.draft_tokens_proposed += d.len() as u64;
+                    metrics.spec_draft_tokens += d.len() as u64;
                     let mut accepted = 0usize;
                     let mut toks = vec![];
                     for i in 0..=d.len().min(g - 1) {
@@ -393,7 +429,7 @@ impl<'m> RealRollout<'m> {
                             break;
                         }
                     }
-                    report.draft_tokens_accepted += accepted as u64;
+                    metrics.spec_accepted_tokens += accepted as u64;
                     // Committed KV: cur_token + accepted drafts.
                     st.cache_len += 1 + accepted as i32;
                     st.cur_token = *toks.last().unwrap();
@@ -422,28 +458,56 @@ impl<'m> RealRollout<'m> {
                     new_tokens_per_slot[slot] = vec![t];
                 }
             }
-            report.engine_steps += 1;
+            metrics.engine_steps += 1;
+            occupied_slot_steps +=
+                slots.iter().filter(|s| s.is_some()).count() as u64;
+            let step_now = elapsed(&start);
 
             // ---------------- commit + lifecycle ------------------------
             for slot in 0..b {
                 let Some(st) = slots[slot].clone() else { continue };
-                let toks = std::mem::take(&mut new_tokens_per_slot[slot]);
+                let mut toks =
+                    std::mem::take(&mut new_tokens_per_slot[slot]);
                 if toks.is_empty() {
                     continue;
                 }
                 let req = st.req;
+                // Clamp speculative overshoot past a MaxTokens budget up
+                // front, so every counter (metrics, Step events, DGDS
+                // pushes) sees only tokens the request keeps and
+                // Σ gen_len == tokens_generated holds on this backend
+                // too. (The KV already holds the extra accepted tokens,
+                // but the request completes this commit, freeing the
+                // slot.) An emptied commit must still fall through to the
+                // completion check below — `continue` here would leave a
+                // budget-exhausted request resident forever.
+                if let StopRule::MaxTokens(nmax) = reqs[req].spec.stop {
+                    let room =
+                        nmax.saturating_sub(reqs[req].generated.len());
+                    toks.truncate(room);
+                }
                 let n = toks.len();
-                reqs[req].generated.extend(&toks);
-                reqs[req].steps_resident += 1;
-                report.tokens_generated += n as u64;
-                cache_lens[slot] = st.cache_len;
-                {
-                    let stm = slots[slot].as_mut().unwrap();
-                    stm.chunk_left = stm.chunk_left.saturating_sub(n);
+                if n > 0 {
+                    reqs[req].generated.extend(&toks);
+                    metrics.tokens_generated += n as u64;
+                    // One Step per occupied slot (an "instance" here is
+                    // a batch slot), so per-slot observers attribute the
+                    // batched forward's work correctly.
+                    observers.emit(RolloutEvent::Step {
+                        instance: InstanceId(slot as u32),
+                        steps: 1,
+                        tokens: n as u64,
+                        now: step_now,
+                    });
+                    cache_lens[slot] = st.cache_len;
+                    {
+                        let stm = slots[slot].as_mut().unwrap();
+                        stm.chunk_left = stm.chunk_left.saturating_sub(n);
+                    }
                 }
 
                 // Push new tokens to the DGDS (async append).
-                if self.cfg.use_spec {
+                if n > 0 && self.cfg.use_spec {
                     let r = &mut reqs[req];
                     let full: Vec<u32> = r
                         .spec
@@ -453,7 +517,7 @@ impl<'m> RealRollout<'m> {
                         .copied()
                         .collect();
                     server.update_cst(
-                        &format!("g{}", r.spec.group),
+                        &format!("g{}", r.spec.group.0),
                         req as u64,
                         r.dgds_sent,
                         &full[r.dgds_sent..],
@@ -475,17 +539,30 @@ impl<'m> RealRollout<'m> {
                     }
                 };
                 if done {
-                    // Trim past-stop tokens for MaxTokens semantics.
-                    if let StopRule::MaxTokens(nmax) = reqs[req].spec.stop {
-                        reqs[req].generated.truncate(nmax);
-                    }
+                    // MaxTokens outputs are exact: budgets are >= 1 (so
+                    // the admission token always fits) and commits are
+                    // clamped to the remaining room above.
                     let glen = reqs[req].generated.len();
                     let group = reqs[req].spec.group;
                     let e = estimate.entry(group).or_insert(0);
                     *e = (*e).max(glen);
-                    reqs[req].state = ReqState::Done;
+                    reqs[req].state = SlotPhase::Done;
                     slots[slot] = None;
                     cache_lens[slot] = 1;
+                    let now = elapsed(&start);
+                    metrics.completions.push(Completion {
+                        id: RequestId(req as u32),
+                        finished_at: now,
+                        first_scheduled_at: reqs[req]
+                            .first_admitted
+                            .unwrap_or(now),
+                        gen_len: glen as u32,
+                    });
+                    observers.emit(RolloutEvent::Finished {
+                        req: RequestId(req as u32),
+                        gen_len: glen as u32,
+                        now,
+                    });
                     continue;
                 }
 
@@ -495,34 +572,69 @@ impl<'m> RealRollout<'m> {
                     && slots[slot].as_ref().unwrap().chunk_left == 0;
                 let someone_waiting = reqs
                     .iter()
-                    .any(|r| matches!(r.state, ReqState::Waiting | ReqState::Parked { .. }));
+                    .any(|r| matches!(r.state, SlotPhase::Waiting | SlotPhase::Parked { .. }));
                 if lease_up && someone_waiting {
                     let st = slots[slot].take().unwrap();
                     let (kc1, vc1) =
                         self.model.slot_extract(&kc, &vc, slot as i32)?;
-                    reqs[req].state = ReqState::Parked {
+                    reqs[req].state = SlotPhase::Parked {
                         kc1,
                         vc1,
                         cache_len: st.cache_len,
                         cur_token: st.cur_token,
                     };
                     cache_lens[slot] = 1;
+                    observers.emit(RolloutEvent::ChunkEnd {
+                        req: RequestId(req as u32),
+                        instance: InstanceId(slot as u32),
+                        preempted: false,
+                        now: elapsed(&start),
+                    });
                 }
             }
         }
 
-        report.results = reqs
+        let wall_secs = start.elapsed().as_secs_f64();
+        metrics.makespan = SimTime::from_secs_f64(wall_secs);
+        // Busy time = makespan scaled by mean slot occupancy, so
+        // mean_utilization() measures how full the batch actually ran
+        // rather than a constant 1.0.
+        let slot_steps = metrics.engine_steps * b as u64;
+        metrics.busy_time[0] = if slot_steps == 0 {
+            metrics.makespan
+        } else {
+            SimTime::from_secs_f64(
+                wall_secs * occupied_slot_steps as f64 / slot_steps as f64,
+            )
+        };
+        metrics.tau = if metrics.verify_steps == 0 {
+            1.0
+        } else {
+            1.0 + metrics.spec_accepted_tokens as f64
+                / metrics.verify_steps as f64
+        };
+        let sequences = reqs
             .into_iter()
-            .map(|r| SeqResult {
+            .enumerate()
+            .map(|(i, r)| SeqResult {
+                id: RequestId(i as u32),
                 group: r.spec.group,
-                prompt_len: r.spec.prompt.len(),
+                prompt_len: r.spec.prompt.len() as u32,
+                gen_len: r.generated.len() as u32,
                 tokens: r.generated,
-                steps_resident: r.steps_resident,
+                chunks: r.migrations + 1,
+                preemptions: 0,
                 migrations: r.migrations,
             })
             .collect();
-        report.wall_secs = start.elapsed().as_secs_f64();
-        Ok(report)
+        Ok(RolloutReport {
+            backend: "real",
+            scheduler: self.cfg.scheduler_label(),
+            sd: self.cfg.sd_label(),
+            metrics,
+            sequences,
+            wall_secs,
+        })
     }
 
     fn chunk_budget(&self) -> usize {
@@ -538,13 +650,13 @@ impl<'m> RealRollout<'m> {
     fn pick_next(
         &self,
         reqs: &[ReqRt],
-        probe_of: &BTreeMap<usize, usize>,
-        estimate: &BTreeMap<usize, usize>,
+        probe_of: &BTreeMap<GroupId, usize>,
+        estimate: &BTreeMap<GroupId, usize>,
     ) -> Option<usize> {
         let waiting = |i: &usize| {
             matches!(
                 reqs[*i].state,
-                ReqState::Waiting | ReqState::Parked { .. }
+                SlotPhase::Waiting | SlotPhase::Parked { .. }
             )
         };
         let idxs: Vec<usize> =

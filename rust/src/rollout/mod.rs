@@ -1,8 +1,27 @@
-//! The real-model rollout engine: drives the tiny transformer (AOT HLO
-//! artifacts via [`crate::runtime`]) through the Seer coordinator at
-//! batch-slot granularity — divided rollout as slot leases, probe-first
-//! context scheduling, and grouped speculative decoding through the DGDS.
+//! Rollout: the unified session layer plus the real-model engine.
+//!
+//! * [`session`] — the single front door: [`RolloutSession`] builder over
+//!   the [`RolloutBackend`] trait, implemented by the discrete-event
+//!   cluster simulator and the real-model slot engine, producing one
+//!   unified [`RolloutReport`].
+//! * [`registry`] — name-keyed constructors for schedulers and SD
+//!   strategies ([`PolicyRegistry`]); new policies register in one place.
+//! * [`observer`] — the streaming [`RolloutEvent`] API every backend
+//!   narrates into ([`RolloutObserver`]).
+//! * [`engine`] — the real-model engine itself: the tiny transformer (AOT
+//!   HLO artifacts via [`crate::runtime`]) driven at batch-slot
+//!   granularity with divided rollout, probe-first context scheduling,
+//!   and grouped speculative decoding through the DGDS.
 
 pub mod engine;
+pub mod observer;
+pub mod registry;
+pub mod session;
 
-pub use engine::{RealRollout, RealRolloutConfig, RolloutReport, SeqResult};
+pub use engine::{RealRollout, RealRolloutConfig, SeqRequest, StopRule};
+pub use observer::{ObserverHub, RolloutEvent, RolloutObserver};
+pub use registry::PolicyRegistry;
+pub use session::{
+    RealBackend, RolloutBackend, RolloutReport, RolloutSession,
+    RolloutSessionBuilder, SeqResult, SimBackend,
+};

@@ -1,0 +1,172 @@
+//! Streaming observation of a rollout in progress.
+//!
+//! Both rollout backends (the discrete-event cluster simulator and the
+//! real-model slot engine) narrate request lifecycle transitions as a
+//! stream of [`RolloutEvent`]s. Anything that wants to watch a rollout —
+//! live progress output, metrics cross-checks, future online-serving
+//! hooks — implements [`RolloutObserver`] and attaches itself to a
+//! [`crate::rollout::RolloutSession`] before the run starts. The
+//! [`crate::metrics::EventCounts`] tally is one such observer; it is
+//! given no special treatment by the engines.
+//!
+//! Observers needing to inspect their state after the run should be
+//! attached as `Rc<RefCell<T>>` (a blanket impl forwards events through
+//! the cell), keeping a second handle outside the session:
+//!
+//! ```ignore
+//! let counts = Rc::new(RefCell::new(EventCounts::default()));
+//! let report = RolloutSession::builder()
+//!     .workload(cfg)
+//!     .observer(Box::new(counts.clone()))
+//!     .run()?;
+//! assert_eq!(counts.borrow().finished, report.metrics.completions.len() as u64);
+//! ```
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::sim::clock::SimTime;
+use crate::workload::{InstanceId, RequestId};
+
+/// One request-lifecycle or engine-progress event.
+///
+/// `now` is virtual time on the simulated backend and wall-clock time
+/// since rollout start on the real backend. On the real backend an
+/// "instance" is a batch slot of the single engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolloutEvent {
+    /// A waiting request was granted a chunk lease on an instance.
+    Scheduled {
+        req: RequestId,
+        instance: InstanceId,
+        now: SimTime,
+    },
+    /// A lease ended with the request unfinished: parked voluntarily at
+    /// chunk expiry (`preempted == false`) or evicted under KV pressure
+    /// (`preempted == true`).
+    ChunkEnd {
+        req: RequestId,
+        instance: InstanceId,
+        preempted: bool,
+        now: SimTime,
+    },
+    /// A parked request's KV moved through the global pool back into a
+    /// placement (divided rollout in action). The simulator emits this
+    /// only when the placement differs from the last one (same-instance
+    /// pool refetches are free there); the real backend emits it on
+    /// every re-admission, since parked KV always round-trips through
+    /// host memory.
+    Migration {
+        req: RequestId,
+        to: InstanceId,
+        now: SimTime,
+    },
+    /// A request reached its stop condition.
+    Finished {
+        req: RequestId,
+        gen_len: u32,
+        now: SimTime,
+    },
+    /// An engine committed generation progress. On the simulator, one
+    /// event per committed macro-interval on an instance (`steps` =
+    /// forward passes in the interval). On the real engine, one event
+    /// per occupied batch slot per batched forward — plus one for each
+    /// admission prefill — so summing `steps` yields slot-steps there,
+    /// not engine forwards. Summing `tokens` yields
+    /// `RolloutMetrics::tokens_generated` on both backends.
+    Step {
+        instance: InstanceId,
+        steps: u64,
+        tokens: u64,
+        now: SimTime,
+    },
+}
+
+/// A sink for the rollout event stream.
+pub trait RolloutObserver {
+    fn on_event(&mut self, ev: &RolloutEvent);
+}
+
+/// Forwarding impl so callers can keep a handle to an observer they hand
+/// to a session (see the module docs).
+impl<T: RolloutObserver> RolloutObserver for Rc<RefCell<T>> {
+    fn on_event(&mut self, ev: &RolloutEvent) {
+        self.borrow_mut().on_event(ev);
+    }
+}
+
+/// Fan-out of one event stream to any number of observers, in attachment
+/// order. An empty hub is free: backends emit unconditionally and `emit`
+/// is a no-op loop.
+#[derive(Default)]
+pub struct ObserverHub {
+    observers: Vec<Box<dyn RolloutObserver>>,
+}
+
+impl ObserverHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, observer: Box<dyn RolloutObserver>) {
+        self.observers.push(observer);
+    }
+
+    pub fn len(&self) -> usize {
+        self.observers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observers.is_empty()
+    }
+
+    pub fn emit(&mut self, ev: RolloutEvent) {
+        for o in &mut self.observers {
+            o.on_event(&ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Default)]
+    struct Tally(u64);
+    impl RolloutObserver for Tally {
+        fn on_event(&mut self, _ev: &RolloutEvent) {
+            self.0 += 1;
+        }
+    }
+
+    #[test]
+    fn hub_fans_out_to_all_observers() {
+        let a = Rc::new(RefCell::new(Tally::default()));
+        let b = Rc::new(RefCell::new(Tally::default()));
+        let mut hub = ObserverHub::new();
+        hub.push(Box::new(a.clone()));
+        hub.push(Box::new(b.clone()));
+        assert_eq!(hub.len(), 2);
+        for i in 0..3 {
+            hub.emit(RolloutEvent::Finished {
+                req: RequestId(i),
+                gen_len: 10,
+                now: SimTime::ZERO,
+            });
+        }
+        assert_eq!(a.borrow().0, 3);
+        assert_eq!(b.borrow().0, 3);
+    }
+
+    #[test]
+    fn empty_hub_is_inert() {
+        let mut hub = ObserverHub::new();
+        assert!(hub.is_empty());
+        hub.emit(RolloutEvent::Step {
+            instance: InstanceId(0),
+            steps: 1,
+            tokens: 1,
+            now: SimTime::ZERO,
+        });
+    }
+}

@@ -1,0 +1,146 @@
+//! Name-keyed registry for scheduling policies and SD strategies.
+//!
+//! Every front door — the CLI, the experiment harness, the benches, the
+//! session builder — resolves policy names through one [`PolicyRegistry`]
+//! instead of hand-rolled `match` arms, so a new policy registers in
+//! exactly one place and unknown names fail with the full list of known
+//! ones. [`PolicyRegistry::builtin`] carries everything the CLI
+//! advertises; callers can [`register_scheduler`](PolicyRegistry::register_scheduler)
+//! additional constructors (e.g. experimental policies in a bench) on a
+//! local copy without touching this module.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::scheduler::{
+    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+};
+use crate::spec::simmodel::SdStrategy;
+
+/// Constructor for a boxed scheduling policy.
+pub type SchedulerCtor = fn() -> Box<dyn Scheduler>;
+
+pub struct PolicyRegistry {
+    schedulers: BTreeMap<&'static str, SchedulerCtor>,
+    sds: BTreeMap<&'static str, SdStrategy>,
+}
+
+impl PolicyRegistry {
+    /// A registry with no entries (for tests and fully custom setups).
+    pub fn empty() -> Self {
+        PolicyRegistry {
+            schedulers: BTreeMap::new(),
+            sds: BTreeMap::new(),
+        }
+    }
+
+    /// All in-tree policies, under the names the CLI advertises.
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register_scheduler("seer", || {
+            Box::new(SeerScheduler::new(ContextMode::Learned))
+        });
+        r.register_scheduler("no-context", || {
+            Box::new(SeerScheduler::new(ContextMode::None))
+        });
+        r.register_scheduler("oracle", || {
+            Box::new(SeerScheduler::new(ContextMode::Oracle))
+        });
+        r.register_scheduler("verl", || Box::new(VerlScheduler::new()));
+        r.register_scheduler("streamrl", || Box::new(StreamRlOracle::new()));
+        for sd in [
+            SdStrategy::None,
+            SdStrategy::GroupedCst,
+            SdStrategy::SuffixDecoding,
+            SdStrategy::DraftModel,
+            SdStrategy::Mtp,
+        ] {
+            r.register_sd(sd.name(), sd);
+        }
+        r
+    }
+
+    pub fn register_scheduler(
+        &mut self,
+        name: &'static str,
+        ctor: SchedulerCtor,
+    ) {
+        self.schedulers.insert(name, ctor);
+    }
+
+    pub fn register_sd(&mut self, name: &'static str, sd: SdStrategy) {
+        self.sds.insert(name, sd);
+    }
+
+    /// Construct a fresh (uninitialized) scheduler by name.
+    pub fn scheduler(&self, name: &str) -> Result<Box<dyn Scheduler>> {
+        self.schedulers.get(name).map(|ctor| ctor()).ok_or_else(|| {
+            anyhow!(
+                "unknown scheduler '{name}'; known: {}",
+                self.scheduler_names().join(", ")
+            )
+        })
+    }
+
+    pub fn sd(&self, name: &str) -> Result<SdStrategy> {
+        self.sds.get(name).copied().ok_or_else(|| {
+            anyhow!(
+                "unknown SD strategy '{name}'; known: {}",
+                self.sd_names().join(", ")
+            )
+        })
+    }
+
+    /// Registered scheduler names, sorted.
+    pub fn scheduler_names(&self) -> Vec<&'static str> {
+        self.schedulers.keys().copied().collect()
+    }
+
+    /// Registered SD strategy names, sorted.
+    pub fn sd_names(&self) -> Vec<&'static str> {
+        self.sds.keys().copied().collect()
+    }
+}
+
+impl Default for PolicyRegistry {
+    fn default() -> Self {
+        Self::builtin()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_covers_cli_names() {
+        let r = PolicyRegistry::builtin();
+        assert_eq!(
+            r.scheduler_names(),
+            vec!["no-context", "oracle", "seer", "streamrl", "verl"]
+        );
+        assert_eq!(
+            r.sd_names(),
+            vec!["draft-model", "grouped-cst", "mtp", "none", "suffix-decoding"]
+        );
+    }
+
+    #[test]
+    fn unknown_names_error_with_known_list() {
+        let r = PolicyRegistry::builtin();
+        let e = r.scheduler("nope").unwrap_err().to_string();
+        assert!(e.contains("unknown scheduler 'nope'"), "{e}");
+        assert!(e.contains("seer"), "{e}");
+        let e = r.sd("nope").unwrap_err().to_string();
+        assert!(e.contains("unknown SD strategy 'nope'"), "{e}");
+    }
+
+    #[test]
+    fn custom_registration() {
+        let mut r = PolicyRegistry::empty();
+        r.register_scheduler("mine", || Box::new(VerlScheduler::new()));
+        assert!(r.scheduler("mine").is_ok());
+        assert!(r.scheduler("verl").is_err());
+    }
+}

@@ -1,0 +1,550 @@
+//! The unified rollout session: one front door for both execution
+//! substrates.
+//!
+//! A [`RolloutSession`] couples a [`RolloutBackend`] — the discrete-event
+//! cluster simulator ([`SimBackend`]) or the real-model slot engine
+//! ([`RealBackend`]) — with a set of streaming [`RolloutObserver`]s, and
+//! produces one [`RolloutReport`] whose request results and
+//! [`RolloutMetrics`] mean the same thing on either substrate. Policies
+//! are resolved by name through the [`PolicyRegistry`], so adding a
+//! scheduler or SD strategy never touches a call site.
+//!
+//! ```ignore
+//! use seer::rollout::RolloutSession;
+//!
+//! let report = RolloutSession::builder()
+//!     .workload(TaskPreset::Moonlight.workload_for_test())
+//!     .scheduler("seer")
+//!     .sd("grouped-cst")
+//!     .seed(42)
+//!     .observer(Box::new(progress))   // optional event stream taps
+//!     .run()?;
+//! println!("{} tok/s", report.metrics.throughput());
+//! ```
+//!
+//! The real-model backend takes the same shape: swap `.workload(..)` for
+//! `.real(&model, RealRolloutConfig::default()).requests(reqs)`.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::engine::cluster::ClusterSim;
+use crate::metrics::RolloutMetrics;
+use crate::rollout::engine::{RealRollout, RealRolloutConfig, SeqRequest};
+use crate::rollout::observer::{ObserverHub, RolloutObserver};
+use crate::rollout::registry::PolicyRegistry;
+use crate::runtime::ModelRuntime;
+use crate::scheduler::Scheduler;
+use crate::sim::clock::SimTime;
+use crate::spec::simmodel::SdStrategy;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+use crate::workload::{generate_iteration, GroupId, RequestId};
+
+/// One request's outcome, unified across backends.
+#[derive(Debug, Clone)]
+pub struct SeqResult {
+    pub id: RequestId,
+    pub group: GroupId,
+    pub prompt_len: u32,
+    /// Tokens actually generated (== `tokens.len()` on the real backend).
+    pub gen_len: u32,
+    /// Generated token ids. Real backend only: the fluid simulator tracks
+    /// counts, not contents, so this is empty there.
+    pub tokens: Vec<u32>,
+    /// Chunk leases this request ran as (> 1 means divided rollout split
+    /// it across placements).
+    pub chunks: u32,
+    /// KV-pressure evictions suffered (simulated backend only).
+    pub preemptions: u32,
+    /// Times the request's KV moved through the pool into a placement —
+    /// placement *changes* on the simulator, every host round-trip
+    /// (re-admission) on the real backend. Matches the backend's
+    /// `Migration` events and `RolloutMetrics::migrations`.
+    pub migrations: u32,
+}
+
+/// The unified result of one rollout run.
+///
+/// `metrics.makespan` is virtual time on the simulated backend and equals
+/// `wall_secs` on the real backend, so `metrics.throughput()` is the
+/// backend's native tokens-per-second either way.
+pub struct RolloutReport {
+    /// Which backend produced this report (`"sim"` or `"real"`).
+    pub backend: &'static str,
+    /// Self-reported name of the scheduling policy that ran.
+    pub scheduler: &'static str,
+    /// SD strategy name (`"none"` when speculation was off).
+    pub sd: &'static str,
+    pub metrics: RolloutMetrics,
+    /// Per-request outcomes, in request-id order.
+    pub sequences: Vec<SeqResult>,
+    /// Host wall-clock duration of the run.
+    pub wall_secs: f64,
+}
+
+impl RolloutReport {
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput()
+    }
+
+    pub fn mean_acceptance_len(&self) -> f64 {
+        self.metrics.mean_acceptance_len()
+    }
+
+    /// Serialize the report's summary statistics for bench/trajectory
+    /// tooling (`seer rollout --json`).
+    pub fn to_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut o = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("backend", Json::Str(self.backend.to_string()));
+        put("scheduler", Json::Str(self.scheduler.to_string()));
+        put("sd", Json::Str(self.sd.to_string()));
+        put("reqs", Json::Num(self.sequences.len() as f64));
+        put("completions", Json::Num(m.completions.len() as f64));
+        put("tokens_generated", Json::Num(m.tokens_generated as f64));
+        put("makespan_secs", Json::Num(m.makespan.as_secs_f64()));
+        put("wall_secs", Json::Num(self.wall_secs));
+        put("throughput_tok_s", Json::Num(m.throughput()));
+        put(
+            "tail_secs_last10pct",
+            Json::Num(m.tail_time(0.10).as_secs_f64()),
+        );
+        put("mean_utilization", Json::Num(m.mean_utilization()));
+        put("preemptions", Json::Num(m.preemptions as f64));
+        put("migrations", Json::Num(m.migrations as f64));
+        put("migrated_bytes", Json::Num(m.migrated_bytes as f64));
+        put("re_prefill_tokens", Json::Num(m.re_prefill_tokens as f64));
+        put("engine_steps", Json::Num(m.engine_steps as f64));
+        put("verify_steps", Json::Num(m.verify_steps as f64));
+        put("spec_draft_tokens", Json::Num(m.spec_draft_tokens as f64));
+        put(
+            "spec_accepted_tokens",
+            Json::Num(m.spec_accepted_tokens as f64),
+        );
+        put("tau", Json::Num(m.mean_acceptance_len()));
+        if !m.completions.is_empty() {
+            let mut s = Summary::new();
+            s.extend(m.completions.iter().map(|c| c.gen_len as f64));
+            let mut g = std::collections::BTreeMap::new();
+            g.insert("mean".to_string(), Json::Num(s.mean()));
+            g.insert("p50".to_string(), Json::Num(s.percentile(50.0)));
+            g.insert("p90".to_string(), Json::Num(s.percentile(90.0)));
+            g.insert("p99".to_string(), Json::Num(s.percentile(99.0)));
+            g.insert("max".to_string(), Json::Num(s.max()));
+            o.insert("gen_len".to_string(), Json::Obj(g));
+        }
+        Json::Obj(o)
+    }
+}
+
+/// One rollout execution substrate. Implementations run a configured
+/// iteration to completion exactly once, streaming lifecycle events to
+/// `observers` and returning the unified report.
+pub trait RolloutBackend {
+    fn name(&self) -> &'static str;
+    fn scheduler_name(&self) -> &'static str;
+    fn sd_name(&self) -> &'static str;
+    fn run(&mut self, observers: ObserverHub) -> Result<RolloutReport>;
+}
+
+// ---------------------------------------------------------------------
+// Simulated backend.
+// ---------------------------------------------------------------------
+
+/// The discrete-event cluster simulator behind the backend trait: one
+/// seeded workload iteration through [`ClusterSim`] with the production
+/// coordinator/scheduler/spec code.
+pub struct SimBackend {
+    cfg: WorkloadConfig,
+    sys: SystemConfig,
+    scheduler: Option<Box<dyn Scheduler>>,
+    scheduler_name: &'static str,
+    sd: SdStrategy,
+    seed: u64,
+    stop_after: Option<usize>,
+    sample_interval: Option<SimTime>,
+}
+
+impl RolloutBackend for SimBackend {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn scheduler_name(&self) -> &'static str {
+        self.scheduler_name
+    }
+
+    fn sd_name(&self) -> &'static str {
+        self.sd.name()
+    }
+
+    fn run(&mut self, observers: ObserverHub) -> Result<RolloutReport> {
+        let Some(scheduler) = self.scheduler.take() else {
+            bail!("rollout session already ran");
+        };
+        // The wall clock covers the whole session — workload generation
+        // through result assembly — matching what the pre-session
+        // benches measured around `run_rollout`.
+        let start = Instant::now();
+        let w = generate_iteration(&self.cfg, self.seed);
+        let expected = w.n_requests();
+        let mut sim = ClusterSim::new(
+            self.cfg.clone(),
+            self.sys.clone(),
+            w.groups,
+            scheduler,
+            self.sd,
+        )
+        .with_observers(observers);
+        if let Some(n) = self.stop_after {
+            sim = sim.stop_after(n);
+        }
+        if let Some(t) = self.sample_interval {
+            sim = sim.sample_interval(t);
+        }
+        let out = sim.run();
+        if self.stop_after.is_none() {
+            out.metrics.check_complete(expected);
+        }
+        let sequences: Vec<SeqResult> = out
+            .buffer
+            .all()
+            .iter()
+            .map(|r| SeqResult {
+                id: r.id(),
+                group: r.group(),
+                prompt_len: r.spec.prompt_len,
+                gen_len: r.generated,
+                tokens: vec![],
+                chunks: r.chunks_run,
+                preemptions: r.preemptions,
+                migrations: r.migrations,
+            })
+            .collect();
+        Ok(RolloutReport {
+            backend: self.name(),
+            scheduler: self.scheduler_name,
+            sd: self.sd.name(),
+            metrics: out.metrics,
+            sequences,
+            wall_secs: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Real-model backend.
+// ---------------------------------------------------------------------
+
+/// The real-model slot engine behind the backend trait: token-by-token
+/// generation through the AOT HLO entry points.
+pub struct RealBackend<'m> {
+    model: &'m ModelRuntime,
+    cfg: RealRolloutConfig,
+    requests: Option<Vec<SeqRequest>>,
+}
+
+impl RolloutBackend for RealBackend<'_> {
+    fn name(&self) -> &'static str {
+        "real"
+    }
+
+    fn scheduler_name(&self) -> &'static str {
+        // The slot engine has fixed policies, named for what they do.
+        self.cfg.scheduler_label()
+    }
+
+    fn sd_name(&self) -> &'static str {
+        self.cfg.sd_label()
+    }
+
+    fn run(&mut self, mut observers: ObserverHub) -> Result<RolloutReport> {
+        let Some(requests) = self.requests.take() else {
+            bail!("rollout session already ran");
+        };
+        let mut roller = RealRollout::new(self.model, self.cfg.clone());
+        roller.run_observed(requests, &mut observers)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Session + builder.
+// ---------------------------------------------------------------------
+
+/// A configured, not-yet-run rollout. Obtain via
+/// [`RolloutSession::builder`]; consume with [`RolloutSession::run`].
+pub struct RolloutSession<'m> {
+    backend: Box<dyn RolloutBackend + 'm>,
+    observers: ObserverHub,
+}
+
+impl<'m> RolloutSession<'m> {
+    pub fn builder() -> RolloutSessionBuilder<'m> {
+        RolloutSessionBuilder::new()
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Self-reported name of the resolved scheduling policy.
+    pub fn scheduler_name(&self) -> &'static str {
+        self.backend.scheduler_name()
+    }
+
+    pub fn sd_name(&self) -> &'static str {
+        self.backend.sd_name()
+    }
+
+    /// Run the rollout to completion.
+    pub fn run(mut self) -> Result<RolloutReport> {
+        self.backend.run(self.observers)
+    }
+}
+
+enum SdChoice {
+    Name(String),
+    Strategy(SdStrategy),
+}
+
+/// Builder for [`RolloutSession`]. Simulator defaults mirror the CLI:
+/// `seer` scheduling, `grouped-cst` speculation, seed 42, default
+/// [`SystemConfig`]. Simulator-only knobs on a real-backend session are
+/// an error, not a silent no-op — the real engine is configured entirely
+/// through [`RealRolloutConfig`].
+pub struct RolloutSessionBuilder<'m> {
+    registry: PolicyRegistry,
+    observers: ObserverHub,
+    workload: Option<WorkloadConfig>,
+    system: Option<SystemConfig>,
+    scheduler: Option<String>,
+    sd: Option<SdChoice>,
+    seed: Option<u64>,
+    stop_after: Option<usize>,
+    sample_interval: Option<SimTime>,
+    real: Option<(&'m ModelRuntime, RealRolloutConfig)>,
+    requests: Vec<SeqRequest>,
+}
+
+impl<'m> RolloutSessionBuilder<'m> {
+    fn new() -> Self {
+        RolloutSessionBuilder {
+            registry: PolicyRegistry::builtin(),
+            observers: ObserverHub::new(),
+            workload: None,
+            system: None,
+            scheduler: None,
+            sd: None,
+            seed: None,
+            stop_after: None,
+            sample_interval: None,
+            real: None,
+            requests: Vec::new(),
+        }
+    }
+
+    /// Simulated backend: the workload to generate and run.
+    pub fn workload(mut self, cfg: WorkloadConfig) -> Self {
+        self.workload = Some(cfg);
+        self
+    }
+
+    pub fn system(mut self, sys: SystemConfig) -> Self {
+        self.system = Some(sys);
+        self
+    }
+
+    /// Resolve the scheduling policy by registry name. To run a custom
+    /// policy, register its constructor via
+    /// [`PolicyRegistry::register_scheduler`] and pass the registry with
+    /// [`registry`](Self::registry).
+    pub fn scheduler(mut self, name: &str) -> Self {
+        self.scheduler = Some(name.to_string());
+        self
+    }
+
+    /// Resolve the SD strategy by registry name.
+    pub fn sd(mut self, name: &str) -> Self {
+        self.sd = Some(SdChoice::Name(name.to_string()));
+        self
+    }
+
+    pub fn sd_strategy(mut self, sd: SdStrategy) -> Self {
+        self.sd = Some(SdChoice::Strategy(sd));
+        self
+    }
+
+    /// Simulated backend: the workload-generation seed (default 42). The
+    /// real engine's RNG seed lives in [`RealRolloutConfig::seed`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    /// Partial Rollout: terminate after `n` completions (simulated
+    /// backend only; skips the all-requests-completed check).
+    pub fn stop_after(mut self, n: usize) -> Self {
+        self.stop_after = Some(n);
+        self
+    }
+
+    pub fn sample_interval(mut self, t: SimTime) -> Self {
+        self.sample_interval = Some(t);
+        self
+    }
+
+    /// Attach a streaming observer (may be called repeatedly).
+    pub fn observer(mut self, o: Box<dyn RolloutObserver>) -> Self {
+        self.observers.push(o);
+        self
+    }
+
+    /// Replace the registry names are resolved against.
+    pub fn registry(mut self, r: PolicyRegistry) -> Self {
+        self.registry = r;
+        self
+    }
+
+    /// Real-model backend: drive `model` through the slot engine.
+    pub fn real(mut self, model: &'m ModelRuntime, cfg: RealRolloutConfig) -> Self {
+        self.real = Some((model, cfg));
+        self
+    }
+
+    /// Requests for the real-model backend.
+    pub fn requests(mut self, reqs: Vec<SeqRequest>) -> Self {
+        self.requests = reqs;
+        self
+    }
+
+    pub fn build(self) -> Result<RolloutSession<'m>> {
+        if let Some((model, cfg)) = self.real {
+            if self.workload.is_some() {
+                bail!("choose one backend: .workload(..) or .real(..)");
+            }
+            if self.requests.is_empty() {
+                bail!("real backend needs .requests(..)");
+            }
+            // Reject simulator-only knobs instead of silently dropping
+            // them: the real engine is configured via RealRolloutConfig.
+            if self.scheduler.is_some()
+                || self.sd.is_some()
+                || self.seed.is_some()
+                || self.system.is_some()
+                || self.stop_after.is_some()
+                || self.sample_interval.is_some()
+            {
+                bail!(
+                    "scheduler/sd/seed/system/stop_after/sample_interval \
+                     are simulator-only; configure the real engine via \
+                     RealRolloutConfig"
+                );
+            }
+            return Ok(RolloutSession {
+                backend: Box::new(RealBackend {
+                    model,
+                    cfg,
+                    requests: Some(self.requests),
+                }),
+                observers: self.observers,
+            });
+        }
+        let Some(cfg) = self.workload else {
+            bail!("a session needs .workload(..) or .real(..)");
+        };
+        if !self.requests.is_empty() {
+            bail!(".requests(..) is for the real backend");
+        }
+        let scheduler = self
+            .registry
+            .scheduler(self.scheduler.as_deref().unwrap_or("seer"))?;
+        let scheduler_name = scheduler.name();
+        let sd = match self.sd {
+            Some(SdChoice::Name(n)) => self.registry.sd(&n)?,
+            Some(SdChoice::Strategy(s)) => s,
+            None => SdStrategy::GroupedCst,
+        };
+        Ok(RolloutSession {
+            backend: Box::new(SimBackend {
+                cfg,
+                sys: self.system.unwrap_or_default(),
+                scheduler: Some(scheduler),
+                scheduler_name,
+                sd,
+                seed: self.seed.unwrap_or(42),
+                stop_after: self.stop_after,
+                sample_interval: self.sample_interval,
+            }),
+            observers: self.observers,
+        })
+    }
+
+    /// `build()?.run()` in one call.
+    pub fn run(self) -> Result<RolloutReport> {
+        self.build()?.run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    #[test]
+    fn build_rejects_missing_backend() {
+        let e = RolloutSession::builder().build();
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn build_rejects_unknown_scheduler_name() {
+        let e = RolloutSession::builder()
+            .workload(TaskPreset::Moonlight.workload_for_test())
+            .scheduler("not-a-policy")
+            .build();
+        assert!(e.unwrap_err().to_string().contains("unknown scheduler"));
+    }
+
+    #[test]
+    fn build_rejects_requests_on_sim_backend() {
+        use crate::rollout::engine::StopRule;
+        use crate::workload::GroupId;
+        let e = RolloutSession::builder()
+            .workload(TaskPreset::Moonlight.workload_for_test())
+            .requests(vec![SeqRequest {
+                group: GroupId(0),
+                prompt: vec![1, 2, 3],
+                stop: StopRule::MaxTokens(4),
+            }])
+            .build();
+        assert!(e
+            .unwrap_err()
+            .to_string()
+            .contains(".requests(..) is for the real backend"));
+        // An empty request vec is just the sim default, not an error.
+        let ok = RolloutSession::builder()
+            .workload(TaskPreset::Moonlight.workload_for_test())
+            .requests(vec![])
+            .build();
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn session_reports_resolved_names() {
+        let s = RolloutSession::builder()
+            .workload(TaskPreset::Moonlight.workload_for_test())
+            .scheduler("oracle")
+            .sd("none")
+            .build()
+            .unwrap();
+        assert_eq!(s.backend_name(), "sim");
+        assert_eq!(s.scheduler_name(), "seer-oracle-lfs");
+        assert_eq!(s.sd_name(), "none");
+    }
+}

@@ -48,8 +48,15 @@ pub struct Assignment {
 }
 
 /// A rollout scheduling policy.
+///
+/// Policies are constructed by name through
+/// [`crate::rollout::PolicyRegistry`]; register new implementations
+/// there so every front door (CLI, experiments, benches, sessions)
+/// picks them up.
 pub trait Scheduler {
-    fn name(&self) -> String;
+    /// Stable policy name (constant per instance; no allocation — this
+    /// is queried on the scheduling hot path).
+    fn name(&self) -> &'static str;
 
     /// Called once at iteration start with the full group list. Policies
     /// other than the Oracle variants must not read `gen_len`.
@@ -90,6 +97,11 @@ pub trait Scheduler {
 
 /// Helper shared by policies: pick the instance with the most free KV
 /// that can admit `demand` tokens and has a batch slot.
+///
+/// Tie-breaking is explicit and deterministic: on equal effective free
+/// KV, the lowest-index instance wins (the strict `>` below never
+/// replaces an equal earlier candidate). Cross-backend runs with equal
+/// seeds rely on this for reproducibility — do not weaken it to `>=`.
 pub fn select_instance(
     instances: &[InstanceView],
     reserved: &[u64],
@@ -141,5 +153,23 @@ mod tests {
         let insts = [iv(0, 100, 0)];
         assert_eq!(select_instance(&insts, &[0], 101), None);
         assert_eq!(select_instance(&insts, &[0], 100), Some(0));
+    }
+
+    #[test]
+    fn select_instance_tie_breaks_lowest_index() {
+        // All equal: index 0 must win, deterministically.
+        let insts = [iv(0, 5000, 0), iv(1, 5000, 0), iv(2, 5000, 0)];
+        assert_eq!(select_instance(&insts, &[0, 0, 0], 200), Some(0));
+        // Equal after reservations: the earliest of the tied pair wins.
+        let insts = [iv(0, 4000, 0), iv(1, 6000, 0), iv(2, 5000, 0)];
+        assert_eq!(
+            select_instance(&insts, &[0, 1000, 0], 200),
+            Some(1),
+            "effective-free tie (5000) must go to the lower index"
+        );
+        // Ineligible lower index does not mask the tie-break among the
+        // remaining candidates.
+        let insts = [iv(0, 5000, 8), iv(1, 5000, 0), iv(2, 5000, 0)];
+        assert_eq!(select_instance(&insts, &[0, 0, 0], 200), Some(1));
     }
 }

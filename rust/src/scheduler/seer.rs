@@ -61,11 +61,11 @@ impl SeerScheduler {
 }
 
 impl Scheduler for SeerScheduler {
-    fn name(&self) -> String {
+    fn name(&self) -> &'static str {
         match self.mode {
-            ContextMode::Learned => "seer".into(),
-            ContextMode::Oracle => "seer-oracle-lfs".into(),
-            ContextMode::None => "seer-no-context".into(),
+            ContextMode::Learned => "seer",
+            ContextMode::Oracle => "seer-oracle-lfs",
+            ContextMode::None => "seer-no-context",
         }
     }
 

@@ -50,8 +50,8 @@ impl Default for StreamRlOracle {
 }
 
 impl Scheduler for StreamRlOracle {
-    fn name(&self) -> String {
-        "streamrl-oracle".into()
+    fn name(&self) -> &'static str {
+        "streamrl-oracle"
     }
 
     fn init(

@@ -38,8 +38,8 @@ impl Default for VerlScheduler {
 }
 
 impl Scheduler for VerlScheduler {
-    fn name(&self) -> String {
-        "verl".into()
+    fn name(&self) -> &'static str {
+        "verl"
     }
 
     fn init(

@@ -1,8 +1,12 @@
-//! Minimal JSON parser — enough for the AOT artifact manifest.
+//! Minimal JSON parser and serializer — enough for the AOT artifact
+//! manifest and the `seer rollout --json` report output.
 //!
 //! Supports the full JSON value grammar (objects, arrays, strings with
 //! escapes, numbers, booleans, null). Does not aim for serde performance;
-//! manifests are tens of KB and parsed once at startup.
+//! manifests are tens of KB and parsed once at startup. Serialization
+//! (`Display`) is compact (no whitespace) and round-trips through
+//! [`Json::parse`]; non-finite numbers serialize as `null` since JSON
+//! has no representation for them.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -103,6 +107,62 @@ impl Json {
             _ => None,
         }
     }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_escaped(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_escaped(f, k)?;
+                    write!(f, ":{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\r' => f.write_str("\\r")?,
+            '\t' => f.write_str("\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 struct Parser<'a> {
@@ -370,6 +430,37 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"abc").is_err());
+    }
+
+    #[test]
+    fn display_round_trips() {
+        let cases = [
+            r#"{"a":[1,2.5,-3],"b":"x\"y\n","c":true,"d":null}"#,
+            "[]",
+            "{}",
+            r#"{"nested":{"k":[{"v":1e300}]}}"#,
+        ];
+        for text in cases {
+            let v = Json::parse(text).unwrap();
+            let printed = v.to_string();
+            assert_eq!(Json::parse(&printed).unwrap(), v, "{text}");
+        }
+    }
+
+    #[test]
+    fn display_integers_without_fraction() {
+        assert_eq!(Json::Num(42.0).to_string(), "42");
+        assert_eq!(Json::Num(-1.5).to_string(), "-1.5");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn display_escapes_control_chars() {
+        let v = Json::Str("a\u{1}\t\"\\".into());
+        let printed = v.to_string();
+        assert_eq!(printed, "\"a\\u0001\\t\\\"\\\\\"");
+        assert_eq!(Json::parse(&printed).unwrap(), v);
     }
 
     #[test]

@@ -1,15 +1,12 @@
 //! Cross-module integration tests: full rollouts on each preset under
 //! each headline configuration, checking the paper's qualitative claims
-//! hold at test scale.
+//! hold at test scale. All rollouts go through the unified
+//! `RolloutSession` API with registry policy names.
 
 use seer::config::{SystemConfig, TaskPreset};
-use seer::engine::cluster::{run_rollout, ClusterSim};
 use seer::rl::phases::PhaseModel;
-use seer::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
-};
+use seer::rollout::{RolloutReport, RolloutSession};
 use seer::spec::simmodel::SdStrategy;
-use seer::workload::generate_iteration;
 
 fn sys_for(cfg: &seer::config::WorkloadConfig) -> SystemConfig {
     SystemConfig {
@@ -18,29 +15,28 @@ fn sys_for(cfg: &seer::config::WorkloadConfig) -> SystemConfig {
     }
 }
 
-fn throughput(
-    preset: TaskPreset,
-    sched: Box<dyn Scheduler>,
-    sd: SdStrategy,
-) -> f64 {
+fn rollout(preset: TaskPreset, scheduler: &str, sd: SdStrategy) -> RolloutReport {
     let cfg = preset.workload_for_test();
-    let out = run_rollout(&cfg, &sys_for(&cfg), sched, sd, 42);
-    out.metrics.throughput()
+    let sys = sys_for(&cfg);
+    RolloutSession::builder()
+        .workload(cfg)
+        .system(sys)
+        .scheduler(scheduler)
+        .sd_strategy(sd)
+        .seed(42)
+        .run()
+        .expect("rollout session failed")
+}
+
+fn throughput(preset: TaskPreset, scheduler: &str, sd: SdStrategy) -> f64 {
+    rollout(preset, scheduler, sd).metrics.throughput()
 }
 
 #[test]
 fn seer_full_beats_verl_on_every_task() {
     for preset in seer::config::ALL_PRESETS {
-        let verl = throughput(
-            preset,
-            Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-        );
-        let seer = throughput(
-            preset,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-        );
+        let verl = throughput(preset, "verl", SdStrategy::None);
+        let seer = throughput(preset, "seer", SdStrategy::GroupedCst);
         assert!(
             seer > verl * 1.15,
             "{}: seer {seer:.0} vs verl {verl:.0}",
@@ -52,16 +48,8 @@ fn seer_full_beats_verl_on_every_task() {
 #[test]
 fn grouped_sd_beats_no_sd_on_seer() {
     for preset in seer::config::ALL_PRESETS {
-        let none = throughput(
-            preset,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::None,
-        );
-        let sd = throughput(
-            preset,
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-        );
+        let none = throughput(preset, "seer", SdStrategy::None);
+        let sd = throughput(preset, "seer", SdStrategy::GroupedCst);
         assert!(
             sd > none,
             "{}: sd {sd:.0} vs none {none:.0}",
@@ -73,21 +61,8 @@ fn grouped_sd_beats_no_sd_on_seer() {
 #[test]
 fn seer_cuts_tail_time_on_memory_constrained_tasks() {
     for preset in [TaskPreset::Moonlight, TaskPreset::Qwen2Vl72b] {
-        let cfg = preset.workload_for_test();
-        let verl = run_rollout(
-            &cfg,
-            &sys_for(&cfg),
-            Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-            42,
-        );
-        let seer = run_rollout(
-            &cfg,
-            &sys_for(&cfg),
-            Box::new(SeerScheduler::new(ContextMode::Learned)),
-            SdStrategy::GroupedCst,
-            42,
-        );
+        let verl = rollout(preset, "verl", SdStrategy::None);
+        let seer = rollout(preset, "seer", SdStrategy::GroupedCst);
         let vt = verl.metrics.tail_time(0.10).as_secs_f64();
         let st = seer.metrics.tail_time(0.10).as_secs_f64();
         assert!(
@@ -102,49 +77,17 @@ fn seer_cuts_tail_time_on_memory_constrained_tasks() {
 fn context_sched_close_to_oracle() {
     // Figure 10's headline: learned context reaches >=85% of oracle
     // throughput at test scale (paper: 96%).
-    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
-    let sys = sys_for(&cfg);
-    let learned = run_rollout(
-        &cfg,
-        &sys,
-        Box::new(SeerScheduler::new(ContextMode::Learned)),
-        SdStrategy::None,
-        42,
-    );
-    let oracle = run_rollout(
-        &cfg,
-        &sys,
-        Box::new(SeerScheduler::new(ContextMode::Oracle)),
-        SdStrategy::None,
-        42,
-    );
-    let ratio =
-        learned.metrics.throughput() / oracle.metrics.throughput();
+    let learned = throughput(TaskPreset::Qwen2Vl72b, "seer", SdStrategy::None);
+    let oracle = throughput(TaskPreset::Qwen2Vl72b, "oracle", SdStrategy::None);
+    let ratio = learned / oracle;
     assert!(ratio > 0.85, "learned/oracle = {ratio:.2}");
 }
 
 #[test]
 fn streamrl_oracle_between_verl_and_seer_on_constrained_tasks() {
-    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
-    let sys = sys_for(&cfg);
-    let verl = run_rollout(
-        &cfg,
-        &sys,
-        Box::new(VerlScheduler::new()),
-        SdStrategy::None,
-        42,
-    )
-    .metrics
-    .throughput();
-    let stream = run_rollout(
-        &cfg,
-        &sys,
-        Box::new(StreamRlOracle::new()),
-        SdStrategy::None,
-        42,
-    )
-    .metrics
-    .throughput();
+    let verl = throughput(TaskPreset::Qwen2Vl72b, "verl", SdStrategy::None);
+    let stream =
+        throughput(TaskPreset::Qwen2Vl72b, "streamrl", SdStrategy::None);
     assert!(
         stream > verl * 0.9,
         "streamrl {stream:.0} unexpectedly catastrophic vs verl {verl:.0}"
@@ -156,13 +99,7 @@ fn rollout_dominates_iteration_time() {
     // Table 1's structural claim at test scale.
     for preset in seer::config::ALL_PRESETS {
         let cfg = preset.workload_for_test();
-        let out = run_rollout(
-            &cfg,
-            &sys_for(&cfg),
-            Box::new(VerlScheduler::new()),
-            SdStrategy::None,
-            42,
-        );
+        let out = rollout(preset, "verl", SdStrategy::None);
         let model = PhaseModel::for_workload(&cfg);
         let split = model.split(
             out.metrics.makespan,
@@ -177,16 +114,14 @@ fn rollout_dominates_iteration_time() {
 #[test]
 fn load_samples_cover_run() {
     let cfg = TaskPreset::Moonlight.workload_for_test();
-    let w = generate_iteration(&cfg, 5);
-    let out = ClusterSim::new(
-        cfg,
-        SystemConfig::default(),
-        w.groups,
-        Box::new(SeerScheduler::new(ContextMode::Learned)),
-        SdStrategy::None,
-    )
-    .sample_interval(seer::sim::clock::SimTime::from_millis(500))
-    .run();
+    let out = RolloutSession::builder()
+        .workload(cfg)
+        .scheduler("seer")
+        .sd_strategy(SdStrategy::None)
+        .seed(5)
+        .sample_interval(seer::sim::clock::SimTime::from_millis(500))
+        .run()
+        .expect("rollout session failed");
     assert!(!out.metrics.load_samples.is_empty());
     let t_max = out
         .metrics

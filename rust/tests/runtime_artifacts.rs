@@ -2,11 +2,11 @@
 //! PJRT CPU client and validate end-to-end numerics — the rust side of
 //! the L1/L2/L3 composition chain. Requires `make artifacts`.
 
-use seer::rollout::engine::{
-    RealRollout, RealRolloutConfig, SeqRequest, StopRule,
-};
+use seer::rollout::engine::{RealRolloutConfig, SeqRequest, StopRule};
+use seer::rollout::RolloutSession;
 use seer::runtime::manifest::default_artifact_dir;
 use seer::runtime::ModelRuntime;
+use seer::workload::GroupId;
 
 fn model() -> Option<ModelRuntime> {
     let dir = default_artifact_dir();
@@ -164,37 +164,49 @@ fn real_rollout_with_divided_and_spec() {
     let Some(m) = model() else { return };
     // 2 groups x 3 siblings with chunked slot leases + grouped SD.
     let mut requests = vec![];
-    for group in 0..2 {
-        for r in 0..3 {
+    for group in 0..2u32 {
+        for r in 0..3u32 {
             let prompt: Vec<u32> =
-                (0..10).map(|i| 4 + group as u32 * 3 + (i + r) % 7).collect();
+                (0..10).map(|i| 4 + group * 3 + (i + r) % 7).collect();
             requests.push(SeqRequest {
-                group,
+                group: GroupId(group),
                 prompt,
                 stop: StopRule::MaxTokens(20),
             });
         }
     }
-    let mut roller = RealRollout::new(
-        &m,
-        RealRolloutConfig {
-            use_spec: true,
-            chunk_tokens: 8,
-            context_aware: true,
-            max_gen: 20,
-            seed: 11,
-            ..Default::default()
-        },
-    );
-    let report = roller.run(requests).unwrap();
-    assert_eq!(report.results.len(), 6);
-    for r in &report.results {
+    let report = RolloutSession::builder()
+        .real(
+            &m,
+            RealRolloutConfig {
+                use_spec: true,
+                chunk_tokens: 8,
+                context_aware: true,
+                max_gen: 20,
+                seed: 11,
+                ..Default::default()
+            },
+        )
+        .requests(requests)
+        .run()
+        .unwrap();
+    assert_eq!(report.backend, "real");
+    assert_eq!(report.sequences.len(), 6);
+    for r in &report.sequences {
         assert_eq!(r.tokens.len(), 20);
+        assert_eq!(r.gen_len, 20);
     }
-    assert_eq!(report.tokens_generated, 120);
-    assert!(report.engine_steps > 0);
+    assert_eq!(report.metrics.tokens_generated, 120);
+    assert_eq!(report.metrics.completions.len(), 6);
+    assert!(report.metrics.engine_steps > 0);
     // Divided rollout actually parked/readmitted (6 requests, 4 slots).
-    assert!(report.migrations > 0, "no slot migrations happened");
+    assert!(
+        report.metrics.migrations > 0,
+        "no slot migrations happened"
+    );
+    let seq_migrations: u64 =
+        report.sequences.iter().map(|r| r.migrations as u64).sum();
+    assert_eq!(seq_migrations, report.metrics.migrations);
 }
 
 #[test]
@@ -202,22 +214,26 @@ fn rollout_is_reproducible() {
     let Some(m) = model() else { return };
     let mk = || {
         vec![SeqRequest {
-            group: 0,
+            group: GroupId(0),
             prompt: vec![5, 6, 7, 8],
             stop: StopRule::MaxTokens(12),
         }]
     };
     let run = |seed| {
-        let mut roller = RealRollout::new(
-            &m,
-            RealRolloutConfig {
-                use_spec: false,
-                seed,
-                max_gen: 12,
-                ..Default::default()
-            },
-        );
-        roller.run(mk()).unwrap().results[0].tokens.clone()
+        let report = RolloutSession::builder()
+            .real(
+                &m,
+                RealRolloutConfig {
+                    use_spec: false,
+                    seed,
+                    max_gen: 12,
+                    ..Default::default()
+                },
+            )
+            .requests(mk())
+            .run()
+            .unwrap();
+        report.sequences[0].tokens.clone()
     };
     assert_eq!(run(1), run(1));
     assert_ne!(run(1), run(2));

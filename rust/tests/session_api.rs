@@ -1,0 +1,234 @@
+//! Tests for the unified rollout session layer: registry round-trips,
+//! builder-default equivalence with the direct simulator path, observer
+//! event-stream consistency, and JSON report output.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use seer::config::{SystemConfig, TaskPreset};
+use seer::engine::cluster::ClusterSim;
+use seer::metrics::EventCounts;
+use seer::rollout::{PolicyRegistry, RolloutSession};
+use seer::spec::simmodel::SdStrategy;
+use seer::util::json::Json;
+use seer::workload::generate_iteration;
+
+/// Every scheduler and SD name the CLI USAGE string advertises.
+const CLI_SCHEDULERS: [&str; 5] =
+    ["seer", "verl", "streamrl", "no-context", "oracle"];
+const CLI_SDS: [&str; 5] =
+    ["none", "grouped-cst", "suffix-decoding", "draft-model", "mtp"];
+
+#[test]
+fn registry_round_trips_every_cli_name() {
+    let reg = PolicyRegistry::builtin();
+    for name in CLI_SCHEDULERS {
+        let s = reg
+            .scheduler(name)
+            .unwrap_or_else(|e| panic!("scheduler '{name}': {e:#}"));
+        assert!(!s.name().is_empty());
+        assert!(
+            reg.scheduler_names().contains(&name),
+            "'{name}' not listed by the registry"
+        );
+    }
+    for name in CLI_SDS {
+        let sd = reg
+            .sd(name)
+            .unwrap_or_else(|e| panic!("sd '{name}': {e:#}"));
+        // SD names are their own registry keys.
+        assert_eq!(sd.name(), name);
+        assert!(reg.sd_names().contains(&name));
+    }
+    // And nothing beyond what the CLI advertises.
+    assert_eq!(reg.scheduler_names().len(), CLI_SCHEDULERS.len());
+    assert_eq!(reg.sd_names().len(), CLI_SDS.len());
+}
+
+#[test]
+fn registry_rejects_unknown_names() {
+    let reg = PolicyRegistry::builtin();
+    assert!(reg.scheduler("fifo").is_err());
+    assert!(reg.sd("eagle").is_err());
+    let err = RolloutSession::builder()
+        .workload(TaskPreset::Moonlight.workload_for_test())
+        .sd("eagle")
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown SD strategy 'eagle'"), "{err}");
+}
+
+/// The builder with explicit knobs must reproduce the pre-session
+/// `run_rollout()` path (workload generation + ClusterSim) bit-for-bit.
+#[test]
+fn builder_matches_direct_cluster_sim_bit_for_bit() {
+    let cfg = TaskPreset::Moonlight.workload_for_test();
+    let sys = SystemConfig {
+        chunk_size: 128,
+        ..Default::default()
+    };
+    let seed = 7u64;
+
+    let reg = PolicyRegistry::builtin();
+    let w = generate_iteration(&cfg, seed);
+    let direct = ClusterSim::new(
+        cfg.clone(),
+        sys.clone(),
+        w.groups,
+        reg.scheduler("seer").unwrap(),
+        SdStrategy::GroupedCst,
+    )
+    .run();
+
+    let report = RolloutSession::builder()
+        .workload(cfg)
+        .system(sys)
+        .scheduler("seer")
+        .sd("grouped-cst")
+        .seed(seed)
+        .run()
+        .unwrap();
+
+    assert_eq!(report.backend, "sim");
+    assert_eq!(report.scheduler, "seer");
+    assert_eq!(report.metrics.makespan, direct.metrics.makespan);
+    assert_eq!(
+        report.metrics.tokens_generated,
+        direct.metrics.tokens_generated
+    );
+    assert_eq!(report.metrics.preemptions, direct.metrics.preemptions);
+    assert_eq!(report.metrics.migrations, direct.metrics.migrations);
+    assert_eq!(
+        report.metrics.completions.len(),
+        direct.metrics.completions.len()
+    );
+    assert_eq!(report.sequences.len(), direct.buffer.len());
+}
+
+#[test]
+fn observer_event_stream_is_consistent_with_metrics() {
+    let counts = Rc::new(RefCell::new(EventCounts::default()));
+    let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+    let reqs = cfg.reqs_per_iter;
+    let report = RolloutSession::builder()
+        .workload(cfg)
+        .system(SystemConfig {
+            chunk_size: 128,
+            ..Default::default()
+        })
+        .scheduler("seer")
+        .sd("grouped-cst")
+        .seed(42)
+        .observer(Box::new(counts.clone()))
+        .run()
+        .unwrap();
+    let c = *counts.borrow();
+    assert_eq!(c.finished, reqs as u64, "every request must finish");
+    assert_eq!(c.finished, report.metrics.completions.len() as u64);
+    assert_eq!(c.migrations, report.metrics.migrations);
+    assert_eq!(c.preemptions, report.metrics.preemptions);
+    assert_eq!(
+        c.tokens, report.metrics.tokens_generated,
+        "Step events must account for every generated token"
+    );
+    assert!(c.scheduled >= c.finished, "each finish follows a schedule");
+    // Every chunk end / preemption re-enters the waiting queue before it
+    // can finish (in-flight admission bounces may add extra schedules).
+    assert!(c.scheduled >= c.finished + c.chunk_ends);
+    assert!(c.steps > 0);
+}
+
+#[test]
+fn observers_do_not_perturb_the_run() {
+    let cfg = TaskPreset::Moonlight.workload_for_test();
+    let sys = SystemConfig {
+        chunk_size: 128,
+        ..Default::default()
+    };
+    let observed = RolloutSession::builder()
+        .workload(cfg.clone())
+        .system(sys.clone())
+        .seed(3)
+        .observer(Box::new(Rc::new(RefCell::new(EventCounts::default()))))
+        .run()
+        .unwrap();
+    let bare = RolloutSession::builder()
+        .workload(cfg)
+        .system(sys)
+        .seed(3)
+        .run()
+        .unwrap();
+    assert_eq!(observed.metrics.makespan, bare.metrics.makespan);
+    assert_eq!(
+        observed.metrics.tokens_generated,
+        bare.metrics.tokens_generated
+    );
+}
+
+#[test]
+fn per_request_results_unify_with_metrics() {
+    let report = RolloutSession::builder()
+        .workload(TaskPreset::Qwen2Vl72b.workload_for_test())
+        .system(SystemConfig {
+            chunk_size: 128,
+            ..Default::default()
+        })
+        .scheduler("seer")
+        .sd("grouped-cst")
+        .seed(42)
+        .run()
+        .unwrap();
+    let total_gen: u64 =
+        report.sequences.iter().map(|s| s.gen_len as u64).sum();
+    assert_eq!(total_gen, report.metrics.tokens_generated);
+    let migrations: u64 =
+        report.sequences.iter().map(|s| s.migrations as u64).sum();
+    assert_eq!(migrations, report.metrics.migrations);
+    let preemptions: u64 =
+        report.sequences.iter().map(|s| s.preemptions as u64).sum();
+    assert_eq!(preemptions, report.metrics.preemptions);
+    for s in &report.sequences {
+        assert!(s.chunks >= 1, "every finished request ran at least once");
+        assert!(s.tokens.is_empty(), "fluid backend carries no token ids");
+    }
+}
+
+#[test]
+fn stop_after_skips_completion_check() {
+    let cfg = TaskPreset::Moonlight.workload_for_test();
+    let target = cfg.reqs_per_iter / 2;
+    let report = RolloutSession::builder()
+        .workload(cfg.clone())
+        .scheduler("verl")
+        .sd("none")
+        .seed(3)
+        .stop_after(target)
+        .run()
+        .unwrap();
+    assert!(report.metrics.completions.len() >= target);
+    assert!(report.metrics.completions.len() < cfg.reqs_per_iter);
+}
+
+#[test]
+fn report_serializes_to_parseable_json() {
+    let report = RolloutSession::builder()
+        .workload(TaskPreset::Moonlight.workload_for_test())
+        .system(SystemConfig {
+            chunk_size: 128,
+            ..Default::default()
+        })
+        .seed(42)
+        .run()
+        .unwrap();
+    let text = report.to_json().to_string();
+    let parsed = Json::parse(&text).expect("report JSON must round-trip");
+    assert_eq!(parsed.expect("backend").as_str(), Some("sim"));
+    assert_eq!(parsed.expect("scheduler").as_str(), Some("seer"));
+    assert_eq!(
+        parsed.expect("tokens_generated").as_u64(),
+        Some(report.metrics.tokens_generated)
+    );
+    assert!(parsed.expect("throughput_tok_s").as_f64().unwrap() > 0.0);
+    assert!(parsed.expect("gen_len").get("p90").is_some());
+}
