@@ -1,11 +1,29 @@
 //! Context manager (paper §3.3): learns per-group output-length estimates
 //! online from the speculative probe requests and finished siblings.
 //!
-//! Estimate semantics follow the paper exactly: a group with no finished
-//! request is conservatively assumed to be a potential long-tail case
-//! (estimate = generation-length upper bound); once requests finish, the
-//! estimate is the maximum observed finished length, which converges to
-//! the true group maximum from above-or-below as more siblings finish.
+//! Estimate semantics follow the paper, extended with two sources of
+//! signal beyond it:
+//!
+//! * **Cold start** — a group with no finished request and no history is
+//!   conservatively assumed to be a potential long-tail case
+//!   (estimate = generation-length upper bound).
+//! * **Warm priors** — the cross-iteration
+//!   [`crate::iteration::ContextStore`] can inject last epoch's learned
+//!   estimate via [`ContextManager::with_priors`] /
+//!   [`ContextManager::inject_priors`]; such groups start from the prior
+//!   instead of the upper bound and report [`has_prior`], which lets the
+//!   scheduler skip the probe tax for them.
+//! * **Learned** — once requests finish, the estimate is the maximum
+//!   observed finished length, which converges to the true group maximum
+//!   as more siblings finish.
+//!
+//! In every mode, in-flight progress reported through
+//! [`ContextManager::on_progress`] (a chunk lease ended and the request
+//! migrated back into the queue) raises a learned or prior estimate that
+//! turned out stale: a sibling that already generated `g` tokens proves
+//! the group maximum is at least `g`.
+//!
+//! [`has_prior`]: ContextManager::has_prior
 
 use std::collections::BTreeMap;
 
@@ -13,8 +31,14 @@ use crate::workload::{GroupId, GroupSpec};
 
 #[derive(Debug, Clone, Copy)]
 struct GroupCtx {
-    /// Current length estimate (tokens).
+    /// Current length estimate (tokens), excluding the progress floor.
     estimate: u32,
+    /// Maximum generated-token count observed on an in-flight sibling
+    /// (the chunk-end/migration update path).
+    progress: u32,
+    /// The estimate came from an injected cross-iteration prior and no
+    /// request has finished yet.
+    from_prior: bool,
     /// Finished request count.
     finished: usize,
     /// Total requests in the group.
@@ -23,10 +47,25 @@ struct GroupCtx {
     served_chunks: u64,
 }
 
+impl GroupCtx {
+    fn current_estimate(&self, upper_bound: u32) -> u32 {
+        if self.finished == 0 && !self.from_prior {
+            // Conservative bound: progress is always below it.
+            upper_bound
+        } else {
+            // Learned or prior estimate, floored by observed in-flight
+            // progress (the missed-update fix: a migrated sibling that
+            // generated more than the estimate proves it stale).
+            self.estimate.max(self.progress)
+        }
+    }
+}
+
 /// Online group-length estimator.
 #[derive(Debug, Default)]
 pub struct ContextManager {
     groups: BTreeMap<GroupId, GroupCtx>,
+    priors: BTreeMap<GroupId, u32>,
     upper_bound: u32,
 }
 
@@ -34,17 +73,53 @@ impl ContextManager {
     pub fn new(upper_bound: u32) -> Self {
         ContextManager {
             groups: BTreeMap::new(),
+            priors: BTreeMap::new(),
             upper_bound,
+        }
+    }
+
+    /// Prior-injection constructor: groups named in `priors` start from
+    /// the given estimate (clamped to the upper bound) instead of the
+    /// conservative bound. Priors apply to groups registered by a later
+    /// [`init_groups`](Self::init_groups) call too.
+    pub fn with_priors(
+        upper_bound: u32,
+        priors: impl IntoIterator<Item = (GroupId, u32)>,
+    ) -> Self {
+        let mut cm = Self::new(upper_bound);
+        cm.inject_priors(priors);
+        cm
+    }
+
+    /// Inject cross-iteration priors, updating already-registered groups
+    /// that have no online signal yet. Called by the scheduler's
+    /// warm-start path; safe in either order relative to `init_groups`.
+    pub fn inject_priors(
+        &mut self,
+        priors: impl IntoIterator<Item = (GroupId, u32)>,
+    ) {
+        for (g, est) in priors {
+            let est = est.min(self.upper_bound).max(1);
+            self.priors.insert(g, est);
+            if let Some(ctx) = self.groups.get_mut(&g) {
+                if ctx.finished == 0 {
+                    ctx.estimate = est;
+                    ctx.from_prior = true;
+                }
+            }
         }
     }
 
     pub fn init_groups(&mut self, groups: &[GroupSpec]) {
         self.groups.clear();
         for g in groups {
+            let prior = self.priors.get(&g.id).copied();
             self.groups.insert(
                 g.id,
                 GroupCtx {
-                    estimate: self.upper_bound,
+                    estimate: prior.unwrap_or(self.upper_bound),
+                    progress: 0,
+                    from_prior: prior.is_some(),
                     finished: 0,
                     size: g.requests.len(),
                     served_chunks: 0,
@@ -61,8 +136,9 @@ impl ContextManager {
             .get_mut(&group)
             .expect("finished request from unknown group");
         if g.finished == 0 {
-            // First completion replaces the conservative upper bound.
+            // First completion replaces the conservative bound or prior.
             g.estimate = len;
+            g.from_prior = false;
         } else {
             g.estimate = g.estimate.max(len);
         }
@@ -70,18 +146,47 @@ impl ContextManager {
         debug_assert!(g.finished <= g.size);
     }
 
+    /// A chunk lease ended with the request unfinished at `generated`
+    /// tokens (it migrates back into the waiting queue). Records the
+    /// in-flight progress so stale learned/prior estimates can't demote
+    /// a demonstrably long group in the LFS order.
+    pub fn on_progress(&mut self, group: GroupId, generated: u32) {
+        if let Some(g) = self.groups.get_mut(&group) {
+            g.progress = g.progress.max(generated);
+        }
+    }
+
     /// Current length estimate for LFS ordering.
     pub fn estimate(&self, group: GroupId) -> u32 {
         self.groups
             .get(&group)
-            .map(|g| g.estimate)
-            .unwrap_or(self.upper_bound)
+            .map(|g| g.current_estimate(self.upper_bound))
+            .unwrap_or_else(|| {
+                self.priors
+                    .get(&group)
+                    .copied()
+                    .unwrap_or(self.upper_bound)
+            })
     }
 
     /// True once at least one sibling finished (the estimate is "learned"
-    /// rather than the conservative bound).
+    /// rather than the conservative bound or an injected prior).
     pub fn has_signal(&self, group: GroupId) -> bool {
         self.groups.map_or_false(group, |g| g.finished > 0)
+    }
+
+    /// True while the group's estimate comes from an injected
+    /// cross-iteration prior (no online completion yet).
+    pub fn has_prior(&self, group: GroupId) -> bool {
+        self.groups.map_or_false(group, |g| g.from_prior)
+    }
+
+    /// True when the scheduler has *any* length context for the group —
+    /// online signal or a warm prior. Probe requests only need the
+    /// high-priority path while this is false.
+    pub fn has_context(&self, group: GroupId) -> bool {
+        self.groups
+            .map_or_false(group, |g| g.finished > 0 || g.from_prior)
     }
 
     pub fn finished_count(&self, group: GroupId) -> usize {
@@ -149,6 +254,7 @@ mod tests {
         cm.init_groups(&[group(0, &[100, 200])]);
         assert_eq!(cm.estimate(GroupId(0)), 65536);
         assert!(!cm.has_signal(GroupId(0)));
+        assert!(!cm.has_context(GroupId(0)));
     }
 
     #[test]
@@ -182,5 +288,74 @@ mod tests {
     fn unknown_group_falls_back_to_bound() {
         let cm = ContextManager::new(4242);
         assert_eq!(cm.estimate(GroupId(9)), 4242);
+    }
+
+    #[test]
+    fn priors_replace_bound_until_first_finish() {
+        let mut cm = ContextManager::with_priors(65536, [(GroupId(0), 500)]);
+        cm.init_groups(&[group(0, &[100, 200]), group(1, &[100, 200])]);
+        assert_eq!(cm.estimate(GroupId(0)), 500);
+        assert!(cm.has_prior(GroupId(0)));
+        assert!(cm.has_context(GroupId(0)));
+        assert!(!cm.has_signal(GroupId(0)));
+        // Un-prior'd sibling group keeps the conservative bound.
+        assert_eq!(cm.estimate(GroupId(1)), 65536);
+        // First real finish replaces the prior with online signal.
+        cm.on_finished(GroupId(0), 123);
+        assert_eq!(cm.estimate(GroupId(0)), 123);
+        assert!(!cm.has_prior(GroupId(0)));
+        assert!(cm.has_signal(GroupId(0)));
+    }
+
+    #[test]
+    fn inject_after_init_updates_unfinished_groups_only() {
+        let mut cm = ContextManager::new(65536);
+        cm.init_groups(&[group(0, &[100]), group(1, &[100])]);
+        cm.on_finished(GroupId(1), 77);
+        cm.inject_priors([(GroupId(0), 900), (GroupId(1), 900)]);
+        assert_eq!(cm.estimate(GroupId(0)), 900);
+        // Online signal wins over a late prior.
+        assert_eq!(cm.estimate(GroupId(1)), 77);
+    }
+
+    #[test]
+    fn priors_clamp_to_upper_bound() {
+        let mut cm = ContextManager::with_priors(1000, [(GroupId(0), 9999)]);
+        cm.init_groups(&[group(0, &[1])]);
+        assert_eq!(cm.estimate(GroupId(0)), 1000);
+    }
+
+    /// Regression (cross-iteration PR): a probe that migrates and
+    /// re-enters the queue used to leave no trace in the context manager.
+    /// If a short sibling then finished first, the group estimate
+    /// collapsed to the short length even though the migrated probe had
+    /// *already generated more* — demoting a demonstrably long group in
+    /// the LFS order. The `on_progress` path keeps the estimate at the
+    /// observed in-flight maximum.
+    #[test]
+    fn migrated_probe_progress_floors_stale_estimates() {
+        let mut cm = ContextManager::new(65536);
+        cm.init_groups(&[group(0, &[600, 100])]);
+        // Probe runs a 500-token chunk, lease ends, request migrates.
+        cm.on_progress(GroupId(0), 500);
+        // No finish yet: still the conservative bound.
+        assert_eq!(cm.estimate(GroupId(0)), 65536);
+        // The short sibling finishes first.
+        cm.on_finished(GroupId(0), 100);
+        // Stale pre-fix behaviour was estimate == 100.
+        assert_eq!(cm.estimate(GroupId(0)), 500);
+        // And a finish above the progress floor still raises it.
+        cm.on_finished(GroupId(0), 620);
+        assert_eq!(cm.estimate(GroupId(0)), 620);
+    }
+
+    #[test]
+    fn progress_floors_stale_priors_too() {
+        let mut cm = ContextManager::with_priors(65536, [(GroupId(0), 200)]);
+        cm.init_groups(&[group(0, &[600, 100])]);
+        assert_eq!(cm.estimate(GroupId(0)), 200);
+        // The probe outran the historical prior before migrating.
+        cm.on_progress(GroupId(0), 450);
+        assert_eq!(cm.estimate(GroupId(0)), 450);
     }
 }

@@ -50,6 +50,12 @@ pub struct RolloutOutcome {
 struct GroupProgress {
     finished: usize,
     running: usize,
+    /// Reference streams the group CST holds from *previous* iterations
+    /// (cross-iteration warm start), already discounted by the store.
+    warm_refs: usize,
+    /// The group entered this rollout with a warm length prior (mirrors
+    /// the scheduler's `has_context` while nothing has finished yet).
+    warm_ctx: bool,
 }
 
 pub struct ClusterSim {
@@ -132,6 +138,37 @@ impl ClusterSim {
     /// Attach the streaming observers events are narrated into.
     pub fn with_observers(mut self, observers: ObserverHub) -> Self {
         self.observers = observers;
+        self
+    }
+
+    /// Inject cross-iteration warm-start context: the scheduler receives
+    /// the length priors (via [`Scheduler::warm_start`]) and the SD model
+    /// starts each group with its historical reference-stream count
+    /// instead of zero. A no-op with empty priors.
+    pub fn with_warm_context(
+        mut self,
+        priors: &crate::iteration::ContextPriors,
+    ) -> Self {
+        let consumed = self.scheduler.warm_start(priors);
+        // Warm reference streams model CST *contents*, which exist
+        // independent of the scheduling policy — they apply even when a
+        // history-free policy discards the length priors.
+        for (g, refs) in &priors.warm_refs {
+            if let Some(gp) = self.group_progress.get_mut(g) {
+                gp.warm_refs = *refs;
+            }
+        }
+        // Probe SD *priority*, by contrast, mirrors the scheduler's
+        // probe-skip decision: it only changes when the policy actually
+        // consumed the priors, so history-free policies schedule and
+        // prioritize identically warm or cold.
+        if consumed {
+            for (g, _) in &priors.estimates {
+                if let Some(gp) = self.group_progress.get_mut(g) {
+                    gp.warm_ctx = true;
+                }
+            }
+        }
         self
     }
 
@@ -277,9 +314,13 @@ impl ClusterSim {
             let r = self.buffer.get(*id);
             let gp = self.group_progress.get(&r.group()).copied().unwrap_or_default();
             // References the group CST holds: finished siblings plus
-            // concurrently-running ones (their prefixes are aggregated).
-            let refs = gp.finished + gp.running.saturating_sub(1);
-            let hp = r.is_probe && gp.finished == 0;
+            // concurrently-running ones (their prefixes are aggregated),
+            // plus discounted streams surviving from previous iterations.
+            let refs = gp.finished + gp.running.saturating_sub(1) + gp.warm_refs;
+            // Probes only get the high-priority SD budget while the
+            // group is truly context-less — the same condition the
+            // scheduler's probe-skip uses (finish signal or warm prior).
+            let hp = r.is_probe && gp.finished == 0 && !gp.warm_ctx;
             if hp {
                 high += 1;
             }
@@ -488,6 +529,12 @@ impl ClusterSim {
         {
             gp.running = gp.running.saturating_sub(1);
         }
+        // Both re-queue paths — voluntary chunk-end parking AND
+        // preemption — report the request's in-flight progress to the
+        // policy, so a migrated long request can't be demoted below its
+        // demonstrated length by a stale estimate.
+        let r = self.buffer.get(id).clone();
+        self.scheduler.on_chunk_end(&r);
         self.observers.emit(RolloutEvent::ChunkEnd {
             req: id,
             instance: InstanceId(idx as u32),
@@ -554,9 +601,8 @@ impl ClusterSim {
         for id in chunk_ended {
             let r = self.buffer.get(id);
             debug_assert!(!r.is_finished());
+            // `evict` notifies the scheduler's on_chunk_end hook.
             self.evict(idx, id, now, false);
-            let r = self.buffer.get(id).clone();
-            self.scheduler.on_chunk_end(&r);
             self.schedule_dirty = true;
         }
     }

@@ -1,7 +1,9 @@
 //! The experiment harness: one module per table/figure of the paper's
-//! evaluation section (DESIGN.md §5 maps each to its modules). Every
-//! experiment prints the same rows/series the paper reports and returns
-//! machine-readable results for the smoke tests.
+//! evaluation section (the README's reproduction table maps each id to
+//! its artifact), plus extensions beyond the paper (`multi_iter`: the
+//! cross-iteration context store). Every experiment prints the same
+//! rows/series the paper reports and returns machine-readable results
+//! for the smoke tests.
 
 pub mod common;
 pub mod fig10_context;
@@ -13,6 +15,7 @@ pub mod fig4_correlation;
 pub mod fig7_throughput;
 pub mod fig8_tail;
 pub mod fig9_seer_util;
+pub mod multi_iter;
 pub mod table1_phases;
 pub mod table2_acceptance;
 pub mod table3_config;
@@ -38,6 +41,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "fig10" => fig10_context::run(&scale),
         "fig11" => fig11_sd::run(&scale),
         "fig12" => fig12_partial::run(&scale),
+        "multi-iter" => multi_iter::run(&scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n================ {id} ================");
@@ -51,7 +55,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 13] = [
+pub const ALL_IDS: [&str; 14] = [
     "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
-    "fig9", "table4", "fig10", "fig11", "fig12",
+    "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter",
 ];

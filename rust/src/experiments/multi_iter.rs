@@ -1,0 +1,89 @@
+//! Multi-iteration training with the cross-iteration context store:
+//! iteration-1 vs iteration-N long-tail latency, warm vs cold.
+//!
+//! Not a figure from the paper — this measures the subsystem the paper's
+//! within-iteration machinery makes possible across iterations (cf.
+//! RhymeRL, arXiv:2508.18588): persisting the learned group-length
+//! context and grouped-SD reference statistics between GRPO epochs. Two
+//! drivers run the same drifting epoch sequence from the same seed; the
+//! *cold* one rebuilds all context every epoch (today's default in
+//! synchronous RL systems), the *warm* one consumes the store from
+//! iteration 2 on. The warm driver's p99 finish time and tail time drop
+//! below both its own iteration 1 and the cold baseline's matching
+//! iterations.
+
+use anyhow::Result;
+
+use crate::config::TaskPreset;
+use crate::iteration::{IterationSummary, TrainingConfig, TrainingDriver};
+use crate::util::table::Table;
+
+use super::common::Scale;
+
+/// Paired per-iteration measurements (same seed, same epochs).
+pub struct MultiIterResult {
+    pub cold: Vec<IterationSummary>,
+    pub warm: Vec<IterationSummary>,
+}
+
+impl MultiIterResult {
+    /// Warm-over-cold p99 speedup for iteration `i`.
+    pub fn p99_speedup(&self, i: usize) -> f64 {
+        self.cold[i].p99_finish_secs / self.warm[i].p99_finish_secs.max(1e-9)
+    }
+}
+
+pub fn measure(scale: &Scale) -> Result<MultiIterResult> {
+    let iters = scale.iters.max(3);
+    let cfg = |warm: bool| TrainingConfig {
+        system: scale.sys(&scale.workload(TaskPreset::Moonlight)),
+        iters,
+        seed: scale.seed,
+        warm_start: warm,
+        ..TrainingConfig::new(scale.workload(TaskPreset::Moonlight))
+    };
+    let cold = TrainingDriver::new(cfg(false)).run()?;
+    let warm = TrainingDriver::new(cfg(true)).run()?;
+    Ok(MultiIterResult { cold, warm })
+}
+
+pub fn run(scale: &Scale) -> Result<()> {
+    let r = measure(scale)?;
+    println!(
+        "Cross-iteration context store: {} GRPO iterations, same seed/epochs",
+        r.cold.len()
+    );
+    let mut t = Table::new(
+        "multi-iter: warm vs cold long-tail latency",
+        &[
+            "iter",
+            "cold p99 (s)",
+            "warm p99 (s)",
+            "cold tail (s)",
+            "warm tail (s)",
+            "cold makespan",
+            "warm makespan",
+            "p99 speedup",
+        ],
+    );
+    for i in 0..r.cold.len() {
+        let (c, w) = (&r.cold[i], &r.warm[i]);
+        t.row(&[
+            format!("{}", i + 1),
+            format!("{:.1}", c.p99_finish_secs),
+            format!("{:.1}", w.p99_finish_secs),
+            format!("{:.1}", c.tail_secs),
+            format!("{:.1}", w.tail_secs),
+            format!("{:.1}", c.makespan_secs),
+            format!("{:.1}", w.makespan_secs),
+            format!("{:.2}x", r.p99_speedup(i)),
+        ]);
+    }
+    t.print();
+    println!(
+        "(iteration 1 is cold in both runs — the store has nothing to \
+         offer yet; from iteration 2 the warm run consumes last epoch's \
+         learned context)"
+    );
+    Ok(())
+}

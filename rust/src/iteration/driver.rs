@@ -1,0 +1,290 @@
+//! The multi-iteration training driver.
+//!
+//! [`TrainingDriver`] turns the single-shot rollout simulator into a
+//! multi-epoch synchronous-RL system: each iteration re-samples the same
+//! prompt set with configurable length drift
+//! ([`crate::workload::generate_epoch`]), runs it through one
+//! [`crate::rollout::RolloutSession`], folds the finished lengths back
+//! into the [`ContextStore`], and — when warm starting is enabled —
+//! seeds the next iteration's context manager and grouped-SD state from
+//! the store. Training and weight-update phase times come from the
+//! calibrated [`crate::rl::PhaseModel`], so each
+//! [`IterationSummary`] reports the full iteration wall, not just the
+//! rollout.
+//!
+//! Everything is deterministic in the config: two drivers with the same
+//! [`TrainingConfig`] produce bit-identical summaries.
+
+use anyhow::Result;
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::rl::PhaseModel;
+use crate::rollout::session::RolloutReport;
+use crate::rollout::RolloutSession;
+use crate::workload::generate_epoch;
+
+use super::store::{ContextStore, ContextStoreConfig};
+
+/// Configuration of one multi-iteration training run.
+#[derive(Debug, Clone)]
+pub struct TrainingConfig {
+    pub workload: WorkloadConfig,
+    pub system: SystemConfig,
+    /// Registry name of the scheduling policy (e.g. `"seer"`).
+    pub scheduler: String,
+    /// Registry name of the SD strategy (e.g. `"grouped-cst"`).
+    pub sd: String,
+    /// GRPO iterations (epochs) to run.
+    pub iters: usize,
+    pub seed: u64,
+    /// Per-epoch length drift (log-normal sigma); 0 = identical epochs.
+    pub drift: f64,
+    /// Consume the context store's priors from iteration 2 on. The store
+    /// *learns* either way; cold runs just never read it back.
+    pub warm_start: bool,
+    pub store: ContextStoreConfig,
+}
+
+impl TrainingConfig {
+    pub fn new(workload: WorkloadConfig) -> Self {
+        TrainingConfig {
+            workload,
+            system: SystemConfig::default(),
+            scheduler: "seer".to_string(),
+            sd: "grouped-cst".to_string(),
+            iters: 3,
+            seed: 42,
+            drift: 0.05,
+            warm_start: true,
+            store: ContextStoreConfig::default(),
+        }
+    }
+}
+
+/// Per-iteration metrics of one training run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationSummary {
+    pub iter: usize,
+    /// Whether this iteration consumed warm priors from the store.
+    pub warm: bool,
+    pub makespan_secs: f64,
+    /// p99 request finish time within the iteration — the long-tail
+    /// latency metric the cross-iteration store targets.
+    pub p99_finish_secs: f64,
+    /// Time spent solely on the last 10% of requests (paper §4.2.2).
+    pub tail_secs: f64,
+    pub throughput_tok_s: f64,
+    pub tokens: u64,
+    pub preemptions: u64,
+    pub migrations: u64,
+    /// Modeled training / weight-update phase times (Table 1 model).
+    pub train_secs: f64,
+    pub weight_update_secs: f64,
+    /// Full iteration wall: rollout + training + weight update.
+    pub iter_total_secs: f64,
+}
+
+/// Drives N GRPO iterations through the session layer, threading the
+/// cross-iteration [`ContextStore`] between them.
+pub struct TrainingDriver {
+    cfg: TrainingConfig,
+    store: ContextStore,
+    history: Vec<IterationSummary>,
+    /// Epoch index the next [`run_iteration`](Self::run_iteration) via
+    /// [`run`](Self::run) will use. Starts at `store.iterations()` so a
+    /// resumed driver *continues* the drift sequence instead of
+    /// replaying already-observed epochs into the decayed statistics.
+    next_epoch: usize,
+}
+
+impl TrainingDriver {
+    pub fn new(cfg: TrainingConfig) -> Self {
+        let store = ContextStore::with_config(cfg.store);
+        Self::build(cfg, store)
+    }
+
+    /// Resume from a previously saved store (`seer train --load-ctx`):
+    /// the first iteration already runs warm, and epoch numbering
+    /// continues from where the saved run stopped. Errors when the
+    /// store's fingerprint (task, seed, group count) does not match the
+    /// config — group ids only name the same prompt for the same
+    /// workload, so mismatched priors would be silently wrong.
+    pub fn with_store(cfg: TrainingConfig, store: ContextStore) -> Result<Self> {
+        if !store.task().is_empty() {
+            if store.task() != cfg.workload.name || store.seed() != cfg.seed {
+                anyhow::bail!(
+                    "context store fingerprint (task '{}', seed {}) does \
+                     not match the training config (task '{}', seed {})",
+                    store.task(),
+                    store.seed(),
+                    cfg.workload.name,
+                    cfg.seed
+                );
+            }
+            if store.len() != cfg.workload.n_groups() {
+                anyhow::bail!(
+                    "context store has {} groups but the workload has {} \
+                     (different scale?)",
+                    store.len(),
+                    cfg.workload.n_groups()
+                );
+            }
+        }
+        Ok(Self::build(cfg, store))
+    }
+
+    fn build(cfg: TrainingConfig, store: ContextStore) -> Self {
+        TrainingDriver {
+            cfg,
+            next_epoch: store.iterations() as usize,
+            store,
+            history: Vec::new(),
+        }
+    }
+
+    /// Epoch index the next driven iteration will run.
+    pub fn next_epoch(&self) -> usize {
+        self.next_epoch
+    }
+
+    pub fn store(&self) -> &ContextStore {
+        &self.store
+    }
+
+    /// Consume the driver, handing back the store (for `--save-ctx`).
+    pub fn into_store(self) -> ContextStore {
+        self.store
+    }
+
+    pub fn history(&self) -> &[IterationSummary] {
+        &self.history
+    }
+
+    /// Run one iteration (epoch `iter`), returning its summary.
+    pub fn run_iteration(&mut self, iter: usize) -> Result<IterationSummary> {
+        let cfg = &self.cfg;
+        let w = generate_epoch(&cfg.workload, cfg.seed, iter as u64, cfg.drift);
+        let mut builder = RolloutSession::builder()
+            .workload(cfg.workload.clone())
+            .system(cfg.system.clone())
+            .scheduler(&cfg.scheduler)
+            .sd(&cfg.sd)
+            .seed(cfg.seed)
+            .groups(w.groups);
+        let warm = cfg.warm_start && !self.store.is_empty();
+        if warm {
+            builder = builder.context_store(&self.store);
+        }
+        let report = builder.run()?;
+        let summary = self.summarize(iter, warm, &report);
+        self.store
+            .set_fingerprint(self.cfg.workload.name, self.cfg.seed);
+        self.store.observe_report(&report);
+        self.history.push(summary);
+        self.next_epoch = iter + 1;
+        Ok(summary)
+    }
+
+    /// Run all configured iterations, continuing the epoch sequence.
+    pub fn run(&mut self) -> Result<Vec<IterationSummary>> {
+        let start = self.history.len();
+        for _ in 0..self.cfg.iters {
+            self.run_iteration(self.next_epoch)?;
+        }
+        Ok(self.history[start..].to_vec())
+    }
+
+    fn summarize(
+        &self,
+        iter: usize,
+        warm: bool,
+        report: &RolloutReport,
+    ) -> IterationSummary {
+        let m = &report.metrics;
+        let phases = PhaseModel::for_workload(&self.cfg.workload)
+            .split(m.makespan, m.tokens_generated);
+        IterationSummary {
+            iter,
+            warm,
+            makespan_secs: m.makespan.as_secs_f64(),
+            p99_finish_secs: m.completion_summary().percentile(99.0),
+            tail_secs: m.tail_time(0.10).as_secs_f64(),
+            throughput_tok_s: m.throughput(),
+            tokens: m.tokens_generated,
+            preemptions: m.preemptions,
+            migrations: m.migrations,
+            train_secs: phases.training.as_secs_f64(),
+            weight_update_secs: phases.weight_update.as_secs_f64(),
+            iter_total_secs: phases.total().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+
+    fn quick_cfg(warm: bool, iters: usize) -> TrainingConfig {
+        TrainingConfig {
+            iters,
+            warm_start: warm,
+            ..TrainingConfig::new(TaskPreset::Moonlight.workload_for_test())
+        }
+    }
+
+    #[test]
+    fn runs_iterations_and_learns() {
+        let mut d = TrainingDriver::new(quick_cfg(true, 2));
+        let sums = d.run().unwrap();
+        assert_eq!(sums.len(), 2);
+        // Iteration 0 is necessarily cold; iteration 1 consumes priors.
+        assert!(!sums[0].warm);
+        assert!(sums[1].warm);
+        assert!(d.store().iterations() >= 2);
+        assert_eq!(d.store().len(), d.cfg.workload.n_groups());
+        assert_eq!(d.store().task(), d.cfg.workload.name);
+        assert!(sums.iter().all(|s| s.tokens > 0));
+        // The phase model adds training/update time on top of rollout.
+        assert!(sums[0].iter_total_secs > sums[0].makespan_secs);
+    }
+
+    #[test]
+    fn cold_runs_never_consume_the_store() {
+        let mut d = TrainingDriver::new(quick_cfg(false, 2));
+        let sums = d.run().unwrap();
+        assert!(sums.iter().all(|s| !s.warm));
+        // ...but the store still learned (for --save-ctx).
+        assert!(!d.store().is_empty());
+    }
+
+    #[test]
+    fn preloaded_store_warms_iteration_one_and_continues_epochs() {
+        let mut cold = TrainingDriver::new(quick_cfg(true, 1));
+        cold.run().unwrap();
+        let store = cold.into_store();
+        let mut d =
+            TrainingDriver::with_store(quick_cfg(true, 1), store).unwrap();
+        assert_eq!(d.next_epoch(), 1, "resume must not replay epoch 0");
+        let sums = d.run().unwrap();
+        assert!(sums[0].warm, "loaded store must warm the first iteration");
+        assert_eq!(sums[0].iter, 1);
+    }
+
+    #[test]
+    fn with_store_rejects_mismatched_fingerprints() {
+        let mut d = TrainingDriver::new(quick_cfg(true, 1));
+        d.run().unwrap();
+        let store = d.into_store();
+        // Different seed → different prompt identity per group id.
+        let other = TrainingConfig {
+            seed: 7,
+            ..quick_cfg(true, 1)
+        };
+        let e = TrainingDriver::with_store(other, store)
+            .err()
+            .expect("mismatched seed must be rejected")
+            .to_string();
+        assert!(e.contains("fingerprint"), "{e}");
+    }
+}

@@ -1,0 +1,33 @@
+//! Cross-iteration context: persist what one rollout learned for the
+//! next.
+//!
+//! Synchronous RL rebuilds its rollout state from scratch every
+//! iteration, so every epoch re-pays the cold-start cost Seer's online
+//! context learning exists to amortize: the context manager probes every
+//! group before it can order by length, and the grouped-SD CSTs start
+//! empty. But the prompt set is *the same* across GRPO epochs, and
+//! lengths/token patterns drift slowly with the policy — history rhymes.
+//! This module closes the loop:
+//!
+//! * [`ContextStore`] — decayed per-group length statistics, SD reference
+//!   counts, and bounded token-stream exemplars, serializable through
+//!   [`crate::util::json`] (`seer train --save-ctx / --load-ctx`);
+//! * [`ContextPriors`] — the warm-start bundle a store hands to one
+//!   rollout (consumed by
+//!   [`crate::rollout::RolloutSessionBuilder::context_store`], the
+//!   scheduler's [`crate::scheduler::Scheduler::warm_start`], the cluster
+//!   simulator, and the real engine's DGDS);
+//! * [`TrainingDriver`] — runs N GRPO iterations through
+//!   [`crate::rollout::RolloutSession`], re-sampling each epoch with
+//!   drift ([`crate::workload::generate_epoch`]) and feeding finished
+//!   lengths back into the store.
+//!
+//! `experiments::multi_iter` (CLI: `seer experiment multi-iter`)
+//! measures the effect: with the store, iteration ≥ 2 long-tail latency
+//! drops below both iteration 1 and the cold-start baseline.
+
+pub mod driver;
+pub mod store;
+
+pub use driver::{IterationSummary, TrainingConfig, TrainingDriver};
+pub use store::{ContextPriors, ContextStore, ContextStoreConfig, GroupRecord};

@@ -1,0 +1,570 @@
+//! The cross-iteration context store.
+//!
+//! Seer's core observation — requests sharing a prompt have correlated
+//! lengths and token patterns — holds *across* RL iterations as well as
+//! within one: synchronous GRPO revisits the same prompt set epoch after
+//! epoch, so the length statistics and token patterns learned during
+//! iteration *k* are a strong prior for iteration *k+1* (cf. RhymeRL's
+//! "history rhymes" and RollPacker's historical-statistics schedulers).
+//! The [`ContextStore`] persists exactly that signal between rollouts:
+//!
+//! * per-group finished-length statistics (decayed max / mean / sample
+//!   weight) that seed the [`crate::coordinator::ContextManager`] with a
+//!   *learned* estimate instead of the conservative generation-length
+//!   upper bound — iteration ≥ 2 skips the cold-start probe tax;
+//! * per-group reference-stream counts that warm the grouped-SD
+//!   acceptance model (a CST that already holds last epoch's sibling
+//!   streams accepts more from the first verify step);
+//! * bounded per-group token-stream exemplars (real backend) that
+//!   pre-populate the DGDS CSTs via [`crate::spec::dgds::DraftServer::warm_start`].
+//!
+//! Statistics blend with exponential decay so the store tracks policy
+//! drift instead of averaging over stale epochs, and the whole store
+//! serializes through [`crate::util::json`] (`seer train --save-ctx /
+//! --load-ctx`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::rollout::session::RolloutReport;
+use crate::util::json::Json;
+use crate::workload::GroupId;
+
+/// Serialization format version (bumped on breaking layout changes).
+const FORMAT_VERSION: u64 = 1;
+
+/// Tuning knobs for the store's decay and warm-start behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ContextStoreConfig {
+    /// Per-iteration exponential-decay factor for historical statistics
+    /// in `[0, 1)`: `stat ← decay · stat + (1 − decay) · fresh`. Higher
+    /// keeps more history; lower tracks policy drift faster.
+    pub decay: f64,
+    /// Weight applied to historical reference streams when warming the
+    /// grouped-SD acceptance context (history from an older policy is a
+    /// weaker draft source than live siblings).
+    pub warm_ref_weight: f64,
+    /// Safety margin on length priors: the injected estimate is
+    /// `max_len · prior_margin`, so a mild upward drift between epochs
+    /// does not demote a genuinely long group in the LFS order.
+    pub prior_margin: f64,
+    /// Token-stream exemplars kept per group (real backend only).
+    pub max_streams_per_group: usize,
+    /// Suffix length kept per exemplar stream, in tokens.
+    pub max_stream_tokens: usize,
+}
+
+impl Default for ContextStoreConfig {
+    fn default() -> Self {
+        ContextStoreConfig {
+            decay: 0.6,
+            warm_ref_weight: 0.5,
+            prior_margin: 1.15,
+            max_streams_per_group: 2,
+            max_stream_tokens: 64,
+        }
+    }
+}
+
+/// Decayed per-group statistics.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GroupRecord {
+    /// Decayed maximum finished generation length (tokens).
+    pub max_len: f64,
+    /// Decayed mean finished generation length (tokens).
+    pub mean_len: f64,
+    /// Decayed observation weight (≈ how many recent iterations have
+    /// contributed; 0 means the record is empty).
+    pub weight: f64,
+    /// Decayed count of completed sibling streams (the grouped-SD
+    /// reference-count signal).
+    pub refs: f64,
+    /// Token-stream exemplars (suffixes) from the most recent iteration
+    /// that produced real tokens; empty on the simulated backend.
+    pub streams: Vec<Vec<u32>>,
+}
+
+/// Warm-start bundle extracted from a [`ContextStore`] for one rollout.
+///
+/// This is the currency the execution layers accept: the session builder
+/// turns a store into priors
+/// ([`crate::rollout::RolloutSessionBuilder::context_store`]), the
+/// scheduler consumes `estimates`
+/// ([`crate::scheduler::Scheduler::warm_start`]), the cluster simulator
+/// consumes `warm_refs`, and the real engine feeds `streams` to the DGDS.
+#[derive(Debug, Clone, Default)]
+pub struct ContextPriors {
+    /// Per-group length estimates (tokens) seeding the context manager.
+    pub estimates: Vec<(GroupId, u32)>,
+    /// Per-group historical reference-stream counts for the SD model.
+    pub warm_refs: Vec<(GroupId, usize)>,
+    /// Per-group token-stream exemplars for CST/DGDS warm starts.
+    pub streams: Vec<(GroupId, Vec<Vec<u32>>)>,
+}
+
+impl ContextPriors {
+    pub fn is_empty(&self) -> bool {
+        self.estimates.is_empty() && self.warm_refs.is_empty() && self.streams.is_empty()
+    }
+}
+
+/// Cross-iteration store of per-group rollout context.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ContextStore {
+    cfg: ContextStoreConfig,
+    /// Workload/task name the statistics were observed under (empty
+    /// until the first observation). Group ids only name the same
+    /// prompt for the same (task, seed, scale), so consumers must
+    /// refuse priors from a store with a different fingerprint.
+    task: String,
+    /// Workload-generation seed the statistics were observed under
+    /// (meaningful only once `task` is set).
+    seed: u64,
+    /// Iterations observed so far.
+    iterations: u64,
+    groups: BTreeMap<u32, GroupRecord>,
+}
+
+impl ContextStore {
+    pub fn new() -> Self {
+        Self::with_config(ContextStoreConfig::default())
+    }
+
+    pub fn with_config(cfg: ContextStoreConfig) -> Self {
+        ContextStore {
+            cfg,
+            task: String::new(),
+            seed: 0,
+            iterations: 0,
+            groups: BTreeMap::new(),
+        }
+    }
+
+    pub fn config(&self) -> &ContextStoreConfig {
+        &self.cfg
+    }
+
+    /// Task name the store's statistics belong to ("" = no observations
+    /// yet).
+    pub fn task(&self) -> &str {
+        &self.task
+    }
+
+    /// Workload seed the store's statistics belong to (see
+    /// [`task`](Self::task) for whether it is meaningful).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Record which (task, seed) the statistics describe (first writer
+    /// wins — group ids are only meaningful within one workload's
+    /// prompt set).
+    pub fn set_fingerprint(&mut self, task: &str, seed: u64) {
+        if self.task.is_empty() {
+            self.task = task.to_string();
+            self.seed = seed;
+        }
+    }
+
+    /// Iterations folded into the store so far.
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Number of groups with recorded statistics.
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    pub fn group(&self, group: GroupId) -> Option<&GroupRecord> {
+        self.groups.get(&group.0)
+    }
+
+    /// Fold one iteration's finished lengths (and token streams, when the
+    /// backend produces them) into the store.
+    pub fn observe_report(&mut self, report: &RolloutReport) {
+        let mut lens: BTreeMap<u32, Vec<u32>> = BTreeMap::new();
+        let mut streams: BTreeMap<u32, Vec<&[u32]>> = BTreeMap::new();
+        for s in &report.sequences {
+            lens.entry(s.group.0).or_default().push(s.gen_len);
+            if !s.tokens.is_empty() {
+                streams.entry(s.group.0).or_default().push(&s.tokens);
+            }
+        }
+        for (g, ls) in &lens {
+            let toks = streams.get(g).map(|v| v.as_slice()).unwrap_or(&[]);
+            self.observe_group(GroupId(*g), ls, toks);
+        }
+        self.iterations += 1;
+    }
+
+    /// Fold one group's finished lengths (and optional token streams)
+    /// into its decayed record.
+    pub fn observe_group(&mut self, group: GroupId, lens: &[u32], streams: &[&[u32]]) {
+        if lens.is_empty() {
+            return;
+        }
+        let fresh_max = *lens.iter().max().unwrap() as f64;
+        let fresh_mean =
+            lens.iter().map(|&l| l as f64).sum::<f64>() / lens.len() as f64;
+        let d = self.cfg.decay;
+        let r = self.groups.entry(group.0).or_default();
+        if r.weight == 0.0 {
+            r.max_len = fresh_max;
+            r.mean_len = fresh_mean;
+            r.refs = lens.len() as f64;
+        } else {
+            r.max_len = d * r.max_len + (1.0 - d) * fresh_max;
+            r.mean_len = d * r.mean_len + (1.0 - d) * fresh_mean;
+            // Blended like the lengths so the steady state stays at one
+            // epoch's completed-stream count — warm_refs must never claim
+            // more reference streams than a group physically produces.
+            r.refs = d * r.refs + (1.0 - d) * lens.len() as f64;
+        }
+        r.weight = d * r.weight + 1.0;
+        if !streams.is_empty() {
+            r.streams = streams
+                .iter()
+                .take(self.cfg.max_streams_per_group)
+                .map(|s| {
+                    let keep = s.len().min(self.cfg.max_stream_tokens);
+                    s[s.len() - keep..].to_vec()
+                })
+                .collect();
+        }
+    }
+
+    /// Length prior for a group (tokens), with the configured safety
+    /// margin applied; `None` when the store has no signal for it.
+    pub fn estimate(&self, group: GroupId) -> Option<u32> {
+        let r = self.groups.get(&group.0)?;
+        if r.weight <= 0.0 {
+            return None;
+        }
+        Some((r.max_len * self.cfg.prior_margin).ceil().max(1.0) as u32)
+    }
+
+    /// Historical reference-stream count for the grouped-SD model,
+    /// already scaled by `warm_ref_weight`.
+    pub fn warm_refs(&self, group: GroupId) -> usize {
+        self.groups
+            .get(&group.0)
+            .map(|r| (r.refs * self.cfg.warm_ref_weight).floor() as usize)
+            .unwrap_or(0)
+            .min(32)
+    }
+
+    /// Extract the warm-start bundle for one rollout.
+    pub fn priors(&self) -> ContextPriors {
+        let mut p = ContextPriors::default();
+        for (&g, r) in &self.groups {
+            let id = GroupId(g);
+            if let Some(est) = self.estimate(id) {
+                p.estimates.push((id, est));
+            }
+            let refs = self.warm_refs(id);
+            if refs > 0 {
+                p.warm_refs.push((id, refs));
+            }
+            if !r.streams.is_empty() {
+                p.streams.push((id, r.streams.clone()));
+            }
+        }
+        p
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    /// Serialize the full store (config + statistics) to JSON.
+    pub fn to_json(&self) -> Json {
+        let mut cfg = BTreeMap::new();
+        cfg.insert("decay".to_string(), Json::Num(self.cfg.decay));
+        cfg.insert(
+            "warm_ref_weight".to_string(),
+            Json::Num(self.cfg.warm_ref_weight),
+        );
+        cfg.insert(
+            "prior_margin".to_string(),
+            Json::Num(self.cfg.prior_margin),
+        );
+        cfg.insert(
+            "max_streams_per_group".to_string(),
+            Json::Num(self.cfg.max_streams_per_group as f64),
+        );
+        cfg.insert(
+            "max_stream_tokens".to_string(),
+            Json::Num(self.cfg.max_stream_tokens as f64),
+        );
+        let mut groups = BTreeMap::new();
+        for (g, r) in &self.groups {
+            let mut o = BTreeMap::new();
+            o.insert("max_len".to_string(), Json::Num(r.max_len));
+            o.insert("mean_len".to_string(), Json::Num(r.mean_len));
+            o.insert("weight".to_string(), Json::Num(r.weight));
+            o.insert("refs".to_string(), Json::Num(r.refs));
+            o.insert(
+                "streams".to_string(),
+                Json::Arr(
+                    r.streams
+                        .iter()
+                        .map(|s| {
+                            Json::Arr(
+                                s.iter().map(|&t| Json::Num(t as f64)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            );
+            groups.insert(g.to_string(), Json::Obj(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("version".to_string(), Json::Num(FORMAT_VERSION as f64));
+        top.insert("task".to_string(), Json::Str(self.task.clone()));
+        // As a string: Json numbers are f64 and would corrupt u64 seeds
+        // above 2^53.
+        top.insert("seed".to_string(), Json::Str(self.seed.to_string()));
+        top.insert("iterations".to_string(), Json::Num(self.iterations as f64));
+        top.insert("config".to_string(), Json::Obj(cfg));
+        top.insert("groups".to_string(), Json::Obj(groups));
+        Json::Obj(top)
+    }
+
+    /// Rebuild a store from [`ContextStore::to_json`] output.
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("context store: missing version"))?;
+        if version != FORMAT_VERSION {
+            return Err(anyhow!(
+                "context store: unsupported version {version} (expected {FORMAT_VERSION})"
+            ));
+        }
+        let c = j
+            .get("config")
+            .ok_or_else(|| anyhow!("context store: missing config"))?;
+        let f = |key: &str| -> Result<f64> {
+            c.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("context store: missing config.{key}"))
+        };
+        let cfg = ContextStoreConfig {
+            decay: f("decay")?,
+            warm_ref_weight: f("warm_ref_weight")?,
+            prior_margin: f("prior_margin")?,
+            max_streams_per_group: f("max_streams_per_group")? as usize,
+            max_stream_tokens: f("max_stream_tokens")? as usize,
+        };
+        let mut store = ContextStore::with_config(cfg);
+        // Fingerprint fields are as load-bearing as the statistics (they
+        // gate every warm-start safety check), so a store missing them
+        // is rejected rather than loaded as fingerprint-less.
+        store.task = j
+            .get("task")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("context store: missing task"))?
+            .to_string();
+        store.seed = j
+            .get("seed")
+            .and_then(Json::as_str)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("context store: missing/bad seed"))?;
+        store.iterations = j
+            .get("iterations")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("context store: missing iterations"))?;
+        let groups = j
+            .get("groups")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("context store: missing groups"))?;
+        for (g, rec) in groups {
+            let gid: u32 = g
+                .parse()
+                .map_err(|_| anyhow!("context store: bad group key '{g}'"))?;
+            let num = |key: &str| -> Result<f64> {
+                rec.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("context store: group {g} missing {key}"))
+            };
+            let mut streams = Vec::new();
+            for s in rec.get("streams").and_then(Json::as_arr).unwrap_or(&[]) {
+                let toks = s
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("context store: bad stream in group {g}"))?;
+                let mut stream = Vec::with_capacity(toks.len());
+                for t in toks {
+                    let tok = t.as_u64().ok_or_else(|| {
+                        anyhow!("context store: bad token in group {g} stream")
+                    })?;
+                    stream.push(tok as u32);
+                }
+                streams.push(stream);
+            }
+            store.groups.insert(
+                gid,
+                GroupRecord {
+                    max_len: num("max_len")?,
+                    mean_len: num("mean_len")?,
+                    weight: num("weight")?,
+                    refs: num("refs")?,
+                    streams,
+                },
+            );
+        }
+        Ok(store)
+    }
+
+    /// Save the store to a JSON file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("saving context store to {path:?}"))
+    }
+
+    /// Load a store saved with [`ContextStore::save`].
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("loading context store from {path:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("context store {path:?}: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_store_has_no_priors() {
+        let s = ContextStore::new();
+        assert!(s.is_empty());
+        assert_eq!(s.estimate(GroupId(0)), None);
+        assert_eq!(s.warm_refs(GroupId(0)), 0);
+        assert!(s.priors().is_empty());
+    }
+
+    #[test]
+    fn first_observation_sets_stats_directly() {
+        let mut s = ContextStore::new();
+        s.observe_group(GroupId(3), &[100, 300, 200], &[]);
+        let r = s.group(GroupId(3)).unwrap();
+        assert_eq!(r.max_len, 300.0);
+        assert_eq!(r.mean_len, 200.0);
+        assert_eq!(r.weight, 1.0);
+        assert_eq!(r.refs, 3.0);
+        // Estimate carries the configured safety margin.
+        let est = s.estimate(GroupId(3)).unwrap();
+        assert_eq!(est, (300.0 * s.config().prior_margin).ceil() as u32);
+    }
+
+    #[test]
+    fn decay_blends_toward_fresh_observations() {
+        let mut s = ContextStore::with_config(ContextStoreConfig {
+            decay: 0.5,
+            ..Default::default()
+        });
+        s.observe_group(GroupId(0), &[1000], &[]);
+        s.observe_group(GroupId(0), &[200], &[]);
+        let r = s.group(GroupId(0)).unwrap();
+        assert_eq!(r.max_len, 600.0); // 0.5·1000 + 0.5·200
+        // Repeated short epochs pull a stale long estimate down.
+        for _ in 0..10 {
+            s.observe_group(GroupId(0), &[200], &[]);
+        }
+        assert!(s.group(GroupId(0)).unwrap().max_len < 210.0);
+    }
+
+    #[test]
+    fn streams_are_bounded_suffixes() {
+        let mut s = ContextStore::with_config(ContextStoreConfig {
+            max_streams_per_group: 2,
+            max_stream_tokens: 4,
+            ..Default::default()
+        });
+        let a: Vec<u32> = (0..10).collect();
+        let b = vec![7, 8];
+        let c = vec![9];
+        s.observe_group(GroupId(1), &[10, 2, 1], &[&a, &b, &c]);
+        let r = s.group(GroupId(1)).unwrap();
+        assert_eq!(r.streams.len(), 2);
+        assert_eq!(r.streams[0], vec![6, 7, 8, 9]); // 4-token suffix
+        assert_eq!(r.streams[1], vec![7, 8]);
+    }
+
+    #[test]
+    fn warm_refs_scale_and_cap() {
+        let mut s = ContextStore::new();
+        s.observe_group(GroupId(0), &[10; 8], &[]);
+        // 8 refs × 0.5 weight = 4.
+        assert_eq!(s.warm_refs(GroupId(0)), 4);
+    }
+
+    #[test]
+    fn fingerprint_first_writer_wins_and_round_trips() {
+        let mut s = ContextStore::new();
+        assert_eq!(s.task(), "");
+        s.set_fingerprint("moonlight", 42);
+        s.set_fingerprint("qwen", 7); // ignored: stats stay moonlight@42
+        assert_eq!(s.task(), "moonlight");
+        assert_eq!(s.seed(), 42);
+        let back = ContextStore::from_json(
+            &Json::parse(&s.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.task(), "moonlight");
+        assert_eq!(back.seed(), 42);
+    }
+
+    #[test]
+    fn json_round_trip_is_identical() {
+        let mut s = ContextStore::with_config(ContextStoreConfig {
+            decay: 0.7,
+            ..Default::default()
+        });
+        s.set_fingerprint("moonlight", 42);
+        s.observe_group(GroupId(0), &[100, 350], &[&[1, 2, 3][..]]);
+        s.observe_group(GroupId(5), &[40], &[]);
+        s.observe_group(GroupId(0), &[90, 120], &[]);
+        let j = s.to_json();
+        let back = ContextStore::from_json(&Json::parse(&j.to_string()).unwrap())
+            .unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_versions() {
+        let j = Json::parse(r#"{"version": 99, "config": {}, "groups": {}}"#)
+            .unwrap();
+        assert!(ContextStore::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_missing_fingerprint() {
+        let s = ContextStore::new();
+        let text = s.to_json().to_string().replace("\"task\":\"\",", "");
+        let e = ContextStore::from_json(&Json::parse(&text).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("missing task"), "{e}");
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_streams() {
+        // Valid store, then corrupt one stream token into a string.
+        let mut s = ContextStore::new();
+        s.observe_group(GroupId(0), &[10], &[&[1, 2][..]]);
+        let text = s
+            .to_json()
+            .to_string()
+            .replace("\"streams\":[[1,2]]", "\"streams\":[[1,\"x\"]]");
+        let j = Json::parse(&text).unwrap();
+        let e = ContextStore::from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("bad token"), "{e}");
+    }
+}

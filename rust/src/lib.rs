@@ -9,7 +9,38 @@
 //! HLO-text artifacts at build time and executed through [`runtime`];
 //! Python never runs on the request path.
 //!
-//! Module map (see DESIGN.md for the full inventory):
+//! The front door is the unified session layer — one builder in front of
+//! both execution substrates:
+//!
+//! ```
+//! use seer::config::TaskPreset;
+//! use seer::rollout::RolloutSession;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let report = RolloutSession::builder()
+//!     .workload(TaskPreset::Moonlight.workload_for_test())
+//!     .scheduler("seer")          // resolved via the policy registry
+//!     .sd("grouped-cst")          // grouped speculative decoding
+//!     .seed(42)
+//!     .run()?;
+//! assert!(report.metrics.throughput() > 0.0);
+//! println!(
+//!     "{} requests, {:.0} tok/s",
+//!     report.sequences.len(),
+//!     report.metrics.throughput()
+//! );
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Multi-iteration training threads a cross-iteration
+//! [`iteration::ContextStore`] between rollouts via
+//! [`iteration::TrainingDriver`] (CLI: `seer train`), so iteration ≥ 2
+//! warm-starts the context manager and grouped-SD state instead of
+//! re-paying the cold-start probe tax (see ARCHITECTURE.md).
+//!
+//! Module map (see ARCHITECTURE.md at the repository root for the full
+//! inventory and the event flow of one divided-rollout chunk):
 //!
 //! * [`rollout`] — **the front door**: the unified session layer.
 //!   [`rollout::RolloutSession`] is a builder over the
@@ -44,6 +75,10 @@
 //! * [`runtime`] — PJRT artifact loading/execution via the `xla` crate.
 //! * [`rl`] — the synchronous GRPO loop: rollout (through a real-backend
 //!   session) → reward → advantage → train_step → weight update.
+//! * [`iteration`] — cross-iteration context: the [`iteration::ContextStore`]
+//!   (decayed per-group length/token statistics, JSON-serializable) and
+//!   the [`iteration::TrainingDriver`] multi-epoch loop that warm-starts
+//!   every layer above from it.
 //! * [`experiments`] — regenerates every table and figure of the paper's
 //!   evaluation section, measuring through sessions.
 
@@ -51,6 +86,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiments;
+pub mod iteration;
 pub mod kvcache;
 pub mod metrics;
 pub mod rl;

@@ -4,7 +4,8 @@
 //! Subcommands:
 //!   seer experiment <id|all> [--full] [--seed N] [--iters N]
 //!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>] [--json]
-//!   seer train [--preset small] [--iters N] [--artifacts DIR]
+//!   seer train [--task moonlight] [--iters N] [--save-ctx F] [--load-ctx F]
+//!   seer train --real [--preset small] [--iters N] [--artifacts DIR]
 //!   seer info
 //!
 //! All rollout construction goes through `rollout::RolloutSession` and
@@ -25,15 +26,23 @@ discrete-event cluster simulator and the real-model engine, with
 schedulers and SD strategies resolved by name from the policy registry.
 
 USAGE:
-  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|all>
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N] [--json]
-  seer train [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
+  seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
+       [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
+  seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
   seer info
 
   rollout --json prints the unified RolloutReport as one JSON object for
   bench/trajectory tooling instead of the human summary line.
+
+  train runs N simulated GRPO iterations through the multi-iteration
+  driver, warm-starting each from the cross-iteration context store
+  (disable with --cold). --save-ctx / --load-ctx persist the store
+  between runs. --real instead drives the real-model GRPO loop over the
+  AOT HLO artifacts.
 ";
 
 fn cmd_rollout(args: &Args) -> Result<()> {
@@ -83,7 +92,74 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Simulated multi-iteration training: N GRPO epochs through the
+/// `TrainingDriver`, warm-started from the cross-iteration context store.
+fn cmd_train_sim(args: &Args) -> Result<()> {
+    use seer::iteration::{ContextStore, TrainingConfig, TrainingDriver};
+    let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --task"))?;
+    let scale = seer::experiments::common::Scale::from_args(
+        !args.has_flag("full"),
+        args,
+    );
+    let workload = scale.workload(preset);
+    let system = scale.sys(&workload);
+    let cfg = TrainingConfig {
+        system,
+        scheduler: args.get_or("scheduler", "seer").to_string(),
+        sd: args.get_or("sd", "grouped-cst").to_string(),
+        iters: args.get_usize("iters", 3),
+        seed: scale.seed,
+        drift: args.get_f64("drift", 0.05),
+        warm_start: !args.has_flag("cold"),
+        ..TrainingConfig::new(workload)
+    };
+    let mut driver = match args.get("load-ctx") {
+        Some(path) => {
+            let store = ContextStore::load(std::path::Path::new(path))?;
+            println!(
+                "loaded context store from {path}: {} groups, {} iterations",
+                store.len(),
+                store.iterations()
+            );
+            // with_store refuses fingerprint mismatches (task/seed/scale).
+            TrainingDriver::with_store(cfg.clone(), store)?
+        }
+        None => TrainingDriver::new(cfg.clone()),
+    };
+    println!(
+        "train: task={} scheduler={} sd={} iters={} drift={} warm={}",
+        cfg.workload.name, cfg.scheduler, cfg.sd, cfg.iters, cfg.drift, cfg.warm_start
+    );
+    for _ in 0..cfg.iters {
+        let s = driver.run_iteration(driver.next_epoch())?;
+        println!(
+            "iter {:>3} {}  rollout {:>8.1}s  p99 {:>8.1}s  tail {:>7.1}s  \
+             train {:>6.1}s  update {:>5.1}s  total {:>8.1}s  {:>7.0} tok/s",
+            s.iter,
+            if s.warm { "warm" } else { "cold" },
+            s.makespan_secs,
+            s.p99_finish_secs,
+            s.tail_secs,
+            s.train_secs,
+            s.weight_update_secs,
+            s.iter_total_secs,
+            s.throughput_tok_s,
+        );
+    }
+    if let Some(path) = args.get("save-ctx") {
+        driver.store().save(std::path::Path::new(path))?;
+        println!(
+            "saved context store to {path}: {} groups, {} iterations",
+            driver.store().len(),
+            driver.store().iterations()
+        );
+    }
+    Ok(())
+}
+
+/// Real-model GRPO over the AOT HLO artifacts (`seer train --real`).
+fn cmd_train_real(args: &Args) -> Result<()> {
     use seer::rl::{GrpoConfig, GrpoTrainer};
     use seer::runtime::manifest::default_artifact_dir;
     use seer::runtime::ModelRuntime;
@@ -113,8 +189,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    println!("seer {} — DESIGN.md documents the architecture;", env!("CARGO_PKG_VERSION"));
-    println!("EXPERIMENTS.md records paper-vs-measured for every table/figure.");
+    println!("seer {} — ARCHITECTURE.md documents the architecture;", env!("CARGO_PKG_VERSION"));
+    println!("README.md maps every paper table/figure to its experiment id.");
     match seer::runtime::Runtime::cpu() {
         Ok(rt) => println!("PJRT platform: {}", rt.platform()),
         Err(e) => println!("PJRT unavailable: {e:#}"),
@@ -135,7 +211,7 @@ fn cmd_info() -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["full", "fast", "spec", "json"]);
+    let args = Args::from_env(&["full", "fast", "spec", "json", "real", "cold"]);
     match args.positionals.first().map(|s| s.as_str()) {
         Some("experiment") => {
             let id = args
@@ -146,7 +222,8 @@ fn main() -> Result<()> {
             seer::experiments::run(id, &args)
         }
         Some("rollout") => cmd_rollout(&args),
-        Some("train") => cmd_train(&args),
+        Some("train") if args.has_flag("real") => cmd_train_real(&args),
+        Some("train") => cmd_train_sim(&args),
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");

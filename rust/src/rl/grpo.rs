@@ -101,7 +101,7 @@ impl GrpoTrainer {
             }
         }
         let t0 = Instant::now();
-        let report = RolloutSession::builder()
+        let builder = RolloutSession::builder()
             .real(
                 &self.model,
                 RealRolloutConfig {
@@ -113,8 +113,13 @@ impl GrpoTrainer {
                     max_gen: self.cfg.max_gen,
                 },
             )
-            .requests(requests)
-            .run()?;
+            .requests(requests);
+        // No cross-iteration ContextStore here: warm start is only sound
+        // when group g names the same prompt every epoch, which holds for
+        // the sim TrainingDriver (generate_epoch keeps prompt slots) but
+        // not for this task sampler — it draws fresh prompts per
+        // iteration, so per-GroupId history would describe no prompt.
+        let report = builder.run()?;
         let rollout_secs = t0.elapsed().as_secs_f64();
 
         // ---- rewards + advantages ------------------------------------

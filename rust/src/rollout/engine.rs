@@ -28,6 +28,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 use xla::Literal;
 
+use crate::coordinator::ContextManager;
 use crate::metrics::{Completion, RolloutMetrics};
 use crate::rollout::observer::{ObserverHub, RolloutEvent};
 use crate::rollout::session::{RolloutReport, SeqResult};
@@ -36,7 +37,7 @@ use crate::sim::clock::SimTime;
 use crate::sim::Rng;
 use crate::spec::dgds::{DraftClient, DraftServer, SpeculationArgs};
 use crate::spec::simmodel::SdStrategy;
-use crate::workload::{GroupId, InstanceId, RequestId};
+use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId, RequestSpec};
 
 /// Stop rule for a generated sequence.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -143,12 +144,30 @@ pub struct RealRollout<'m> {
     pub model: &'m ModelRuntime,
     pub cfg: RealRolloutConfig,
     pub rng: Rng,
+    /// Cross-iteration warm-start bundle (length estimates seed the
+    /// probe-skip path; token streams pre-populate the DGDS CSTs).
+    warm: Option<crate::iteration::ContextPriors>,
 }
 
 impl<'m> RealRollout<'m> {
     pub fn new(model: &'m ModelRuntime, cfg: RealRolloutConfig) -> Self {
         let rng = Rng::new(cfg.seed ^ 0xD0_11_00);
-        RealRollout { model, cfg, rng }
+        RealRollout {
+            model,
+            cfg,
+            rng,
+            warm: None,
+        }
+    }
+
+    /// Install cross-iteration priors before running: groups with a
+    /// length estimate skip the probe phase, and historical token
+    /// streams are appended to the group CSTs so grouped SD drafts from
+    /// the first step.
+    pub fn warm_start(&mut self, priors: crate::iteration::ContextPriors) {
+        if !priors.is_empty() {
+            self.warm = Some(priors);
+        }
     }
 
     /// Run with no observers attached.
@@ -202,13 +221,38 @@ impl<'m> RealRollout<'m> {
             })
             .collect();
 
-        // Group context: probe = lowest request index per group; estimate
-        // = max finished length (None until a sibling finishes).
+        // Group context: probe = lowest request index per group. Length
+        // estimation is the same ContextManager the cluster scheduler
+        // uses (conservative bound → warm prior → learned max, floored
+        // by parked-sibling progress), so both backends share one set of
+        // estimate semantics.
         let mut probe_of: BTreeMap<GroupId, usize> = BTreeMap::new();
         for (i, r) in reqs.iter().enumerate() {
             probe_of.entry(r.spec.group).or_insert(i);
         }
-        let mut estimate: BTreeMap<GroupId, usize> = BTreeMap::new();
+        let mut ctx_mgr = ContextManager::new(self.cfg.max_gen as u32);
+        {
+            let mut by_group: BTreeMap<GroupId, GroupSpec> = BTreeMap::new();
+            for (i, r) in reqs.iter().enumerate() {
+                let e = by_group.entry(r.spec.group).or_insert_with(|| {
+                    GroupSpec {
+                        id: r.spec.group,
+                        prompt_len: r.spec.prompt.len() as u32,
+                        requests: vec![],
+                    }
+                });
+                e.requests.push(RequestSpec {
+                    id: RequestId(i as u32),
+                    group: r.spec.group,
+                    prompt_len: r.spec.prompt.len() as u32,
+                    // True lengths are unknown on this backend; the
+                    // context manager never reads them.
+                    gen_len: 0,
+                });
+            }
+            let groups: Vec<GroupSpec> = by_group.into_values().collect();
+            ctx_mgr.init_groups(&groups);
+        }
 
         // DGDS.
         let server = DraftServer::spawn();
@@ -223,6 +267,20 @@ impl<'m> RealRollout<'m> {
             }
             gs.iter().map(|gi| format!("g{}", gi.0)).collect()
         };
+
+        // Cross-iteration warm start: length priors go through the
+        // context manager (clamped to max_gen; the first online finish
+        // replaces them), and last epoch's token streams pre-populate
+        // the group CSTs.
+        if let Some(warm) = self.warm.take() {
+            ctx_mgr.inject_priors(warm.estimates.iter().copied());
+            if self.cfg.use_spec {
+                for (g, streams) in &warm.streams {
+                    server.warm_start(&format!("g{}", g.0), streams);
+                }
+                server.flush();
+            }
+        }
 
         // Batch caches: start zeroed via a dummy whole-batch prefill.
         let zero_tokens = vec![0i32; b * p];
@@ -250,7 +308,7 @@ impl<'m> RealRollout<'m> {
                 else {
                     break;
                 };
-                let Some(next) = self.pick_next(&reqs, &probe_of, &estimate)
+                let Some(next) = self.pick_next(&reqs, &probe_of, &ctx_mgr)
                 else {
                     break;
                 };
@@ -544,8 +602,7 @@ impl<'m> RealRollout<'m> {
                     // clamped to the remaining room above.
                     let glen = reqs[req].generated.len();
                     let group = reqs[req].spec.group;
-                    let e = estimate.entry(group).or_insert(0);
-                    *e = (*e).max(glen);
+                    ctx_mgr.on_finished(group, glen as u32);
                     reqs[req].state = SlotPhase::Done;
                     slots[slot] = None;
                     cache_lens[slot] = 1;
@@ -575,6 +632,12 @@ impl<'m> RealRollout<'m> {
                     .any(|r| matches!(r.state, SlotPhase::Waiting | SlotPhase::Parked { .. }));
                 if lease_up && someone_waiting {
                     let st = slots[slot].take().unwrap();
+                    // The missed-update path: a parked sibling's progress
+                    // floors stale learned/warm estimates.
+                    ctx_mgr.on_progress(
+                        reqs[req].spec.group,
+                        reqs[req].generated.len() as u32,
+                    );
                     let (kc1, vc1) =
                         self.model.slot_extract(&kc, &vc, slot as i32)?;
                     reqs[req].state = SlotPhase::Parked {
@@ -645,13 +708,17 @@ impl<'m> RealRollout<'m> {
         }
     }
 
-    /// Scheduling order: probes of signal-less groups first (SFS), then
-    /// LFS on group estimates; FCFS when context is off.
+    /// Scheduling order: probes of context-less groups first (SFS), then
+    /// LFS on the context manager's estimates; FCFS when context is off.
+    /// Estimate semantics live entirely in [`ContextManager`]: online
+    /// finishes replace warm priors, parked-sibling progress floors stale
+    /// estimates, and groups without any context rank at the
+    /// conservative `max_gen` bound.
     fn pick_next(
         &self,
         reqs: &[ReqRt],
         probe_of: &BTreeMap<GroupId, usize>,
-        estimate: &BTreeMap<GroupId, usize>,
+        ctx_mgr: &ContextManager,
     ) -> Option<usize> {
         let waiting = |i: &usize| {
             matches!(
@@ -667,26 +734,22 @@ impl<'m> RealRollout<'m> {
         if !self.cfg.context_aware {
             return idxs.first().copied();
         }
-        // Probe path.
+        // Probe path (skipped for groups with online or warm context).
         let mut probes: Vec<usize> = idxs
             .iter()
             .copied()
             .filter(|&i| {
                 probe_of.get(&reqs[i].spec.group) == Some(&i)
-                    && !estimate.contains_key(&reqs[i].spec.group)
+                    && !ctx_mgr.has_context(reqs[i].spec.group)
             })
             .collect();
         if !probes.is_empty() {
             probes.sort_by_key(|&i| (reqs[i].generated.len(), i));
             return probes.first().copied();
         }
-        // Approximate LFS: largest (estimate − progress) first; groups
-        // without estimates are conservatively "long".
+        // Approximate LFS: largest (estimate − progress) first.
         idxs.into_iter().max_by_key(|&i| {
-            let est = estimate
-                .get(&reqs[i].spec.group)
-                .copied()
-                .unwrap_or(self.cfg.max_gen);
+            let est = ctx_mgr.estimate(reqs[i].spec.group) as usize;
             let remaining =
                 est.saturating_sub(reqs[i].generated.len());
             (remaining, usize::MAX - i)

@@ -13,13 +13,26 @@
 //! attached as `Rc<RefCell<T>>` (a blanket impl forwards events through
 //! the cell), keeping a second handle outside the session:
 //!
-//! ```ignore
+//! ```
+//! use std::cell::RefCell;
+//! use std::rc::Rc;
+//!
+//! use seer::config::TaskPreset;
+//! use seer::metrics::EventCounts;
+//! use seer::rollout::RolloutSession;
+//!
+//! # fn main() -> anyhow::Result<()> {
 //! let counts = Rc::new(RefCell::new(EventCounts::default()));
 //! let report = RolloutSession::builder()
-//!     .workload(cfg)
+//!     .workload(TaskPreset::Moonlight.workload_for_test())
 //!     .observer(Box::new(counts.clone()))
 //!     .run()?;
-//! assert_eq!(counts.borrow().finished, report.metrics.completions.len() as u64);
+//! assert_eq!(
+//!     counts.borrow().finished,
+//!     report.metrics.completions.len() as u64
+//! );
+//! # Ok(())
+//! # }
 //! ```
 
 use std::cell::RefCell;

@@ -9,21 +9,31 @@
 //! are resolved by name through the [`PolicyRegistry`], so adding a
 //! scheduler or SD strategy never touches a call site.
 //!
-//! ```ignore
+//! ```
+//! use seer::config::TaskPreset;
+//! use seer::metrics::EventCounts;
 //! use seer::rollout::RolloutSession;
 //!
+//! # fn main() -> anyhow::Result<()> {
 //! let report = RolloutSession::builder()
 //!     .workload(TaskPreset::Moonlight.workload_for_test())
 //!     .scheduler("seer")
 //!     .sd("grouped-cst")
 //!     .seed(42)
-//!     .observer(Box::new(progress))   // optional event stream taps
+//!     .observer(Box::new(EventCounts::default())) // optional event taps
 //!     .run()?;
-//! println!("{} tok/s", report.metrics.throughput());
+//! assert!(report.metrics.throughput() > 0.0);
+//! # Ok(())
+//! # }
 //! ```
 //!
 //! The real-model backend takes the same shape: swap `.workload(..)` for
-//! `.real(&model, RealRolloutConfig::default()).requests(reqs)`.
+//! `.real(&model, RealRolloutConfig::default()).requests(reqs)`. For
+//! multi-iteration training, [`RolloutSessionBuilder::context_store`]
+//! warm-starts the context manager and grouped-SD state from a
+//! [`crate::iteration::ContextStore`], and
+//! [`RolloutSessionBuilder::groups`] injects an explicitly re-sampled
+//! epoch workload (see [`crate::iteration::TrainingDriver`]).
 
 use std::time::Instant;
 
@@ -31,6 +41,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{SystemConfig, WorkloadConfig};
 use crate::engine::cluster::ClusterSim;
+use crate::iteration::{ContextPriors, ContextStore};
 use crate::metrics::RolloutMetrics;
 use crate::rollout::engine::{RealRollout, RealRolloutConfig, SeqRequest};
 use crate::rollout::observer::{ObserverHub, RolloutObserver};
@@ -41,7 +52,7 @@ use crate::sim::clock::SimTime;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
-use crate::workload::{generate_iteration, GroupId, RequestId};
+use crate::workload::{generate_iteration, GroupId, GroupSpec, RequestId};
 
 /// One request's outcome, unified across backends.
 #[derive(Debug, Clone)]
@@ -169,6 +180,10 @@ pub struct SimBackend {
     seed: u64,
     stop_after: Option<usize>,
     sample_interval: Option<SimTime>,
+    /// Explicit epoch workload (overrides generation from `cfg`/`seed`).
+    groups: Option<Vec<GroupSpec>>,
+    /// Cross-iteration warm-start context.
+    priors: Option<ContextPriors>,
 }
 
 impl RolloutBackend for SimBackend {
@@ -192,16 +207,22 @@ impl RolloutBackend for SimBackend {
         // through result assembly — matching what the pre-session
         // benches measured around `run_rollout`.
         let start = Instant::now();
-        let w = generate_iteration(&self.cfg, self.seed);
-        let expected = w.n_requests();
+        let groups = self
+            .groups
+            .take()
+            .unwrap_or_else(|| generate_iteration(&self.cfg, self.seed).groups);
+        let expected: usize = groups.iter().map(|g| g.requests.len()).sum();
         let mut sim = ClusterSim::new(
             self.cfg.clone(),
             self.sys.clone(),
-            w.groups,
+            groups,
             scheduler,
             self.sd,
         )
         .with_observers(observers);
+        if let Some(priors) = self.priors.take() {
+            sim = sim.with_warm_context(&priors);
+        }
         if let Some(n) = self.stop_after {
             sim = sim.stop_after(n);
         }
@@ -248,6 +269,8 @@ pub struct RealBackend<'m> {
     model: &'m ModelRuntime,
     cfg: RealRolloutConfig,
     requests: Option<Vec<SeqRequest>>,
+    /// Cross-iteration warm-start context (estimates + DGDS streams).
+    priors: Option<ContextPriors>,
 }
 
 impl RolloutBackend for RealBackend<'_> {
@@ -269,6 +292,9 @@ impl RolloutBackend for RealBackend<'_> {
             bail!("rollout session already ran");
         };
         let mut roller = RealRollout::new(self.model, self.cfg.clone());
+        if let Some(priors) = self.priors.take() {
+            roller.warm_start(priors);
+        }
         roller.run_observed(requests, &mut observers)
     }
 }
@@ -328,6 +354,8 @@ pub struct RolloutSessionBuilder<'m> {
     seed: Option<u64>,
     stop_after: Option<usize>,
     sample_interval: Option<SimTime>,
+    groups: Option<Vec<GroupSpec>>,
+    priors: Option<ContextPriors>,
     real: Option<(&'m ModelRuntime, RealRolloutConfig)>,
     requests: Vec<SeqRequest>,
 }
@@ -344,6 +372,8 @@ impl<'m> RolloutSessionBuilder<'m> {
             seed: None,
             stop_after: None,
             sample_interval: None,
+            groups: None,
+            priors: None,
             real: None,
             requests: Vec::new(),
         }
@@ -399,6 +429,34 @@ impl<'m> RolloutSessionBuilder<'m> {
         self
     }
 
+    /// Simulated backend: run this explicit group list instead of
+    /// generating one from the workload config + seed. The multi-epoch
+    /// [`crate::iteration::TrainingDriver`] uses this to feed
+    /// [`crate::workload::generate_epoch`] re-samples through the
+    /// session layer.
+    pub fn groups(mut self, groups: Vec<GroupSpec>) -> Self {
+        self.groups = Some(groups);
+        self
+    }
+
+    /// Warm-start the rollout from a cross-iteration
+    /// [`ContextStore`]: the context manager receives per-group length
+    /// priors (skipping the cold-start probe tax), the simulated SD
+    /// model starts with historical reference counts, and the real
+    /// engine pre-populates its DGDS CSTs from stored token streams.
+    pub fn context_store(self, store: &ContextStore) -> Self {
+        self.context_priors(store.priors())
+    }
+
+    /// Like [`context_store`](Self::context_store), from an
+    /// already-extracted prior bundle.
+    pub fn context_priors(mut self, priors: ContextPriors) -> Self {
+        if !priors.is_empty() {
+            self.priors = Some(priors);
+        }
+        self
+    }
+
     /// Attach a streaming observer (may be called repeatedly).
     pub fn observer(mut self, o: Box<dyn RolloutObserver>) -> Self {
         self.observers.push(o);
@@ -439,11 +497,12 @@ impl<'m> RolloutSessionBuilder<'m> {
                 || self.system.is_some()
                 || self.stop_after.is_some()
                 || self.sample_interval.is_some()
+                || self.groups.is_some()
             {
                 bail!(
-                    "scheduler/sd/seed/system/stop_after/sample_interval \
-                     are simulator-only; configure the real engine via \
-                     RealRolloutConfig"
+                    "scheduler/sd/seed/system/stop_after/sample_interval/\
+                     groups are simulator-only; configure the real engine \
+                     via RealRolloutConfig"
                 );
             }
             return Ok(RolloutSession {
@@ -451,6 +510,7 @@ impl<'m> RolloutSessionBuilder<'m> {
                     model,
                     cfg,
                     requests: Some(self.requests),
+                    priors: self.priors,
                 }),
                 observers: self.observers,
             });
@@ -480,6 +540,8 @@ impl<'m> RolloutSessionBuilder<'m> {
                 seed: self.seed.unwrap_or(42),
                 stop_after: self.stop_after,
                 sample_interval: self.sample_interval,
+                groups: self.groups,
+                priors: self.priors,
             }),
             observers: self.observers,
         })

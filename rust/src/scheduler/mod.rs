@@ -67,6 +67,17 @@ pub trait Scheduler {
         sys: &SystemConfig,
     );
 
+    /// Inject cross-iteration warm-start context (the
+    /// [`crate::iteration::ContextStore`] priors). Called by the driver
+    /// after [`init`](Self::init). Returns whether the policy consumed
+    /// the priors — the driver uses this to keep the SD layer's
+    /// probe-priority handling consistent with the scheduler's. The
+    /// default ignores history, which is correct for history-free
+    /// baselines.
+    fn warm_start(&mut self, _priors: &crate::iteration::ContextPriors) -> bool {
+        false
+    }
+
     /// Produce as many assignments as current capacity allows.
     fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment>;
 

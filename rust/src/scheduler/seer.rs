@@ -32,6 +32,9 @@ pub struct SeerScheduler {
     rng: Rng,
     /// Scratch: scheduling decisions since the last starvation pick.
     picks_since_guard: u64,
+    /// Cross-iteration length priors (survive `init`, which rebuilds the
+    /// context manager at iteration start).
+    priors: Vec<(crate::workload::GroupId, u32)>,
 }
 
 impl SeerScheduler {
@@ -43,6 +46,7 @@ impl SeerScheduler {
             starvation_frac: 0.05,
             rng: Rng::new(0x5EE12),
             picks_since_guard: 0,
+            priors: Vec::new(),
         }
     }
 
@@ -75,11 +79,28 @@ impl Scheduler for SeerScheduler {
         cfg: &WorkloadConfig,
         sys: &SystemConfig,
     ) {
-        self.ctx_mgr = ContextManager::new(cfg.max_gen_len);
+        self.ctx_mgr = ContextManager::with_priors(
+            cfg.max_gen_len,
+            self.priors.iter().copied(),
+        );
         self.ctx_mgr.init_groups(groups);
         self.chunk_size = sys.chunk_size;
         self.starvation_frac = sys.starvation_guard_frac;
         self.picks_since_guard = 0;
+    }
+
+    /// Learned mode consumes cross-iteration length priors: prior'd
+    /// groups start the rollout with a usable LFS estimate and skip the
+    /// high-priority probe path entirely (no cold-start probe tax).
+    /// Oracle already knows true lengths and No-Context ignores length
+    /// context by design, so both leave history untouched.
+    fn warm_start(&mut self, priors: &crate::iteration::ContextPriors) -> bool {
+        if self.mode != ContextMode::Learned {
+            return false;
+        }
+        self.priors = priors.estimates.clone();
+        self.ctx_mgr.inject_priors(self.priors.iter().copied());
+        true
     }
 
     fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
@@ -106,9 +127,12 @@ impl Scheduler for SeerScheduler {
         let mut rest: Vec<RequestId> = Vec::new();
         for id in ctx.buffer.waiting() {
             let r = ctx.buffer.get(id);
+            // A probe only needs the high-priority path while the group
+            // has no length context at all — neither an online finish
+            // nor a warm cross-iteration prior.
             let probe_pending = r.is_probe
                 && self.mode == ContextMode::Learned
-                && !self.ctx_mgr.has_signal(r.group());
+                && !self.ctx_mgr.has_context(r.group());
             if probe_pending {
                 probes.push(id);
             } else {
@@ -212,6 +236,14 @@ impl Scheduler for SeerScheduler {
 
     fn on_finished(&mut self, req: &ReqState) {
         self.ctx_mgr.on_finished(req.group(), req.generated);
+    }
+
+    /// The missed update path (regression fix): a chunk lease ended and
+    /// the request migrates back into the queue — record its in-flight
+    /// progress so a stale learned/prior estimate can't demote a
+    /// demonstrably long group.
+    fn on_chunk_end(&mut self, req: &ReqState) {
+        self.ctx_mgr.on_progress(req.group(), req.generated);
     }
 
     fn uses_global_pool(&self) -> bool {
@@ -339,6 +371,72 @@ mod tests {
         for (_, n) in per_inst {
             assert!(n <= 2);
         }
+    }
+
+    #[test]
+    fn warm_priors_skip_probe_path_and_seed_estimates() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 5);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = SeerScheduler::new(ContextMode::Learned);
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let priors = crate::iteration::ContextPriors {
+            estimates: w.groups.iter().map(|g| (g.id, 321)).collect(),
+            ..Default::default()
+        };
+        assert!(s.warm_start(&priors), "Learned mode must consume priors");
+        for g in &w.groups {
+            assert_eq!(s.context_manager().estimate(g.id), 321);
+            assert!(s.context_manager().has_prior(g.id));
+        }
+        // With every group prior'd, nothing takes the probe fast path:
+        // the first assignments follow LFS order, not probe-SFS.
+        let instances = vec![InstanceView {
+            id: InstanceId(0),
+            free_kv_tokens: cfg.hw.kv_capacity_tokens,
+            capacity_tokens: cfg.hw.kv_capacity_tokens,
+            running: 0,
+            max_batch: 4,
+        }];
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        let assignments = s.schedule(&ctx);
+        assert!(!assignments.is_empty());
+        // Re-init for a new iteration must retain the injected priors.
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        assert_eq!(s.context_manager().estimate(w.groups[0].id), 321);
+    }
+
+    /// Regression: migrating probes used to leave no trace — the
+    /// scheduler had no `on_chunk_end` override, so a group whose probe
+    /// re-entered the queue with substantial progress could be demoted
+    /// below its true LFS rank once a short sibling finished first.
+    #[test]
+    fn chunk_end_progress_reaches_context_manager() {
+        let (mut s, mut buffer, _) = setup(ContextMode::Learned);
+        let id = buffer.all()[0].id();
+        let group = buffer.get(id).group();
+        buffer.mark_scheduled(id);
+        {
+            let r = buffer.get_mut(id);
+            r.generated = 500;
+        }
+        buffer.mark_waiting(id);
+        s.on_chunk_end(buffer.get(id));
+        // A short sibling finishing must not shrink the estimate below
+        // the migrated sibling's observed progress.
+        let sib = buffer.all().iter().find(|r| r.group() == group && r.id() != id).unwrap().id();
+        buffer.mark_scheduled(sib);
+        {
+            let r = buffer.get_mut(sib);
+            r.generated = 10;
+        }
+        buffer.mark_finished(sib);
+        s.on_finished(buffer.get(sib));
+        assert_eq!(s.context_manager().estimate(group), 500);
     }
 
     #[test]

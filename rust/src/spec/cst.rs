@@ -30,12 +30,18 @@ struct Cursor {
     appended: usize,
 }
 
+/// Reserved request-id base for [`Cst::preload`] streams; live request
+/// ids stay far below it.
+const HISTORY_REQ_BASE: u64 = 1 << 48;
+
 /// Generalized suffix automaton over a group's token streams.
 #[derive(Debug, Default)]
 pub struct Cst {
     states: Vec<State>,
     cursors: BTreeMap<u64, Cursor>,
     total_tokens: u64,
+    /// Count of historical streams ingested via [`Cst::preload`].
+    history_streams: u64,
 }
 
 impl Cst {
@@ -49,6 +55,7 @@ impl Cst {
             }],
             cursors: BTreeMap::new(),
             total_tokens: 0,
+            history_streams: 0,
         }
     }
 
@@ -84,6 +91,24 @@ impl Cst {
             self.bump_counts(cur.state);
         }
         self.cursors.insert(req, cur);
+    }
+
+    /// Preload historical token streams (cross-iteration warm start):
+    /// each stream is appended under a reserved request id so it can
+    /// never collide with — or be extended by — a live request's
+    /// idempotent-append cursor. Drafting then has reference material
+    /// from the first lookup, before any live sibling produces tokens.
+    pub fn preload(&mut self, streams: &[Vec<u32>]) {
+        for (i, s) in streams.iter().enumerate() {
+            let id = HISTORY_REQ_BASE + self.history_streams + i as u64;
+            self.append(id, 0, s);
+        }
+        self.history_streams += streams.len() as u64;
+    }
+
+    /// Streams ingested through [`preload`](Self::preload).
+    pub fn history_streams(&self) -> u64 {
+        self.history_streams
     }
 
     /// Generalized SAM extension from state `last` with token `c`.
@@ -367,6 +392,28 @@ mod tests {
         assert!(cst.contains(&[3, 4, 5]));
         assert!(cst.n_states() >= states);
         cst.check_invariants();
+    }
+
+    #[test]
+    fn preload_grounds_speculation_before_any_live_tokens() {
+        let mut cst = Cst::new();
+        // Last epoch's sibling streams share the [10, 11, 12, 13] motif.
+        cst.preload(&[vec![1, 10, 11, 12, 13, 2], vec![3, 10, 11, 12, 13, 4]]);
+        cst.check_invariants();
+        assert_eq!(cst.history_streams(), 2);
+        // A fresh live request drafts from history alone.
+        let draft = cst.speculate(&[9, 10, 11], 2, 8, 2);
+        assert_eq!(draft, vec![12, 13]);
+        // Live appends continue to work alongside preloaded history,
+        // including a live request id that starts from zero.
+        cst.append(0, 0, &[10, 11, 12, 5]);
+        cst.check_invariants();
+        assert!(cst.contains(&[12, 5]));
+        assert!(cst.contains(&[12, 13]));
+        // A second preload batch keeps reserved ids distinct.
+        cst.preload(&[vec![7, 7, 7]]);
+        assert_eq!(cst.history_streams(), 3);
+        assert!(cst.contains(&[7, 7, 7]));
     }
 
     #[test]

@@ -37,6 +37,12 @@ enum Msg {
         group: String,
         ttl: Duration,
     },
+    /// Cross-iteration warm start: preload historical streams into the
+    /// group's CST (reserved request ids; see [`Cst::preload`]).
+    WarmStart {
+        group: String,
+        streams: Vec<Vec<u32>>,
+    },
     Fetch {
         groups: Vec<String>,
         reply: Sender<Vec<(String, GroupHandle)>>,
@@ -94,6 +100,16 @@ impl DraftServer {
                         .expect("cst lock poisoned")
                         .append(request, prev_token_count, &tokens);
                 }
+                Msg::WarmStart { group, streams } => {
+                    let e = groups.entry(group).or_insert_with(|| Entry {
+                        cst: Arc::new(RwLock::new(Cst::new())),
+                        expires: now + default_ttl,
+                    });
+                    e.cst
+                        .write()
+                        .expect("cst lock poisoned")
+                        .preload(&streams);
+                }
                 Msg::Register { group, ttl } => {
                     let e = groups.entry(group).or_insert_with(|| Entry {
                         cst: Arc::new(RwLock::new(Cst::new())),
@@ -131,6 +147,21 @@ impl DraftServer {
             request: request_id,
             prev_token_count,
             tokens: new_tokens.to_vec(),
+        });
+    }
+
+    /// Preload last iteration's token streams into `group_id`'s CST
+    /// (asynchronous, like `update_cst`): grouped SD then has reference
+    /// material from the first verify step of the new iteration instead
+    /// of rebuilding its corpus from scratch. Call
+    /// [`flush`](Self::flush) to barrier before the first speculation.
+    pub fn warm_start(&self, group_id: &str, streams: &[Vec<u32>]) {
+        if streams.is_empty() {
+            return;
+        }
+        let _ = self.tx.send(Msg::WarmStart {
+            group: group_id.to_string(),
+            streams: streams.to_vec(),
         });
     }
 
@@ -269,6 +300,35 @@ mod tests {
         assert_eq!(drafts.len(), 1);
         assert!(!drafts[0].is_empty());
         assert_eq!(drafts[0][0].tokens[0], 4);
+    }
+
+    #[test]
+    fn warm_start_speculates_from_history_alone() {
+        let server = DraftServer::spawn();
+        // No live tokens at all — only last epoch's streams.
+        server.warm_start(
+            "g0",
+            &[vec![1, 2, 3, 4, 5], vec![9, 2, 3, 4, 7]],
+        );
+        server.flush();
+        let mut client = DraftClient::new();
+        client.fetch(&server, &["g0".to_string()]);
+        let drafts = client.batch_speculate(&[(
+            "g0",
+            &[0, 2, 3][..],
+            SpeculationArgs::default(),
+        )]);
+        assert_eq!(drafts.len(), 1);
+        assert!(!drafts[0].is_empty(), "history must ground drafts");
+        assert_eq!(drafts[0][0].tokens[0], 4);
+        // Live updates coexist with warm history.
+        server.update_cst("g0", 0, 0, &[2, 3, 8]);
+        server.flush();
+        let handles = server.fetch_cst(&["g0".to_string()]);
+        let cst = handles[0].1.read().unwrap();
+        assert_eq!(cst.history_streams(), 2);
+        assert!(cst.contains(&[3, 8]));
+        cst.check_invariants();
     }
 
     #[test]

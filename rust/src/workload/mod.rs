@@ -112,6 +112,43 @@ pub fn generate_iteration(cfg: &WorkloadConfig, seed: u64) -> IterationWorkload 
     IterationWorkload { groups }
 }
 
+/// Re-sample one *epoch* of the same prompt set, with per-group length
+/// drift.
+///
+/// Synchronous GRPO revisits the same prompts every epoch; lengths stay
+/// group-correlated across epochs but drift as the policy updates. This
+/// generator models exactly that: epoch 0 is identical to
+/// [`generate_iteration`] (same seed ⇒ same workload), and epoch `e > 0`
+/// keeps every group's identity (ids, prompt length) while scaling its
+/// lengths by a per-(epoch, group) log-normal factor with sigma `drift`
+/// plus a smaller per-request factor with sigma `drift / 2`. With
+/// `drift = 0` every epoch is identical. Deterministic in
+/// `(cfg, seed, epoch, drift)`.
+pub fn generate_epoch(
+    cfg: &WorkloadConfig,
+    seed: u64,
+    epoch: u64,
+    drift: f64,
+) -> IterationWorkload {
+    let mut w = generate_iteration(cfg, seed);
+    if epoch == 0 || drift == 0.0 {
+        return w;
+    }
+    let mut rng = Rng::new(seed ^ 0xE90C_4 ^ epoch.wrapping_mul(0x9E37_79B9));
+    for g in &mut w.groups {
+        let mut grng = rng.fork(g.id.0 as u64);
+        // Group-level drift dominates; requests wobble around it.
+        let group_f = grng.lognormal(-drift * drift / 2.0, drift);
+        let s = drift / 2.0;
+        for r in &mut g.requests {
+            let req_f = grng.lognormal(-s * s / 2.0, s);
+            r.gen_len =
+                ((r.gen_len as f64 * group_f * req_f) as u32).clamp(1, cfg.max_gen_len);
+        }
+    }
+    w
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +179,53 @@ mod tests {
             |w: &IterationWorkload| w.requests().map(|r| r.gen_len).collect::<Vec<_>>();
         assert_eq!(lens(&a), lens(&b));
         assert_ne!(lens(&a), lens(&c));
+    }
+
+    #[test]
+    fn epoch_zero_matches_iteration() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let a = generate_iteration(&cfg, 11);
+        let b = generate_epoch(&cfg, 11, 0, 0.1);
+        let lens =
+            |w: &IterationWorkload| w.requests().map(|r| r.gen_len).collect::<Vec<_>>();
+        assert_eq!(lens(&a), lens(&b));
+    }
+
+    #[test]
+    fn epochs_drift_but_stay_group_correlated() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let e0 = generate_epoch(&cfg, 9, 0, 0.1);
+        let e1 = generate_epoch(&cfg, 9, 1, 0.1);
+        let e1b = generate_epoch(&cfg, 9, 1, 0.1);
+        // Deterministic per (seed, epoch).
+        let lens =
+            |w: &IterationWorkload| w.requests().map(|r| r.gen_len).collect::<Vec<_>>();
+        assert_eq!(lens(&e1), lens(&e1b));
+        assert_ne!(lens(&e0), lens(&e1));
+        // Group structure (ids, prompt) is preserved...
+        for (a, b) in e0.groups.iter().zip(e1.groups.iter()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+        }
+        // ...and lengths are *correlated* across epochs: a small drift
+        // keeps each group's mean within a modest factor of epoch 0's.
+        for (a, b) in e0.groups.iter().zip(e1.groups.iter()) {
+            let (ma, mb) = (a.mean_gen_len().max(1.0), b.mean_gen_len().max(1.0));
+            let ratio = (ma / mb).max(mb / ma);
+            assert!(ratio < 2.5, "group {:?} drifted {ratio}x", a.id);
+        }
+    }
+
+    #[test]
+    fn zero_drift_epochs_identical() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let lens = |e: u64| {
+            generate_epoch(&cfg, 4, e, 0.0)
+                .requests()
+                .map(|r| r.gen_len)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(lens(0), lens(3));
     }
 
     #[test]
