@@ -96,6 +96,21 @@ impl RequestBuffer {
         self.waiting.remove(&id);
     }
 
+    /// Terminate a request as *aborted* (fault script): the lifecycle
+    /// ends like `mark_finished`, but the request is flagged so
+    /// completion accounting excludes it.
+    pub fn mark_aborted(&mut self, id: RequestId) {
+        let r = self.get_mut(id);
+        assert!(!r.is_finished(), "aborting finished request {id:?}");
+        r.phase = Phase::Finished;
+        r.aborted = true;
+        self.waiting.remove(&id);
+    }
+
+    pub fn n_aborted(&self) -> usize {
+        self.reqs.iter().filter(|r| r.aborted).count()
+    }
+
     /// Consistency check for the invariant tests: every request is in
     /// exactly one of {waiting set, running, finished}.
     pub fn check_invariants(&self) {
@@ -113,6 +128,13 @@ impl RequestBuffer {
                 ),
             }
             assert!(r.generated <= r.spec.gen_len, "overran true length");
+            if r.aborted {
+                assert!(
+                    r.is_finished(),
+                    "{:?} aborted but still live",
+                    r.id()
+                );
+            }
         }
     }
 }
@@ -155,6 +177,29 @@ mod tests {
         b.mark_finished(id);
         assert_eq!(b.n_finished(), 1);
         b.check_invariants();
+    }
+
+    #[test]
+    fn abort_lifecycle() {
+        let mut b = buffer();
+        let id = b.all()[0].id();
+        b.mark_aborted(id);
+        assert_eq!(b.n_waiting(), b.len() - 1);
+        assert_eq!(b.n_aborted(), 1);
+        // Aborted counts as phase-finished (the lifecycle is over)...
+        assert_eq!(b.n_finished(), 1);
+        // ...and is terminal.
+        b.check_invariants();
+    }
+
+    #[test]
+    #[should_panic(expected = "aborting finished request")]
+    fn abort_after_finish_panics() {
+        let mut b = buffer();
+        let id = b.all()[0].id();
+        b.mark_scheduled(id);
+        b.mark_finished(id);
+        b.mark_aborted(id);
     }
 
     #[test]

@@ -50,6 +50,10 @@ pub struct ReqState {
     pub chunk_remaining: u32,
     /// Designated speculative probe of its group (paper §3.3).
     pub is_probe: bool,
+    /// Terminated by a fault-script abort rather than by reaching its
+    /// true length. Aborted requests sit in `Phase::Finished` (the
+    /// lifecycle is over) but are excluded from completion accounting.
+    pub aborted: bool,
     pub first_scheduled: Option<SimTime>,
     pub finished_at: Option<SimTime>,
     /// Number of chunks this request has been scheduled as.
@@ -71,6 +75,7 @@ impl ReqState {
             needs_reprefill: true,
             chunk_remaining: 0,
             is_probe,
+            aborted: false,
             first_scheduled: None,
             finished_at: None,
             chunks_run: 0,

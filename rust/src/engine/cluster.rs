@@ -10,6 +10,15 @@
 //! construct runs through [`crate::rollout::RolloutSession`] rather than
 //! driving `ClusterSim` directly; lifecycle transitions stream to the
 //! session's observers.
+//!
+//! The fleet is *elastic*: a [`FaultPlan`] attached via
+//! [`ClusterSim::with_faults`] replays instance crashes, stragglers,
+//! recoveries, scale events and request aborts at exact virtual
+//! timestamps. A lost instance's in-flight requests drain back through
+//! the divided-rollout re-queue path (the scheduler hears about it via
+//! [`Scheduler::on_instance_lost`], preserving in-flight progress in the
+//! context manager), so faults change *when* requests finish, never
+//! *whether* — every request completes or is explicitly aborted.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +32,7 @@ use crate::rollout::observer::{ObserverHub, RolloutEvent};
 use crate::scheduler::{InstanceView, SchedCtx, Scheduler};
 use crate::sim::clock::SimTime;
 use crate::sim::events::EventQueue;
+use crate::sim::faults::{FaultEvent, FaultPlan};
 use crate::spec::mba::{mba_allocate, MbaInputs};
 use crate::spec::simmodel::{SdStrategy, SpecCtx, SpecSim};
 use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
@@ -33,9 +43,14 @@ enum Event {
     /// End of a planned macro-interval on an instance.
     Wake { instance: InstanceId, epoch: u64 },
     /// A scheduled request's KV transfer / (re)prefill completed.
-    Arrive { req: RequestId },
+    /// `chunk_seq` is the request's `chunks_run` at scheduling time;
+    /// arrivals from leases revoked by a fault drain are stale and
+    /// ignored (the drain may have re-scheduled the request already).
+    Arrive { req: RequestId, chunk_seq: u32 },
     /// Periodic telemetry sampling.
     Sample,
+    /// A scripted fault fires (index into the attached `FaultPlan`).
+    Fault { idx: usize },
 }
 
 /// Result of a rollout run.
@@ -85,6 +100,21 @@ pub struct ClusterSim {
     /// Streaming lifecycle-event sinks (the session layer's observer
     /// API); empty by default and free when empty.
     observers: ObserverHub,
+    /// Scripted faults, replayed at their virtual timestamps.
+    faults: FaultPlan,
+    /// Unfired `InstanceRecover`/`ScaleUp` events (deadlock detection: a
+    /// fully downed fleet may still be revived by one of these; other
+    /// pending faults cannot bring capacity back).
+    revivals_remaining: usize,
+    /// Requests drained off a lost instance, with the fault time —
+    /// cleared (and counted into recovery latency) at re-admission.
+    drained_by_fault: BTreeMap<RequestId, SimTime>,
+    /// Completions so far (the Partial Rollout stop threshold; aborted
+    /// requests are terminal but do NOT count toward it).
+    n_completed: usize,
+    /// Run cross-cutting invariant checks at every telemetry sample
+    /// (property-test harness; off by default).
+    verify_invariants: bool,
 }
 
 impl ClusterSim {
@@ -132,12 +162,48 @@ impl ClusterSim {
             max_events: 50_000_000,
             schedule_dirty: true,
             observers: ObserverHub::new(),
+            faults: FaultPlan::default(),
+            revivals_remaining: 0,
+            drained_by_fault: BTreeMap::new(),
+            n_completed: 0,
+            verify_invariants: false,
         }
     }
 
     /// Attach the streaming observers events are narrated into.
     pub fn with_observers(mut self, observers: ObserverHub) -> Self {
         self.observers = observers;
+        self
+    }
+
+    /// Attach a deterministic fault & elasticity script. Events replay at
+    /// their exact virtual timestamps; same seed + same plan ⇒ same
+    /// event trace. Panics on a structurally invalid plan (bad factors,
+    /// zero-sized scale events) — a scripting bug, not a result.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        plan.validate().expect("invalid fault plan");
+        let plan = plan.sorted();
+        self.revivals_remaining = plan
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.event,
+                    FaultEvent::InstanceRecover { .. }
+                        | FaultEvent::ScaleUp { .. }
+                )
+            })
+            .count();
+        self.faults = plan;
+        self
+    }
+
+    /// Enable per-sample runtime invariant checks (KV pool accounting,
+    /// per-instance concurrency ≤ batch cap, allocator within capacity,
+    /// down instances empty). Used by the property harness; costs one
+    /// fleet scan per telemetry sample.
+    pub fn with_invariant_checks(mut self) -> Self {
+        self.verify_invariants = true;
         self
     }
 
@@ -188,6 +254,12 @@ impl ClusterSim {
     /// (a scheduling deadlock — treated as a bug, not a result).
     pub fn run(mut self) -> RolloutOutcome {
         let debug = std::env::var("SEER_DEBUG").is_ok();
+        // Pin every scripted fault to its virtual timestamp up front, in
+        // plan order (the queue's FIFO tie-break preserves authored order
+        // for same-timestamp events — determinism).
+        for (idx, f) in self.faults.events.iter().enumerate() {
+            self.queue.schedule_at(f.at, Event::Fault { idx });
+        }
         self.try_schedule();
         self.queue.schedule_in(self.sample_interval, Event::Sample);
         let mut events = 0u64;
@@ -247,15 +319,39 @@ impl ClusterSim {
                     self.try_schedule();
                     self.plan_interval(idx, now);
                 }
-                Event::Arrive { req } => {
-                    self.handle_arrival(req, now);
+                Event::Arrive { req, chunk_seq } => {
+                    self.handle_arrival(req, chunk_seq, now);
                 }
                 Event::Sample => {
                     self.record_sample(now);
+                    if self.verify_invariants {
+                        self.assert_runtime_invariants();
+                    }
                     if !self.done() {
+                        // A fully downed fleet with no recover/scale-up
+                        // left to revive it can never finish: fail
+                        // loudly instead of sampling forever.
+                        assert!(
+                            self.instances.iter().any(|i| i.up)
+                                || self.revivals_remaining > 0,
+                            "fault plan leaves no live instances with {} \
+                             requests unfinished",
+                            self.buffer.n_waiting()
+                        );
                         self.queue
                             .schedule_in(self.sample_interval, Event::Sample);
                     }
+                }
+                Event::Fault { idx } => {
+                    let fault = self.faults.events[idx].event;
+                    if matches!(
+                        fault,
+                        FaultEvent::InstanceRecover { .. }
+                            | FaultEvent::ScaleUp { .. }
+                    ) {
+                        self.revivals_remaining -= 1;
+                    }
+                    self.apply_fault(fault, now);
                 }
             }
         }
@@ -268,7 +364,13 @@ impl ClusterSim {
 
     fn done(&self) -> bool {
         if let Some(n) = self.stop_after {
-            if self.buffer.n_finished() >= n {
+            // Count *completions* (each pushed exactly once by
+            // `finish_request`), never phase scans: a request re-queued
+            // by migration or a fault drain must not be double-counted
+            // toward the Partial Rollout threshold, and fault-aborted
+            // requests (phase-finished but never completed) must not
+            // count at all.
+            if self.n_completed >= n {
                 return true;
             }
         }
@@ -293,6 +395,265 @@ impl ClusterSim {
         } else {
             1.0
         };
+        if self.verify_invariants {
+            self.assert_runtime_invariants();
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Fault & elasticity layer.
+    // ------------------------------------------------------------------
+
+    fn live_instance_ids(&self) -> Vec<InstanceId> {
+        self.instances
+            .iter()
+            .filter(|i| i.up)
+            .map(|i| i.id)
+            .collect()
+    }
+
+    fn apply_fault(&mut self, fault: FaultEvent, now: SimTime) {
+        match fault {
+            FaultEvent::InstanceDown { instance } => {
+                self.fault_down(instance, now);
+            }
+            FaultEvent::InstanceSlowdown { instance, factor } => {
+                let idx = instance.0 as usize;
+                if idx >= self.instances.len() || !self.instances[idx].up {
+                    return;
+                }
+                // Close the in-flight interval at the old speed, then
+                // re-plan: the slowdown takes effect immediately.
+                self.commit_and_handle(idx, now);
+                self.instances[idx].slow_factor = factor.max(0.01);
+                self.try_schedule();
+                self.plan_interval(idx, now);
+            }
+            FaultEvent::InstanceRecover { instance } => {
+                let idx = instance.0 as usize;
+                if idx >= self.instances.len() {
+                    return;
+                }
+                let (up, slow) =
+                    (self.instances[idx].up, self.instances[idx].slow_factor);
+                if up && slow == 1.0 {
+                    return; // nothing to recover from
+                }
+                if up {
+                    // Straggler back to full speed: re-price the batch.
+                    self.commit_and_handle(idx, now);
+                    self.instances[idx].slow_factor = 1.0;
+                    self.try_schedule();
+                    self.plan_interval(idx, now);
+                    return;
+                }
+                let inst = &mut self.instances[idx];
+                inst.up = true;
+                inst.slow_factor = 1.0;
+                inst.epoch += 1;
+                // Recovery is capacity arriving, exactly like scale-up:
+                // without this hook a pinned policy would leave the
+                // recovered instance idle (its groups were re-homed at
+                // loss time), and groups still pinned to a dead
+                // instance — possible after a fully-downed interval —
+                // would starve forever.
+                let live = self.live_instance_ids();
+                self.scheduler
+                    .on_instances_added(&[instance], &live, &self.buffer);
+                self.schedule_dirty = true;
+                self.try_schedule();
+            }
+            FaultEvent::ScaleUp { n } => {
+                let start = self.instances.len();
+                for i in 0..n {
+                    self.instances.push(Instance::new(
+                        InstanceId((start + i) as u32),
+                        self.cfg.hw.kv_capacity_tokens,
+                        self.sys.kv_block_tokens,
+                    ));
+                }
+                self.metrics
+                    .busy_time
+                    .resize(self.instances.len(), SimTime::ZERO);
+                self.metrics.instances_added += n as u64;
+                let added: Vec<InstanceId> = (start..start + n)
+                    .map(|i| InstanceId(i as u32))
+                    .collect();
+                let live = self.live_instance_ids();
+                self.scheduler
+                    .on_instances_added(&added, &live, &self.buffer);
+                self.schedule_dirty = true;
+                self.try_schedule();
+            }
+            FaultEvent::ScaleDown { n } => {
+                // Reclaim the highest-indexed live instances, never the
+                // whole fleet: a scale-down below one instance is
+                // clamped (unlike a crash, reclamation is voluntary).
+                let live: Vec<usize> = self
+                    .instances
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, i)| i.up)
+                    .map(|(idx, _)| idx)
+                    .collect();
+                let n = n.min(live.len().saturating_sub(1));
+                for &idx in live.iter().rev().take(n) {
+                    self.fault_down(InstanceId(idx as u32), now);
+                }
+            }
+            FaultEvent::RequestAbort { req } => {
+                self.abort_request(req, now);
+            }
+        }
+    }
+
+    /// An instance dies (crash or reclamation): its uncommitted interval
+    /// progress is discarded (the coordinator never saw those tokens —
+    /// they must be re-generated), its HBM-resident KV is lost, and its
+    /// in-flight requests drain back into the waiting queue through the
+    /// divided-rollout re-queue path.
+    fn fault_down(&mut self, id: InstanceId, now: SimTime) {
+        let idx = id.0 as usize;
+        if idx >= self.instances.len() || !self.instances[idx].up {
+            return;
+        }
+        // Commit-and-discard: the interval's elapsed time was really
+        // spent (busy/steps accounting stands) but its token gains die
+        // with the instance.
+        let doomed = self.instances[idx].commit_until(now);
+        let lost: u64 = doomed.gained.iter().map(|(_, g)| *g as u64).sum();
+        self.metrics.fault_lost_tokens += lost;
+
+        let inst = &mut self.instances[idx];
+        inst.up = false;
+        inst.slow_factor = 1.0;
+        inst.epoch += 1;
+        let running: Vec<RequestId> = inst.running.keys().copied().collect();
+        let pending: Vec<RequestId> = inst.pending.keys().copied().collect();
+        inst.running.clear();
+        inst.pending.clear();
+        let mut drained: Vec<RequestId> = Vec::new();
+        for rid in running.iter().chain(pending.iter()).copied() {
+            self.instances[idx].alloc.release(rid);
+            // The pool never holds a copy for a resident request (fetch
+            // removes entries), so the KV is simply gone: full
+            // re-prefill of prompt + committed progress on re-admission.
+            self.pool.remove(rid);
+            let r = self.buffer.get_mut(rid);
+            r.kv_tokens = 0;
+            r.kv_location = KvLocation::Nowhere;
+            r.needs_reprefill = true;
+            self.buffer.mark_waiting(rid);
+            self.metrics.fault_requeued += 1;
+            self.drained_by_fault.insert(rid, now);
+            drained.push(rid);
+        }
+        // Only resident requests counted toward group concurrency;
+        // pending ones never arrived.
+        for rid in &running {
+            let group = self.buffer.get(*rid).group();
+            if let Some(gp) = self.group_progress.get_mut(&group) {
+                gp.running = gp.running.saturating_sub(1);
+            }
+        }
+        self.metrics.instances_lost += 1;
+        let live = self.live_instance_ids();
+        // The policy hears about the loss *after* the buffer reflects
+        // it: the default hook routes drained requests through
+        // on_chunk_end (context-manager progress preservation), pinned
+        // policies re-home the lost instance's queue.
+        self.scheduler
+            .on_instance_lost(id, &drained, &live, &self.buffer);
+        self.observers.emit(RolloutEvent::InstanceLost {
+            instance: id,
+            drained: drained.len() as u32,
+            now,
+        });
+        self.schedule_dirty = true;
+        self.try_schedule();
+    }
+
+    /// Scripted request abort: terminal, excluded from completions. A
+    /// no-op for unknown or already-terminal requests.
+    fn abort_request(&mut self, req: RequestId, now: SimTime) {
+        if req.0 as usize >= self.buffer.len() {
+            return;
+        }
+        if self.buffer.get(req).is_finished() {
+            return;
+        }
+        let mut replan: Option<usize> = None;
+        if let Phase::Running(inst_id) = self.buffer.get(req).phase {
+            let idx = inst_id.0 as usize;
+            // Close the in-flight interval so batchmates keep their
+            // progress; the commit may finish or park the victim itself.
+            // Either way the interval is gone, so this instance must be
+            // re-planned below or its resident batch would stall.
+            self.commit_and_handle(idx, now);
+            replan = Some(idx);
+            if let Phase::Running(_) = self.buffer.get(req).phase {
+                let inst = &mut self.instances[idx];
+                let was_resident = inst.running.remove(&req).is_some();
+                inst.pending.remove(&req);
+                inst.epoch += 1;
+                inst.alloc.release(req);
+                if was_resident {
+                    let group = self.buffer.get(req).group();
+                    if let Some(gp) = self.group_progress.get_mut(&group) {
+                        gp.running = gp.running.saturating_sub(1);
+                    }
+                }
+            }
+        }
+        // The commit above may have finished the request on its own —
+        // then there is nothing left to abort.
+        if !self.buffer.get(req).is_finished() {
+            self.pool.remove(req);
+            let generated = self.buffer.get(req).generated;
+            if matches!(self.buffer.get(req).phase, Phase::Running(_)) {
+                // Taken off an instance above; route through Waiting so
+                // the buffer's phase/set bookkeeping stays consistent.
+                self.buffer.mark_waiting(req);
+            }
+            self.buffer.mark_aborted(req);
+            self.metrics.aborted += 1;
+            self.drained_by_fault.remove(&req);
+            self.observers
+                .emit(RolloutEvent::Aborted { req, generated, now });
+        }
+        self.schedule_dirty = true;
+        self.try_schedule();
+        if let Some(idx) = replan {
+            self.plan_interval(idx, now);
+        }
+    }
+
+    /// Cross-cutting runtime invariants (property harness): pool
+    /// accounting conserved, per-instance concurrency within the batch
+    /// cap, allocator within capacity, down instances empty.
+    fn assert_runtime_invariants(&self) {
+        self.pool.check_invariants();
+        for inst in &self.instances {
+            assert!(
+                inst.running.len() <= self.cfg.hw.max_batch,
+                "instance {} over batch cap: {} > {}",
+                inst.id.0,
+                inst.running.len(),
+                self.cfg.hw.max_batch
+            );
+            assert!(
+                inst.alloc.used_blocks() <= inst.alloc.capacity_blocks(),
+                "instance {} KV over-committed",
+                inst.id.0
+            );
+            if !inst.up {
+                assert!(
+                    inst.running.is_empty() && inst.pending.is_empty(),
+                    "down instance {} still holds requests",
+                    inst.id.0
+                );
+            }
+        }
     }
 
     // ------------------------------------------------------------------
@@ -301,7 +662,7 @@ impl ClusterSim {
 
     fn plan_interval(&mut self, idx: usize, now: SimTime) {
         let inst = &self.instances[idx];
-        if inst.interval.is_some() || inst.running.is_empty() {
+        if !inst.up || inst.interval.is_some() || inst.running.is_empty() {
             return;
         }
 
@@ -477,9 +838,14 @@ impl ClusterSim {
         let _ = max_gamma;
         let step_time = self.cost.step_time(batch, kv_tokens, positions)
             + self.spec.draft_cost(batch, mean_gamma);
+        // Straggler model: a slowed instance pays `slow_factor`× the
+        // modeled step time until it recovers.
+        let step_us = ((step_time.as_micros().max(1) as f64)
+            * inst.slow_factor)
+            .ceil() as u64;
         let iv = Interval {
             start: now,
-            step_us: step_time.as_micros().max(1),
+            step_us: step_us.max(1),
             steps: n,
         };
         let end = iv.end();
@@ -620,6 +986,7 @@ impl ClusterSim {
         let gen_len = r.generated;
         let group = r.group();
         self.buffer.mark_finished(id);
+        self.n_completed += 1;
         self.metrics.completions.push(Completion {
             id,
             finished_at: now,
@@ -649,9 +1016,12 @@ impl ClusterSim {
         }
         self.schedule_dirty = false;
         let now = self.queue.now();
+        // Down instances are invisible to the policy: they receive no
+        // assignments and contribute no capacity.
         let views: Vec<InstanceView> = self
             .instances
             .iter()
+            .filter(|inst| inst.up)
             .map(|inst| InstanceView {
                 id: inst.id,
                 free_kv_tokens: inst.admission_headroom(self.sys.kv_target_util),
@@ -660,6 +1030,9 @@ impl ClusterSim {
                 max_batch: self.cfg.hw.max_batch,
             })
             .collect();
+        if views.is_empty() {
+            return; // fully downed fleet; a recover/scale-up may revive it
+        }
         let assignments = {
             let ctx = SchedCtx {
                 now,
@@ -673,8 +1046,11 @@ impl ClusterSim {
             let r = self.buffer.get(a.req);
             debug_assert!(matches!(r.phase, Phase::Waiting));
             let demand = r.kv_demand(a.chunk.min(self.sys.chunk_size.max(a.chunk)));
-            // Defense in depth: re-validate against live headroom.
-            if self.instances[idx].admission_headroom(1.0) < demand {
+            // Defense in depth: re-validate against live headroom and
+            // liveness (a buggy policy cannot place onto a down fleet).
+            if !self.instances[idx].up
+                || self.instances[idx].admission_headroom(1.0) < demand
+            {
                 self.schedule_dirty = true;
                 continue;
             }
@@ -716,11 +1092,17 @@ impl ClusterSim {
                 r.first_scheduled = Some(now);
             }
             let base_kv = r.kv_tokens;
+            let chunk_seq = r.chunks_run;
             self.buffer.mark_scheduled(a.req);
             self.instances[idx].pending.insert(a.req, base_kv + chunk as u64);
             self.last_instance.insert(a.req, a.instance);
-            self.queue
-                .schedule_at(now + delay, Event::Arrive { req: a.req });
+            self.queue.schedule_at(
+                now + delay,
+                Event::Arrive {
+                    req: a.req,
+                    chunk_seq,
+                },
+            );
             self.observers.emit(RolloutEvent::Scheduled {
                 req: a.req,
                 instance: a.instance,
@@ -736,12 +1118,23 @@ impl ClusterSim {
         }
     }
 
-    fn handle_arrival(&mut self, id: RequestId, now: SimTime) {
+    fn handle_arrival(&mut self, id: RequestId, chunk_seq: u32, now: SimTime) {
         let r = self.buffer.get(id);
         let Phase::Running(inst_id) = r.phase else {
-            return; // cancelled in flight (should not happen)
+            // Lease revoked in flight: drained by a fault, aborted, or
+            // already parked again — the arrival is stale.
+            return;
         };
+        if r.chunks_run != chunk_seq {
+            // The request was drained by a fault and re-scheduled before
+            // this (older lease's) transfer completed.
+            return;
+        }
         let idx = inst_id.0 as usize;
+        debug_assert!(
+            self.instances[idx].up,
+            "arrival on a down instance survived the drain guards"
+        );
         // Close the in-flight interval before batch composition changes.
         self.commit_and_handle(idx, now);
 
@@ -791,6 +1184,20 @@ impl ClusterSim {
         let group = self.buffer.get(id).group();
         if let Some(gp) = self.group_progress.get_mut(&group) {
             gp.running += 1;
+        }
+        // Fault recovery closes HERE, not at assignment time: only a
+        // materialized placement counts (an in-flight admission can
+        // still bounce on the live-headroom re-check above, in which
+        // case the request stays marked drained and its real, longer
+        // recovery is measured at the next successful arrival).
+        if let Some(t0) = self.drained_by_fault.remove(&id) {
+            self.metrics.fault_recovery_time += now.saturating_sub(t0);
+            self.metrics.fault_recovered += 1;
+            self.observers.emit(RolloutEvent::Rebalanced {
+                req: id,
+                to: inst_id,
+                now,
+            });
         }
         self.plan_interval(idx, now);
     }
@@ -936,6 +1343,162 @@ mod tests {
         .run();
         assert!(out.metrics.completions.len() >= target);
         assert!(out.metrics.completions.len() < out.buffer.len());
+    }
+
+    #[test]
+    fn instance_down_drains_requeues_and_still_completes() {
+        // t=0 faults fire before any completion at every scale.
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 42);
+        let plan = crate::sim::faults::FaultPlan::new().at(
+            0.0,
+            crate::sim::faults::FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        );
+        let out = ClusterSim::new(
+            cfg.clone(),
+            SystemConfig {
+                chunk_size: 128,
+                ..Default::default()
+            },
+            w.groups,
+            Box::new(SeerScheduler::new(ContextMode::Learned)),
+            SdStrategy::None,
+        )
+        .with_faults(plan)
+        .with_invariant_checks()
+        .run();
+        assert_eq!(out.metrics.instances_lost, 1);
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter);
+        // Everything the initial scheduling cycle had placed on the
+        // crashed instance was drained and later recovered.
+        assert_eq!(out.metrics.fault_requeued, out.metrics.fault_recovered);
+        out.buffer.check_invariants();
+    }
+
+    #[test]
+    fn scale_up_instance_receives_work_under_verl() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 42);
+        let plan = crate::sim::faults::FaultPlan::new()
+            .at(0.0, crate::sim::faults::FaultEvent::ScaleUp { n: 1 });
+        let out = ClusterSim::new(
+            cfg.clone(),
+            SystemConfig::default(),
+            w.groups,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        )
+        .with_faults(plan)
+        .run();
+        assert_eq!(out.metrics.instances_added, 1);
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter);
+        assert_eq!(out.metrics.busy_time.len(), cfg.n_instances + 1);
+        assert!(
+            out.metrics.busy_time[cfg.n_instances] > SimTime::ZERO,
+            "scale-up instance never did any work"
+        );
+    }
+
+    #[test]
+    fn abort_terminates_without_completion() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 42);
+        let plan = crate::sim::faults::FaultPlan::new().at(
+            0.0,
+            crate::sim::faults::FaultEvent::RequestAbort {
+                req: crate::workload::RequestId(3),
+            },
+        );
+        let out = ClusterSim::new(
+            cfg.clone(),
+            SystemConfig::default(),
+            w.groups,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        )
+        .with_faults(plan)
+        .run();
+        assert_eq!(out.metrics.aborted, 1);
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter - 1);
+        assert!(out.buffer.get(crate::workload::RequestId(3)).aborted);
+        out.buffer.check_invariants();
+    }
+
+    /// Regression (review finding): with a pinned policy, downing the
+    /// whole fleet and then recovering one instance used to starve
+    /// forever — the loss hook had no live instance to re-pin onto, and
+    /// recovery fired no hook, so every group stayed pinned to a dead
+    /// instance while the liveness assert saw a healthy fleet. Recovery
+    /// now fires `on_instances_added`, which re-homes the waiting work.
+    #[test]
+    fn recovery_after_full_outage_unsticks_pinned_policies() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = crate::workload::generate_iteration(&cfg, 42);
+        let plan = crate::sim::faults::FaultPlan::new()
+            .at(
+                0.0,
+                crate::sim::faults::FaultEvent::InstanceDown {
+                    instance: InstanceId(1),
+                },
+            )
+            .at(
+                0.0,
+                crate::sim::faults::FaultEvent::InstanceDown {
+                    instance: InstanceId(0),
+                },
+            )
+            .at(
+                0.0,
+                crate::sim::faults::FaultEvent::InstanceRecover {
+                    instance: InstanceId(1),
+                },
+            );
+        let out = ClusterSim::new(
+            cfg.clone(),
+            SystemConfig::default(),
+            w.groups,
+            Box::new(VerlScheduler::new()),
+            SdStrategy::None,
+        )
+        .with_faults(plan)
+        .run();
+        assert_eq!(out.metrics.instances_lost, 2);
+        assert_eq!(out.metrics.completions.len(), cfg.reqs_per_iter);
+        out.buffer.check_invariants();
+    }
+
+    #[test]
+    fn slowdown_stretches_the_rollout() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let run_with = |plan: crate::sim::faults::FaultPlan| {
+            let w = crate::workload::generate_iteration(&cfg, 42);
+            ClusterSim::new(
+                cfg.clone(),
+                SystemConfig::default(),
+                w.groups,
+                Box::new(VerlScheduler::new()),
+                SdStrategy::None,
+            )
+            .with_faults(plan)
+            .run()
+        };
+        let clean = run_with(crate::sim::faults::FaultPlan::new());
+        let slow = run_with(crate::sim::faults::FaultPlan::new().at(
+            0.0,
+            crate::sim::faults::FaultEvent::InstanceSlowdown {
+                instance: InstanceId(0),
+                factor: 3.0,
+            },
+        ));
+        assert!(
+            slow.metrics.makespan > clean.metrics.makespan,
+            "3x straggler did not stretch the rollout: {:?} vs {:?}",
+            slow.metrics.makespan,
+            clean.metrics.makespan
+        );
+        assert_eq!(slow.metrics.completions.len(), cfg.reqs_per_iter);
     }
 
     #[test]

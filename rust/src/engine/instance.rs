@@ -73,6 +73,12 @@ pub struct Instance {
     pub epoch: u64,
     pub busy: SimTime,
     pub steps_total: u64,
+    /// Fault layer: false while the instance is crashed or reclaimed.
+    /// Down instances hold no requests and receive no assignments.
+    pub up: bool,
+    /// Fault layer: multiplier on modeled step time (1.0 = full speed,
+    /// > 1.0 = straggler under an `InstanceSlowdown` fault).
+    pub slow_factor: f64,
 }
 
 impl Instance {
@@ -87,6 +93,8 @@ impl Instance {
             epoch: 0,
             busy: SimTime::ZERO,
             steps_total: 0,
+            up: true,
+            slow_factor: 1.0,
         }
     }
 

@@ -1,0 +1,98 @@
+//! `faults` experiment (extension beyond the paper): tail latency and
+//! wasted-work overhead under an *identical* deterministic fault script —
+//! Seer vs veRL vs StreamRL-Oracle.
+//!
+//! The script crashes one instance early, turns another into a straggler
+//! mid-run, scales a replacement in, and finally recovers the crashed
+//! instance — the elastic-fleet scenario Seer's divided rollout was built
+//! for (PAPER.md §4; Laminar makes the same argument for RL post-training
+//! at scale). All three systems replay the same script at the same
+//! virtual timestamps, so differences are pure scheduling policy: Seer's
+//! chunk-level leases bound the work resident on any one instance, so a
+//! crash loses less progress and the drained requests re-enter the LFS
+//! queue with their context intact; the baselines re-pin whole groups and
+//! re-prefill everything the crash destroyed.
+
+use crate::config::TaskPreset;
+use crate::sim::faults::{FaultEvent, FaultPlan};
+use crate::spec::simmodel::SdStrategy;
+use crate::util::table::{fmt_secs, Table};
+use crate::workload::InstanceId;
+
+use super::common::Scale;
+
+pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let preset = TaskPreset::Qwen2Vl72b;
+
+    // Size the script to the workload: fractions of a clean baseline
+    // makespan, so the same scenario shape holds at every scale.
+    let clean = scale
+        .session(preset, "verl", SdStrategy::None)
+        .run()?;
+    let horizon = clean.metrics.makespan.as_secs_f64();
+    let plan = FaultPlan::new()
+        .at(
+            0.15 * horizon,
+            FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        )
+        .at(
+            0.30 * horizon,
+            FaultEvent::InstanceSlowdown {
+                instance: InstanceId(0),
+                factor: 2.5,
+            },
+        )
+        .at(0.40 * horizon, FaultEvent::ScaleUp { n: 1 })
+        .at(
+            0.60 * horizon,
+            FaultEvent::InstanceRecover {
+                instance: InstanceId(1),
+            },
+        )
+        .sorted();
+
+    let mut t = Table::new(
+        "Fault tolerance — identical fault script, all schedulers",
+        &[
+            "System",
+            "Makespan",
+            "Tail (10%)",
+            "Lost tokens",
+            "Re-prefill",
+            "Requeued",
+            "Recovery",
+        ],
+    );
+    for (label, scheduler, sd) in [
+        ("veRL", "verl", SdStrategy::None),
+        ("StreamRL-O", "streamrl", SdStrategy::None),
+        ("SEER", "seer", SdStrategy::GroupedCst),
+    ] {
+        let report = scale
+            .session(preset, scheduler, sd)
+            .faults(plan.clone())
+            .run()?;
+        let m = &report.metrics;
+        anyhow::ensure!(
+            m.instances_lost >= 1,
+            "{label}: fault script never fired (horizon {horizon:.0}s)"
+        );
+        t.row(&[
+            label.into(),
+            fmt_secs(m.makespan.as_secs_f64()),
+            fmt_secs(m.tail_time(0.10).as_secs_f64()),
+            m.fault_lost_tokens.to_string(),
+            m.re_prefill_tokens.to_string(),
+            m.fault_requeued.to_string(),
+            fmt_secs(m.mean_recovery_latency().as_secs_f64()),
+        ]);
+    }
+    t.note(
+        "same seed + same script for every row; divided rollout bounds \
+         per-crash work loss and re-queues with context intact",
+    );
+    t.print();
+    Ok(())
+}

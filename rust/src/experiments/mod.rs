@@ -1,11 +1,13 @@
 //! The experiment harness: one module per table/figure of the paper's
 //! evaluation section (the README's reproduction table maps each id to
 //! its artifact), plus extensions beyond the paper (`multi_iter`: the
-//! cross-iteration context store). Every experiment prints the same
-//! rows/series the paper reports and returns machine-readable results
-//! for the smoke tests.
+//! cross-iteration context store; `faults`: scheduler comparison under a
+//! deterministic fault & elasticity script). Every experiment prints the
+//! same rows/series the paper reports and returns machine-readable
+//! results for the smoke tests.
 
 pub mod common;
+pub mod fault_tolerance;
 pub mod fig10_context;
 pub mod fig11_sd;
 pub mod fig12_partial;
@@ -42,6 +44,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "fig11" => fig11_sd::run(&scale),
         "fig12" => fig12_partial::run(&scale),
         "multi-iter" => multi_iter::run(&scale),
+        "faults" => fault_tolerance::run(&scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n================ {id} ================");
@@ -55,7 +58,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 14] = [
+pub const ALL_IDS: [&str; 15] = [
     "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
-    "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter",
+    "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter", "faults",
 ];

@@ -51,7 +51,10 @@
 //!   [`rollout::PolicyRegistry`]; request lifecycle streams to
 //!   [`rollout::RolloutObserver`]s. The CLI, experiments, benches, and
 //!   the RL loop all construct rollouts here and nowhere else.
-//! * [`sim`] — deterministic discrete-event core (clock, event queue, RNG).
+//! * [`sim`] — deterministic discrete-event core (clock, event queue,
+//!   RNG, and [`sim::faults`] fault & elasticity scripts: instance
+//!   crashes, stragglers, recoveries, scale events and request aborts
+//!   replayed at exact virtual timestamps).
 //! * [`util`] — in-tree substrates for the offline environment: JSON
 //!   parser/serializer, CLI, stats helpers, property-test harness.
 //! * [`config`] — system/workload configuration and the paper's Table 3

@@ -3,7 +3,7 @@
 //!
 //! Subcommands:
 //!   seer experiment <id|all> [--full] [--seed N] [--iters N]
-//!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>] [--json]
+//!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>] [--faults FILE] [--json]
 //!   seer train [--task moonlight] [--iters N] [--save-ctx F] [--load-ctx F]
 //!   seer train --real [--preset small] [--iters N] [--artifacts DIR]
 //!   seer info
@@ -26,10 +26,11 @@ discrete-event cluster simulator and the real-model engine, with
 schedulers and SD strategies resolved by name from the policy registry.
 
 USAGE:
-  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|all>
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
-       [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N] [--json]
+       [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
+       [--faults FILE] [--json]
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
        [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
@@ -37,6 +38,12 @@ USAGE:
 
   rollout --json prints the unified RolloutReport as one JSON object for
   bench/trajectory tooling instead of the human summary line.
+
+  rollout --faults FILE replays a deterministic fault & elasticity script
+  (JSON: instance crashes, stragglers, recoveries, scale events, request
+  aborts) against the chosen scheduler — same seed + same script give a
+  bit-identical report, so scripts are directly comparable across
+  schedulers (see `seer experiment faults`).
 
   train runs N simulated GRPO iterations through the multi-iteration
   driver, warm-starting each from the cross-iteration context store
@@ -55,21 +62,29 @@ fn cmd_rollout(args: &Args) -> Result<()> {
     let cfg = scale.workload(preset);
     let sys = scale.sys(&cfg);
     let json = args.has_flag("json");
-    let session = RolloutSession::builder()
+    let mut builder = RolloutSession::builder()
         .workload(cfg.clone())
         .system(sys)
         .scheduler(args.get_or("scheduler", "seer"))
         .sd(args.get_or("sd", "grouped-cst"))
-        .seed(scale.seed)
-        .build()?;
+        .seed(scale.seed);
+    let mut n_faults = 0usize;
+    if let Some(path) = args.get("faults") {
+        let plan =
+            seer::sim::faults::FaultPlan::load(std::path::Path::new(path))?;
+        n_faults = plan.len();
+        builder = builder.faults(plan);
+    }
+    let session = builder.build()?;
     if !json {
         println!(
-            "rollout: task={} scheduler={} sd={} reqs={} instances={}",
+            "rollout: task={} scheduler={} sd={} reqs={} instances={} faults={}",
             cfg.name,
             session.scheduler_name(),
             session.sd_name(),
             cfg.reqs_per_iter,
-            cfg.n_instances
+            cfg.n_instances,
+            n_faults,
         );
     }
     let report = session.run()?;
@@ -89,6 +104,18 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         m.mean_utilization(),
         m.mean_acceptance_len(),
     );
+    if m.instances_lost + m.instances_added + m.aborted > 0 {
+        println!(
+            "faults: instances lost {}  added {}  requeued {}  \
+             lost tokens {}  aborted {}  mean recovery {:.1}s",
+            m.instances_lost,
+            m.instances_added,
+            m.fault_requeued,
+            m.fault_lost_tokens,
+            m.aborted,
+            m.mean_recovery_latency().as_secs_f64(),
+        );
+    }
     Ok(())
 }
 

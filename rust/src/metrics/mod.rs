@@ -54,6 +54,24 @@ pub struct RolloutMetrics {
     /// Per-instance busy time (forward passes running).
     pub busy_time: Vec<SimTime>,
     pub makespan: SimTime,
+    // --- fault & elasticity layer ------------------------------------
+    /// Requests terminated by a scripted abort (never completed).
+    pub aborted: u64,
+    /// Instances lost to crashes or elastic reclamation.
+    pub instances_lost: u64,
+    /// Instances added by elastic scale-up.
+    pub instances_added: u64,
+    /// Work lost to crashes: uncommitted interval tokens discarded when
+    /// an instance died (they must be re-generated later).
+    pub fault_lost_tokens: u64,
+    /// Requests drained off lost instances back into the waiting queue.
+    pub fault_requeued: u64,
+    /// Σ (re-admission time − fault time) over fault-drained requests
+    /// that were re-admitted; divide by `fault_recovered` for the mean
+    /// recovery latency.
+    pub fault_recovery_time: SimTime,
+    /// Fault-drained requests re-admitted onto a live instance.
+    pub fault_recovered: u64,
 }
 
 impl RolloutMetrics {
@@ -119,6 +137,18 @@ impl RolloutMetrics {
         s
     }
 
+    /// Mean time a fault-drained request spent queued before its next
+    /// placement (zero when no fault recovery happened).
+    pub fn mean_recovery_latency(&self) -> SimTime {
+        if self.fault_recovered == 0 {
+            SimTime::ZERO
+        } else {
+            SimTime::from_micros(
+                self.fault_recovery_time.as_micros() / self.fault_recovered,
+            )
+        }
+    }
+
     /// Difference between the earliest- and latest-finishing instance's
     /// last completion — the §4.2.2 inter-instance imbalance stat.
     pub fn check_complete(&self, expected: usize) {
@@ -148,6 +178,12 @@ pub struct EventCounts {
     pub steps: u64,
     /// Generation progress committed by Step events.
     pub tokens: u64,
+    /// Fault layer: instances lost (crash or reclamation).
+    pub instances_lost: u64,
+    /// Fault layer: fault-drained requests re-admitted somewhere live.
+    pub rebalanced: u64,
+    /// Fault layer: requests terminated by scripted aborts.
+    pub aborted: u64,
     /// All events, of any kind.
     pub events: u64,
 }
@@ -169,6 +205,9 @@ impl RolloutObserver for EventCounts {
                 self.steps += *steps;
                 self.tokens += *tokens;
             }
+            RolloutEvent::InstanceLost { .. } => self.instances_lost += 1,
+            RolloutEvent::Rebalanced { .. } => self.rebalanced += 1,
+            RolloutEvent::Aborted { .. } => self.aborted += 1,
         }
     }
 }
@@ -250,6 +289,13 @@ mod tests {
             tokens: 12,
             now,
         });
+        c.on_event(&RolloutEvent::InstanceLost {
+            instance: inst,
+            drained: 4,
+            now,
+        });
+        c.on_event(&RolloutEvent::Rebalanced { req, to: inst, now });
+        c.on_event(&RolloutEvent::Aborted { req, generated: 5, now });
         assert_eq!(c.scheduled, 1);
         assert_eq!(c.chunk_ends, 2);
         assert_eq!(c.preemptions, 1);
@@ -257,6 +303,21 @@ mod tests {
         assert_eq!(c.finished, 1);
         assert_eq!(c.steps, 3);
         assert_eq!(c.tokens, 12);
-        assert_eq!(c.events, 6);
+        assert_eq!(c.instances_lost, 1);
+        assert_eq!(c.rebalanced, 1);
+        assert_eq!(c.aborted, 1);
+        assert_eq!(c.events, 9);
+    }
+
+    #[test]
+    fn mean_recovery_latency_divides() {
+        let mut m = RolloutMetrics::new(1);
+        assert_eq!(m.mean_recovery_latency(), SimTime::ZERO);
+        m.fault_recovery_time = SimTime::from_secs(10);
+        m.fault_recovered = 4;
+        assert_eq!(
+            m.mean_recovery_latency(),
+            SimTime::from_secs_f64(2.5)
+        );
     }
 }

@@ -688,6 +688,7 @@ impl<'m> RealRollout<'m> {
                 chunks: r.migrations + 1,
                 preemptions: 0,
                 migrations: r.migrations,
+                aborted: false,
             })
             .collect();
         Ok(RolloutReport {

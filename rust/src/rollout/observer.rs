@@ -93,6 +93,48 @@ pub enum RolloutEvent {
         tokens: u64,
         now: SimTime,
     },
+    /// Fault layer: an instance crashed or was reclaimed. Its `drained`
+    /// in-flight requests were returned to the waiting queue (their
+    /// uncommitted progress discarded) and the scheduler was asked to
+    /// rebalance via [`crate::scheduler::Scheduler::on_instance_lost`].
+    InstanceLost {
+        instance: InstanceId,
+        drained: u32,
+        now: SimTime,
+    },
+    /// Fault layer: a request drained off a lost instance was re-admitted
+    /// onto a live placement (the divided-rollout re-queue path closing
+    /// the recovery loop).
+    Rebalanced {
+        req: RequestId,
+        to: InstanceId,
+        now: SimTime,
+    },
+    /// Fault layer: a request was terminated by a scripted abort after
+    /// generating `generated` tokens; it will not complete.
+    Aborted {
+        req: RequestId,
+        generated: u32,
+        now: SimTime,
+    },
+}
+
+impl RolloutEvent {
+    /// The event's timestamp (virtual time on the simulator, wall-clock
+    /// offset on the real backend) — all variants carry one, and streams
+    /// are non-decreasing in it (asserted by the invariant tests).
+    pub fn now(&self) -> SimTime {
+        match self {
+            RolloutEvent::Scheduled { now, .. }
+            | RolloutEvent::ChunkEnd { now, .. }
+            | RolloutEvent::Migration { now, .. }
+            | RolloutEvent::Finished { now, .. }
+            | RolloutEvent::Step { now, .. }
+            | RolloutEvent::InstanceLost { now, .. }
+            | RolloutEvent::Rebalanced { now, .. }
+            | RolloutEvent::Aborted { now, .. } => *now,
+        }
+    }
 }
 
 /// A sink for the rollout event stream.
@@ -169,6 +211,36 @@ mod tests {
         }
         assert_eq!(a.borrow().0, 3);
         assert_eq!(b.borrow().0, 3);
+    }
+
+    #[test]
+    fn every_event_reports_its_timestamp() {
+        let t = SimTime::from_micros(42);
+        let evs = [
+            RolloutEvent::Scheduled {
+                req: RequestId(0),
+                instance: InstanceId(0),
+                now: t,
+            },
+            RolloutEvent::InstanceLost {
+                instance: InstanceId(1),
+                drained: 3,
+                now: t,
+            },
+            RolloutEvent::Rebalanced {
+                req: RequestId(0),
+                to: InstanceId(2),
+                now: t,
+            },
+            RolloutEvent::Aborted {
+                req: RequestId(0),
+                generated: 9,
+                now: t,
+            },
+        ];
+        for ev in evs {
+            assert_eq!(ev.now(), t);
+        }
     }
 
     #[test]

@@ -49,6 +49,7 @@ use crate::rollout::registry::PolicyRegistry;
 use crate::runtime::ModelRuntime;
 use crate::scheduler::Scheduler;
 use crate::sim::clock::SimTime;
+use crate::sim::faults::FaultPlan;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::json::Json;
 use crate::util::stats::Summary;
@@ -75,6 +76,10 @@ pub struct SeqResult {
     /// (re-admission) on the real backend. Matches the backend's
     /// `Migration` events and `RolloutMetrics::migrations`.
     pub migrations: u32,
+    /// Terminated by a fault-script abort: `gen_len` is partial and the
+    /// request is excluded from completion accounting (simulated backend
+    /// only; the real engine has no fault layer).
+    pub aborted: bool,
 }
 
 /// The unified result of one rollout run.
@@ -139,6 +144,16 @@ impl RolloutReport {
             Json::Num(m.spec_accepted_tokens as f64),
         );
         put("tau", Json::Num(m.mean_acceptance_len()));
+        // Fault & elasticity layer (all zero on a healthy run).
+        put("aborted", Json::Num(m.aborted as f64));
+        put("instances_lost", Json::Num(m.instances_lost as f64));
+        put("instances_added", Json::Num(m.instances_added as f64));
+        put("fault_lost_tokens", Json::Num(m.fault_lost_tokens as f64));
+        put("fault_requeued", Json::Num(m.fault_requeued as f64));
+        put(
+            "fault_recovery_secs_mean",
+            Json::Num(m.mean_recovery_latency().as_secs_f64()),
+        );
         if !m.completions.is_empty() {
             let mut s = Summary::new();
             s.extend(m.completions.iter().map(|c| c.gen_len as f64));
@@ -184,6 +199,8 @@ pub struct SimBackend {
     groups: Option<Vec<GroupSpec>>,
     /// Cross-iteration warm-start context.
     priors: Option<ContextPriors>,
+    /// Deterministic fault & elasticity script.
+    faults: Option<FaultPlan>,
 }
 
 impl RolloutBackend for SimBackend {
@@ -229,9 +246,15 @@ impl RolloutBackend for SimBackend {
         if let Some(t) = self.sample_interval {
             sim = sim.sample_interval(t);
         }
+        if let Some(plan) = self.faults.take() {
+            sim = sim.with_faults(plan);
+        }
         let out = sim.run();
         if self.stop_after.is_none() {
-            out.metrics.check_complete(expected);
+            // Conservation under faults: everything not explicitly
+            // aborted by the script must have completed.
+            out.metrics
+                .check_complete(expected - out.metrics.aborted as usize);
         }
         let sequences: Vec<SeqResult> = out
             .buffer
@@ -246,6 +269,7 @@ impl RolloutBackend for SimBackend {
                 chunks: r.chunks_run,
                 preemptions: r.preemptions,
                 migrations: r.migrations,
+                aborted: r.aborted,
             })
             .collect();
         Ok(RolloutReport {
@@ -356,6 +380,7 @@ pub struct RolloutSessionBuilder<'m> {
     sample_interval: Option<SimTime>,
     groups: Option<Vec<GroupSpec>>,
     priors: Option<ContextPriors>,
+    faults: Option<FaultPlan>,
     real: Option<(&'m ModelRuntime, RealRolloutConfig)>,
     requests: Vec<SeqRequest>,
 }
@@ -374,6 +399,7 @@ impl<'m> RolloutSessionBuilder<'m> {
             sample_interval: None,
             groups: None,
             priors: None,
+            faults: None,
             real: None,
             requests: Vec::new(),
         }
@@ -457,6 +483,18 @@ impl<'m> RolloutSessionBuilder<'m> {
         self
     }
 
+    /// Simulated backend: replay a deterministic fault & elasticity
+    /// script ([`FaultPlan`]) during the rollout — instance crashes,
+    /// stragglers, recoveries, elastic scale events and request aborts
+    /// at exact virtual timestamps. Faults are part of the run's
+    /// identity: same seed + same plan ⇒ bit-identical report.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        if !plan.is_empty() {
+            self.faults = Some(plan);
+        }
+        self
+    }
+
     /// Attach a streaming observer (may be called repeatedly).
     pub fn observer(mut self, o: Box<dyn RolloutObserver>) -> Self {
         self.observers.push(o);
@@ -498,11 +536,12 @@ impl<'m> RolloutSessionBuilder<'m> {
                 || self.stop_after.is_some()
                 || self.sample_interval.is_some()
                 || self.groups.is_some()
+                || self.faults.is_some()
             {
                 bail!(
                     "scheduler/sd/seed/system/stop_after/sample_interval/\
-                     groups are simulator-only; configure the real engine \
-                     via RealRolloutConfig"
+                     groups/faults are simulator-only; configure the real \
+                     engine via RealRolloutConfig"
                 );
             }
             return Ok(RolloutSession {
@@ -542,6 +581,7 @@ impl<'m> RolloutSessionBuilder<'m> {
                 sample_interval: self.sample_interval,
                 groups: self.groups,
                 priors: self.priors,
+                faults: self.faults,
             }),
             observers: self.observers,
         })

@@ -87,6 +87,45 @@ pub trait Scheduler {
     /// A chunk lease ended with the request unfinished.
     fn on_chunk_end(&mut self, _req: &ReqState) {}
 
+    /// Fault layer: `lost` crashed or was reclaimed. The driver already
+    /// returned its `drained` in-flight requests to the waiting queue;
+    /// `live` is the surviving fleet (post-change, excluding `lost`).
+    ///
+    /// The default routes every drained request through
+    /// [`on_chunk_end`](Self::on_chunk_end), so history-keeping policies
+    /// (Seer's `ContextManager`) preserve in-flight progress across the
+    /// fault exactly as they do across a voluntary chunk migration.
+    /// Policies that *pin* requests to instances must override this to
+    /// re-home everything pinned to the lost instance, or those requests
+    /// starve forever.
+    fn on_instance_lost(
+        &mut self,
+        _lost: InstanceId,
+        drained: &[RequestId],
+        _live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        for id in drained {
+            self.on_chunk_end(buffer.get(*id));
+        }
+    }
+
+    /// Fault layer: capacity arrived — `added` instances joined the
+    /// fleet, through elastic scale-up or recovery of a previously
+    /// downed instance; `live` is the post-change fleet (including
+    /// `added`). The default is a no-op, which is correct for policies
+    /// that pick instances per scheduling cycle from the live views
+    /// (Seer); pinning policies should rebalance waiting work onto the
+    /// newcomers or they idle (and, after a fully-downed interval,
+    /// groups still pinned to a dead instance would starve).
+    fn on_instances_added(
+        &mut self,
+        _added: &[InstanceId],
+        _live: &[InstanceId],
+        _buffer: &RequestBuffer,
+    ) {
+    }
+
     /// Choose a preemption victim among `running` (id, first_scheduled)
     /// on an instance that ran out of KV. Default: vLLM-style LIFO
     /// (latest-scheduled evicted first).

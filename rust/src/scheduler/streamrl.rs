@@ -16,7 +16,8 @@
 use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, WorkloadConfig};
-use crate::workload::{GroupSpec, InstanceId, RequestId};
+use crate::coordinator::RequestBuffer;
+use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
 
 use super::{Assignment, SchedCtx, Scheduler};
 
@@ -24,11 +25,17 @@ pub struct StreamRlOracle {
     pin: BTreeMap<RequestId, InstanceId>,
     /// True total length per request (oracle information).
     true_len: BTreeMap<RequestId, u32>,
-    /// Per-instance concurrency cap from the bucketing model.
-    conc_cap: Vec<usize>,
+    /// Per-instance concurrency cap from the bucketing model, keyed by
+    /// instance id (the fleet can grow or shrink under elasticity, so a
+    /// positional Vec would silently misattribute caps).
+    conc_cap: BTreeMap<u32, usize>,
     max_len: u32,
     /// Safety factor on reserved KV per admitted request.
     safety: f64,
+    /// Hardware constants captured at init so elastic rebalancing can
+    /// recompute caps for a changed fleet.
+    kv_capacity: u64,
+    max_batch: usize,
 }
 
 impl StreamRlOracle {
@@ -36,9 +43,129 @@ impl StreamRlOracle {
         StreamRlOracle {
             pin: BTreeMap::new(),
             true_len: BTreeMap::new(),
-            conc_cap: vec![],
+            conc_cap: BTreeMap::new(),
             max_len: u32::MAX,
             safety: 1.15,
+            kv_capacity: u64::MAX,
+            max_batch: usize::MAX,
+        }
+    }
+
+    /// Bucket concurrency model: cap = capacity / (mean final KV per
+    /// request × safety). Long buckets get small caps.
+    fn cap_for(
+        len_sum: u64,
+        reqs: u64,
+        kv_capacity: u64,
+        safety: f64,
+        max_batch: usize,
+    ) -> usize {
+        if reqs == 0 {
+            return 1;
+        }
+        let mean_len = (len_sum / reqs).max(1);
+        ((kv_capacity as f64 / (mean_len as f64 * safety)).floor() as usize)
+            .clamp(1, max_batch)
+    }
+
+    /// Elastic re-placement: move the movable groups LPT-style onto the
+    /// `live` fleet (least-loaded first), then refresh every live
+    /// instance's concurrency cap from the resulting placement.
+    ///
+    /// `from == Some(lost)` moves exactly the groups pinned to the lost
+    /// instance (their members were drained, so nothing is running);
+    /// `from == None` (scale-up) moves every group with no running
+    /// member, re-running the init-time LPT over the grown fleet.
+    fn rebalance(
+        &mut self,
+        from: Option<InstanceId>,
+        live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        if live.is_empty() {
+            return;
+        }
+        let mut group_pin: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
+        let mut group_work: BTreeMap<GroupId, u64> = BTreeMap::new();
+        let mut group_movable: BTreeMap<GroupId, bool> = BTreeMap::new();
+        for r in buffer.all() {
+            if r.is_finished() {
+                continue;
+            }
+            let g = r.group();
+            if let Some(p) = self.pin.get(&r.id()) {
+                group_pin.insert(g, *p);
+            }
+            *group_work.entry(g).or_insert(0) +=
+                (r.spec.prompt_len + r.spec.gen_len) as u64;
+            let movable = match from {
+                Some(lost) => self.pin.get(&r.id()) == Some(&lost),
+                None => !r.is_running(),
+            };
+            let e = group_movable.entry(g).or_insert(true);
+            *e = *e && movable;
+        }
+        // Base load from the groups that stay put.
+        let mut load: BTreeMap<u32, u64> =
+            live.iter().map(|i| (i.0, 0u64)).collect();
+        for (g, w) in &group_work {
+            if group_movable.get(g).copied().unwrap_or(false) {
+                continue;
+            }
+            if let Some(p) = group_pin.get(g) {
+                if let Some(l) = load.get_mut(&p.0) {
+                    *l += *w;
+                }
+            }
+        }
+        // LPT: heaviest movable group onto the least-loaded live
+        // instance (lowest id breaks ties — determinism).
+        let mut movable: Vec<(u64, GroupId)> = group_movable
+            .iter()
+            .filter(|(_, m)| **m)
+            .map(|(g, _)| (group_work.get(g).copied().unwrap_or(0), *g))
+            .collect();
+        movable.sort_by_key(|(w, g)| (std::cmp::Reverse(*w), g.0));
+        let mut new_pin: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
+        for (w, g) in movable {
+            let target = *load
+                .iter()
+                .min_by_key(|&(id, l)| (*l, *id))
+                .map(|(id, _)| id)
+                .unwrap();
+            *load.get_mut(&target).unwrap() += w;
+            new_pin.insert(g, InstanceId(target));
+        }
+        for r in buffer.all() {
+            if let Some(t) = new_pin.get(&r.group()) {
+                self.pin.insert(r.id(), *t);
+            }
+        }
+        // Refresh caps for the live fleet from the new placement.
+        let mut sums: BTreeMap<u32, (u64, u64)> =
+            live.iter().map(|i| (i.0, (0u64, 0u64))).collect();
+        for r in buffer.all() {
+            if r.is_finished() {
+                continue;
+            }
+            if let Some(p) = self.pin.get(&r.id()) {
+                if let Some(s) = sums.get_mut(&p.0) {
+                    s.0 += (r.spec.prompt_len + r.spec.gen_len) as u64;
+                    s.1 += 1;
+                }
+            }
+        }
+        for (id, (len_sum, reqs)) in sums {
+            self.conc_cap.insert(
+                id,
+                Self::cap_for(
+                    len_sum,
+                    reqs,
+                    self.kv_capacity,
+                    self.safety,
+                    self.max_batch,
+                ),
+            );
         }
     }
 }
@@ -92,18 +219,20 @@ impl Scheduler for StreamRlOracle {
             }
         }
 
-        // Bucket concurrency model: cap = capacity / (mean final KV per
-        // request × safety). Long buckets get small caps.
+        self.kv_capacity = cfg.hw.kv_capacity_tokens;
+        self.max_batch = cfg.hw.max_batch;
         self.conc_cap = (0..cfg.n_instances)
             .map(|i| {
-                if inst_reqs[i] == 0 {
-                    return 1;
-                }
-                let mean_len = (inst_len_sum[i] / inst_reqs[i]).max(1);
-                ((cfg.hw.kv_capacity_tokens as f64
-                    / (mean_len as f64 * self.safety))
-                    .floor() as usize)
-                    .clamp(1, cfg.hw.max_batch)
+                (
+                    i as u32,
+                    Self::cap_for(
+                        inst_len_sum[i],
+                        inst_reqs[i],
+                        cfg.hw.kv_capacity_tokens,
+                        self.safety,
+                        cfg.hw.max_batch,
+                    ),
+                )
             })
             .collect();
     }
@@ -128,10 +257,17 @@ impl Scheduler for StreamRlOracle {
 
         for id in waiting {
             let inst = *self.pin.get(&id).expect("unpinned request");
-            let i = index_of[&inst.0];
-            if slots[i] >= self.conc_cap[i.min(self.conc_cap.len() - 1)]
-                || slots[i] >= ctx.instances[i].max_batch
-            {
+            // The pinned instance may be down (fault layer): wait for it
+            // to recover or for a loss/scale hook to re-place the group.
+            let Some(&i) = index_of.get(&inst.0) else {
+                continue;
+            };
+            let cap = self
+                .conc_cap
+                .get(&inst.0)
+                .copied()
+                .unwrap_or(ctx.instances[i].max_batch);
+            if slots[i] >= cap || slots[i] >= ctx.instances[i].max_batch {
                 continue;
             }
             let r = ctx.buffer.get(id);
@@ -157,6 +293,34 @@ impl Scheduler for StreamRlOracle {
             }
         }
         out
+    }
+
+    /// Elasticity: re-place the lost instance's groups LPT over the
+    /// survivors (the strongest version of StreamRL's static placement,
+    /// re-run on the shrunk fleet).
+    fn on_instance_lost(
+        &mut self,
+        lost: InstanceId,
+        _drained: &[RequestId],
+        live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        self.conc_cap.remove(&lost.0);
+        self.rebalance(Some(lost), live, buffer);
+    }
+
+    /// Elasticity: re-run LPT over the grown fleet for every group with
+    /// no running member, so scale-up instances pick up queued work.
+    fn on_instances_added(
+        &mut self,
+        added: &[InstanceId],
+        live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        if added.is_empty() {
+            return;
+        }
+        self.rebalance(None, live, buffer);
     }
 
     fn uses_global_pool(&self) -> bool {
@@ -208,9 +372,9 @@ mod tests {
         }
         let mut pairs: Vec<(u64, usize)> = sums
             .iter()
-            .zip(&s.conc_cap)
-            .filter(|((_, n), _)| *n > 0)
-            .map(|((sum, n), cap)| (sum / n, *cap))
+            .enumerate()
+            .filter(|(_, (_, n))| *n > 0)
+            .map(|(i, (sum, n))| (sum / n, s.conc_cap[&(i as u32)]))
             .collect();
         pairs.sort();
         for w2 in pairs.windows(2) {
@@ -219,5 +383,58 @@ mod tests {
                 "caps not anti-monotone in length: {pairs:?}"
             );
         }
+    }
+
+    #[test]
+    fn instance_lost_replaces_groups_on_survivors() {
+        use crate::coordinator::RequestBuffer;
+        let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+        let w = generate_iteration(&cfg, 4);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = StreamRlOracle::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let lost = InstanceId(0);
+        let live: Vec<InstanceId> =
+            (1..cfg.n_instances as u32).map(InstanceId).collect();
+        s.on_instance_lost(lost, &[], &live, &buffer);
+        assert!(!s.conc_cap.contains_key(&lost.0));
+        let mut survivor_load = vec![0u64; cfg.n_instances];
+        for g in &w.groups {
+            let inst = s.pin[&g.requests[0].id];
+            assert_ne!(inst, lost, "group still pinned to lost instance");
+            for r in &g.requests {
+                assert_eq!(s.pin[&r.id], inst, "group split by re-place");
+                survivor_load[inst.0 as usize] +=
+                    (r.prompt_len + r.gen_len) as u64;
+            }
+        }
+        // LPT re-placement keeps the survivors near-balanced.
+        let loads: Vec<u64> = survivor_load[1..].to_vec();
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) < 2.5, "unbalanced after loss: {loads:?}");
+    }
+
+    #[test]
+    fn instances_added_gives_newcomers_work_and_caps() {
+        use crate::coordinator::RequestBuffer;
+        let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
+        let w = generate_iteration(&cfg, 4);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = StreamRlOracle::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let added = vec![InstanceId(cfg.n_instances as u32)];
+        let live: Vec<InstanceId> = (0..=cfg.n_instances as u32)
+            .map(InstanceId)
+            .collect();
+        s.on_instances_added(&added, &live, &buffer);
+        assert!(
+            w.groups
+                .iter()
+                .any(|g| s.pin[&g.requests[0].id] == added[0]),
+            "newcomer got no groups"
+        );
+        let cap = s.conc_cap[&added[0].0];
+        assert!(cap >= 1 && cap <= cfg.hw.max_batch);
     }
 }

@@ -7,7 +7,8 @@
 use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, WorkloadConfig};
-use crate::workload::{GroupSpec, InstanceId, RequestId};
+use crate::coordinator::RequestBuffer;
+use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
 
 use super::{Assignment, SchedCtx, Scheduler};
 
@@ -73,7 +74,11 @@ impl Scheduler for VerlScheduler {
         // FCFS by request id within each instance's pinned queue.
         for id in ctx.buffer.waiting() {
             let inst = *self.pin.get(&id).expect("unpinned request");
-            let i = index_of[&inst.0];
+            // The pinned instance may be down (fault layer): wait for it
+            // to recover or for a loss/scale hook to re-pin the group.
+            let Some(&i) = index_of.get(&inst.0) else {
+                continue;
+            };
             let r = ctx.buffer.get(id);
             // Optimistic admission: current KV + watermark only.
             let demand = r.kv_demand(self.watermark);
@@ -93,6 +98,86 @@ impl Scheduler for VerlScheduler {
         out
     }
 
+    /// Elasticity: a lost instance's groups re-pin, whole, onto the
+    /// survivors round-robin (mirrors the init-time placement). Without
+    /// this, requests pinned to a dead instance would starve forever —
+    /// the veRL baseline gets the same crash-survival machinery as Seer,
+    /// it just pays re-prefill for the KV it lost.
+    fn on_instance_lost(
+        &mut self,
+        lost: InstanceId,
+        _drained: &[RequestId],
+        live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        if live.is_empty() {
+            return;
+        }
+        let mut target: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
+        let mut rr = 0usize;
+        for r in buffer.all() {
+            if self.pin.get(&r.id()) != Some(&lost) {
+                continue;
+            }
+            let tgt = *target.entry(r.group()).or_insert_with(|| {
+                let t = live[rr % live.len()];
+                rr += 1;
+                t
+            });
+            self.pin.insert(r.id(), tgt);
+        }
+    }
+
+    /// Elasticity: re-home a proportional share of fully-waiting groups
+    /// onto scale-up newcomers so they don't idle (every
+    /// ⌈live/added⌉-th movable group, deterministically).
+    fn on_instances_added(
+        &mut self,
+        added: &[InstanceId],
+        live: &[InstanceId],
+        buffer: &RequestBuffer,
+    ) {
+        if added.is_empty() || live.is_empty() {
+            return;
+        }
+        let mut movable: BTreeMap<GroupId, bool> = BTreeMap::new();
+        for r in buffer.all() {
+            // Finished members don't pin a group: only *running* work
+            // anchors it (its waiting siblings must stay movable, or a
+            // post-outage re-home could strand them on a dead instance).
+            if r.is_finished() {
+                continue;
+            }
+            let e = movable.entry(r.group()).or_insert(true);
+            if r.is_running() {
+                *e = false;
+            }
+        }
+        let groups: Vec<GroupId> = movable
+            .iter()
+            .filter(|(_, m)| **m)
+            .map(|(g, _)| *g)
+            .collect();
+        if groups.is_empty() {
+            return;
+        }
+        let stride = live.len().div_ceil(added.len()).max(1);
+        let mut retarget: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
+        let mut ai = 0usize;
+        for (i, g) in groups.iter().enumerate() {
+            if i % stride != 0 {
+                continue;
+            }
+            retarget.insert(*g, added[ai % added.len()]);
+            ai += 1;
+        }
+        for r in buffer.all() {
+            if let Some(t) = retarget.get(&r.group()) {
+                self.pin.insert(r.id(), *t);
+            }
+        }
+    }
+
     fn uses_global_pool(&self) -> bool {
         false
     }
@@ -102,7 +187,6 @@ impl Scheduler for VerlScheduler {
 mod tests {
     use super::*;
     use crate::config::TaskPreset;
-    use crate::coordinator::RequestBuffer;
     use crate::scheduler::InstanceView;
     use crate::sim::clock::SimTime;
     use crate::workload::generate_iteration;
@@ -152,6 +236,59 @@ mod tests {
         for a in s.schedule(&ctx) {
             assert_eq!(a.instance, s.pin[&a.req]);
             assert_eq!(a.chunk, cfg.max_gen_len);
+        }
+    }
+
+    #[test]
+    fn instance_lost_repins_group_atomically() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 2);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = VerlScheduler::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let lost = InstanceId(0);
+        let live: Vec<InstanceId> =
+            (1..cfg.n_instances as u32).map(InstanceId).collect();
+        s.on_instance_lost(lost, &[], &live, &buffer);
+        for g in &w.groups {
+            let insts: Vec<_> =
+                g.requests.iter().map(|r| s.pin[&r.id]).collect();
+            assert!(
+                insts.windows(2).all(|w| w[0] == w[1]),
+                "group split by re-pin"
+            );
+            assert_ne!(insts[0], lost, "group still pinned to lost instance");
+        }
+    }
+
+    #[test]
+    fn instances_added_rebalances_waiting_groups() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 2);
+        let mut buffer = RequestBuffer::from_groups(&w.groups);
+        // A finished member must not anchor its group: its waiting
+        // siblings stay movable (post-outage re-home regression).
+        let first = buffer.all()[0].id();
+        buffer.mark_scheduled(first);
+        buffer.mark_finished(first);
+        let mut s = VerlScheduler::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let added = vec![InstanceId(cfg.n_instances as u32)];
+        let live: Vec<InstanceId> = (0..=cfg.n_instances as u32)
+            .map(InstanceId)
+            .collect();
+        s.on_instances_added(&added, &live, &buffer);
+        // The newcomer received at least one whole group.
+        let moved: Vec<&GroupSpec> = w
+            .groups
+            .iter()
+            .filter(|g| s.pin[&g.requests[0].id] == added[0])
+            .collect();
+        assert!(!moved.is_empty(), "scale-up instance got no work");
+        for g in moved {
+            for r in &g.requests {
+                assert_eq!(s.pin[&r.id], added[0], "group split by re-home");
+            }
         }
     }
 }

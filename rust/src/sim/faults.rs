@@ -1,0 +1,444 @@
+//! Deterministic fault & elasticity scripts for the cluster simulator.
+//!
+//! Production rollout fleets are not static: instances slow down, die and
+//! get reclaimed mid-iteration, and the scheduler must migrate
+//! partially-generated requests without losing their context (paper §4;
+//! Laminar and RollPacker make the same failure/straggler argument). A
+//! [`FaultPlan`] is a *script* of timed [`FaultEvent`]s that
+//! [`crate::engine::cluster::ClusterSim`] replays at exact virtual
+//! timestamps, so a faulty run is exactly as reproducible as a healthy
+//! one: same seed + same plan ⇒ same event trace (checked by
+//! `rust/tests/faults.rs`).
+//!
+//! Plans are JSON-serializable through the in-tree [`crate::util::json`]
+//! (`seer rollout --faults <file>` replays a saved script against any
+//! scheduler), and [`FaultPlan::random`] generates seeded random scripts
+//! for the property harness in `rust/tests/invariants.rs`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::clock::SimTime;
+use crate::sim::Rng;
+use crate::util::json::Json;
+use crate::workload::{InstanceId, RequestId};
+
+/// One scripted fault or elasticity event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// The instance crashes: its HBM-resident KV is lost, its in-flight
+    /// requests are drained back into the waiting queue (uncommitted
+    /// interval progress is discarded and must be re-generated).
+    InstanceDown { instance: InstanceId },
+    /// The instance becomes a straggler: every engine step takes
+    /// `factor`× its modeled time until the instance recovers.
+    InstanceSlowdown { instance: InstanceId, factor: f64 },
+    /// A downed instance rejoins (or a straggler returns to full speed).
+    InstanceRecover { instance: InstanceId },
+    /// Elastic scale-up: `n` fresh instances join the fleet.
+    ScaleUp { n: usize },
+    /// Elastic reclamation: the `n` highest-indexed live instances are
+    /// drained and removed (the driver keeps at least one instance live).
+    ScaleDown { n: usize },
+    /// Cancel one request outright (user abort / filtered sample). The
+    /// request terminates as *aborted*, not completed.
+    RequestAbort { req: RequestId },
+}
+
+impl FaultEvent {
+    /// Stable JSON discriminator for this event kind.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FaultEvent::InstanceDown { .. } => "instance_down",
+            FaultEvent::InstanceSlowdown { .. } => "instance_slowdown",
+            FaultEvent::InstanceRecover { .. } => "instance_recover",
+            FaultEvent::ScaleUp { .. } => "scale_up",
+            FaultEvent::ScaleDown { .. } => "scale_down",
+            FaultEvent::RequestAbort { .. } => "request_abort",
+        }
+    }
+}
+
+/// A fault event pinned to a virtual timestamp.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimedFault {
+    pub at: SimTime,
+    pub event: FaultEvent,
+}
+
+/// A deterministic script of timed fault events.
+///
+/// ```
+/// use seer::sim::faults::{FaultEvent, FaultPlan};
+/// use seer::workload::InstanceId;
+///
+/// let plan = FaultPlan::new()
+///     .at(30.0, FaultEvent::InstanceDown { instance: InstanceId(1) })
+///     .at(45.0, FaultEvent::ScaleUp { n: 1 })
+///     .at(60.0, FaultEvent::InstanceRecover { instance: InstanceId(1) });
+/// let json = plan.to_json().to_string();
+/// assert_eq!(FaultPlan::from_json_str(&json).unwrap(), plan);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<TimedFault>,
+}
+
+impl FaultPlan {
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Append an event at `secs` (virtual seconds since rollout start).
+    pub fn at(mut self, secs: f64, event: FaultEvent) -> Self {
+        self.events.push(TimedFault {
+            at: SimTime::from_secs_f64(secs),
+            event,
+        });
+        self
+    }
+
+    /// The plan with events in timestamp order (stable: same-timestamp
+    /// events keep their authored order, which the simulator's FIFO event
+    /// queue then preserves — required for determinism).
+    pub fn sorted(mut self) -> Self {
+        self.events.sort_by_key(|e| e.at);
+        self
+    }
+
+    /// Sanity-check event parameters (factors positive and finite, scale
+    /// counts non-zero). Structural feasibility — e.g. never leaving the
+    /// fleet empty — is the driver's job, since it depends on run state.
+    pub fn validate(&self) -> Result<()> {
+        for (i, e) in self.events.iter().enumerate() {
+            match e.event {
+                FaultEvent::InstanceSlowdown { factor, .. } => {
+                    if !(factor.is_finite() && factor > 0.0) {
+                        bail!("fault event {i}: slowdown factor {factor} must be finite and > 0");
+                    }
+                }
+                FaultEvent::ScaleUp { n } | FaultEvent::ScaleDown { n } => {
+                    if n == 0 {
+                        bail!("fault event {i}: {} of 0 instances", e.event.kind());
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Seeded random script for property tests: a mix of crashes (half of
+    /// which later recover), one straggler, elastic scale events, and a
+    /// few request aborts, all inside `(0.05, 0.85) × horizon_secs`.
+    /// Deterministic in the arguments. Instance 0 is never crashed and
+    /// scale-downs are clamped by the driver, so a generated plan can
+    /// never leave the fleet empty.
+    pub fn random(
+        seed: u64,
+        n_instances: usize,
+        n_requests: usize,
+        horizon_secs: f64,
+    ) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA_017);
+        let mut plan = FaultPlan::new();
+        let t = |rng: &mut Rng| rng.uniform(0.05, 0.85) * horizon_secs;
+        if n_instances > 1 {
+            let n_down = rng.range_usize(0, (n_instances - 1).min(2));
+            let mut victims: Vec<u32> = (1..n_instances as u32).collect();
+            for _ in 0..n_down {
+                let vi = rng.range_usize(0, victims.len() - 1);
+                let v = InstanceId(victims.swap_remove(vi));
+                let down_at = t(&mut rng);
+                plan = plan.at(down_at, FaultEvent::InstanceDown { instance: v });
+                if rng.bool(0.5) {
+                    let back = down_at + rng.uniform(0.05, 0.3) * horizon_secs;
+                    plan = plan
+                        .at(back, FaultEvent::InstanceRecover { instance: v });
+                }
+            }
+        }
+        if rng.bool(0.7) {
+            plan = plan.at(
+                t(&mut rng),
+                FaultEvent::InstanceSlowdown {
+                    instance: InstanceId(rng.below(n_instances.max(1) as u64) as u32),
+                    factor: rng.uniform(1.5, 4.0),
+                },
+            );
+        }
+        if rng.bool(0.5) {
+            plan = plan.at(
+                t(&mut rng),
+                FaultEvent::ScaleUp {
+                    n: rng.range_usize(1, 2),
+                },
+            );
+        }
+        if n_instances > 2 && rng.bool(0.3) {
+            plan = plan.at(t(&mut rng), FaultEvent::ScaleDown { n: 1 });
+        }
+        if n_requests > 0 {
+            for _ in 0..rng.range_usize(0, 2) {
+                plan = plan.at(
+                    t(&mut rng),
+                    FaultEvent::RequestAbort {
+                        req: RequestId(rng.below(n_requests as u64) as u32),
+                    },
+                );
+            }
+        }
+        plan.sorted()
+    }
+
+    // -----------------------------------------------------------------
+    // JSON (de)serialization through util::json.
+    // -----------------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("at_secs".to_string(), Json::Num(e.at.as_secs_f64()));
+                o.insert(
+                    "kind".to_string(),
+                    Json::Str(e.event.kind().to_string()),
+                );
+                match e.event {
+                    FaultEvent::InstanceDown { instance }
+                    | FaultEvent::InstanceRecover { instance } => {
+                        o.insert(
+                            "instance".to_string(),
+                            Json::Num(instance.0 as f64),
+                        );
+                    }
+                    FaultEvent::InstanceSlowdown { instance, factor } => {
+                        o.insert(
+                            "instance".to_string(),
+                            Json::Num(instance.0 as f64),
+                        );
+                        o.insert("factor".to_string(), Json::Num(factor));
+                    }
+                    FaultEvent::ScaleUp { n } | FaultEvent::ScaleDown { n } => {
+                        o.insert("n".to_string(), Json::Num(n as f64));
+                    }
+                    FaultEvent::RequestAbort { req } => {
+                        o.insert("req".to_string(), Json::Num(req.0 as f64));
+                    }
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("events".to_string(), Json::Arr(events));
+        Json::Obj(root)
+    }
+
+    pub fn from_json(json: &Json) -> Result<FaultPlan> {
+        let events = json
+            .get("events")
+            .and_then(|e| e.as_arr())
+            .context("fault plan: missing 'events' array")?;
+        let mut plan = FaultPlan::new();
+        for (i, ev) in events.iter().enumerate() {
+            let at = ev
+                .get("at_secs")
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("fault event {i}: missing 'at_secs'"))?;
+            if !(at.is_finite() && at >= 0.0) {
+                bail!("fault event {i}: bad at_secs {at}");
+            }
+            let kind = ev
+                .get("kind")
+                .and_then(|v| v.as_str())
+                .with_context(|| format!("fault event {i}: missing 'kind'"))?;
+            let instance = || -> Result<InstanceId> {
+                Ok(InstanceId(
+                    ev.get("instance")
+                        .and_then(|v| v.as_u64())
+                        .with_context(|| {
+                            format!("fault event {i}: missing 'instance'")
+                        })? as u32,
+                ))
+            };
+            let event = match kind {
+                "instance_down" => FaultEvent::InstanceDown {
+                    instance: instance()?,
+                },
+                "instance_recover" => FaultEvent::InstanceRecover {
+                    instance: instance()?,
+                },
+                "instance_slowdown" => FaultEvent::InstanceSlowdown {
+                    instance: instance()?,
+                    factor: ev
+                        .get("factor")
+                        .and_then(|v| v.as_f64())
+                        .with_context(|| {
+                            format!("fault event {i}: missing 'factor'")
+                        })?,
+                },
+                "scale_up" | "scale_down" => {
+                    let n = ev
+                        .get("n")
+                        .and_then(|v| v.as_usize())
+                        .with_context(|| format!("fault event {i}: missing 'n'"))?;
+                    if kind == "scale_up" {
+                        FaultEvent::ScaleUp { n }
+                    } else {
+                        FaultEvent::ScaleDown { n }
+                    }
+                }
+                "request_abort" => FaultEvent::RequestAbort {
+                    req: RequestId(
+                        ev.get("req").and_then(|v| v.as_u64()).with_context(
+                            || format!("fault event {i}: missing 'req'"),
+                        )? as u32,
+                    ),
+                },
+                other => bail!("fault event {i}: unknown kind '{other}'"),
+            };
+            plan = plan.at(at, event);
+        }
+        let plan = plan.sorted();
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    pub fn from_json_str(text: &str) -> Result<FaultPlan> {
+        let json = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("fault plan: {e}"))?;
+        Self::from_json(&json)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing fault plan to {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan from {path:?}"))?;
+        Self::from_json_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> FaultPlan {
+        FaultPlan::new()
+            .at(30.0, FaultEvent::InstanceDown { instance: InstanceId(1) })
+            .at(
+                10.0,
+                FaultEvent::InstanceSlowdown {
+                    instance: InstanceId(0),
+                    factor: 2.5,
+                },
+            )
+            .at(45.0, FaultEvent::ScaleUp { n: 2 })
+            .at(50.0, FaultEvent::ScaleDown { n: 1 })
+            .at(60.0, FaultEvent::InstanceRecover { instance: InstanceId(1) })
+            .at(5.0, FaultEvent::RequestAbort { req: RequestId(7) })
+    }
+
+    #[test]
+    fn json_round_trips_every_kind() {
+        let plan = sample_plan().sorted();
+        let text = plan.to_json().to_string();
+        let back = FaultPlan::from_json_str(&text).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn sorted_orders_by_time_stably() {
+        let plan = sample_plan().sorted();
+        let times: Vec<u64> =
+            plan.events.iter().map(|e| e.at.as_micros()).collect();
+        let mut expect = times.clone();
+        expect.sort();
+        assert_eq!(times, expect);
+        // Same-timestamp events keep authored order.
+        let twin = FaultPlan::new()
+            .at(1.0, FaultEvent::ScaleUp { n: 1 })
+            .at(1.0, FaultEvent::ScaleDown { n: 1 })
+            .sorted();
+        assert!(matches!(twin.events[0].event, FaultEvent::ScaleUp { .. }));
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        let bad = FaultPlan::new().at(
+            1.0,
+            FaultEvent::InstanceSlowdown {
+                instance: InstanceId(0),
+                factor: 0.0,
+            },
+        );
+        assert!(bad.validate().is_err());
+        let bad = FaultPlan::new().at(1.0, FaultEvent::ScaleUp { n: 0 });
+        assert!(bad.validate().is_err());
+        assert!(sample_plan().validate().is_ok());
+    }
+
+    #[test]
+    fn from_json_rejects_garbage() {
+        assert!(FaultPlan::from_json_str("{}").is_err());
+        assert!(FaultPlan::from_json_str(
+            r#"{"events":[{"at_secs":1,"kind":"nope"}]}"#
+        )
+        .is_err());
+        assert!(FaultPlan::from_json_str(
+            r#"{"events":[{"at_secs":-1,"kind":"scale_up","n":1}]}"#
+        )
+        .is_err());
+        assert!(FaultPlan::from_json_str(
+            r#"{"events":[{"at_secs":1,"kind":"instance_down"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn random_is_deterministic_and_sorted() {
+        let a = FaultPlan::random(9, 4, 64, 100.0);
+        let b = FaultPlan::random(9, 4, 64, 100.0);
+        assert_eq!(a, b);
+        let times: Vec<u64> = a.events.iter().map(|e| e.at.as_micros()).collect();
+        let mut expect = times.clone();
+        expect.sort();
+        assert_eq!(times, expect);
+        // Never crashes instance 0 (the generator's liveness guarantee).
+        for e in &a.events {
+            if let FaultEvent::InstanceDown { instance } = e.event {
+                assert_ne!(instance, InstanceId(0));
+            }
+        }
+        // Different seeds give different plans (overwhelmingly likely
+        // across this many draws).
+        let c = FaultPlan::random(10, 4, 64, 100.0);
+        let d = FaultPlan::random(11, 4, 64, 100.0);
+        assert!(a != c || a != d);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let plan = sample_plan().sorted();
+        let path = std::env::temp_dir()
+            .join(format!("seer_fault_plan_{}.json", std::process::id()));
+        plan.save(&path).unwrap();
+        let back = FaultPlan::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back, plan);
+    }
+}

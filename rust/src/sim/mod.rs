@@ -2,14 +2,18 @@
 //!
 //! Every cluster-scale experiment in this repo runs on this substrate: the
 //! coordinator and engine code under test is the production code, and this
-//! module only supplies virtual time, an event queue and a seeded RNG so
-//! that runs are exactly reproducible (same seed ⇒ same event trace, an
-//! invariant checked by `rust/tests/invariants.rs`).
+//! module only supplies virtual time, an event queue, a seeded RNG and
+//! deterministic fault scripts ([`faults::FaultPlan`]) so that runs are
+//! exactly reproducible (same seed + same fault plan ⇒ same event trace,
+//! an invariant checked by `rust/tests/invariants.rs` and
+//! `rust/tests/faults.rs`).
 
 pub mod clock;
 pub mod events;
+pub mod faults;
 pub mod rng;
 
 pub use clock::SimTime;
 pub use events::{EventQueue, ScheduledEvent};
+pub use faults::{FaultEvent, FaultPlan, TimedFault};
 pub use rng::Rng;

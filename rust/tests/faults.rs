@@ -1,0 +1,346 @@
+//! Fault & elasticity layer tests (ISSUE 3): determinism under faults,
+//! request conservation (every request completes or is explicitly
+//! aborted — none silently lost), warm-context preservation across
+//! fault-driven migration, the Partial-Rollout stop-threshold regression,
+//! and the `RolloutReport::to_json` golden schema snapshot.
+
+use seer::config::{SystemConfig, TaskPreset, WorkloadConfig};
+use seer::coordinator::RequestBuffer;
+use seer::rollout::{RolloutReport, RolloutSession};
+use seer::scheduler::{ContextMode, Scheduler, SeerScheduler};
+use seer::sim::faults::{FaultEvent, FaultPlan};
+use seer::util::json::Json;
+use seer::workload::{generate_iteration, InstanceId, RequestId};
+
+fn test_cfg() -> WorkloadConfig {
+    TaskPreset::Moonlight.workload_for_test()
+}
+
+fn test_sys() -> SystemConfig {
+    SystemConfig {
+        chunk_size: 128, // small chunks: divided rollout actually divides
+        ..Default::default()
+    }
+}
+
+fn run(scheduler: &str, seed: u64, plan: FaultPlan) -> RolloutReport {
+    RolloutSession::builder()
+        .workload(test_cfg())
+        .system(test_sys())
+        .scheduler(scheduler)
+        .sd("grouped-cst")
+        .seed(seed)
+        .faults(plan)
+        .run()
+        .expect("rollout session failed")
+}
+
+/// Makespan of a fault-free run, used to pin fault times to fractions of
+/// the run so the scenario shape is scale-independent.
+fn clean_makespan(scheduler: &str, seed: u64) -> f64 {
+    let r = run(scheduler, seed, FaultPlan::new());
+    r.metrics.makespan.as_secs_f64()
+}
+
+/// A crash + elasticity script covering InstanceDown, ScaleUp, ScaleDown
+/// and InstanceRecover, timed well inside the rollout.
+fn crash_and_scale_plan(horizon: f64) -> FaultPlan {
+    FaultPlan::new()
+        .at(
+            0.20 * horizon,
+            FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        )
+        .at(0.35 * horizon, FaultEvent::ScaleUp { n: 1 })
+        .at(0.55 * horizon, FaultEvent::ScaleDown { n: 1 })
+        .at(
+            0.70 * horizon,
+            FaultEvent::InstanceRecover {
+                instance: InstanceId(1),
+            },
+        )
+        .sorted()
+}
+
+/// The report JSON with the host-wall-clock field (the only
+/// nondeterministic value) removed.
+fn stripped_json(report: &RolloutReport) -> String {
+    let mut j = report.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.remove("wall_secs");
+    }
+    j.to_string()
+}
+
+#[test]
+fn fixture_plan_loads_and_round_trips() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/fault_basic.json");
+    let plan = FaultPlan::load(&path).expect("fixture must parse");
+    assert_eq!(plan.len(), 5, "fixture drifted from its documented shape");
+    let back = FaultPlan::from_json_str(&plan.to_json().to_string()).unwrap();
+    assert_eq!(back, plan);
+    // The fixture replays cleanly end to end (conservation holds whether
+    // or not every event fires before completion at this scale).
+    let report = run("seer", 11, plan);
+    assert_eq!(
+        report.metrics.completions.len(),
+        test_cfg().reqs_per_iter
+    );
+}
+
+#[test]
+fn determinism_same_seed_same_plan_identical_report() {
+    let horizon = clean_makespan("seer", 42);
+    let plan = crash_and_scale_plan(horizon);
+    let a = run("seer", 42, plan.clone());
+    let b = run("seer", 42, plan.clone());
+    // The faults really fired — this is not a vacuously healthy run.
+    assert!(a.metrics.instances_lost >= 2, "{}", a.metrics.instances_lost);
+    assert!(a.metrics.instances_added >= 1);
+    assert_eq!(stripped_json(&a), stripped_json(&b));
+    // And the script is not a no-op: the report differs from fault-free.
+    let clean = run("seer", 42, FaultPlan::new());
+    assert_ne!(stripped_json(&a), stripped_json(&clean));
+}
+
+#[test]
+fn no_request_lost_under_down_and_scale_any_scheduler() {
+    for scheduler in ["seer", "verl", "streamrl"] {
+        let horizon = clean_makespan(scheduler, 7);
+        let plan = crash_and_scale_plan(horizon);
+        let report = run(scheduler, 7, plan);
+        let m = &report.metrics;
+        assert!(
+            m.instances_lost >= 2,
+            "{scheduler}: script did not fire ({} lost)",
+            m.instances_lost
+        );
+        assert!(
+            m.fault_requeued >= 1,
+            "{scheduler}: nothing drained off the lost instances"
+        );
+        // Conservation: every request completed exactly once...
+        let cfg = test_cfg();
+        assert_eq!(
+            m.completions.len(),
+            cfg.reqs_per_iter,
+            "{scheduler} lost requests"
+        );
+        let mut ids: Vec<u32> = m.completions.iter().map(|c| c.id.0).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), cfg.reqs_per_iter, "{scheduler} double-counted");
+        // ...generating exactly the workload's tokens (crash-lost
+        // progress was re-generated, never silently dropped or
+        // double-counted).
+        let expected = generate_iteration(&cfg, 7).total_gen_tokens();
+        assert_eq!(m.tokens_generated, expected, "{scheduler} token drift");
+        assert!(report.sequences.iter().all(|s| !s.aborted));
+    }
+}
+
+#[test]
+fn aborts_are_terminal_and_excluded_from_completions() {
+    let horizon = clean_makespan("seer", 3);
+    // Two aborts at t=0 (before anything can finish) plus one mid-run
+    // (which may be a no-op if that request already completed).
+    let plan = FaultPlan::new()
+        .at(0.0, FaultEvent::RequestAbort { req: RequestId(1) })
+        .at(0.0, FaultEvent::RequestAbort { req: RequestId(5) })
+        .at(0.30 * horizon, FaultEvent::RequestAbort { req: RequestId(2) })
+        .sorted();
+    let report = run("seer", 3, plan);
+    let m = &report.metrics;
+    let total = test_cfg().reqs_per_iter;
+    assert!(m.aborted >= 2, "t=0 aborts must fire: {}", m.aborted);
+    assert_eq!(m.completions.len() + m.aborted as usize, total);
+    for s in &report.sequences {
+        if s.id.0 == 1 || s.id.0 == 5 {
+            assert!(s.aborted, "request {} not flagged aborted", s.id.0);
+        }
+    }
+    // Aborted requests never appear among completions.
+    let aborted: Vec<u32> = report
+        .sequences
+        .iter()
+        .filter(|s| s.aborted)
+        .map(|s| s.id.0)
+        .collect();
+    for c in &m.completions {
+        assert!(!aborted.contains(&c.id.0));
+    }
+}
+
+/// Warm-context preservation across fault-driven migration: a request
+/// drained off a crashed instance reports its in-flight progress through
+/// the default `on_instance_lost` → `on_chunk_end` path, so a stale
+/// estimate (or a short sibling finishing) cannot demote its group below
+/// the length it already demonstrated.
+#[test]
+fn fault_drain_preserves_context_manager_progress() {
+    let cfg = test_cfg();
+    let w = generate_iteration(&cfg, 5);
+    let mut buffer = RequestBuffer::from_groups(&w.groups);
+    let mut s = SeerScheduler::new(ContextMode::Learned);
+    s.init(&w.groups, &cfg, &SystemConfig::default());
+
+    // A request runs on instance 0 and generates 700 tokens...
+    let id = buffer.all()[0].id();
+    let group = buffer.get(id).group();
+    buffer.mark_scheduled(id);
+    buffer.get_mut(id).generated = 700;
+    // ...then the instance dies: the driver drains it back to waiting
+    // and notifies the policy.
+    buffer.mark_waiting(id);
+    s.on_instance_lost(
+        InstanceId(0),
+        &[id],
+        &[InstanceId(1)],
+        &buffer,
+    );
+
+    // A short sibling finishing afterwards must not demote the group
+    // below the drained request's demonstrated progress (before any
+    // finish the estimate is the conservative bound by design; the
+    // progress floor recorded by the drain kicks in from the first
+    // completion).
+    let sib = buffer
+        .all()
+        .iter()
+        .find(|r| r.group() == group && r.id() != id)
+        .unwrap()
+        .id();
+    buffer.mark_scheduled(sib);
+    buffer.get_mut(sib).generated = 10;
+    buffer.mark_finished(sib);
+    s.on_finished(buffer.get(sib));
+    assert_eq!(s.context_manager().estimate(group), 700);
+}
+
+/// Regression (satellite 4): the Partial-Rollout stop threshold counts
+/// unique *completions*. A request re-queued by migration or a fault
+/// drain must not be double-counted toward it, and fault-aborted
+/// requests (terminal but never completed) must not count at all.
+#[test]
+fn stop_after_counts_unique_completions_only() {
+    let cfg = test_cfg();
+    let target = cfg.reqs_per_iter / 2;
+    let horizon = clean_makespan("seer", 9);
+    // Early aborts + a crash: under the old phase-scan accounting the
+    // aborted (phase-finished) requests would have counted toward the
+    // threshold and the run would stop short of `target` completions.
+    let plan = FaultPlan::new()
+        .at(0.0, FaultEvent::RequestAbort { req: RequestId(0) })
+        .at(0.0, FaultEvent::RequestAbort { req: RequestId(9) })
+        .at(
+            0.10 * horizon,
+            FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        )
+        .at(
+            0.25 * horizon,
+            FaultEvent::InstanceRecover {
+                instance: InstanceId(1),
+            },
+        )
+        .sorted();
+    let report = RolloutSession::builder()
+        .workload(cfg.clone())
+        .system(test_sys())
+        .scheduler("seer")
+        .sd("grouped-cst")
+        .seed(9)
+        .stop_after(target)
+        .faults(plan)
+        .run()
+        .unwrap();
+    let m = &report.metrics;
+    assert!(m.aborted >= 2);
+    assert!(
+        m.completions.len() >= target,
+        "stopped short: {} < {target} (aborts/requeues miscounted)",
+        m.completions.len()
+    );
+    let mut ids: Vec<u32> = m.completions.iter().map(|c| c.id.0).collect();
+    let n = ids.len();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "a migrated request completed twice");
+    // Migration really happened at this chunk size, so the uniqueness
+    // assertion above actually bit.
+    assert!(
+        report.sequences.iter().any(|s| s.chunks > 1),
+        "no request ran as more than one chunk — regression test vacuous"
+    );
+}
+
+/// Golden snapshot (satellite 3) of the `RolloutReport::to_json` schema:
+/// the set of key paths is pinned to a checked-in fixture so report-shape
+/// regressions fail loudly. Values are covered by the determinism tests
+/// above (and `wall_secs` is host-dependent by design), so the snapshot
+/// pins *shape*, not numbers.
+///
+/// Regen path (documented): run with `SEER_REGEN_GOLDEN=1` —
+/// `SEER_REGEN_GOLDEN=1 cargo test -q --test faults report_json_schema` —
+/// which rewrites `tests/fixtures/report_golden_keys.json` from the
+/// current report and passes; commit the updated fixture.
+#[test]
+fn report_json_schema_matches_golden() {
+    fn flatten(prefix: &str, j: &Json, out: &mut Vec<String>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let path = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    flatten(&path, v, out);
+                }
+            }
+            _ => out.push(prefix.to_string()),
+        }
+    }
+    let report = run("seer", 7, FaultPlan::new());
+    let mut keys = Vec::new();
+    flatten("", &report.to_json(), &mut keys);
+    keys.sort();
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/report_golden_keys.json");
+    if std::env::var("SEER_REGEN_GOLDEN").is_ok() {
+        let arr =
+            Json::Arr(keys.iter().map(|k| Json::Str(k.clone())).collect());
+        std::fs::write(&path, arr.to_string()).unwrap();
+        eprintln!("regenerated {path:?} ({} keys)", keys.len());
+        return;
+    }
+    let golden_text = std::fs::read_to_string(&path).unwrap();
+    let golden: Vec<String> = Json::parse(&golden_text)
+        .unwrap()
+        .as_arr()
+        .expect("golden fixture must be a JSON array")
+        .iter()
+        .map(|j| j.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(
+        keys, golden,
+        "RolloutReport::to_json schema drifted from the golden fixture; \
+         if intentional, regen with SEER_REGEN_GOLDEN=1 (see test docs)"
+    );
+}
+
+/// Determinism of the JSON pipeline end to end: two identical faulty runs
+/// print byte-identical reports through the CLI's serialization path.
+#[test]
+fn fixture_replay_is_deterministic() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/fault_basic.json");
+    let plan = FaultPlan::load(&path).unwrap();
+    let a = run("verl", 13, plan.clone());
+    let b = run("verl", 13, plan);
+    assert_eq!(stripped_json(&a), stripped_json(&b));
+}

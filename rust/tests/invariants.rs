@@ -1,14 +1,21 @@
 //! Property-based invariant tests over the coordinator, scheduler and
 //! simulation (DESIGN.md §6): no request lost, KV accounting conserved,
 //! estimates monotone, determinism, MBA budget discipline — under
-//! randomized workloads and every scheduling policy.
+//! randomized workloads, every scheduling policy, and (ISSUE 3) seeded
+//! random fault & elasticity scripts.
+
+use std::cell::RefCell;
+use std::rc::Rc;
 
 use seer::config::{SystemConfig, TaskPreset, WorkloadConfig};
 use seer::engine::cluster::{ClusterSim, RolloutOutcome};
+use seer::metrics::EventCounts;
+use seer::rollout::{ObserverHub, RolloutEvent, RolloutObserver};
 use seer::scheduler::{
     ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
 };
 use seer::sim::clock::SimTime;
+use seer::sim::faults::FaultPlan;
 use seer::spec::simmodel::SdStrategy;
 use seer::util::prop::{check, PropConfig};
 use seer::workload::generate_iteration;
@@ -227,6 +234,100 @@ fn oracle_lfs_at_least_as_good_as_no_context() {
                 o <= n * 1.15 + 0.5,
                 "oracle {o:.1}s vs no-context {n:.1}s"
             );
+        },
+    );
+}
+
+/// Observer asserting the event stream's virtual clock never runs
+/// backwards.
+#[derive(Default)]
+struct MonotoneClock {
+    last: SimTime,
+    events: u64,
+}
+
+impl RolloutObserver for MonotoneClock {
+    fn on_event(&mut self, ev: &RolloutEvent) {
+        let now = ev.now();
+        assert!(
+            now >= self.last,
+            "sim clock ran backwards: {now:?} after {:?}",
+            self.last
+        );
+        self.last = now;
+        self.events += 1;
+    }
+}
+
+/// ISSUE 3 property sweep: ~50 seeded (workload, scale, policy,
+/// fault-plan) combos, asserting the cross-cutting invariants — every
+/// request completes or is explicitly aborted (none silently lost), the
+/// KV pool is never over-committed, per-instance concurrency stays
+/// within the batch cap (checked inside the sim at every telemetry
+/// sample via `with_invariant_checks`), the sim clock is monotone over
+/// the whole event stream, and the `EventCounts` observer tally agrees
+/// with the driver-side `RolloutMetrics`.
+#[test]
+fn faulty_runs_conserve_requests_and_invariants() {
+    check(
+        "fault scripts: conservation + cross-cutting invariants",
+        PropConfig {
+            cases: 50,
+            max_size: 36,
+            ..Default::default()
+        },
+        |c| {
+            let cfg = random_workload(c.rng, c.size);
+            let (sched, name) = random_scheduler(c.rng);
+            let sd = random_sd(c.rng);
+            let seed = c.rng.next_u64();
+            let w = generate_iteration(&cfg, seed);
+            let n = w.n_requests();
+            let plan = FaultPlan::random(
+                c.rng.next_u64(),
+                cfg.n_instances,
+                n,
+                c.rng.uniform(20.0, 240.0),
+            );
+            let counts = Rc::new(RefCell::new(EventCounts::default()));
+            let clock = Rc::new(RefCell::new(MonotoneClock::default()));
+            let mut hub = ObserverHub::new();
+            hub.push(Box::new(counts.clone()));
+            hub.push(Box::new(clock.clone()));
+            let sys = SystemConfig {
+                chunk_size: (cfg.avg_gen_len / 3).clamp(16, 2048),
+                ..Default::default()
+            };
+            let out = ClusterSim::new(cfg.clone(), sys, w.groups, sched, sd)
+                .with_faults(plan)
+                .with_invariant_checks()
+                .with_observers(hub)
+                .sample_interval(SimTime::from_secs(2))
+                .run();
+            let m = &out.metrics;
+            // Conservation: completed + aborted == issued, no dupes.
+            assert_eq!(
+                m.completions.len() + m.aborted as usize,
+                n,
+                "policy {name} lost requests under faults"
+            );
+            let mut ids: Vec<u32> =
+                m.completions.iter().map(|c| c.id.0).collect();
+            ids.sort();
+            ids.dedup();
+            assert_eq!(ids.len(), m.completions.len(), "{name} dup completion");
+            out.buffer.check_invariants();
+            assert_eq!(out.buffer.n_aborted() as u64, m.aborted);
+            // Observer tally consistent with driver-side metrics.
+            let ec = *counts.borrow();
+            assert_eq!(ec.finished, m.completions.len() as u64);
+            assert_eq!(ec.aborted, m.aborted);
+            assert_eq!(ec.tokens, m.tokens_generated);
+            assert_eq!(ec.preemptions, m.preemptions);
+            assert_eq!(ec.migrations, m.migrations);
+            assert_eq!(ec.instances_lost, m.instances_lost);
+            assert_eq!(ec.rebalanced, m.fault_recovered);
+            assert!(clock.borrow().events > 0);
         },
     );
 }
