@@ -8,7 +8,16 @@
 use crate::config::{SystemConfig, TaskPreset, WorkloadConfig};
 use crate::rollout::{RolloutReport, RolloutSession};
 use crate::spec::simmodel::SdStrategy;
+use crate::sweep::SweepRunner;
 use crate::util::cli::Args;
+
+/// The sweep runner multi-run experiments fan out through. Thread count
+/// comes from `SEER_SWEEP_THREADS` (default: one per core, capped at 8);
+/// results are order-restored, so experiment output is identical at any
+/// thread count.
+pub fn runner() -> SweepRunner {
+    SweepRunner::from_env()
+}
 
 /// Scale selector: experiments run at a reduced-but-faithful scale by
 /// default (`fast`), or closer to paper scale with `--full`.

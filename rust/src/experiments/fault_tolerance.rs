@@ -19,7 +19,7 @@ use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_secs, Table};
 use crate::workload::InstanceId;
 
-use super::common::Scale;
+use super::common::{runner, Scale};
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
     let preset = TaskPreset::Qwen2Vl72b;
@@ -65,15 +65,17 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
             "Recovery",
         ],
     );
-    for (label, scheduler, sd) in [
+    // All three systems replay the same script concurrently (sweep
+    // runner); results come back in row order.
+    let systems = [
         ("veRL", "verl", SdStrategy::None),
         ("StreamRL-O", "streamrl", SdStrategy::None),
         ("SEER", "seer", SdStrategy::GroupedCst),
-    ] {
-        let report = scale
-            .session(preset, scheduler, sd)
-            .faults(plan.clone())
-            .run()?;
+    ];
+    let reports = runner().try_map(&systems, |_, &(_, scheduler, sd)| {
+        scale.session(preset, scheduler, sd).faults(plan.clone()).run()
+    })?;
+    for (&(label, _, _), report) in systems.iter().zip(&reports) {
         let m = &report.metrics;
         anyhow::ensure!(
             m.instances_lost >= 1,

@@ -1,12 +1,16 @@
 //! Figure 7: end-to-end rollout throughput of RL systems across tasks and
 //! group sizes — veRL, veRL+vanilla-SD, StreamRL-Oracle, and SEER.
+//!
+//! The measurement grid (system × group size × seed) fans out through
+//! the parallel [`crate::sweep::SweepRunner`]; results are order-restored
+//! before averaging, so the table is identical at any thread count.
 
 use crate::config::{TaskPreset, ALL_PRESETS};
 use crate::rollout::RolloutSession;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_x, Table};
 
-use super::common::Scale;
+use super::common::{runner, Scale};
 
 /// The paper's per-task vanilla SD baseline (§4.1).
 pub fn vanilla_sd_for(preset: TaskPreset) -> SdStrategy {
@@ -31,42 +35,58 @@ pub fn systems(
 }
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let runner = runner();
     for preset in ALL_PRESETS {
         let base = scale.workload(preset);
         let group_sizes: &[usize] = &[8, 16];
+        let systems = systems(preset);
+        // Flatten the measurement grid; each item is one rollout.
+        let mut items: Vec<(usize, usize, &str, SdStrategy, usize, u64)> =
+            Vec::new();
+        for (si, &(_, sched, sd)) in systems.iter().enumerate() {
+            for (gi, &g) in group_sizes.iter().enumerate() {
+                for i in 0..scale.iters {
+                    items.push((si, gi, sched, sd, g, scale.seed + i as u64));
+                }
+            }
+        }
+        let tps = runner.try_map(&items, |_, &(_, _, sched, sd, g, seed)| {
+            let cfg = base.with_group_size(g);
+            let sys = scale.sys(&cfg);
+            let report = RolloutSession::builder()
+                .workload(cfg)
+                .system(sys)
+                .scheduler(sched)
+                .sd_strategy(sd)
+                .seed(seed)
+                .run()?;
+            Ok(report.metrics.throughput())
+        })?;
+        let mean_tp = |si: usize, gi: usize| {
+            let vals: Vec<f64> = items
+                .iter()
+                .zip(&tps)
+                .filter(|((s, g, ..), _)| *s == si && *g == gi)
+                .map(|(_, &tp)| tp)
+                .collect();
+            vals.iter().sum::<f64>() / vals.len() as f64
+        };
         let mut t = Table::new(
             &format!("Figure 7 — rollout throughput, {}", base.name),
             &["System", "G=8 tok/s", "G=8 vs veRL", "G=16 tok/s", "G=16 vs veRL"],
         );
-        let mut rows: Vec<Vec<String>> = vec![];
         let mut base_tp = [0.0f64; 2];
-        for (name, sched, sd) in systems(preset) {
+        for (si, (name, _, _)) in systems.iter().enumerate() {
             let mut cells = vec![name.to_string()];
-            for (gi, &g) in group_sizes.iter().enumerate() {
-                let cfg = base.with_group_size(g);
-                let sys = scale.sys(&cfg);
-                let mut tp = 0.0;
-                for i in 0..scale.iters {
-                    let report = RolloutSession::builder()
-                        .workload(cfg.clone())
-                        .system(sys.clone())
-                        .scheduler(sched)
-                        .sd_strategy(sd)
-                        .seed(scale.seed + i as u64)
-                        .run()?;
-                    tp += report.metrics.throughput();
-                }
-                tp /= scale.iters as f64;
-                if name == "veRL" {
+            for gi in 0..group_sizes.len() {
+                let tp = mean_tp(si, gi);
+                if si == 0 {
                     base_tp[gi] = tp;
                 }
                 cells.push(format!("{tp:.0}"));
                 cells.push(fmt_x(tp / base_tp[gi].max(1e-9)));
             }
-            rows.push(cells);
-        }
-        for r in &rows {
-            t.row(r);
+            t.row(&cells);
         }
         t.note("paper: SEER gains 44-104% over veRL; StreamRL-Oracle can lose to veRL on kimi-k2");
         t.print();

@@ -1,13 +1,29 @@
 //! Figure 8: tail time (time spent solely on the last 10% of requests)
 //! and total rollout time, veRL vs SEER, across the three tasks.
+//!
+//! The six rollouts (3 tasks × 2 systems) run concurrently through the
+//! parallel [`crate::sweep::SweepRunner`]; order is restored before the
+//! table is printed.
 
-use crate::config::ALL_PRESETS;
+use crate::config::{TaskPreset, ALL_PRESETS};
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_pct, fmt_secs, Table};
 
-use super::common::{measure, Scale};
+use super::common::{runner, Scale};
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
+    let items: Vec<(TaskPreset, &str, SdStrategy)> = ALL_PRESETS
+        .into_iter()
+        .flat_map(|preset| {
+            [
+                (preset, "verl", SdStrategy::None),
+                (preset, "seer", SdStrategy::GroupedCst),
+            ]
+        })
+        .collect();
+    let reports = runner().try_map(&items, |_, &(preset, sched, sd)| {
+        scale.session(preset, sched, sd).run()
+    })?;
     let mut t = Table::new(
         "Figure 8 — tail time and total rollout time",
         &[
@@ -15,15 +31,14 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
             "Tail reduction",
         ],
     );
-    for preset in ALL_PRESETS {
-        let verl = measure(scale, preset, "verl", "verl", SdStrategy::None);
-        let seer =
-            measure(scale, preset, "seer", "seer", SdStrategy::GroupedCst);
+    for (pi, preset) in ALL_PRESETS.into_iter().enumerate() {
+        let verl = &reports[2 * pi];
+        let seer = &reports[2 * pi + 1];
         let cfg = scale.workload(preset);
-        let vt = verl.report.metrics.tail_time(0.10).as_secs_f64();
-        let vtot = verl.report.metrics.makespan.as_secs_f64();
-        let st = seer.report.metrics.tail_time(0.10).as_secs_f64();
-        let stot = seer.report.metrics.makespan.as_secs_f64();
+        let vt = verl.metrics.tail_time(0.10).as_secs_f64();
+        let vtot = verl.metrics.makespan.as_secs_f64();
+        let st = seer.metrics.tail_time(0.10).as_secs_f64();
+        let stot = seer.metrics.makespan.as_secs_f64();
         t.row(&[
             cfg.name.to_string(),
             "veRL".into(),

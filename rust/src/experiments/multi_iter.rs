@@ -18,7 +18,7 @@ use crate::config::TaskPreset;
 use crate::iteration::{IterationSummary, TrainingConfig, TrainingDriver};
 use crate::util::table::Table;
 
-use super::common::Scale;
+use super::common::{runner, Scale};
 
 /// Paired per-iteration measurements (same seed, same epochs).
 pub struct MultiIterResult {
@@ -42,8 +42,14 @@ pub fn measure(scale: &Scale) -> Result<MultiIterResult> {
         warm_start: warm,
         ..TrainingConfig::new(scale.workload(TaskPreset::Moonlight))
     };
-    let cold = TrainingDriver::new(cfg(false)).run()?;
-    let warm = TrainingDriver::new(cfg(true)).run()?;
+    // The cold and warm drivers are independent (same seed, same epoch
+    // sequence), so they run as two parallel sweep work items.
+    let modes = [false, true];
+    let mut results = runner()
+        .try_map(&modes, |_, &warm| TrainingDriver::new(cfg(warm)).run())?
+        .into_iter();
+    let cold = results.next().expect("cold driver result");
+    let warm = results.next().expect("warm driver result");
     Ok(MultiIterResult { cold, warm })
 }
 

@@ -207,7 +207,7 @@ impl TrainingDriver {
             iter,
             warm,
             makespan_secs: m.makespan.as_secs_f64(),
-            p99_finish_secs: m.completion_summary().percentile(99.0),
+            p99_finish_secs: m.finish_percentile(99.0),
             tail_secs: m.tail_time(0.10).as_secs_f64(),
             throughput_tok_s: m.throughput(),
             tokens: m.tokens_generated,

@@ -82,8 +82,15 @@
 //!   (decayed per-group length/token statistics, JSON-serializable) and
 //!   the [`iteration::TrainingDriver`] multi-epoch loop that warm-starts
 //!   every layer above from it.
+//! * [`sweep`] — the parallel deterministic study layer:
+//!   [`sweep::SweepSpec`] grids (scheduler × seed × scale × fault plan ×
+//!   drift) executed by [`sweep::SweepRunner`] across std worker threads
+//!   with order-independent aggregation (same spec ⇒ byte-identical
+//!   report JSON at any thread count), paired per-seed statistics with
+//!   seeded-bootstrap CIs, and the `BENCH_rollout.json` perf baselines.
 //! * [`experiments`] — regenerates every table and figure of the paper's
-//!   evaluation section, measuring through sessions.
+//!   evaluation section, measuring through sessions (multi-run
+//!   experiments fan out through the sweep runner).
 
 pub mod config;
 pub mod coordinator;
@@ -98,6 +105,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod sim;
 pub mod spec;
+pub mod sweep;
 pub mod util;
 pub mod workload;
 

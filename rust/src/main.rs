@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   seer experiment <id|all> [--full] [--seed N] [--iters N]
 //!   seer rollout --task <moonlight|qwen|kimi> --scheduler <name> [--sd <strategy>] [--faults FILE] [--json]
+//!   seer sweep [--task moonlight] [--schedulers a,b] [--seeds N] [--threads N] [--out F] [--bench-out F]
 //!   seer train [--task moonlight] [--iters N] [--save-ctx F] [--load-ctx F]
 //!   seer train --real [--preset small] [--iters N] [--artifacts DIR]
 //!   seer info
@@ -31,6 +32,9 @@ USAGE:
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
        [--faults FILE] [--json]
+  seer sweep [--task <moonlight|qwen|kimi>] [--schedulers a,b,c] [--sd S]
+       [--seeds N] [--seed BASE] [--scales a,b] [--drifts x,y] [--faults FILE]
+       [--threads N] [--out FILE] [--bench-out FILE] [--full]
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
        [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
@@ -44,6 +48,19 @@ USAGE:
   aborts) against the chosen scheduler — same seed + same script give a
   bit-identical report, so scripts are directly comparable across
   schedulers (see `seer experiment faults`).
+
+  sweep expands a study grid (schedulers x seeds x scales x fault plans x
+  drifts) and executes it across worker threads with deterministic,
+  order-independent aggregation: the JSON report on stdout is
+  byte-identical for any --threads value (wall-clock goes to stderr).
+  The report carries per-cell results, per-group means with
+  seeded-bootstrap CIs, and per-seed paired speedup / tail-reduction of
+  every scheduler against the first one listed. Unlike rollout --faults,
+  sweep --faults adds a *dimension*: every grid point runs both healthy
+  ("none") and under the script, so rows compare like-for-like — the
+  cell count doubles (printed up front on stderr). --bench-out
+  additionally writes the sim hot-path BENCH_rollout.json baselines
+  (SEER_BENCH_MS=0 for the single-iteration CI smoke mode).
 
   train runs N simulated GRPO iterations through the multi-iteration
   driver, warm-starting each from the cross-iteration context store
@@ -115,6 +132,87 @@ fn cmd_rollout(args: &Args) -> Result<()> {
             m.aborted,
             m.mean_recovery_latency().as_secs_f64(),
         );
+    }
+    Ok(())
+}
+
+/// Parallel deterministic sweep: expand a study grid and execute it
+/// across worker threads, printing the byte-stable JSON report.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use seer::sweep::{SweepRunner, SweepSpec};
+    let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --task"))?;
+    let scale = seer::experiments::common::Scale::from_args(
+        !args.has_flag("full"),
+        args,
+    );
+    let workload = scale.workload(preset);
+    let system = scale.sys(&workload);
+    let schedulers: Vec<String> = args
+        .get_or("schedulers", "seer,verl,streamrl")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect();
+    let n_seeds = args.get_usize("seeds", 3).max(1);
+    let mut spec = SweepSpec::new(workload)
+        .system(system)
+        .sd(args.get_or("sd", "grouped-cst"))
+        .seeds((0..n_seeds as u64).map(|i| scale.seed + i));
+    spec.schedulers = schedulers;
+    if let Some(s) = args.get("scales") {
+        spec.scales = s
+            .split(',')
+            .map(|x| x.parse().map_err(|_| anyhow::anyhow!("bad --scales: {x}")))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(s) = args.get("drifts") {
+        spec.drifts = s
+            .split(',')
+            .map(|x| x.parse().map_err(|_| anyhow::anyhow!("bad --drifts: {x}")))
+            .collect::<Result<_>>()?;
+    }
+    // Dimension validity (scale >= 1, drifts finite and >= 0) is checked
+    // once, by SweepSpec::validate inside SweepRunner::run.
+    if let Some(path) = args.get("faults") {
+        let plan =
+            seer::sim::faults::FaultPlan::load(std::path::Path::new(path))?;
+        // Faults become a dimension: every cell runs healthy AND faulted.
+        spec = spec
+            .fault_plan("none", seer::sim::faults::FaultPlan::new())
+            .fault_plan(path, plan);
+    }
+    let runner = match args.get_usize("threads", 0) {
+        0 => SweepRunner::from_env(),
+        n => SweepRunner::new(n),
+    };
+    eprintln!(
+        "sweep: task={} cells={} threads={} (schedulers {:?}, {} seeds)",
+        spec.workload.name,
+        spec.cardinality(),
+        runner.threads(),
+        spec.schedulers,
+        n_seeds,
+    );
+    let outcome = runner.run(&spec)?;
+    eprintln!(
+        "sweep: wall {:.2}s for {} cells on {} threads",
+        outcome.wall_secs,
+        outcome.report.cells.len(),
+        runner.threads(),
+    );
+    let json = outcome.report.to_json().to_string();
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json)?;
+            eprintln!("sweep: report written to {path}");
+        }
+        None => println!("{json}"),
+    }
+    if let Some(path) = args.get("bench-out") {
+        let suite = seer::sweep::rollout_bench_suite(&spec.schedulers)?;
+        suite.write(std::path::Path::new(path))?;
+        eprintln!("sweep: bench baselines written to {path}");
     }
     Ok(())
 }
@@ -249,6 +347,7 @@ fn main() -> Result<()> {
             seer::experiments::run(id, &args)
         }
         Some("rollout") => cmd_rollout(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("train") if args.has_flag("real") => cmd_train_real(&args),
         Some("train") => cmd_train_sim(&args),
         Some("info") => cmd_info(),

@@ -126,6 +126,15 @@ impl RolloutMetrics {
         }
     }
 
+    /// `p`-th percentile of request finish times, in virtual seconds
+    /// (0.0 with no completions). The sweep layer's p99 long-tail metric.
+    pub fn finish_percentile(&self, p: f64) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completion_summary().percentile(p)
+    }
+
     /// Completion-time summary.
     pub fn completion_summary(&self) -> Summary {
         let mut s = Summary::new();
@@ -237,6 +246,18 @@ mod tests {
         let tail = m.tail_time(0.10);
         // 90% cut is at the 9th completion (t=9): tail = 91s.
         assert!((tail.as_secs_f64() - 91.0).abs() < 1e-6, "{tail:?}");
+    }
+
+    #[test]
+    fn finish_percentile_exact() {
+        let mut m = RolloutMetrics::new(1);
+        assert_eq!(m.finish_percentile(99.0), 0.0);
+        for i in 0..10 {
+            m.completions.push(cpl(i, (i + 1) as f64));
+        }
+        assert_eq!(m.finish_percentile(50.0), 5.0);
+        assert_eq!(m.finish_percentile(99.0), 10.0);
+        assert_eq!(m.finish_percentile(100.0), 10.0);
     }
 
     #[test]

@@ -193,6 +193,8 @@ pub struct SimBackend {
     scheduler_name: &'static str,
     sd: SdStrategy,
     seed: u64,
+    /// Cluster-scale override (the sweep layer's scale dimension).
+    n_instances: Option<usize>,
     stop_after: Option<usize>,
     sample_interval: Option<SimTime>,
     /// Explicit epoch workload (overrides generation from `cfg`/`seed`).
@@ -224,6 +226,9 @@ impl RolloutBackend for SimBackend {
         // through result assembly — matching what the pre-session
         // benches measured around `run_rollout`.
         let start = Instant::now();
+        if let Some(n) = self.n_instances {
+            self.cfg.n_instances = n.max(1);
+        }
         let groups = self
             .groups
             .take()
@@ -376,6 +381,7 @@ pub struct RolloutSessionBuilder<'m> {
     scheduler: Option<String>,
     sd: Option<SdChoice>,
     seed: Option<u64>,
+    n_instances: Option<usize>,
     stop_after: Option<usize>,
     sample_interval: Option<SimTime>,
     groups: Option<Vec<GroupSpec>>,
@@ -395,6 +401,7 @@ impl<'m> RolloutSessionBuilder<'m> {
             scheduler: None,
             sd: None,
             seed: None,
+            n_instances: None,
             stop_after: None,
             sample_interval: None,
             groups: None,
@@ -440,6 +447,16 @@ impl<'m> RolloutSessionBuilder<'m> {
     /// real engine's RNG seed lives in [`RealRolloutConfig::seed`].
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = Some(seed);
+        self
+    }
+
+    /// Simulated backend: override the workload's cluster scale
+    /// (`n_instances`, clamped to ≥ 1) without cloning and editing the
+    /// whole config — the sweep layer's scale dimension. Workload
+    /// *generation* is independent of the instance count, so the same
+    /// seed produces the same requests at every scale.
+    pub fn n_instances(mut self, n: usize) -> Self {
+        self.n_instances = Some(n);
         self
     }
 
@@ -533,15 +550,16 @@ impl<'m> RolloutSessionBuilder<'m> {
                 || self.sd.is_some()
                 || self.seed.is_some()
                 || self.system.is_some()
+                || self.n_instances.is_some()
                 || self.stop_after.is_some()
                 || self.sample_interval.is_some()
                 || self.groups.is_some()
                 || self.faults.is_some()
             {
                 bail!(
-                    "scheduler/sd/seed/system/stop_after/sample_interval/\
-                     groups/faults are simulator-only; configure the real \
-                     engine via RealRolloutConfig"
+                    "scheduler/sd/seed/system/n_instances/stop_after/\
+                     sample_interval/groups/faults are simulator-only; \
+                     configure the real engine via RealRolloutConfig"
                 );
             }
             return Ok(RolloutSession {
@@ -577,6 +595,7 @@ impl<'m> RolloutSessionBuilder<'m> {
                 scheduler_name,
                 sd,
                 seed: self.seed.unwrap_or(42),
+                n_instances: self.n_instances,
                 stop_after: self.stop_after,
                 sample_interval: self.sample_interval,
                 groups: self.groups,
@@ -635,6 +654,35 @@ mod tests {
             .requests(vec![])
             .build();
         assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn n_instances_override_scales_the_fleet() {
+        let run = |n: Option<usize>| {
+            let mut b = RolloutSession::builder()
+                .workload(TaskPreset::Moonlight.workload_for_test())
+                .scheduler("seer")
+                .sd("none")
+                .seed(7);
+            if let Some(n) = n {
+                b = b.n_instances(n);
+            }
+            b.run().unwrap()
+        };
+        let scaled = run(Some(3));
+        // The fleet really ran at the overridden scale...
+        assert_eq!(scaled.metrics.busy_time.len(), 3);
+        // ...on the same workload: generation is scale-independent.
+        let base = run(None);
+        assert_ne!(
+            base.metrics.busy_time.len(),
+            3,
+            "base workload must differ in scale for this test to bite"
+        );
+        assert_eq!(
+            scaled.metrics.tokens_generated,
+            base.metrics.tokens_generated
+        );
     }
 
     #[test]

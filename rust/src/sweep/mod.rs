@@ -1,0 +1,111 @@
+//! Parallel deterministic sweeps over the rollout simulator.
+//!
+//! Seer's claims are comparative (2.04× throughput, 72–94% tail
+//! reduction vs synchronous baselines), so the experiment harness needs
+//! to run *grids* of rollouts — scheduler policy × seed × cluster scale
+//! × fault plan × drift — and report paired statistics rather than
+//! single-run point estimates. This module is that layer:
+//!
+//! * [`SweepSpec`] describes the grid and expands it into independent
+//!   [`SweepCell`]s in a documented stable order.
+//! * [`SweepRunner`] executes cells across std worker threads (no tokio;
+//!   the `spec::dgds` thread/channel idiom) and restores input order
+//!   before aggregating, so the same spec + seeds produce **byte
+//!   identical** [`SweepReport`] JSON at any thread count — pinned by
+//!   `rust/tests/sweep.rs`.
+//! * Aggregation reports per-group means with seeded-bootstrap
+//!   percentile CIs and per-seed paired speedup / tail-reduction against
+//!   the baseline scheduler ([`crate::util::stats`]).
+//! * [`rollout_bench_suite`] wraps [`crate::util::bench`] to write the
+//!   `BENCH_rollout.json` baselines for the sim hot path.
+//!
+//! ```
+//! use seer::config::TaskPreset;
+//! use seer::sweep::{SweepRunner, SweepSpec};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+//!     .schedulers(&["seer", "verl"])
+//!     .seeds([1, 2]);
+//! let outcome = SweepRunner::new(2).run(&spec)?;
+//! assert_eq!(outcome.report.cells.len(), 4);
+//! // Paired per-seed speedup of every scheduler vs the baseline:
+//! assert_eq!(outcome.report.paired[0].speedup.n, 2);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The CLI front end is `seer sweep` (see `main.rs`); the experiment
+//! harness (`fig7`, `fig8`, `faults`, `multi-iter`) fans its
+//! measurements out through [`SweepRunner::map`].
+
+pub mod runner;
+pub mod spec;
+
+pub use runner::{
+    Aggregate, PairedComparison, SweepOutcome, SweepReport, SweepRunner,
+};
+pub use spec::{CellResult, SweepCell, SweepSpec};
+
+use anyhow::Result;
+
+use crate::rollout::RolloutSession;
+use crate::util::bench::BenchSuite;
+
+/// Benchmark the sim hot path — one full rollout session per scheduler
+/// at test scale — into a [`BenchSuite`] ready to be written as
+/// `BENCH_rollout.json`. Honors `SEER_BENCH_MS` (0 = single-iteration
+/// CI smoke mode).
+pub fn rollout_bench_suite<S: AsRef<str>>(schedulers: &[S]) -> Result<BenchSuite> {
+    let cfg = crate::config::TaskPreset::Moonlight.workload_for_test();
+    let mut suite = BenchSuite::new("rollout");
+    for s in schedulers {
+        let name = s.as_ref();
+        // Validate the name once up front so a typo is an error, not a
+        // panic inside the bench closure.
+        RolloutSession::builder()
+            .workload(cfg.clone())
+            .scheduler(name)
+            .sd("grouped-cst")
+            .build()?;
+        suite.run(&format!("rollout_{name}"), || {
+            let report = RolloutSession::builder()
+                .workload(cfg.clone())
+                .scheduler(name)
+                .sd("grouped-cst")
+                .seed(42)
+                .run()
+                .expect("bench rollout failed");
+            std::hint::black_box(report.metrics.tokens_generated);
+        });
+    }
+    Ok(suite)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_suite_runs_in_smoke_mode() {
+        // Single-iteration smoke so the test stays fast; also exercises
+        // the SEER_BENCH_MS=0 path end to end.
+        let _guard = crate::util::bench::env_lock();
+        std::env::set_var("SEER_BENCH_MS", "0");
+        let suite = rollout_bench_suite(&["seer"]).unwrap();
+        std::env::remove_var("SEER_BENCH_MS");
+        let j = suite.to_json();
+        assert!(j
+            .expect("benches")
+            .expect("rollout_seer")
+            .expect("iters")
+            .as_u64()
+            .unwrap()
+            >= 1);
+    }
+
+    #[test]
+    fn bench_suite_rejects_unknown_scheduler() {
+        assert!(rollout_bench_suite(&["not-a-policy"]).is_err());
+    }
+}

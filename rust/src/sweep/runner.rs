@@ -1,0 +1,473 @@
+//! The parallel deterministic sweep runner.
+//!
+//! [`SweepRunner`] fans independent work items out across std worker
+//! threads (the repo is tokio-free; this reuses the `spec::dgds`
+//! thread/channel idiom) and restores input order before anything is
+//! aggregated, so results are a pure function of the work items — the
+//! same spec and seeds produce byte-identical reports at every thread
+//! count. The primitive is [`SweepRunner::map`]: an order-preserving
+//! parallel map over a shared atomic work cursor. [`SweepRunner::run`]
+//! builds on it to execute a whole [`SweepSpec`] grid and aggregate the
+//! results into a [`SweepReport`] with seeded-bootstrap CIs and paired
+//! per-seed comparisons against the baseline scheduler.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+use crate::util::stats::{
+    bootstrap_mean_ci, paired_speedup, paired_tail_reduction, Ci, Paired,
+    BOOTSTRAP_LEVEL, BOOTSTRAP_RESAMPLES,
+};
+
+use super::spec::{CellResult, SweepSpec};
+
+/// Base seed for the report's bootstrap resampling; each aggregate group
+/// and paired comparison offsets it by its stable group ordinal, so the
+/// report is deterministic in the spec alone.
+const BOOT_SEED: u64 = 0x5EE2_B007;
+
+/// Executes sweep cells across worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    threads: usize,
+}
+
+impl SweepRunner {
+    /// A runner with exactly `threads` workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        SweepRunner {
+            threads: threads.max(1),
+        }
+    }
+
+    /// One worker per available core, capped at 8 (sweep cells are
+    /// CPU-bound; beyond the cap coordination costs dominate at our
+    /// cell sizes).
+    pub fn auto() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        SweepRunner::new(n.min(8))
+    }
+
+    /// `SEER_SWEEP_THREADS` override, else [`SweepRunner::auto`]. The
+    /// experiment harness and CLI default to this.
+    pub fn from_env() -> Self {
+        match std::env::var("SEER_SWEEP_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+        {
+            Some(n) if n >= 1 => SweepRunner::new(n),
+            _ => SweepRunner::auto(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Order-preserving parallel map: applies `f` to every item and
+    /// returns results in *input* order, regardless of which worker
+    /// finished first. With one thread (or one item) this degenerates to
+    /// a plain serial loop — the reference the equivalence tests compare
+    /// against. A panic in `f` propagates to the caller with its
+    /// *original payload* (workers are joined explicitly and the first
+    /// panic is resumed), so a failing property assertion inside `f`
+    /// reads like an ordinary test failure — reproduction seed and all.
+    pub fn map<T, R, F>(&self, items: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let n = items.len();
+        let threads = self.threads.min(n);
+        if threads <= 1 {
+            return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = channel::<(usize, R)>();
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let tx = tx.clone();
+                    let cursor = &cursor;
+                    let f = &f;
+                    s.spawn(move || loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let r = f(i, &items[i]);
+                        if tx.send((i, r)).is_err() {
+                            break;
+                        }
+                    })
+                })
+                .collect();
+            // Join explicitly so a worker panic keeps its payload
+            // (letting `scope` auto-join would replace it with the
+            // generic "a scoped thread panicked").
+            let mut first_panic = None;
+            for h in handles {
+                if let Err(payload) = h.join() {
+                    first_panic.get_or_insert(payload);
+                }
+            }
+            if let Some(payload) = first_panic {
+                std::panic::resume_unwind(payload);
+            }
+        });
+        drop(tx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx.iter() {
+            slots[i] = Some(r);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every item mapped exactly once"))
+            .collect()
+    }
+
+    /// [`map`](Self::map) for fallible work: runs everything, then
+    /// returns the first error (by item order) if any.
+    pub fn try_map<T, R, F>(&self, items: &[T], f: F) -> Result<Vec<R>>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> Result<R> + Sync,
+    {
+        self.map(items, f).into_iter().collect()
+    }
+
+    /// Expand and execute the whole grid, then aggregate. The report is
+    /// deterministic in the spec; only [`SweepOutcome::wall_secs`]
+    /// (kept outside the report) depends on the host. Rejects specs
+    /// whose dimension values would mislabel report rows
+    /// ([`SweepSpec::validate`]).
+    pub fn run(&self, spec: &SweepSpec) -> Result<SweepOutcome> {
+        let start = Instant::now();
+        spec.validate()?;
+        let cells = spec.expand();
+        let results = self
+            .try_map(&cells, |_, cell| {
+                cell.run().with_context(|| {
+                    format!(
+                        "sweep cell {} ({} seed {} scale {} fault {} drift {})",
+                        cell.index,
+                        cell.scheduler,
+                        cell.seed,
+                        cell.n_instances,
+                        cell.fault_name,
+                        cell.drift
+                    )
+                })
+            })?;
+        let report = SweepReport::aggregate(spec, results);
+        Ok(SweepOutcome {
+            report,
+            wall_secs: start.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl Default for SweepRunner {
+    fn default() -> Self {
+        SweepRunner::from_env()
+    }
+}
+
+/// Per-group (scheduler, scale, fault, drift) aggregate across seeds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Aggregate {
+    pub scheduler: String,
+    pub n_instances: usize,
+    pub fault_name: String,
+    pub drift: f64,
+    pub n_seeds: usize,
+    pub mean_makespan_secs: f64,
+    pub mean_throughput_tok_s: f64,
+    pub mean_tail_secs: f64,
+    pub mean_p99_finish_secs: f64,
+    /// Seeded-bootstrap CI over the per-seed throughputs.
+    pub throughput_ci: Ci,
+}
+
+/// Paired per-seed comparison of one scheduler against the baseline
+/// (`spec.schedulers[0]`) at the same scale/fault/drift point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PairedComparison {
+    pub baseline: String,
+    pub candidate: String,
+    pub n_instances: usize,
+    pub fault_name: String,
+    pub drift: f64,
+    /// Makespan speedup `baseline / candidate` per seed.
+    pub speedup: Paired,
+    /// Tail-time reduction `1 - candidate / baseline` per seed.
+    pub tail_reduction: Paired,
+}
+
+/// The deterministic result of one sweep: per-cell results in grid
+/// order, per-group aggregates, and paired comparisons. Contains no
+/// host-dependent field, so [`SweepReport::to_json`] is byte-identical
+/// across thread counts and hosts.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub spec_json: Json,
+    pub cells: Vec<CellResult>,
+    pub aggregates: Vec<Aggregate>,
+    pub paired: Vec<PairedComparison>,
+}
+
+/// A finished sweep: the deterministic report plus the host wall clock
+/// (reported separately — e.g. on stderr — precisely so the JSON stays
+/// comparable across machines and thread counts).
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub report: SweepReport,
+    pub wall_secs: f64,
+}
+
+impl SweepReport {
+    /// Fold ordered cell results into aggregates and paired stats.
+    /// Relies on the expansion contract: results arrive in grid order
+    /// and each aggregate group is one contiguous run of `k` seeds.
+    fn aggregate(spec: &SweepSpec, cells: Vec<CellResult>) -> SweepReport {
+        let (schedulers, scales, faults, drifts, seeds) = spec.dims();
+        let k = seeds.len();
+        let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+        let mut aggregates = Vec::new();
+        for (g, group) in cells.chunks(k).enumerate() {
+            let first = &group[0];
+            let throughputs: Vec<f64> =
+                group.iter().map(|c| c.throughput_tok_s).collect();
+            aggregates.push(Aggregate {
+                scheduler: first.scheduler.clone(),
+                n_instances: first.n_instances,
+                fault_name: first.fault_name.clone(),
+                drift: first.drift,
+                n_seeds: group.len(),
+                mean_makespan_secs: mean(
+                    &group.iter().map(|c| c.makespan_secs).collect::<Vec<_>>(),
+                ),
+                mean_throughput_tok_s: mean(&throughputs),
+                mean_tail_secs: mean(
+                    &group.iter().map(|c| c.tail_secs).collect::<Vec<_>>(),
+                ),
+                mean_p99_finish_secs: mean(
+                    &group
+                        .iter()
+                        .map(|c| c.p99_finish_secs)
+                        .collect::<Vec<_>>(),
+                ),
+                throughput_ci: bootstrap_mean_ci(
+                    &throughputs,
+                    BOOTSTRAP_LEVEL,
+                    BOOTSTRAP_RESAMPLES,
+                    BOOT_SEED.wrapping_add(g as u64),
+                ),
+            });
+        }
+        // Paired layer: scheduler s > 0 vs scheduler 0 at the same
+        // (scale, fault, drift) point. With the scheduler dimension
+        // outermost, scheduler s's groups sit at ordinal s*per + p.
+        let per = scales.len() * faults.len() * drifts.len();
+        let mut paired = Vec::new();
+        for s in 1..schedulers.len() {
+            for p in 0..per {
+                let base = &cells[p * k..(p + 1) * k];
+                let cand_lo = (s * per + p) * k;
+                let cand = &cells[cand_lo..cand_lo + k];
+                let makespans = |xs: &[CellResult]| {
+                    xs.iter().map(|c| c.makespan_secs).collect::<Vec<_>>()
+                };
+                let tails = |xs: &[CellResult]| {
+                    xs.iter().map(|c| c.tail_secs).collect::<Vec<_>>()
+                };
+                let ordinal = (s * per + p) as u64;
+                paired.push(PairedComparison {
+                    baseline: schedulers[0].clone(),
+                    candidate: schedulers[s].clone(),
+                    n_instances: base[0].n_instances,
+                    fault_name: base[0].fault_name.clone(),
+                    drift: base[0].drift,
+                    speedup: paired_speedup(
+                        &makespans(base),
+                        &makespans(cand),
+                        BOOT_SEED ^ (ordinal << 1),
+                    ),
+                    tail_reduction: paired_tail_reduction(
+                        &tails(base),
+                        &tails(cand),
+                        BOOT_SEED ^ ((ordinal << 1) | 1),
+                    ),
+                });
+            }
+        }
+        SweepReport {
+            spec_json: spec.to_json(),
+            cells,
+            aggregates,
+            paired,
+        }
+    }
+
+    /// Serialize the full report. Key order is BTreeMap-stable and every
+    /// value is virtual-time-deterministic, so equal specs print equal
+    /// bytes (pinned by `tests/sweep.rs`).
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("spec".to_string(), self.spec_json.clone());
+        o.insert(
+            "n_cells".to_string(),
+            Json::Num(self.cells.len() as f64),
+        );
+        o.insert(
+            "cells".to_string(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json()).collect()),
+        );
+        o.insert(
+            "aggregates".to_string(),
+            Json::Arr(self.aggregates.iter().map(agg_json).collect()),
+        );
+        o.insert(
+            "paired".to_string(),
+            Json::Arr(self.paired.iter().map(paired_json).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+fn ci_json(ci: &Ci) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("lo".to_string(), Json::Num(ci.lo));
+    o.insert("hi".to_string(), Json::Num(ci.hi));
+    o.insert("level".to_string(), Json::Num(ci.level));
+    Json::Obj(o)
+}
+
+fn paired_stat_json(p: &Paired) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("mean".to_string(), Json::Num(p.mean));
+    o.insert("wins".to_string(), Json::Num(p.wins as f64));
+    o.insert("ci".to_string(), ci_json(&p.ci));
+    Json::Obj(o)
+}
+
+fn agg_json(a: &Aggregate) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("scheduler".to_string(), Json::Str(a.scheduler.clone()));
+    o.insert("n_instances".to_string(), Json::Num(a.n_instances as f64));
+    o.insert("fault".to_string(), Json::Str(a.fault_name.clone()));
+    o.insert("drift".to_string(), Json::Num(a.drift));
+    o.insert("n_seeds".to_string(), Json::Num(a.n_seeds as f64));
+    o.insert(
+        "mean_makespan_secs".to_string(),
+        Json::Num(a.mean_makespan_secs),
+    );
+    o.insert(
+        "mean_throughput_tok_s".to_string(),
+        Json::Num(a.mean_throughput_tok_s),
+    );
+    o.insert("mean_tail_secs".to_string(), Json::Num(a.mean_tail_secs));
+    o.insert(
+        "mean_p99_finish_secs".to_string(),
+        Json::Num(a.mean_p99_finish_secs),
+    );
+    o.insert("throughput_ci".to_string(), ci_json(&a.throughput_ci));
+    Json::Obj(o)
+}
+
+fn paired_json(p: &PairedComparison) -> Json {
+    let mut o = std::collections::BTreeMap::new();
+    o.insert("baseline".to_string(), Json::Str(p.baseline.clone()));
+    o.insert("candidate".to_string(), Json::Str(p.candidate.clone()));
+    o.insert("n_instances".to_string(), Json::Num(p.n_instances as f64));
+    o.insert("fault".to_string(), Json::Str(p.fault_name.clone()));
+    o.insert("drift".to_string(), Json::Num(p.drift));
+    o.insert("n_seeds".to_string(), Json::Num(p.speedup.n as f64));
+    o.insert("speedup".to_string(), paired_stat_json(&p.speedup));
+    o.insert(
+        "tail_reduction".to_string(),
+        paired_stat_json(&p.tail_reduction),
+    );
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_input_order() {
+        let items: Vec<usize> = (0..37).collect();
+        for threads in [1, 2, 8] {
+            let out = SweepRunner::new(threads)
+                .map(&items, |i, &x| (i, x * x));
+            assert_eq!(out.len(), items.len());
+            for (i, (idx, sq)) in out.iter().enumerate() {
+                assert_eq!(*idx, i);
+                assert_eq!(*sq, i * i);
+            }
+        }
+    }
+
+    #[test]
+    fn map_handles_empty_and_fewer_items_than_threads() {
+        let r = SweepRunner::new(8);
+        let empty: Vec<u32> = vec![];
+        assert!(r.map(&empty, |_, &x| x).is_empty());
+        assert_eq!(r.map(&[5u32], |_, &x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn try_map_surfaces_first_error_by_item_order() {
+        let items: Vec<usize> = (0..16).collect();
+        let r = SweepRunner::new(4).try_map(&items, |_, &x| {
+            if x % 2 == 1 {
+                anyhow::bail!("odd {x}")
+            }
+            Ok(x)
+        });
+        assert_eq!(r.unwrap_err().to_string(), "odd 1");
+    }
+
+    #[test]
+    fn map_propagates_worker_panics_with_payload() {
+        let items: Vec<usize> = (0..8).collect();
+        let res = std::panic::catch_unwind(|| {
+            SweepRunner::new(4).map(&items, |_, &x| {
+                assert!(x != 5, "boom at {x}");
+                x
+            })
+        });
+        // The worker's own message survives — not scope's generic
+        // "a scoped thread panicked".
+        let payload = res.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .map(String::as_str)
+            .unwrap_or("");
+        assert!(msg.contains("boom at 5"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn run_rejects_invalid_dimensions() {
+        use crate::config::TaskPreset;
+        let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+            .drifts([-0.5]);
+        let e = SweepRunner::new(1).run(&spec).unwrap_err();
+        assert!(e.to_string().contains("drift"), "{e}");
+    }
+
+    #[test]
+    fn runner_clamps_threads() {
+        assert_eq!(SweepRunner::new(0).threads(), 1);
+        assert!(SweepRunner::auto().threads() >= 1);
+    }
+}

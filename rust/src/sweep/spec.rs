@@ -1,0 +1,471 @@
+//! The sweep grid: [`SweepSpec`] describes a study as the cross product
+//! of scheduler policy × seed × cluster scale × fault plan × drift, and
+//! expands it into independent, self-contained [`SweepCell`]s.
+//!
+//! Expansion order is part of the spec's contract (tests pin it):
+//! scheduler is the outermost dimension, then cluster scale, fault plan,
+//! drift, and finally seed — so the cells belonging to one aggregate
+//! group (same scheduler/scale/fault/drift, varying seed) are contiguous
+//! and the runner can aggregate by index arithmetic without ever
+//! depending on completion order.
+
+use anyhow::{bail, Result};
+
+use crate::config::{SystemConfig, WorkloadConfig};
+use crate::rollout::RolloutSession;
+use crate::sim::faults::FaultPlan;
+use crate::util::json::Json;
+use crate::workload::generate_epoch;
+
+/// The effective dimension vectors of a spec, in expansion order:
+/// `(schedulers, scales, fault_plans, drifts, seeds)`.
+pub type SweepDims = (
+    Vec<String>,
+    Vec<usize>,
+    Vec<(String, FaultPlan)>,
+    Vec<f64>,
+    Vec<u64>,
+);
+
+/// A parameter grid over independent rollout runs.
+///
+/// Empty dimension vectors mean "the single default value" (the base
+/// workload's instance count, no faults, no drift), so a spec is usable
+/// straight from [`SweepSpec::new`].
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Base workload; the scale dimension overrides `n_instances`.
+    pub workload: WorkloadConfig,
+    pub system: SystemConfig,
+    /// Registry names; `schedulers[0]` is the baseline every other
+    /// policy is paired against.
+    pub schedulers: Vec<String>,
+    /// SD strategy registry name, shared by every cell.
+    pub sd: String,
+    /// Workload-generation seeds (the paired-statistics axis).
+    pub seeds: Vec<u64>,
+    /// Cluster scales (`n_instances` values). Empty ⇒ the base workload's.
+    pub scales: Vec<usize>,
+    /// Named fault scripts. Empty ⇒ one healthy plan named `"none"`.
+    pub fault_plans: Vec<(String, FaultPlan)>,
+    /// Epoch-drift sigmas, each ≥ 0 (0.0 = the base iteration
+    /// workload; cells only apply drift when it is > 0, so negative
+    /// values would run the base workload under a misleading label —
+    /// the CLI rejects them).
+    pub drifts: Vec<f64>,
+}
+
+impl SweepSpec {
+    pub fn new(workload: WorkloadConfig) -> Self {
+        SweepSpec {
+            workload,
+            system: SystemConfig::default(),
+            schedulers: vec!["seer".to_string()],
+            sd: "grouped-cst".to_string(),
+            seeds: vec![42],
+            scales: Vec::new(),
+            fault_plans: Vec::new(),
+            drifts: Vec::new(),
+        }
+    }
+
+    pub fn system(mut self, system: SystemConfig) -> Self {
+        self.system = system;
+        self
+    }
+
+    pub fn schedulers<S: AsRef<str>>(mut self, names: &[S]) -> Self {
+        self.schedulers = names.iter().map(|s| s.as_ref().to_string()).collect();
+        self
+    }
+
+    pub fn sd(mut self, name: &str) -> Self {
+        self.sd = name.to_string();
+        self
+    }
+
+    pub fn seeds(mut self, seeds: impl IntoIterator<Item = u64>) -> Self {
+        self.seeds = seeds.into_iter().collect();
+        self
+    }
+
+    pub fn scales(mut self, scales: impl IntoIterator<Item = usize>) -> Self {
+        self.scales = scales.into_iter().collect();
+        self
+    }
+
+    pub fn fault_plan(mut self, name: &str, plan: FaultPlan) -> Self {
+        self.fault_plans.push((name.to_string(), plan));
+        self
+    }
+
+    pub fn drifts(mut self, drifts: impl IntoIterator<Item = f64>) -> Self {
+        self.drifts = drifts.into_iter().collect();
+        self
+    }
+
+    /// Effective dimension values after filling empty dimensions with
+    /// their defaults, in expansion order:
+    /// `(schedulers, scales, fault_plans, drifts, seeds)`.
+    pub fn dims(&self) -> SweepDims {
+        let schedulers = if self.schedulers.is_empty() {
+            vec!["seer".to_string()]
+        } else {
+            self.schedulers.clone()
+        };
+        let scales = if self.scales.is_empty() {
+            vec![self.workload.n_instances]
+        } else {
+            self.scales.clone()
+        };
+        let faults = if self.fault_plans.is_empty() {
+            vec![("none".to_string(), FaultPlan::new())]
+        } else {
+            self.fault_plans.clone()
+        };
+        let drifts = if self.drifts.is_empty() {
+            vec![0.0]
+        } else {
+            self.drifts.clone()
+        };
+        let seeds = if self.seeds.is_empty() {
+            vec![42]
+        } else {
+            self.seeds.clone()
+        };
+        (schedulers, scales, faults, drifts, seeds)
+    }
+
+    /// Reject dimension values the execution layer would otherwise
+    /// silently clamp or ignore, mislabeling report rows: a scale of 0
+    /// (the simulator clamps to 1 while the report would echo 0) and
+    /// non-finite or negative drifts (cells only apply drift > 0, so
+    /// such cells would be base runs under a misleading label).
+    /// [`crate::sweep::SweepRunner::run`] calls this before expanding,
+    /// covering every entry point, not just the CLI.
+    pub fn validate(&self) -> Result<()> {
+        if self.scales.contains(&0) {
+            bail!("sweep scale 0 invalid: n_instances must be >= 1");
+        }
+        if let Some(d) =
+            self.drifts.iter().find(|d| !d.is_finite() || **d < 0.0)
+        {
+            bail!("sweep drift {d} invalid: must be finite and >= 0");
+        }
+        Ok(())
+    }
+
+    /// Number of cells the spec expands to (the dimension product).
+    pub fn cardinality(&self) -> usize {
+        let (sc, s, f, d, k) = self.dims();
+        sc.len() * s.len() * f.len() * d.len() * k.len()
+    }
+
+    /// Seeds per aggregate group — the innermost dimension's length.
+    pub fn seeds_per_group(&self) -> usize {
+        self.dims().4.len()
+    }
+
+    /// Expand the grid into independent session configs, in the
+    /// documented stable order. `cell.index == position` always holds.
+    pub fn expand(&self) -> Vec<SweepCell> {
+        let (schedulers, scales, faults, drifts, seeds) = self.dims();
+        let cap = schedulers.len()
+            * scales.len()
+            * faults.len()
+            * drifts.len()
+            * seeds.len();
+        let mut cells = Vec::with_capacity(cap);
+        for scheduler in &schedulers {
+            for &n_instances in &scales {
+                for (fault_name, plan) in &faults {
+                    for &drift in &drifts {
+                        for &seed in &seeds {
+                            cells.push(SweepCell {
+                                index: cells.len(),
+                                scheduler: scheduler.clone(),
+                                sd: self.sd.clone(),
+                                seed,
+                                n_instances,
+                                fault_name: fault_name.clone(),
+                                faults: plan.clone(),
+                                drift,
+                                workload: self.workload.clone(),
+                                system: self.system.clone(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Spec echo for the report JSON (fault plans by name only — the
+    /// scripts themselves live in their own files).
+    pub fn to_json(&self) -> Json {
+        let (schedulers, scales, faults, drifts, seeds) = self.dims();
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("task".to_string(), Json::Str(self.workload.name.to_string()));
+        o.insert(
+            "reqs_per_iter".to_string(),
+            Json::Num(self.workload.reqs_per_iter as f64),
+        );
+        o.insert(
+            "group_size".to_string(),
+            Json::Num(self.workload.group_size as f64),
+        );
+        o.insert(
+            "schedulers".to_string(),
+            Json::Arr(schedulers.into_iter().map(Json::Str).collect()),
+        );
+        o.insert("sd".to_string(), Json::Str(self.sd.clone()));
+        // Seeds are serialized as strings: u64 seeds (e.g. hashed ones)
+        // can exceed 2^53 and would be silently rounded by a JSON
+        // number, breaking replay-from-report.
+        o.insert(
+            "seeds".to_string(),
+            Json::Arr(seeds.iter().map(|s| Json::Str(s.to_string())).collect()),
+        );
+        o.insert(
+            "scales".to_string(),
+            Json::Arr(scales.iter().map(|&s| Json::Num(s as f64)).collect()),
+        );
+        o.insert(
+            "fault_plans".to_string(),
+            Json::Arr(faults.into_iter().map(|(n, _)| Json::Str(n)).collect()),
+        );
+        o.insert(
+            "drifts".to_string(),
+            Json::Arr(drifts.iter().map(|&d| Json::Num(d)).collect()),
+        );
+        Json::Obj(o)
+    }
+}
+
+/// One fully-specified point of the grid: everything a worker thread
+/// needs to build and run a [`RolloutSession`], as plain data (nothing
+/// non-`Send` crosses threads — each worker constructs its own session).
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// Position in the expanded grid (stable across thread counts).
+    pub index: usize,
+    pub scheduler: String,
+    pub sd: String,
+    pub seed: u64,
+    pub n_instances: usize,
+    pub fault_name: String,
+    pub faults: FaultPlan,
+    /// Epoch-drift sigma; > 0 runs epoch 1 of the drifted sequence
+    /// instead of the base iteration (see [`generate_epoch`]).
+    pub drift: f64,
+    pub workload: WorkloadConfig,
+    pub system: SystemConfig,
+}
+
+impl SweepCell {
+    /// Build and run this cell's rollout session, returning its
+    /// deterministic (virtual-time only) result.
+    pub fn run(&self) -> Result<CellResult> {
+        let mut builder = RolloutSession::builder()
+            .workload(self.workload.clone())
+            .system(self.system.clone())
+            .scheduler(&self.scheduler)
+            .sd(&self.sd)
+            .seed(self.seed)
+            .n_instances(self.n_instances);
+        if self.drift > 0.0 {
+            // Workload generation is scale-independent, so the drifted
+            // epoch is the same whatever `n_instances` the cell runs at.
+            let w = generate_epoch(&self.workload, self.seed, 1, self.drift);
+            builder = builder.groups(w.groups);
+        }
+        if !self.faults.is_empty() {
+            builder = builder.faults(self.faults.clone());
+        }
+        let report = builder.run()?;
+        let m = &report.metrics;
+        Ok(CellResult {
+            index: self.index,
+            scheduler: self.scheduler.clone(),
+            seed: self.seed,
+            n_instances: self.n_instances,
+            fault_name: self.fault_name.clone(),
+            drift: self.drift,
+            makespan_secs: m.makespan.as_secs_f64(),
+            throughput_tok_s: m.throughput(),
+            tail_secs: m.tail_time(0.10).as_secs_f64(),
+            p99_finish_secs: m.finish_percentile(99.0),
+            tokens: m.tokens_generated,
+            completions: m.completions.len(),
+            preemptions: m.preemptions,
+            migrations: m.migrations,
+            aborted: m.aborted,
+            instances_lost: m.instances_lost,
+        })
+    }
+}
+
+/// One cell's outcome: the cell's identity plus virtual-time metrics.
+/// Deliberately contains no host wall-clock field — cell results are
+/// byte-identical however many threads ran them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub index: usize,
+    pub scheduler: String,
+    pub seed: u64,
+    pub n_instances: usize,
+    pub fault_name: String,
+    pub drift: f64,
+    pub makespan_secs: f64,
+    pub throughput_tok_s: f64,
+    pub tail_secs: f64,
+    pub p99_finish_secs: f64,
+    pub tokens: u64,
+    pub completions: usize,
+    pub preemptions: u64,
+    pub migrations: u64,
+    pub aborted: u64,
+    pub instances_lost: u64,
+}
+
+impl CellResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("scheduler", Json::Str(self.scheduler.clone()));
+        // String, not number: u64 seeds can exceed 2^53 (see spec echo).
+        put("seed", Json::Str(self.seed.to_string()));
+        put("n_instances", Json::Num(self.n_instances as f64));
+        put("fault", Json::Str(self.fault_name.clone()));
+        put("drift", Json::Num(self.drift));
+        put("makespan_secs", Json::Num(self.makespan_secs));
+        put("throughput_tok_s", Json::Num(self.throughput_tok_s));
+        put("tail_secs", Json::Num(self.tail_secs));
+        put("p99_finish_secs", Json::Num(self.p99_finish_secs));
+        put("tokens", Json::Num(self.tokens as f64));
+        put("completions", Json::Num(self.completions as f64));
+        put("preemptions", Json::Num(self.preemptions as f64));
+        put("migrations", Json::Num(self.migrations as f64));
+        put("aborted", Json::Num(self.aborted as f64));
+        put("instances_lost", Json::Num(self.instances_lost as f64));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TaskPreset;
+    use crate::sim::faults::FaultEvent;
+    use crate::workload::InstanceId;
+
+    fn spec() -> SweepSpec {
+        SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+            .schedulers(&["seer", "verl"])
+            .seeds([1, 2, 3])
+            .scales([2, 3])
+            .drifts([0.0, 0.1])
+    }
+
+    #[test]
+    fn cardinality_is_dimension_product() {
+        let s = spec();
+        assert_eq!(s.cardinality(), 2 * 2 * 1 * 2 * 3);
+        assert_eq!(s.expand().len(), s.cardinality());
+        assert_eq!(s.seeds_per_group(), 3);
+        // A fault dimension multiplies in.
+        let s = s.fault_plan("none", FaultPlan::new()).fault_plan(
+            "crash1",
+            FaultPlan::new().at(
+                10.0,
+                FaultEvent::InstanceDown {
+                    instance: InstanceId(0),
+                },
+            ),
+        );
+        assert_eq!(s.cardinality(), 2 * 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn defaults_fill_empty_dimensions() {
+        let base = TaskPreset::Moonlight.workload_for_test();
+        let n = base.n_instances;
+        let s = SweepSpec::new(base);
+        assert_eq!(s.cardinality(), 1);
+        let cells = s.expand();
+        assert_eq!(cells[0].scheduler, "seer");
+        assert_eq!(cells[0].n_instances, n);
+        assert_eq!(cells[0].fault_name, "none");
+        assert_eq!(cells[0].drift, 0.0);
+        assert_eq!(cells[0].seed, 42);
+    }
+
+    #[test]
+    fn expansion_order_is_stable_and_seed_innermost() {
+        let s = spec();
+        let a = s.expand();
+        let b = s.expand();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.index, y.index);
+            assert_eq!(x.scheduler, y.scheduler);
+            assert_eq!((x.seed, x.n_instances, x.drift), (y.seed, y.n_instances, y.drift));
+        }
+        // index == position, scheduler outermost, seed innermost.
+        for (i, c) in a.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        assert_eq!(a[0].scheduler, "seer");
+        assert_eq!(a[0].seed, 1);
+        assert_eq!(a[1].seed, 2);
+        assert_eq!(a[2].seed, 3);
+        assert_eq!(a[3].seed, 1, "drift advances after seeds exhaust");
+        assert_ne!(a[0].drift, a[3].drift);
+        let half = a.len() / 2;
+        assert_eq!(a[half - 1].scheduler, "seer");
+        assert_eq!(a[half].scheduler, "verl");
+        // Cells of one aggregate group are contiguous.
+        let k = s.seeds_per_group();
+        for group in a.chunks(k) {
+            assert!(group.windows(2).all(|w| {
+                w[0].scheduler == w[1].scheduler
+                    && w[0].n_instances == w[1].n_instances
+                    && w[0].fault_name == w[1].fault_name
+                    && w[0].drift == w[1].drift
+            }));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_clamped_or_ignored_dimensions() {
+        let base = TaskPreset::Moonlight.workload_for_test();
+        assert!(SweepSpec::new(base.clone()).validate().is_ok());
+        let e = SweepSpec::new(base.clone())
+            .scales([2, 0])
+            .validate()
+            .unwrap_err();
+        assert!(e.to_string().contains("scale 0"), "{e}");
+        for bad in [-0.1, f64::NAN, f64::INFINITY] {
+            let e = SweepSpec::new(base.clone())
+                .drifts([bad])
+                .validate()
+                .unwrap_err();
+            assert!(e.to_string().contains("drift"), "{e}");
+        }
+    }
+
+    #[test]
+    fn spec_json_echoes_dimensions() {
+        let j = spec().to_json();
+        assert_eq!(j.expect("task").as_str(), Some("moonlight"));
+        assert_eq!(j.expect("schedulers").as_arr().unwrap().len(), 2);
+        assert_eq!(j.expect("seeds").as_arr().unwrap().len(), 3);
+        assert_eq!(j.expect("fault_plans").as_arr().unwrap().len(), 1);
+        assert_eq!(
+            j.expect("fault_plans").as_arr().unwrap()[0].as_str(),
+            Some("none")
+        );
+    }
+}

@@ -2,13 +2,28 @@
 //!
 //! `bench` runs a closure until both a minimum iteration count and a
 //! minimum wall time are reached, then reports mean/min ns per iteration.
-//! Results are printed in a stable, greppable format:
+//! Results are printed in a stable, greppable format plus a
+//! machine-readable JSON line for trajectory tooling:
 //!
 //! ```text
 //! bench <name>: mean 123.4ns min 110.0ns (n=10000)
+//! bench_json {"iters":10000,"mean_ns":123.4,"min_ns":110,"name":"<name>"}
 //! ```
+//!
+//! Both lines go to **stderr**, so a program that benches mid-run keeps
+//! its stdout machine-parseable (`seer sweep --bench-out` emits pure
+//! report JSON on stdout while the suite narrates on stderr).
+//!
+//! `SEER_BENCH_MS` controls the minimum wall time per bench; the special
+//! value `0` is a CI smoke mode — no warmup and exactly one timed
+//! iteration, so a bench suite completes in one pass. [`BenchSuite`]
+//! collects named results and writes them as one JSON document (the
+//! `BENCH_*.json` baseline files).
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone, Copy)]
 pub struct BenchResult {
@@ -17,46 +32,75 @@ pub struct BenchResult {
     pub iters: u64,
 }
 
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("mean_ns".to_string(), Json::Num(self.mean_ns));
+        o.insert("min_ns".to_string(), Json::Num(self.min_ns));
+        o.insert("iters".to_string(), Json::Num(self.iters as f64));
+        Json::Obj(o)
+    }
+}
+
 /// Benchmark `f`, returning per-iteration statistics.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
-    // Warmup.
-    for _ in 0..3 {
-        f();
-    }
-    let min_time = std::time::Duration::from_millis(
-        std::env::var("SEER_BENCH_MS")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(300),
-    );
-    let mut iters = 0u64;
-    let mut min_ns = f64::INFINITY;
-    let start = Instant::now();
-    // Batched timing: measure in growing batches to amortize clock reads.
-    let mut batch = 1u64;
-    while start.elapsed() < min_time {
+    let ms: Option<u64> = std::env::var("SEER_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse().ok());
+    let r = if ms == Some(0) {
+        // CI smoke mode: exactly one timed iteration, no warmup. The old
+        // behaviour ran the timing loop zero times (0/0 statistics);
+        // falling back to 300 ms would defeat the point of the knob.
         let t0 = Instant::now();
-        for _ in 0..batch {
+        f();
+        let dt = t0.elapsed().as_nanos() as f64;
+        BenchResult {
+            mean_ns: dt,
+            min_ns: dt,
+            iters: 1,
+        }
+    } else {
+        // Warmup.
+        for _ in 0..3 {
             f();
         }
-        let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
-        min_ns = min_ns.min(dt);
-        iters += batch;
-        if batch < 1024 {
-            batch *= 2;
+        let min_time = std::time::Duration::from_millis(ms.unwrap_or(300));
+        let mut iters = 0u64;
+        let mut min_ns = f64::INFINITY;
+        let start = Instant::now();
+        // Batched timing: measure in growing batches to amortize clock
+        // reads.
+        let mut batch = 1u64;
+        while start.elapsed() < min_time {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            min_ns = min_ns.min(dt);
+            iters += batch;
+            if batch < 1024 {
+                batch *= 2;
+            }
         }
-    }
-    let mean_ns = start.elapsed().as_nanos() as f64 / iters as f64;
-    let r = BenchResult {
-        mean_ns,
-        min_ns,
-        iters,
+        BenchResult {
+            mean_ns: start.elapsed().as_nanos() as f64 / iters as f64,
+            min_ns,
+            iters,
+        }
     };
-    println!(
-        "bench {name}: mean {} min {} (n={iters})",
-        fmt_ns(mean_ns),
-        fmt_ns(min_ns)
+    eprintln!(
+        "bench {name}: mean {} min {} (n={})",
+        fmt_ns(r.mean_ns),
+        fmt_ns(r.min_ns),
+        r.iters
     );
+    let mut o = match r.to_json() {
+        Json::Obj(o) => o,
+        _ => unreachable!(),
+    };
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    eprintln!("bench_json {}", Json::Obj(o));
     r
 }
 
@@ -79,17 +123,149 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// A named collection of bench results, written as one JSON baseline
+/// file (the repo's `BENCH_*.json` perf trajectory). The sim hot path's
+/// suite is built by [`crate::sweep::rollout_bench_suite`] and emitted
+/// by `seer sweep --bench-out`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchSuite {
+    name: String,
+    results: Vec<(String, BenchResult)>,
+}
+
+impl BenchSuite {
+    pub fn new(name: &str) -> Self {
+        BenchSuite {
+            name: name.to_string(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` under [`bench`] and record the result under `name`.
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> BenchResult {
+        let r = bench(name, f);
+        self.record(name, r);
+        r
+    }
+
+    /// Record an externally produced result.
+    pub fn record(&mut self, name: &str, r: BenchResult) {
+        self.results.push((name.to_string(), r));
+    }
+
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// `{"suite": <name>, "benches": {<name>: {iters, mean_ns, min_ns}}}`
+    pub fn to_json(&self) -> Json {
+        let mut benches = std::collections::BTreeMap::new();
+        for (name, r) in &self.results {
+            benches.insert(name.clone(), r.to_json());
+        }
+        let mut o = std::collections::BTreeMap::new();
+        o.insert("suite".to_string(), Json::Str(self.name.clone()));
+        o.insert("benches".to_string(), Json::Obj(benches));
+        Json::Obj(o)
+    }
+
+    /// Write the suite as a JSON baseline file.
+    pub fn write(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+            .map_err(|e| anyhow::anyhow!("writing {path:?}: {e}"))
+    }
+}
+
+/// Serializes tests (and in-crate callers) that mutate `SEER_BENCH_MS` —
+/// the environment is process-global and `cargo test` runs in parallel.
+#[cfg(test)]
+pub fn env_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn reports_reasonable_numbers() {
+        let _guard = env_lock();
         std::env::set_var("SEER_BENCH_MS", "10");
         let r = bench("noop", || {});
+        std::env::remove_var("SEER_BENCH_MS");
         assert!(r.iters > 0);
         assert!(r.min_ns >= 0.0 && r.mean_ns >= r.min_ns * 0.01);
+    }
+
+    #[test]
+    fn bench_ms_zero_is_single_iteration_smoke() {
+        let _guard = env_lock();
+        std::env::set_var("SEER_BENCH_MS", "0");
+        let mut calls = 0u64;
+        let r = bench("smoke", || calls += 1);
         std::env::remove_var("SEER_BENCH_MS");
+        // No warmup, exactly one timed call, sane statistics.
+        assert_eq!(calls, 1);
+        assert_eq!(r.iters, 1);
+        assert!(r.mean_ns.is_finite() && r.mean_ns >= 0.0);
+        assert_eq!(r.mean_ns, r.min_ns);
+    }
+
+    #[test]
+    fn result_json_shape() {
+        let r = BenchResult {
+            mean_ns: 12.5,
+            min_ns: 10.0,
+            iters: 4,
+        };
+        assert_eq!(
+            r.to_json().to_string(),
+            r#"{"iters":4,"mean_ns":12.5,"min_ns":10}"#
+        );
+    }
+
+    #[test]
+    fn suite_collects_and_serializes() {
+        let _guard = env_lock();
+        std::env::set_var("SEER_BENCH_MS", "0");
+        let mut s = BenchSuite::new("demo");
+        s.run("a", || {});
+        s.record(
+            "b",
+            BenchResult {
+                mean_ns: 1.0,
+                min_ns: 1.0,
+                iters: 1,
+            },
+        );
+        std::env::remove_var("SEER_BENCH_MS");
+        assert_eq!(s.len(), 2);
+        let j = s.to_json();
+        assert_eq!(j.expect("suite").as_str(), Some("demo"));
+        assert!(j.expect("benches").expect("a").expect("iters").as_u64() == Some(1));
+        assert!(j.expect("benches").get("b").is_some());
+        // Round-trips through the parser.
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn suite_writes_file() {
+        let _guard = env_lock();
+        std::env::set_var("SEER_BENCH_MS", "0");
+        let mut s = BenchSuite::new("io");
+        s.run("noop", || {});
+        std::env::remove_var("SEER_BENCH_MS");
+        let path = std::env::temp_dir().join("seer_bench_suite_test.json");
+        s.write(&path).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.expect("suite").as_str(), Some("io"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

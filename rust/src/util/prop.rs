@@ -42,21 +42,44 @@ pub struct Case<'a> {
     pub index: usize,
 }
 
+/// The deterministic per-case `(seed, size)` schedule [`check`] drives
+/// its cases with — base seed plus a golden-ratio stride, size ramping
+/// linearly over the run. Exposed so external harnesses (e.g. the
+/// parallel invariant sweep in `rust/tests/invariants.rs`) can
+/// reproduce the exact same cases without duplicating the formula.
+pub fn case_params(cfg: &PropConfig) -> Vec<(u64, usize)> {
+    (0..cfg.cases)
+        .map(|i| {
+            let seed = cfg
+                .base_seed
+                .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let frac = if cfg.cases <= 1 {
+                1.0
+            } else {
+                i as f64 / (cfg.cases - 1) as f64
+            };
+            let size = cfg.min_size
+                + ((cfg.max_size - cfg.min_size) as f64 * frac).round()
+                    as usize;
+            (seed, size)
+        })
+        .collect()
+}
+
+/// Best-effort human-readable message from a caught panic payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
 /// Run `prop` over `cfg.cases` cases. Panics with seed info on failure
 /// (assert inside the property as usual).
 pub fn check<F: FnMut(&mut Case)>(name: &str, cfg: PropConfig, mut prop: F) {
-    for i in 0..cfg.cases {
-        let seed = cfg
-            .base_seed
-            .wrapping_add((i as u64).wrapping_mul(0x9E3779B97F4A7C15));
+    for (i, (seed, size)) in case_params(&cfg).into_iter().enumerate() {
         let mut rng = Rng::new(seed);
-        let frac = if cfg.cases <= 1 {
-            1.0
-        } else {
-            i as f64 / (cfg.cases - 1) as f64
-        };
-        let size = cfg.min_size
-            + ((cfg.max_size - cfg.min_size) as f64 * frac).round() as usize;
         let mut case = Case {
             rng: &mut rng,
             size,
@@ -66,13 +89,7 @@ pub fn check<F: FnMut(&mut Case)>(name: &str, cfg: PropConfig, mut prop: F) {
             || prop(&mut case),
         ));
         if let Err(payload) = result {
-            let msg = payload
-                .downcast_ref::<String>()
-                .cloned()
-                .or_else(|| {
-                    payload.downcast_ref::<&str>().map(|s| s.to_string())
-                })
-                .unwrap_or_else(|| "<non-string panic>".to_string());
+            let msg = panic_message(payload.as_ref());
             panic!(
                 "property '{name}' failed (case {i}, seed {seed:#x}, size {size}): {msg}"
             );
@@ -119,6 +136,44 @@ mod tests {
         let msg = err.downcast_ref::<String>().unwrap();
         assert!(msg.contains("seed"), "message: {msg}");
         assert!(msg.contains("always fails"), "message: {msg}");
+    }
+
+    #[test]
+    fn case_params_match_check_schedule() {
+        let cfg = PropConfig {
+            cases: 50,
+            max_size: 36,
+            ..Default::default()
+        };
+        let params = case_params(&cfg);
+        assert_eq!(params.len(), 50);
+        assert_eq!(params[0], (0x5EE2, 1));
+        assert_eq!(params[49].1, 36, "last case runs at max_size");
+        // Seeds are all distinct (golden-ratio stride).
+        let mut seeds: Vec<u64> = params.iter().map(|p| p.0).collect();
+        seeds.sort();
+        seeds.dedup();
+        assert_eq!(seeds.len(), 50);
+        // The schedule is what `check` actually drives.
+        let mut seen = vec![];
+        check("collect schedule", cfg, |c| {
+            seen.push(c.size);
+        });
+        assert_eq!(
+            seen,
+            params.iter().map(|p| p.1).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn panic_message_downcasts() {
+        let boxed: Box<dyn std::any::Any + Send> = Box::new("static str");
+        assert_eq!(panic_message(boxed.as_ref()), "static str");
+        let boxed: Box<dyn std::any::Any + Send> =
+            Box::new(String::from("owned"));
+        assert_eq!(panic_message(boxed.as_ref()), "owned");
+        let boxed: Box<dyn std::any::Any + Send> = Box::new(42u32);
+        assert_eq!(panic_message(boxed.as_ref()), "<non-string panic>");
     }
 
     #[test]

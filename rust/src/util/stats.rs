@@ -1,4 +1,13 @@
-//! Summary statistics and histograms used by metrics and experiments.
+//! Summary statistics and histograms used by metrics and experiments,
+//! plus the paired-comparison layer the sweep runner reports through:
+//! seeded-bootstrap percentile confidence intervals and per-seed paired
+//! speedup / tail-reduction between two policies
+//! ([`bootstrap_mean_ci`], [`paired_speedup`], [`paired_tail_reduction`]).
+//! Everything is deterministic in its `seed` argument (the resampler is
+//! the in-tree [`crate::sim::Rng`]), so sweep reports are byte-identical
+//! across runs and thread counts.
+
+use crate::sim::Rng;
 
 /// Online summary of a sample set, plus exact percentiles via a retained
 /// (sorted-on-demand) sample vector.
@@ -162,6 +171,129 @@ pub fn weighted_mean(pairs: &[(f64, f64)]) -> f64 {
     }
 }
 
+// ---------------------------------------------------------------------
+// Paired statistics (sweep layer).
+// ---------------------------------------------------------------------
+
+/// Default bootstrap resample count for the sweep report.
+pub const BOOTSTRAP_RESAMPLES: usize = 1000;
+/// Default confidence level for the sweep report's intervals.
+pub const BOOTSTRAP_LEVEL: f64 = 0.95;
+
+/// A percentile confidence interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Ci {
+    pub lo: f64,
+    pub hi: f64,
+    /// Confidence level the bounds were computed at (e.g. 0.95).
+    pub level: f64,
+}
+
+/// Seeded-bootstrap percentile CI for the mean of `xs`.
+///
+/// Resamples `xs` with replacement `resamples` times using the
+/// deterministic in-tree RNG, takes the mean of each resample, and
+/// returns the `[(1-level)/2, 1-(1-level)/2]` percentiles of that
+/// bootstrap distribution (nearest-rank, via [`Summary::percentile`]).
+/// Fewer than two samples give the degenerate interval `[mean, mean]` —
+/// there is nothing to resample. Deterministic in `(xs, level,
+/// resamples, seed)`.
+pub fn bootstrap_mean_ci(
+    xs: &[f64],
+    level: f64,
+    resamples: usize,
+    seed: u64,
+) -> Ci {
+    assert!((0.0..1.0).contains(&level) && level > 0.0, "level {level}");
+    let n = xs.len();
+    if n < 2 {
+        let m = if n == 1 { xs[0] } else { 0.0 };
+        return Ci { lo: m, hi: m, level };
+    }
+    let mut rng = Rng::new(seed);
+    let mut means = Summary::new();
+    for _ in 0..resamples.max(1) {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += xs[rng.below(n as u64) as usize];
+        }
+        means.add(sum / n as f64);
+    }
+    let alpha = (1.0 - level) / 2.0;
+    Ci {
+        lo: means.percentile(100.0 * alpha),
+        hi: means.percentile(100.0 * (1.0 - alpha)),
+        level,
+    }
+}
+
+/// A paired per-seed comparison between a baseline and a candidate
+/// policy: the mean of the per-seed statistic, its seeded-bootstrap CI,
+/// and how many seeds favour the candidate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Paired {
+    /// Number of paired observations (seeds).
+    pub n: usize,
+    /// Mean of the per-seed statistic (ratio or reduction).
+    pub mean: f64,
+    pub ci: Ci,
+    /// Seeds where the candidate beat the baseline (ratio > 1 for
+    /// speedups, reduction > 0 for tail reductions).
+    pub wins: usize,
+}
+
+fn paired_from(stats: Vec<f64>, win: impl Fn(f64) -> bool, seed: u64) -> Paired {
+    let n = stats.len();
+    let mean = if n == 0 {
+        0.0
+    } else {
+        stats.iter().sum::<f64>() / n as f64
+    };
+    let wins = stats.iter().filter(|&&s| win(s)).count();
+    let ci = bootstrap_mean_ci(&stats, BOOTSTRAP_LEVEL, BOOTSTRAP_RESAMPLES, seed);
+    Paired { n, mean, ci, wins }
+}
+
+/// Per-seed paired speedup of `candidate` over `baseline`: the mean of
+/// `baseline[i] / candidate[i]` (makespan-style — smaller candidate
+/// values are speedups > 1), with a seeded-bootstrap CI. The two slices
+/// must be seed-aligned and equally long.
+pub fn paired_speedup(baseline: &[f64], candidate: &[f64], seed: u64) -> Paired {
+    assert_eq!(
+        baseline.len(),
+        candidate.len(),
+        "paired comparison needs seed-aligned samples"
+    );
+    let ratios: Vec<f64> = baseline
+        .iter()
+        .zip(candidate)
+        .map(|(&b, &c)| b / c.max(1e-12))
+        .collect();
+    paired_from(ratios, |r| r > 1.0, seed)
+}
+
+/// Per-seed paired tail reduction of `candidate` vs `baseline`: the mean
+/// of `1 - candidate[i] / baseline[i]` (the paper's 72–94% framing —
+/// positive means the candidate's tail is shorter), with a
+/// seeded-bootstrap CI.
+pub fn paired_tail_reduction(
+    baseline: &[f64],
+    candidate: &[f64],
+    seed: u64,
+) -> Paired {
+    assert_eq!(
+        baseline.len(),
+        candidate.len(),
+        "paired comparison needs seed-aligned samples"
+    );
+    let reductions: Vec<f64> = baseline
+        .iter()
+        .zip(candidate)
+        .map(|(&b, &c)| 1.0 - c / b.max(1e-12))
+        .collect();
+    paired_from(reductions, |d| d > 0.0, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +346,88 @@ mod tests {
     fn weighted_mean_works() {
         assert_eq!(weighted_mean(&[(2.0, 1.0), (4.0, 3.0)]), 3.5);
         assert_eq!(weighted_mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn bootstrap_constant_samples_collapse_exactly() {
+        // Every resample of a constant sample has the same mean, so the
+        // percentile interval is exactly [c, c] whatever the seed.
+        let ci = bootstrap_mean_ci(&[3.5; 8], 0.95, 200, 17);
+        assert_eq!(ci.lo, 3.5);
+        assert_eq!(ci.hi, 3.5);
+        assert_eq!(ci.level, 0.95);
+    }
+
+    #[test]
+    fn bootstrap_degenerate_sizes() {
+        let ci = bootstrap_mean_ci(&[], 0.9, 100, 1);
+        assert_eq!((ci.lo, ci.hi), (0.0, 0.0));
+        let ci = bootstrap_mean_ci(&[7.0], 0.9, 100, 1);
+        assert_eq!((ci.lo, ci.hi), (7.0, 7.0));
+    }
+
+    #[test]
+    fn bootstrap_is_seeded_and_ordered() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let a = bootstrap_mean_ci(&xs, 0.95, 500, 42);
+        let b = bootstrap_mean_ci(&xs, 0.95, 500, 42);
+        // Exactly reproducible from the seed.
+        assert_eq!(a, b);
+        let c = bootstrap_mean_ci(&xs, 0.95, 500, 43);
+        assert_ne!(a, c, "different seed must resample differently");
+        // The interval brackets the sample mean and is sane.
+        let mean = 4.5;
+        assert!(a.lo <= mean && mean <= a.hi, "{a:?}");
+        assert!(a.lo >= 1.0 && a.hi <= 8.0);
+        // Wider confidence ⇒ interval at least as wide.
+        let w = bootstrap_mean_ci(&xs, 0.99, 500, 42);
+        assert!(w.lo <= a.lo && w.hi >= a.hi, "{w:?} vs {a:?}");
+    }
+
+    #[test]
+    fn paired_speedup_exact_values() {
+        // Ratios are [2, 2]: exact mean, exact degenerate CI, both wins.
+        let p = paired_speedup(&[2.0, 4.0], &[1.0, 2.0], 7);
+        assert_eq!(p.n, 2);
+        assert_eq!(p.mean, 2.0);
+        assert_eq!(p.wins, 2);
+        assert_eq!((p.ci.lo, p.ci.hi), (2.0, 2.0));
+        // A mixed outcome: ratios [2.0, 0.5] ⇒ mean 1.25, one win.
+        let p = paired_speedup(&[2.0, 1.0], &[1.0, 2.0], 7);
+        assert_eq!(p.mean, 1.25);
+        assert_eq!(p.wins, 1);
+    }
+
+    #[test]
+    fn paired_tail_reduction_exact_values() {
+        // Reductions are [0.8, 0.5] ⇒ mean 0.65 exactly, both wins.
+        let p = paired_tail_reduction(&[10.0, 10.0], &[2.0, 5.0], 9);
+        assert_eq!(p.n, 2);
+        assert_eq!(p.mean, 0.65);
+        assert_eq!(p.wins, 2);
+        // A regression (candidate tail longer) is a negative reduction.
+        let p = paired_tail_reduction(&[10.0], &[15.0], 9);
+        assert_eq!(p.mean, -0.5);
+        assert_eq!(p.wins, 0);
+    }
+
+    #[test]
+    fn paired_is_deterministic_in_seed() {
+        let base = [10.0, 12.0, 9.0, 14.0];
+        let cand = [6.0, 7.0, 8.0, 6.5];
+        assert_eq!(
+            paired_speedup(&base, &cand, 11),
+            paired_speedup(&base, &cand, 11)
+        );
+        assert_eq!(
+            paired_tail_reduction(&base, &cand, 11),
+            paired_tail_reduction(&base, &cand, 11)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "seed-aligned")]
+    fn paired_rejects_mismatched_lengths() {
+        paired_speedup(&[1.0, 2.0], &[1.0], 0);
     }
 }

@@ -1,0 +1,67 @@
+//! Helpers shared between the integration-test crates (included with
+//! `mod common;` — the directory itself is not a test crate).
+
+use std::path::Path;
+
+use seer::util::json::Json;
+
+/// Flatten a JSON value into its sorted, deduplicated key paths.
+/// Objects nest with `.`; arrays descend into their *first* element as
+/// `[]` (all elements of a report array share one schema), and an empty
+/// array is the leaf `prefix[]`. Used by the golden key-schema
+/// snapshots in `faults.rs` and `sweep.rs`.
+pub fn flatten_key_paths(j: &Json) -> Vec<String> {
+    fn rec(prefix: &str, j: &Json, out: &mut Vec<String>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let path = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    rec(&path, v, out);
+                }
+            }
+            Json::Arr(v) => {
+                let path = format!("{prefix}[]");
+                match v.first() {
+                    Some(first) => rec(&path, first, out),
+                    None => out.push(path),
+                }
+            }
+            _ => out.push(prefix.to_string()),
+        }
+    }
+    let mut out = Vec::new();
+    rec("", j, &mut out);
+    out.sort();
+    out.dedup();
+    out
+}
+
+/// Golden key-schema check: compare `keys` against the fixture at
+/// `path`, or — with `SEER_REGEN_GOLDEN` set — rewrite the fixture from
+/// the current keys and pass (commit the updated file).
+pub fn check_golden_keys(keys: &[String], path: &Path) {
+    if std::env::var("SEER_REGEN_GOLDEN").is_ok() {
+        let arr =
+            Json::Arr(keys.iter().map(|k| Json::Str(k.clone())).collect());
+        std::fs::write(path, arr.to_string()).unwrap();
+        eprintln!("regenerated {path:?} ({} keys)", keys.len());
+        return;
+    }
+    let golden_text = std::fs::read_to_string(path).unwrap();
+    let golden: Vec<String> = Json::parse(&golden_text)
+        .unwrap()
+        .as_arr()
+        .expect("golden fixture must be a JSON array")
+        .iter()
+        .map(|j| j.as_str().unwrap().to_string())
+        .collect();
+    assert_eq!(
+        keys, golden,
+        "JSON key schema drifted from the golden fixture {path:?}; if \
+         intentional, regen with SEER_REGEN_GOLDEN=1 (see test docs)"
+    );
+}

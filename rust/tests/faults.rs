@@ -4,6 +4,8 @@
 //! fault-driven migration, the Partial-Rollout stop-threshold regression,
 //! and the `RolloutReport::to_json` golden schema snapshot.
 
+mod common;
+
 use seer::config::{SystemConfig, TaskPreset, WorkloadConfig};
 use seer::coordinator::RequestBuffer;
 use seer::rollout::{RolloutReport, RolloutSession};
@@ -289,48 +291,11 @@ fn stop_after_counts_unique_completions_only() {
 /// current report and passes; commit the updated fixture.
 #[test]
 fn report_json_schema_matches_golden() {
-    fn flatten(prefix: &str, j: &Json, out: &mut Vec<String>) {
-        match j {
-            Json::Obj(m) => {
-                for (k, v) in m {
-                    let path = if prefix.is_empty() {
-                        k.clone()
-                    } else {
-                        format!("{prefix}.{k}")
-                    };
-                    flatten(&path, v, out);
-                }
-            }
-            _ => out.push(prefix.to_string()),
-        }
-    }
     let report = run("seer", 7, FaultPlan::new());
-    let mut keys = Vec::new();
-    flatten("", &report.to_json(), &mut keys);
-    keys.sort();
-
+    let keys = common::flatten_key_paths(&report.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("tests/fixtures/report_golden_keys.json");
-    if std::env::var("SEER_REGEN_GOLDEN").is_ok() {
-        let arr =
-            Json::Arr(keys.iter().map(|k| Json::Str(k.clone())).collect());
-        std::fs::write(&path, arr.to_string()).unwrap();
-        eprintln!("regenerated {path:?} ({} keys)", keys.len());
-        return;
-    }
-    let golden_text = std::fs::read_to_string(&path).unwrap();
-    let golden: Vec<String> = Json::parse(&golden_text)
-        .unwrap()
-        .as_arr()
-        .expect("golden fixture must be a JSON array")
-        .iter()
-        .map(|j| j.as_str().unwrap().to_string())
-        .collect();
-    assert_eq!(
-        keys, golden,
-        "RolloutReport::to_json schema drifted from the golden fixture; \
-         if intentional, regen with SEER_REGEN_GOLDEN=1 (see test docs)"
-    );
+    common::check_golden_keys(&keys, &path);
 }
 
 /// Determinism of the JSON pipeline end to end: two identical faulty runs

@@ -17,7 +17,8 @@ use seer::scheduler::{
 use seer::sim::clock::SimTime;
 use seer::sim::faults::FaultPlan;
 use seer::spec::simmodel::SdStrategy;
-use seer::util::prop::{check, PropConfig};
+use seer::sweep::SweepRunner;
+use seer::util::prop::{case_params, check, panic_message, PropConfig};
 use seer::workload::generate_iteration;
 
 fn random_workload(rng: &mut seer::sim::Rng, size: usize) -> WorkloadConfig {
@@ -259,36 +260,43 @@ impl RolloutObserver for MonotoneClock {
     }
 }
 
-/// ISSUE 3 property sweep: ~50 seeded (workload, scale, policy,
-/// fault-plan) combos, asserting the cross-cutting invariants — every
-/// request completes or is explicitly aborted (none silently lost), the
-/// KV pool is never over-committed, per-instance concurrency stays
-/// within the batch cap (checked inside the sim at every telemetry
-/// sample via `with_invariant_checks`), the sim clock is monotone over
-/// the whole event stream, and the `EventCounts` observer tally agrees
-/// with the driver-side `RolloutMetrics`.
+/// ISSUE 3 property sweep, driven through the parallel
+/// [`SweepRunner`] since ISSUE 4: the same 50 seeded (workload, scale,
+/// policy, fault-plan) combos as the old serial `check` loop — the
+/// cases come from `util::prop::case_params`, the exact schedule
+/// `check` drives — now executed by concurrent worker threads,
+/// asserting the cross-cutting invariants *under concurrent execution*:
+/// every request completes or is explicitly aborted (none silently
+/// lost), the KV pool is never over-committed, per-instance concurrency
+/// stays within the batch cap (checked inside the sim at every
+/// telemetry sample via `with_invariant_checks`), the sim clock is
+/// monotone over the whole event stream, and the `EventCounts` observer
+/// tally agrees with the driver-side `RolloutMetrics`. A failure panics
+/// with the case's seed, like the serial harness.
 #[test]
 fn faulty_runs_conserve_requests_and_invariants() {
-    check(
-        "fault scripts: conservation + cross-cutting invariants",
-        PropConfig {
-            cases: 50,
-            max_size: 36,
-            ..Default::default()
-        },
-        |c| {
-            let cfg = random_workload(c.rng, c.size);
-            let (sched, name) = random_scheduler(c.rng);
-            let sd = random_sd(c.rng);
-            let seed = c.rng.next_u64();
+    let cases = case_params(&PropConfig {
+        cases: 50,
+        max_size: 36,
+        ..Default::default()
+    });
+    SweepRunner::from_env().map(&cases, |i, &(case_seed, size)| {
+        let run = || {
+            let mut rng = seer::sim::Rng::new(case_seed);
+            let cfg = random_workload(&mut rng, size);
+            let (sched, name) = random_scheduler(&mut rng);
+            let sd = random_sd(&mut rng);
+            let seed = rng.next_u64();
             let w = generate_iteration(&cfg, seed);
             let n = w.n_requests();
             let plan = FaultPlan::random(
-                c.rng.next_u64(),
+                rng.next_u64(),
                 cfg.n_instances,
                 n,
-                c.rng.uniform(20.0, 240.0),
+                rng.uniform(20.0, 240.0),
             );
+            // Observers are thread-local to this worker: created,
+            // driven, and read entirely inside one case.
             let counts = Rc::new(RefCell::new(EventCounts::default()));
             let clock = Rc::new(RefCell::new(MonotoneClock::default()));
             let mut hub = ObserverHub::new();
@@ -328,8 +336,17 @@ fn faulty_runs_conserve_requests_and_invariants() {
             assert_eq!(ec.instances_lost, m.instances_lost);
             assert_eq!(ec.rebalanced, m.fault_recovered);
             assert!(clock.borrow().events > 0);
-        },
-    );
+        };
+        if let Err(payload) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(run))
+        {
+            panic!(
+                "invariant sweep case {i} (seed {case_seed:#x}, size \
+                 {size}): {}",
+                panic_message(payload.as_ref())
+            );
+        }
+    });
 }
 
 #[test]

@@ -1,0 +1,187 @@
+//! Sweep-layer tests (ISSUE 4): parallel determinism — the same
+//! `SweepSpec` must produce **byte-identical** aggregated JSON at every
+//! thread count — serial-vs-parallel equivalence against direct
+//! `RolloutSession` runs, and the golden key-schema snapshot of the
+//! `seer sweep` JSON report.
+
+mod common;
+
+use seer::config::TaskPreset;
+use seer::rollout::RolloutSession;
+use seer::sim::faults::{FaultEvent, FaultPlan};
+use seer::sweep::{SweepRunner, SweepSpec};
+use seer::workload::{generate_epoch, InstanceId};
+
+/// Makespan of a clean test-scale run, used to pin fault times to
+/// fractions of the rollout so the crash reliably fires at any scale
+/// (same approach as `tests/faults.rs`).
+fn clean_horizon() -> f64 {
+    RolloutSession::builder()
+        .workload(TaskPreset::Moonlight.workload_for_test())
+        .scheduler("seer")
+        .sd("grouped-cst")
+        .seed(1)
+        .run()
+        .expect("clean run failed")
+        .metrics
+        .makespan
+        .as_secs_f64()
+}
+
+/// A crash-and-recover script timed well inside the rollout.
+fn crash_plan(horizon: f64) -> FaultPlan {
+    FaultPlan::new()
+        .at(
+            0.20 * horizon,
+            FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        )
+        .at(
+            0.55 * horizon,
+            FaultEvent::InstanceRecover {
+                instance: InstanceId(1),
+            },
+        )
+        .sorted()
+}
+
+/// The full-dimensional test grid: 2 schedulers × 2 seeds × 2 fault
+/// plans × 2 drifts = 16 cells.
+fn full_spec() -> SweepSpec {
+    SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+        .schedulers(&["seer", "verl"])
+        .seeds([1, 2])
+        .fault_plan("none", FaultPlan::new())
+        .fault_plan("crash", crash_plan(clean_horizon()))
+        .drifts([0.0, 0.08])
+}
+
+/// Acceptance criterion: a parallel sweep of the same spec yields
+/// byte-identical aggregated JSON for thread counts 1, 4 and 8 (the
+/// report carries no host-dependent field; wall clock lives outside it
+/// in `SweepOutcome`).
+#[test]
+fn parallel_sweep_is_byte_identical_across_thread_counts() {
+    let spec = full_spec();
+    let reference = SweepRunner::new(1)
+        .run(&spec)
+        .expect("serial sweep failed")
+        .report
+        .to_json()
+        .to_string();
+    assert!(!reference.is_empty());
+    for threads in [4, 8] {
+        let json = SweepRunner::new(threads)
+            .run(&spec)
+            .expect("parallel sweep failed")
+            .report
+            .to_json()
+            .to_string();
+        assert_eq!(
+            json, reference,
+            "thread count {threads} changed the report bytes"
+        );
+    }
+}
+
+/// Serial-vs-parallel equivalence against *direct* session runs: every
+/// cell the parallel runner reports must match a `RolloutSession` built
+/// by hand with the same parameters.
+#[test]
+fn parallel_cells_match_direct_session_runs() {
+    let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+        .schedulers(&["seer", "verl"])
+        .seeds([3])
+        .fault_plan("none", FaultPlan::new())
+        .fault_plan("crash", crash_plan(clean_horizon()))
+        .drifts([0.1]);
+    let outcome = SweepRunner::new(4).run(&spec).unwrap();
+    let cells = spec.expand();
+    assert_eq!(outcome.report.cells.len(), cells.len());
+    for (cell, got) in cells.iter().zip(&outcome.report.cells) {
+        // Rebuild the session exactly as the sweep layer documents it.
+        let mut builder = RolloutSession::builder()
+            .workload(cell.workload.clone())
+            .system(cell.system.clone())
+            .scheduler(&cell.scheduler)
+            .sd(&cell.sd)
+            .seed(cell.seed)
+            .n_instances(cell.n_instances);
+        if cell.drift > 0.0 {
+            let w = generate_epoch(&cell.workload, cell.seed, 1, cell.drift);
+            builder = builder.groups(w.groups);
+        }
+        if !cell.faults.is_empty() {
+            builder = builder.faults(cell.faults.clone());
+        }
+        let report = builder.run().expect("direct session failed");
+        let m = &report.metrics;
+        assert_eq!(got.scheduler, cell.scheduler);
+        assert_eq!(got.seed, cell.seed);
+        assert_eq!(got.makespan_secs, m.makespan.as_secs_f64(), "{cell:?}");
+        assert_eq!(got.throughput_tok_s, m.throughput(), "{cell:?}");
+        assert_eq!(got.tail_secs, m.tail_time(0.10).as_secs_f64());
+        assert_eq!(got.p99_finish_secs, m.finish_percentile(99.0));
+        assert_eq!(got.tokens, m.tokens_generated);
+        assert_eq!(got.completions, m.completions.len());
+        assert_eq!(got.migrations, m.migrations);
+    }
+    // The crash cells really exercised the fault layer somewhere.
+    assert!(
+        outcome
+            .report
+            .cells
+            .iter()
+            .any(|c| c.fault_name == "crash" && c.instances_lost > 0),
+        "crash plan never fired — grid too small to mean anything"
+    );
+}
+
+/// The aggregate/paired layers line up with the grid: one aggregate per
+/// (scheduler, scale, fault, drift) group, one paired comparison per
+/// non-baseline scheduler per point, n == seeds.
+#[test]
+fn report_aggregates_and_pairs_cover_the_grid() {
+    let spec = full_spec();
+    let report = SweepRunner::new(4).run(&spec).unwrap().report;
+    assert_eq!(report.cells.len(), 16);
+    assert_eq!(report.aggregates.len(), 8); // 2 sched × 2 fault × 2 drift
+    assert_eq!(report.paired.len(), 4); // verl vs seer × 2 fault × 2 drift
+    for a in &report.aggregates {
+        assert_eq!(a.n_seeds, 2);
+        assert!(a.mean_throughput_tok_s > 0.0);
+        assert!(a.throughput_ci.lo <= a.mean_throughput_tok_s + 1e-9);
+        assert!(a.throughput_ci.hi >= a.mean_throughput_tok_s - 1e-9);
+    }
+    for p in &report.paired {
+        assert_eq!(p.baseline, "seer");
+        assert_eq!(p.candidate, "verl");
+        assert_eq!(p.speedup.n, 2);
+        assert_eq!(p.tail_reduction.n, 2);
+        assert!(p.speedup.mean > 0.0);
+        assert!(p.speedup.ci.lo <= p.speedup.ci.hi);
+    }
+}
+
+/// Golden snapshot of the `seer sweep` report schema: the set of key
+/// paths (arrays descend into their first element as `[]`; see
+/// `common::flatten_key_paths`) is pinned to a checked-in fixture so
+/// report-shape regressions fail loudly. Values are covered by the
+/// determinism tests above.
+///
+/// Regen path (same as `tests/faults.rs`):
+/// `SEER_REGEN_GOLDEN=1 cargo test -q --test sweep sweep_report_schema`
+/// rewrites `tests/fixtures/sweep_golden_keys.json` and passes; commit
+/// the updated fixture.
+#[test]
+fn sweep_report_schema_matches_golden() {
+    let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+        .schedulers(&["seer", "verl"])
+        .seeds([1, 2]);
+    let report = SweepRunner::new(2).run(&spec).unwrap().report;
+    let keys = common::flatten_key_paths(&report.to_json());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/sweep_golden_keys.json");
+    common::check_golden_keys(&keys, &path);
+}
