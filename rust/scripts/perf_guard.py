@@ -1,0 +1,68 @@
+#!/usr/bin/env python3
+"""CI perf guard for the sim hot path (ISSUE 5 satellite).
+
+Compares a freshly measured bench suite against the checked-in
+`BENCH_rollout.json` baseline and fails when any shared bench regressed
+beyond the threshold. The threshold is deliberately generous (2x by
+default): this guard exists to catch *complexity* regressions — an
+O(n)-per-event scan sneaking back onto the steady-state path — not
+machine-to-machine noise.
+
+Usage: perf_guard.py BASELINE.json FRESH.json [THRESHOLD]
+
+Behavior:
+  * baseline with an empty `benches` map  -> comparison skipped (print a
+    notice; commit a measured BENCH_rollout.json to arm the guard)
+  * bench present in baseline but missing from the fresh run -> error
+    (a silently dropped bench would disarm the guard)
+  * any fresh mean_ns > THRESHOLD * baseline mean_ns -> exit 1
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = sys.argv[1], sys.argv[2]
+    threshold = float(sys.argv[3]) if len(sys.argv) > 3 else 2.0
+    base = json.load(open(baseline_path))["benches"]
+    cur = json.load(open(fresh_path))["benches"]
+    if not base:
+        # The ::warning line renders as a GitHub Actions annotation, so a
+        # disarmed guard is visibly different from a passing one in the
+        # run summary (it is inert noise when run outside Actions).
+        print(
+            "::warning title=perf guard disarmed::baseline "
+            f"{baseline_path} has no benches — comparison skipped. "
+            "Download the 'bench-rollout' artifact of this run and commit "
+            "it as rust/BENCH_rollout.json to arm the guard."
+        )
+        return 0
+    failures = []
+    for name, b in sorted(base.items()):
+        if b.get("mean_ns", 0) <= 0:
+            continue
+        c = cur.get(name)
+        if c is None:
+            print(f"perf guard: bench '{name}' missing from fresh run")
+            failures.append((name, float("inf")))
+            continue
+        ratio = c["mean_ns"] / b["mean_ns"]
+        print(
+            f"perf guard: {name}: {c['mean_ns']:.0f}ns "
+            f"vs baseline {b['mean_ns']:.0f}ns ({ratio:.2f}x)"
+        )
+        if ratio > threshold:
+            failures.append((name, ratio))
+    if failures:
+        print(f"perf guard: regression beyond {threshold}x: {failures}")
+        return 1
+    print("perf guard: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,19 @@
 //! The global request buffer (paper Fig. 5): the coordinator's single
 //! source of truth for every request in the iteration, with index
 //! structures for the waiting set.
+//!
+//! Hot-path accounting is O(1): the waiting set is a dense bitset over
+//! the contiguous id space (ascending iteration order, same as the
+//! ordered set it replaced) and the lifecycle tallies (`n_finished`,
+//! `n_running`, `n_aborted`) are counters maintained at the mark-
+//! transitions — the event loop's `done()` check reads them every event,
+//! so they must never fall back to an O(n) scan. The scan versions
+//! survive as `*_scan` cross-checks, asserted against the counters in
+//! [`RequestBuffer::check_invariants`] (the property harness runs that
+//! at every telemetry sample).
 
-use std::collections::BTreeSet;
-
-use crate::workload::{GroupSpec, RequestId};
+use crate::util::idset::IdBitSet;
+use crate::workload::{GroupSpec, InstanceId, RequestId};
 
 use super::request::{Phase, ReqState};
 
@@ -13,7 +22,14 @@ use super::request::{Phase, ReqState};
 #[derive(Debug, Default)]
 pub struct RequestBuffer {
     reqs: Vec<ReqState>,
-    waiting: BTreeSet<RequestId>,
+    waiting: IdBitSet,
+    /// Requests in `Phase::Running` (counter; see module docs).
+    n_running: usize,
+    /// Requests in `Phase::Finished`, aborted included (counter).
+    n_finished: usize,
+    /// Requests terminated by a scripted abort (counter; subset of
+    /// `n_finished`).
+    n_aborted: usize,
 }
 
 impl RequestBuffer {
@@ -31,8 +47,17 @@ impl RequestBuffer {
                 reqs.push(ReqState::new(r.clone(), i == 0));
             }
         }
-        let waiting = reqs.iter().map(|r| r.id()).collect();
-        RequestBuffer { reqs, waiting }
+        let mut waiting = IdBitSet::with_capacity(reqs.len());
+        for r in &reqs {
+            waiting.insert(r.id().0);
+        }
+        RequestBuffer {
+            reqs,
+            waiting,
+            n_running: 0,
+            n_finished: 0,
+            n_aborted: 0,
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -55,67 +80,127 @@ impl RequestBuffer {
         &self.reqs
     }
 
+    /// Waiting requests in ascending id order (the order every
+    /// policy's FCFS tie-breaks are defined over).
     pub fn waiting(&self) -> impl Iterator<Item = RequestId> + '_ {
-        self.waiting.iter().copied()
+        self.waiting.iter().map(RequestId)
     }
 
     pub fn n_waiting(&self) -> usize {
         self.waiting.len()
     }
 
+    /// Finished requests, aborted included — O(1).
     pub fn n_finished(&self) -> usize {
+        self.n_finished
+    }
+
+    /// Requests currently in `Phase::Running` — O(1).
+    pub fn n_running(&self) -> usize {
+        self.n_running
+    }
+
+    /// Requests terminated by a scripted abort — O(1).
+    pub fn n_aborted(&self) -> usize {
+        self.n_aborted
+    }
+
+    /// True when nothing is waiting and nothing is running — the event
+    /// loop's per-event termination check, O(1).
+    pub fn all_finished(&self) -> bool {
+        self.waiting.is_empty() && self.n_running == 0
+    }
+
+    /// Scan-based `n_finished` (cross-check / bench reference only; the
+    /// hot path must use the counter).
+    pub fn n_finished_scan(&self) -> usize {
         self.reqs.iter().filter(|r| r.is_finished()).count()
     }
 
-    pub fn all_finished(&self) -> bool {
-        self.waiting.is_empty() && self.reqs.iter().all(|r| !r.is_running())
+    /// Scan-based `n_running` (cross-check only).
+    pub fn n_running_scan(&self) -> usize {
+        self.reqs.iter().filter(|r| r.is_running()).count()
     }
 
-    /// Transition a request out of the waiting set (being scheduled).
+    /// Scan-based `n_aborted` (cross-check only).
+    pub fn n_aborted_scan(&self) -> usize {
+        self.reqs.iter().filter(|r| r.aborted).count()
+    }
+
+    /// Transition a request out of the waiting set (being scheduled)
+    /// without touching its phase. The driver uses
+    /// [`mark_running`](Self::mark_running); this entry point exists for
+    /// tests and benches that churn the waiting set directly.
     pub fn mark_scheduled(&mut self, id: RequestId) {
-        let present = self.waiting.remove(&id);
+        let present = self.waiting.remove(id.0);
         debug_assert!(present, "scheduling non-waiting request {id:?}");
     }
 
-    /// Return a request to the waiting set (chunk ended / preempted).
+    /// Waiting → Running(instance): leave the waiting set and take a
+    /// placement. The counter-maintaining twin of the driver's old
+    /// `phase = Running` + `mark_scheduled` pair — all phase writes go
+    /// through the buffer so the O(1) tallies can't drift.
+    pub fn mark_running(&mut self, id: RequestId, instance: InstanceId) {
+        let r = &mut self.reqs[id.0 as usize];
+        debug_assert!(
+            matches!(r.phase, Phase::Waiting),
+            "mark_running on non-waiting request {id:?}"
+        );
+        r.phase = Phase::Running(instance);
+        self.n_running += 1;
+        let present = self.waiting.remove(id.0);
+        debug_assert!(present, "running non-waiting request {id:?}");
+    }
+
+    /// Return a request to the waiting set (chunk ended / preempted /
+    /// drained by a fault).
     pub fn mark_waiting(&mut self, id: RequestId) {
-        let r = self.get_mut(id);
+        let r = &mut self.reqs[id.0 as usize];
         debug_assert!(!r.is_finished());
+        if r.is_running() {
+            self.n_running -= 1;
+        }
         r.phase = Phase::Waiting;
         r.chunk_remaining = 0;
-        self.waiting.insert(id);
+        self.waiting.insert(id.0);
     }
 
     /// Finalize a request.
     pub fn mark_finished(&mut self, id: RequestId) {
-        let r = self.get_mut(id);
+        let r = &mut self.reqs[id.0 as usize];
         // Hard assert (kept in release): double-finishing corrupts GRPO
         // group accounting downstream.
         assert!(!r.is_finished(), "double finish {id:?}");
+        if r.is_running() {
+            self.n_running -= 1;
+        }
         r.phase = Phase::Finished;
-        self.waiting.remove(&id);
+        self.n_finished += 1;
+        self.waiting.remove(id.0);
     }
 
     /// Terminate a request as *aborted* (fault script): the lifecycle
     /// ends like `mark_finished`, but the request is flagged so
     /// completion accounting excludes it.
     pub fn mark_aborted(&mut self, id: RequestId) {
-        let r = self.get_mut(id);
+        let r = &mut self.reqs[id.0 as usize];
         assert!(!r.is_finished(), "aborting finished request {id:?}");
+        if r.is_running() {
+            self.n_running -= 1;
+        }
         r.phase = Phase::Finished;
         r.aborted = true;
-        self.waiting.remove(&id);
-    }
-
-    pub fn n_aborted(&self) -> usize {
-        self.reqs.iter().filter(|r| r.aborted).count()
+        self.n_finished += 1;
+        self.n_aborted += 1;
+        self.waiting.remove(id.0);
     }
 
     /// Consistency check for the invariant tests: every request is in
-    /// exactly one of {waiting set, running, finished}.
+    /// exactly one of {waiting set, running, finished}, and the O(1)
+    /// lifecycle counters agree with a full phase scan.
     pub fn check_invariants(&self) {
         for r in &self.reqs {
-            let in_waiting = self.waiting.contains(&r.id());
+            let in_waiting = self.waiting.contains(r.id().0);
             match r.phase {
                 Phase::Waiting => {
                     assert!(in_waiting, "{:?} Waiting but not in set", r.id())
@@ -136,6 +221,23 @@ impl RequestBuffer {
                 );
             }
         }
+        // Counter-vs-scan equality: the O(1) tallies the event loop
+        // trusts must match ground truth at all times.
+        assert_eq!(
+            self.n_finished,
+            self.n_finished_scan(),
+            "n_finished counter drifted from phase scan"
+        );
+        assert_eq!(
+            self.n_running,
+            self.n_running_scan(),
+            "n_running counter drifted from phase scan"
+        );
+        assert_eq!(
+            self.n_aborted,
+            self.n_aborted_scan(),
+            "n_aborted counter drifted from abort scan"
+        );
     }
 }
 
@@ -176,6 +278,42 @@ mod tests {
         b.mark_scheduled(id);
         b.mark_finished(id);
         assert_eq!(b.n_finished(), 1);
+        b.check_invariants();
+    }
+
+    #[test]
+    fn running_counter_follows_placements() {
+        let mut b = buffer();
+        let (a, c) = (b.all()[0].id(), b.all()[1].id());
+        assert_eq!(b.n_running(), 0);
+        assert!(!b.all_finished());
+        b.mark_running(a, crate::workload::InstanceId(0));
+        b.mark_running(c, crate::workload::InstanceId(1));
+        assert_eq!(b.n_running(), 2);
+        b.mark_waiting(a);
+        assert_eq!(b.n_running(), 1);
+        b.mark_finished(c);
+        assert_eq!(b.n_running(), 0);
+        assert_eq!(b.n_finished(), 1);
+        b.check_invariants();
+    }
+
+    #[test]
+    fn all_finished_is_counter_driven() {
+        let cfg = crate::config::TaskPreset::Moonlight.workload_for_test();
+        let mut small = cfg;
+        small.reqs_per_iter = small.group_size;
+        let w = generate_iteration(&small, 1);
+        let mut b = RequestBuffer::from_groups(&w.groups);
+        let ids: Vec<_> = b.all().iter().map(|r| r.id()).collect();
+        for &id in &ids {
+            b.mark_running(id, crate::workload::InstanceId(0));
+        }
+        assert!(!b.all_finished(), "running requests must block done()");
+        for &id in &ids {
+            b.mark_finished(id);
+        }
+        assert!(b.all_finished());
         b.check_invariants();
     }
 

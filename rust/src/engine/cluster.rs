@@ -20,7 +20,7 @@
 //! context manager), so faults change *when* requests finish, never
 //! *whether* — every request completes or is explicitly aborted.
 
-use std::collections::BTreeMap;
+use std::time::Instant;
 
 use crate::config::{SystemConfig, WorkloadConfig};
 use crate::coordinator::{KvLocation, Phase, RequestBuffer};
@@ -29,13 +29,13 @@ use crate::engine::instance::{Instance, Interval, RunningReq};
 use crate::kvcache::GlobalKvPool;
 use crate::metrics::{Completion, LoadSample, RolloutMetrics};
 use crate::rollout::observer::{ObserverHub, RolloutEvent};
-use crate::scheduler::{InstanceView, SchedCtx, Scheduler};
+use crate::scheduler::{Assignment, InstanceView, SchedCtx, Scheduler};
 use crate::sim::clock::SimTime;
 use crate::sim::events::EventQueue;
 use crate::sim::faults::{FaultEvent, FaultPlan};
 use crate::spec::mba::{mba_allocate, MbaInputs};
 use crate::spec::simmodel::{SdStrategy, SpecCtx, SpecSim};
-use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
+use crate::workload::{GroupSpec, InstanceId, RequestId};
 
 /// Events driving the simulation.
 #[derive(Debug, Clone, Copy)]
@@ -73,6 +73,73 @@ struct GroupProgress {
     warm_ctx: bool,
 }
 
+/// Wall-time attribution of the event loop (`seer rollout --profile`):
+/// where the host CPU goes, without reaching for an external profiler.
+/// Collected only when profiling is enabled — the disabled path costs
+/// one branch per section. Never feeds the report (reports carry virtual
+/// time only); the breakdown prints to stderr at the end of the run.
+#[derive(Debug, Default)]
+struct ProfileStats {
+    /// Events popped from the queue.
+    events: u64,
+    /// Scheduling passes that actually ran (`schedule_dirty` and a
+    /// non-empty waiting set).
+    sched_passes: u64,
+    /// Wall nanoseconds inside `Scheduler::schedule`.
+    sched_ns: u64,
+    /// Σ waiting-set size at pass start (mean = `/ sched_passes`).
+    waiting_sum: u64,
+    /// Assignments produced across all passes.
+    assignments: u64,
+    commit_calls: u64,
+    commit_ns: u64,
+    plan_calls: u64,
+    plan_ns: u64,
+    /// Observer emissions (time also counted inside whichever section
+    /// fired them).
+    emit_events: u64,
+    emit_ns: u64,
+}
+
+impl ProfileStats {
+    fn report(&self) {
+        use crate::util::bench::fmt_ns;
+        let mean_wait = if self.sched_passes > 0 {
+            self.waiting_sum as f64 / self.sched_passes as f64
+        } else {
+            0.0
+        };
+        eprintln!("[profile] events processed: {}", self.events);
+        eprintln!(
+            "[profile] scheduler: {} passes, {} total ({} / pass), mean \
+             waiting-set {:.1}, {} assignments",
+            self.sched_passes,
+            fmt_ns(self.sched_ns as f64),
+            fmt_ns(self.sched_ns as f64 / self.sched_passes.max(1) as f64),
+            mean_wait,
+            self.assignments,
+        );
+        eprintln!(
+            "[profile] engine commit: {} calls, {} total ({} / call)",
+            self.commit_calls,
+            fmt_ns(self.commit_ns as f64),
+            fmt_ns(self.commit_ns as f64 / self.commit_calls.max(1) as f64),
+        );
+        eprintln!(
+            "[profile] interval planning: {} calls, {} total ({} / call)",
+            self.plan_calls,
+            fmt_ns(self.plan_ns as f64),
+            fmt_ns(self.plan_ns as f64 / self.plan_calls.max(1) as f64),
+        );
+        eprintln!(
+            "[profile] observer emission: {} events, {} total (already \
+             included in the sections that fired them)",
+            self.emit_events,
+            fmt_ns(self.emit_ns as f64),
+        );
+    }
+}
+
 pub struct ClusterSim {
     cfg: WorkloadConfig,
     sys: SystemConfig,
@@ -84,12 +151,30 @@ pub struct ClusterSim {
     spec: SpecSim,
     metrics: RolloutMetrics,
     queue: EventQueue<Event>,
-    group_progress: BTreeMap<GroupId, GroupProgress>,
-    /// Last instance each request ran on (for migration counting).
-    last_instance: BTreeMap<RequestId, InstanceId>,
+    /// Per-group live progress, indexed by `GroupId` (group ids are
+    /// contiguous from 0 by construction — asserted in `new`).
+    group_progress: Vec<GroupProgress>,
+    /// Last instance each request ran on (for migration counting),
+    /// indexed by `RequestId`.
+    last_instance: Vec<Option<InstanceId>>,
     /// Partial Rollout: stop after this many completions.
     stop_after: Option<usize>,
     sample_interval: SimTime,
+    /// Telemetry bound: once `load_samples` would exceed this, the
+    /// recorded series is decimated (every other kept tick dropped) and
+    /// the recording stride doubles — long runs stay O(cap) memory while
+    /// every derived report metric (none read `load_samples`) stays
+    /// bit-identical. Deterministic: driven by virtual-time tick counts
+    /// only.
+    max_load_samples: usize,
+    /// Current recording stride over telemetry ticks (powers of two).
+    sample_stride: u64,
+    /// Telemetry ticks seen at base cadence.
+    sample_ticks: u64,
+    /// `(tick, start index in load_samples)` per *recorded* tick — the
+    /// decimation block boundaries (fleet size can change mid-run, so
+    /// blocks are not uniform).
+    load_ticks: Vec<(u64, u32)>,
     /// Acceptance-length bookkeeping: Σ rate·steps and Σ steps over all
     /// running request-intervals (for the τ metric).
     accept_len_weighted: f64,
@@ -108,13 +193,20 @@ pub struct ClusterSim {
     revivals_remaining: usize,
     /// Requests drained off a lost instance, with the fault time —
     /// cleared (and counted into recovery latency) at re-admission.
-    drained_by_fault: BTreeMap<RequestId, SimTime>,
+    /// Indexed by `RequestId`.
+    drained_by_fault: Vec<Option<SimTime>>,
     /// Completions so far (the Partial Rollout stop threshold; aborted
     /// requests are terminal but do NOT count toward it).
     n_completed: usize,
     /// Run cross-cutting invariant checks at every telemetry sample
     /// (property-test harness; off by default).
     verify_invariants: bool,
+    /// Wall-time attribution (`--profile`); `None` = disabled, free.
+    profile: Option<Box<ProfileStats>>,
+    /// Reusable scheduling-pass scratch (instance views + assignments):
+    /// the steady-state loop allocates nothing.
+    views_scratch: Vec<InstanceView>,
+    assign_scratch: Vec<Assignment>,
 }
 
 impl ClusterSim {
@@ -138,10 +230,17 @@ impl ClusterSim {
             .collect();
         let pool = GlobalKvPool::new(&cfg.hw, cfg.n_instances.max(1));
         let metrics = RolloutMetrics::new(cfg.n_instances);
-        let mut group_progress = BTreeMap::new();
-        for g in &groups {
-            group_progress.insert(g.id, GroupProgress::default());
+        // Dense side tables: group and request ids are contiguous from 0
+        // by construction (the buffer asserts request-id contiguity).
+        let mut group_progress = Vec::with_capacity(groups.len());
+        for (gi, g) in groups.iter().enumerate() {
+            debug_assert_eq!(
+                g.id.0 as usize, gi,
+                "group ids must be contiguous"
+            );
+            group_progress.push(GroupProgress::default());
         }
+        let n_reqs = buffer.len();
         ClusterSim {
             cost: CostModel::new(&cfg.hw),
             spec: SpecSim::new(sd).with_richness(cfg.sd_richness),
@@ -154,9 +253,13 @@ impl ClusterSim {
             metrics,
             queue: EventQueue::new(),
             group_progress,
-            last_instance: BTreeMap::new(),
+            last_instance: vec![None; n_reqs],
             stop_after: None,
             sample_interval: SimTime::from_secs(10),
+            max_load_samples: 16_384,
+            sample_stride: 1,
+            sample_ticks: 0,
+            load_ticks: Vec::new(),
             accept_len_weighted: 0.0,
             accept_steps: 0.0,
             max_events: 50_000_000,
@@ -164,9 +267,12 @@ impl ClusterSim {
             observers: ObserverHub::new(),
             faults: FaultPlan::default(),
             revivals_remaining: 0,
-            drained_by_fault: BTreeMap::new(),
+            drained_by_fault: vec![None; n_reqs],
             n_completed: 0,
             verify_invariants: false,
+            profile: None,
+            views_scratch: Vec::new(),
+            assign_scratch: Vec::new(),
         }
     }
 
@@ -220,7 +326,7 @@ impl ClusterSim {
         // independent of the scheduling policy — they apply even when a
         // history-free policy discards the length priors.
         for (g, refs) in &priors.warm_refs {
-            if let Some(gp) = self.group_progress.get_mut(g) {
+            if let Some(gp) = self.group_progress.get_mut(g.0 as usize) {
                 gp.warm_refs = *refs;
             }
         }
@@ -230,7 +336,7 @@ impl ClusterSim {
         // prioritize identically warm or cold.
         if consumed {
             for (g, _) in &priors.estimates {
-                if let Some(gp) = self.group_progress.get_mut(g) {
+                if let Some(gp) = self.group_progress.get_mut(g.0 as usize) {
                     gp.warm_ctx = true;
                 }
             }
@@ -247,6 +353,24 @@ impl ClusterSim {
 
     pub fn sample_interval(mut self, t: SimTime) -> Self {
         self.sample_interval = t;
+        self
+    }
+
+    /// Cap the recorded telemetry series (see the field docs); the
+    /// default keeps ~16k samples. Reports never read `load_samples`, so
+    /// this only affects diagnostic time-series output.
+    pub fn max_load_samples(mut self, n: usize) -> Self {
+        self.max_load_samples = n.max(1);
+        self
+    }
+
+    /// Collect a wall-time breakdown of the event loop (scheduler passes
+    /// vs engine commit/plan vs observer emission) and print it to
+    /// stderr when the run completes — `seer rollout --profile`. Wall
+    /// clock never enters the report, so profiling cannot perturb
+    /// results, only narrate them.
+    pub fn with_profiling(mut self) -> Self {
+        self.profile = Some(Box::default());
         self
     }
 
@@ -308,6 +432,9 @@ impl ClusterSim {
                 events < self.max_events,
                 "event budget exceeded — runaway simulation"
             );
+            if let Some(p) = self.profile.as_deref_mut() {
+                p.events += 1;
+            }
             let now = self.queue.now();
             match ev.payload {
                 Event::Wake { instance, epoch } => {
@@ -397,6 +524,9 @@ impl ClusterSim {
         };
         if self.verify_invariants {
             self.assert_runtime_invariants();
+        }
+        if let Some(p) = &self.profile {
+            p.report();
         }
     }
 
@@ -545,16 +675,15 @@ impl ClusterSim {
             r.needs_reprefill = true;
             self.buffer.mark_waiting(rid);
             self.metrics.fault_requeued += 1;
-            self.drained_by_fault.insert(rid, now);
+            self.drained_by_fault[rid.0 as usize] = Some(now);
             drained.push(rid);
         }
         // Only resident requests counted toward group concurrency;
         // pending ones never arrived.
         for rid in &running {
             let group = self.buffer.get(*rid).group();
-            if let Some(gp) = self.group_progress.get_mut(&group) {
-                gp.running = gp.running.saturating_sub(1);
-            }
+            let gp = &mut self.group_progress[group.0 as usize];
+            gp.running = gp.running.saturating_sub(1);
         }
         self.metrics.instances_lost += 1;
         let live = self.live_instance_ids();
@@ -564,7 +693,7 @@ impl ClusterSim {
         // policies re-home the lost instance's queue.
         self.scheduler
             .on_instance_lost(id, &drained, &live, &self.buffer);
-        self.observers.emit(RolloutEvent::InstanceLost {
+        self.emit_event(RolloutEvent::InstanceLost {
             instance: id,
             drained: drained.len() as u32,
             now,
@@ -599,9 +728,8 @@ impl ClusterSim {
                 inst.alloc.release(req);
                 if was_resident {
                     let group = self.buffer.get(req).group();
-                    if let Some(gp) = self.group_progress.get_mut(&group) {
-                        gp.running = gp.running.saturating_sub(1);
-                    }
+                    let gp = &mut self.group_progress[group.0 as usize];
+                    gp.running = gp.running.saturating_sub(1);
                 }
             }
         }
@@ -617,9 +745,8 @@ impl ClusterSim {
             }
             self.buffer.mark_aborted(req);
             self.metrics.aborted += 1;
-            self.drained_by_fault.remove(&req);
-            self.observers
-                .emit(RolloutEvent::Aborted { req, generated, now });
+            self.drained_by_fault[req.0 as usize] = None;
+            self.emit_event(RolloutEvent::Aborted { req, generated, now });
         }
         self.schedule_dirty = true;
         self.try_schedule();
@@ -630,9 +757,13 @@ impl ClusterSim {
 
     /// Cross-cutting runtime invariants (property harness): pool
     /// accounting conserved, per-instance concurrency within the batch
-    /// cap, allocator within capacity, down instances empty.
+    /// cap, allocator within capacity, down instances empty, and the
+    /// buffer's O(1) lifecycle counters equal to their full phase scans
+    /// (`RequestBuffer::check_invariants`) — asserted at every telemetry
+    /// sample when enabled.
     fn assert_runtime_invariants(&self) {
         self.pool.check_invariants();
+        self.buffer.check_invariants();
         for inst in &self.instances {
             assert!(
                 inst.running.len() <= self.cfg.hw.max_batch,
@@ -661,9 +792,29 @@ impl ClusterSim {
     // ------------------------------------------------------------------
 
     fn plan_interval(&mut self, idx: usize, now: SimTime) {
+        let Some(t0) = self.profile.as_ref().map(|_| Instant::now()) else {
+            self.plan_interval_inner(idx, now);
+            return;
+        };
+        // Count only invocations that did planning work: the function is
+        // called opportunistically after nearly every commit/arrival and
+        // usually early-returns, which would dilute the per-call mean
+        // into meaninglessness.
+        let planned = self.plan_interval_inner(idx, now);
+        if let Some(p) = self.profile.as_deref_mut() {
+            if planned {
+                p.plan_calls += 1;
+                p.plan_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+    }
+
+    /// Returns whether an interval-planning pass actually ran (false on
+    /// the opportunistic early-outs).
+    fn plan_interval_inner(&mut self, idx: usize, now: SimTime) -> bool {
         let inst = &self.instances[idx];
         if !inst.up || inst.interval.is_some() || inst.running.is_empty() {
-            return;
+            return false;
         }
 
         // --- SD decision ------------------------------------------------
@@ -673,7 +824,7 @@ impl ClusterSim {
         let mut ctxs: Vec<(RequestId, SpecCtx, bool)> = Vec::with_capacity(batch);
         for id in &ids {
             let r = self.buffer.get(*id);
-            let gp = self.group_progress.get(&r.group()).copied().unwrap_or_default();
+            let gp = self.group_progress[r.group().0 as usize];
             // References the group CST holds: finished siblings plus
             // concurrently-running ones (their prefixes are aggregated),
             // plus discounted streams surviving from previous iterations.
@@ -809,7 +960,9 @@ impl ClusterSim {
         }
         let inst = &mut self.instances[idx];
         if inst.running.is_empty() {
-            return;
+            // Real planning work happened (rates + preemption drained the
+            // batch), even though no interval was installed.
+            return true;
         }
         let batch = inst.running.len();
         let mut positions = 0u64;
@@ -858,6 +1011,7 @@ impl ClusterSim {
                 epoch,
             },
         );
+        true
     }
 
     /// Remove a request from an instance. `preempted`: true for OOM
@@ -891,17 +1045,16 @@ impl ClusterSim {
             self.metrics.preemptions += 1;
         }
         self.buffer.mark_waiting(id);
-        if let Some(gp) = self.group_progress.get_mut(&self.buffer.get(id).group())
-        {
-            gp.running = gp.running.saturating_sub(1);
-        }
+        let group = self.buffer.get(id).group();
+        let gp = &mut self.group_progress[group.0 as usize];
+        gp.running = gp.running.saturating_sub(1);
         // Both re-queue paths — voluntary chunk-end parking AND
         // preemption — report the request's in-flight progress to the
         // policy, so a migrated long request can't be demoted below its
         // demonstrated length by a stale estimate.
         let r = self.buffer.get(id).clone();
         self.scheduler.on_chunk_end(&r);
-        self.observers.emit(RolloutEvent::ChunkEnd {
+        self.emit_event(RolloutEvent::ChunkEnd {
             req: id,
             instance: InstanceId(idx as u32),
             preempted,
@@ -914,9 +1067,27 @@ impl ClusterSim {
     // ------------------------------------------------------------------
 
     fn commit_and_handle(&mut self, idx: usize, now: SimTime) {
+        let Some(t0) = self.profile.as_ref().map(|_| Instant::now()) else {
+            self.commit_and_handle_inner(idx, now);
+            return;
+        };
+        // Only commits that applied gains count toward the breakdown
+        // (see `plan_interval` — same dilution concern).
+        let committed = self.commit_and_handle_inner(idx, now);
+        if let Some(p) = self.profile.as_deref_mut() {
+            if committed {
+                p.commit_calls += 1;
+                p.commit_ns += t0.elapsed().as_nanos() as u64;
+            }
+        }
+    }
+
+    /// Returns whether the commit applied any gains (false when no
+    /// interval was in flight).
+    fn commit_and_handle_inner(&mut self, idx: usize, now: SimTime) -> bool {
         let commit = self.instances[idx].commit_until(now);
         if commit.gained.is_empty() {
-            return;
+            return false;
         }
         let mut completed = Vec::new();
         let mut chunk_ended = Vec::new();
@@ -954,7 +1125,7 @@ impl ClusterSim {
         }
         self.metrics.spec_accepted_tokens +=
             commit.accepted_tokens.round() as u64;
-        self.observers.emit(RolloutEvent::Step {
+        self.emit_event(RolloutEvent::Step {
             instance: InstanceId(idx as u32),
             steps: commit.steps.round() as u64,
             tokens: granted_total,
@@ -971,6 +1142,7 @@ impl ClusterSim {
             self.evict(idx, id, now, false);
             self.schedule_dirty = true;
         }
+        true
     }
 
     fn finish_request(&mut self, idx: usize, id: RequestId, now: SimTime) {
@@ -993,17 +1165,32 @@ impl ClusterSim {
             first_scheduled_at: first,
             gen_len,
         });
-        let gp = self.group_progress.get_mut(&group).unwrap();
+        let gp = &mut self.group_progress[group.0 as usize];
         gp.finished += 1;
         gp.running = gp.running.saturating_sub(1);
         let r = self.buffer.get(id).clone();
         self.scheduler.on_finished(&r);
         self.schedule_dirty = true;
-        self.observers.emit(RolloutEvent::Finished {
+        self.emit_event(RolloutEvent::Finished {
             req: id,
             gen_len,
             now,
         });
+    }
+
+    /// Narrate one lifecycle event to the attached observers, counting
+    /// emission wall time when profiling is on.
+    fn emit_event(&mut self, ev: RolloutEvent) {
+        if self.profile.is_some() {
+            let t0 = Instant::now();
+            self.observers.emit(ev);
+            if let Some(p) = self.profile.as_deref_mut() {
+                p.emit_events += 1;
+                p.emit_ns += t0.elapsed().as_nanos() as u64;
+            }
+        } else {
+            self.observers.emit(ev);
+        }
     }
 
     // ------------------------------------------------------------------
@@ -1017,41 +1204,66 @@ impl ClusterSim {
         self.schedule_dirty = false;
         let now = self.queue.now();
         // Down instances are invisible to the policy: they receive no
-        // assignments and contribute no capacity.
-        let views: Vec<InstanceView> = self
-            .instances
-            .iter()
-            .filter(|inst| inst.up)
-            .map(|inst| InstanceView {
+        // assignments and contribute no capacity. Views and assignments
+        // live in reusable scratch buffers — a steady-state pass
+        // allocates nothing. (Scratch fill is O(instances), which is
+        // o(waiting); the pass itself is incremental inside the policy.)
+        let mut views = std::mem::take(&mut self.views_scratch);
+        views.clear();
+        views.extend(self.instances.iter().filter(|inst| inst.up).map(
+            |inst| InstanceView {
                 id: inst.id,
-                free_kv_tokens: inst.admission_headroom(self.sys.kv_target_util),
+                free_kv_tokens: inst
+                    .admission_headroom(self.sys.kv_target_util),
                 capacity_tokens: inst.capacity_tokens,
                 running: inst.running.len() + inst.pending.len(),
                 max_batch: self.cfg.hw.max_batch,
-            })
-            .collect();
+            },
+        ));
         if views.is_empty() {
-            return; // fully downed fleet; a recover/scale-up may revive it
+            // Fully downed fleet; a recover/scale-up may revive it.
+            self.views_scratch = views;
+            return;
         }
-        let assignments = {
+        let mut assignments = std::mem::take(&mut self.assign_scratch);
+        assignments.clear();
+        {
+            let t0 = self.profile.as_ref().map(|_| Instant::now());
             let ctx = SchedCtx {
                 now,
                 instances: &views,
                 buffer: &self.buffer,
             };
-            self.scheduler.schedule(&ctx)
-        };
-        for a in assignments {
+            self.scheduler.schedule(&ctx, &mut assignments);
+            if let (Some(p), Some(t0)) = (self.profile.as_deref_mut(), t0) {
+                p.sched_passes += 1;
+                p.sched_ns += t0.elapsed().as_nanos() as u64;
+                p.waiting_sum += self.buffer.n_waiting() as u64;
+                p.assignments += assignments.len() as u64;
+            }
+        }
+        for a in assignments.iter().copied() {
             let idx = a.instance.0 as usize;
             let r = self.buffer.get(a.req);
             debug_assert!(matches!(r.phase, Phase::Waiting));
-            let demand = r.kv_demand(a.chunk.min(self.sys.chunk_size.max(a.chunk)));
+            // Validate the *full* lease the policy granted: whole-request
+            // policies (veRL/StreamRL) deliberately lease beyond the
+            // divided-rollout chunk size, and clamping their demand here
+            // would second-guess the optimistic-admission behavior under
+            // study. (A historical `min(chunk_size.max(chunk))` clamp
+            // always evaluated to `a.chunk` — it was dead by
+            // construction and is spelled plainly now.)
+            let demand = r.kv_demand(a.chunk);
             // Defense in depth: re-validate against live headroom and
             // liveness (a buggy policy cannot place onto a down fleet).
             if !self.instances[idx].up
                 || self.instances[idx].admission_headroom(1.0) < demand
             {
                 self.schedule_dirty = true;
+                // Tell the policy its assignment never materialized, so
+                // incremental candidate indexes re-stamp the request —
+                // it is still waiting and must be schedulable next pass.
+                self.scheduler.on_requeued(self.buffer.get(a.req));
                 continue;
             }
             let chunk = a.chunk.min(
@@ -1072,7 +1284,8 @@ impl ClusterSim {
                     .pool
                     .fetch(a.req)
                     .expect("pool lost a parked request");
-                let moved = self.last_instance.get(&a.req) != Some(&a.instance);
+                let moved =
+                    self.last_instance[a.req.0 as usize] != Some(a.instance);
                 if moved {
                     migrated = true;
                     r.migrations += 1;
@@ -1086,16 +1299,17 @@ impl ClusterSim {
             };
             r.chunk_remaining = chunk;
             r.chunks_run += 1;
-            r.phase = Phase::Running(a.instance);
             r.kv_location = KvLocation::Instance(a.instance);
             if r.first_scheduled.is_none() {
                 r.first_scheduled = Some(now);
             }
             let base_kv = r.kv_tokens;
             let chunk_seq = r.chunks_run;
-            self.buffer.mark_scheduled(a.req);
+            // Waiting → Running through the buffer, which owns the O(1)
+            // lifecycle counters the event loop's done() check reads.
+            self.buffer.mark_running(a.req, a.instance);
             self.instances[idx].pending.insert(a.req, base_kv + chunk as u64);
-            self.last_instance.insert(a.req, a.instance);
+            self.last_instance[a.req.0 as usize] = Some(a.instance);
             self.queue.schedule_at(
                 now + delay,
                 Event::Arrive {
@@ -1103,19 +1317,21 @@ impl ClusterSim {
                     chunk_seq,
                 },
             );
-            self.observers.emit(RolloutEvent::Scheduled {
+            self.emit_event(RolloutEvent::Scheduled {
                 req: a.req,
                 instance: a.instance,
                 now,
             });
             if migrated {
-                self.observers.emit(RolloutEvent::Migration {
+                self.emit_event(RolloutEvent::Migration {
                     req: a.req,
                     to: a.instance,
                     now,
                 });
             }
         }
+        self.views_scratch = views;
+        self.assign_scratch = assignments;
     }
 
     fn handle_arrival(&mut self, id: RequestId, chunk_seq: u32, now: SimTime) {
@@ -1144,9 +1360,10 @@ impl ClusterSim {
         let base = r.kv_tokens.max(r.spec.prompt_len as u64);
         r.kv_tokens = base;
         if !self.instances[idx].alloc.grow(id, base) {
-            // Capacity was consumed while in flight: bounce back.
+            // Capacity was consumed while in flight: bounce back. The
+            // phase write happens inside mark_waiting, which keeps the
+            // O(1) running counter honest.
             let r = self.buffer.get_mut(id);
-            r.phase = Phase::Waiting;
             r.kv_location = if self.scheduler.uses_global_pool()
                 && !r.needs_reprefill
             {
@@ -1159,6 +1376,9 @@ impl ClusterSim {
                 KvLocation::Nowhere
             };
             self.buffer.mark_waiting(id);
+            // A bounced admission re-enters the waiting set with no
+            // progress change: incremental policies re-index it here.
+            self.scheduler.on_requeued(self.buffer.get(id));
             self.schedule_dirty = true;
             self.try_schedule();
             // The commit above closed the running interval — re-plan so
@@ -1182,18 +1402,16 @@ impl ClusterSim {
         );
         inst.epoch += 1;
         let group = self.buffer.get(id).group();
-        if let Some(gp) = self.group_progress.get_mut(&group) {
-            gp.running += 1;
-        }
+        self.group_progress[group.0 as usize].running += 1;
         // Fault recovery closes HERE, not at assignment time: only a
         // materialized placement counts (an in-flight admission can
         // still bounce on the live-headroom re-check above, in which
         // case the request stays marked drained and its real, longer
         // recovery is measured at the next successful arrival).
-        if let Some(t0) = self.drained_by_fault.remove(&id) {
+        if let Some(t0) = self.drained_by_fault[id.0 as usize].take() {
             self.metrics.fault_recovery_time += now.saturating_sub(t0);
             self.metrics.fault_recovered += 1;
-            self.observers.emit(RolloutEvent::Rebalanced {
+            self.emit_event(RolloutEvent::Rebalanced {
                 req: id,
                 to: inst_id,
                 now,
@@ -1203,6 +1421,20 @@ impl ClusterSim {
     }
 
     fn record_sample(&mut self, now: SimTime) {
+        // Telemetry is *sampled* at the base cadence but *recorded* at a
+        // stride that doubles whenever the series would outgrow the cap:
+        // long runs keep O(max_load_samples) memory instead of one
+        // sample per instance per 10 virtual seconds forever. Sampling
+        // cadence (and hence the event sequence) never changes, and no
+        // report metric reads `load_samples`, so decimation is invisible
+        // to report JSON.
+        let tick = self.sample_ticks;
+        self.sample_ticks += 1;
+        if tick % self.sample_stride != 0 {
+            return;
+        }
+        self.load_ticks
+            .push((tick, self.metrics.load_samples.len() as u32));
         for inst in &self.instances {
             self.metrics.load_samples.push(LoadSample {
                 t: now,
@@ -1210,6 +1442,35 @@ impl ClusterSim {
                 kv_utilization: inst.kv_utilization(),
                 running: inst.running.len(),
             });
+        }
+        while self.metrics.load_samples.len() > self.max_load_samples
+            && self.load_ticks.len() > 1
+        {
+            self.decimate_samples();
+        }
+    }
+
+    /// Halve the recorded telemetry: keep only ticks divisible by the
+    /// doubled stride (tick 0 always survives, so the series keeps its
+    /// anchor; the newest kept ticks align with all future recordings).
+    /// Deterministic — a pure function of the virtual-time tick history.
+    fn decimate_samples(&mut self) {
+        self.sample_stride *= 2;
+        let old_samples = std::mem::take(&mut self.metrics.load_samples);
+        let old_ticks = std::mem::take(&mut self.load_ticks);
+        for (i, &(tick, start)) in old_ticks.iter().enumerate() {
+            if tick % self.sample_stride != 0 {
+                continue;
+            }
+            let end = old_ticks
+                .get(i + 1)
+                .map(|&(_, s)| s as usize)
+                .unwrap_or(old_samples.len());
+            self.load_ticks
+                .push((tick, self.metrics.load_samples.len() as u32));
+            self.metrics
+                .load_samples
+                .extend_from_slice(&old_samples[start as usize..end]);
         }
     }
 
@@ -1499,6 +1760,105 @@ mod tests {
             clean.metrics.makespan
         );
         assert_eq!(slow.metrics.completions.len(), cfg.reqs_per_iter);
+    }
+
+    /// ISSUE 5 satellite: long runs must not accumulate unbounded
+    /// telemetry. With a tiny cap the recorded series stays bounded via
+    /// stride-doubling decimation, while every derived report metric is
+    /// bit-identical to the uncapped run (no report metric reads
+    /// `load_samples`) and the kept samples are a subset of the full
+    /// series.
+    #[test]
+    fn telemetry_decimation_bounds_memory_and_preserves_metrics() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let run = |cap: Option<usize>| {
+            let w = crate::workload::generate_iteration(&cfg, 11);
+            let mut sim = ClusterSim::new(
+                cfg.clone(),
+                SystemConfig::default(),
+                w.groups,
+                Box::new(VerlScheduler::new()),
+                SdStrategy::None,
+            )
+            .sample_interval(SimTime::from_millis(50));
+            if let Some(c) = cap {
+                sim = sim.max_load_samples(c);
+            }
+            sim.run()
+        };
+        let full = run(None);
+        let bounded = run(Some(64));
+        assert!(
+            full.metrics.load_samples.len() > 64,
+            "run too short to exercise decimation"
+        );
+        assert!(bounded.metrics.load_samples.len() <= 64);
+        assert!(!bounded.metrics.load_samples.is_empty());
+        // Derived report metrics are untouched by decimation.
+        assert_eq!(bounded.metrics.makespan, full.metrics.makespan);
+        assert_eq!(
+            bounded.metrics.tokens_generated,
+            full.metrics.tokens_generated
+        );
+        assert_eq!(bounded.metrics.preemptions, full.metrics.preemptions);
+        assert_eq!(
+            bounded.metrics.completions.len(),
+            full.metrics.completions.len()
+        );
+        // The kept series is a subset of the full one, in order.
+        let key = |s: &crate::metrics::LoadSample| (s.t, s.instance.0);
+        let full_keys: Vec<_> =
+            full.metrics.load_samples.iter().map(key).collect();
+        let mut cursor = 0usize;
+        for s in &bounded.metrics.load_samples {
+            let k = key(s);
+            let pos = full_keys[cursor..]
+                .iter()
+                .position(|fk| *fk == k)
+                .expect("decimated sample missing from full series");
+            cursor += pos + 1;
+        }
+    }
+
+    /// `--profile` collects wall-time attribution only: the emitted
+    /// virtual-time results must be bit-identical with it on.
+    #[test]
+    fn profiling_does_not_change_results() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let run = |profiled: bool| {
+            let w = crate::workload::generate_iteration(&cfg, 9);
+            let mut sim = ClusterSim::new(
+                cfg.clone(),
+                SystemConfig::default(),
+                w.groups,
+                Box::new(SeerScheduler::new(ContextMode::Learned)),
+                SdStrategy::GroupedCst,
+            );
+            if profiled {
+                sim = sim.with_profiling();
+            }
+            sim.run()
+        };
+        let plain = run(false);
+        let profiled = run(true);
+        assert_eq!(plain.metrics.makespan, profiled.metrics.makespan);
+        assert_eq!(
+            plain.metrics.tokens_generated,
+            profiled.metrics.tokens_generated
+        );
+        let fa: Vec<_> = plain
+            .metrics
+            .completions
+            .iter()
+            .map(|c| (c.id, c.finished_at))
+            .collect();
+        let fb: Vec<_> = profiled
+            .metrics
+            .completions
+            .iter()
+            .map(|c| (c.id, c.finished_at))
+            .collect();
+        assert_eq!(fa, fb);
     }
 
     #[test]

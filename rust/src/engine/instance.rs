@@ -6,10 +6,9 @@
 //! driver (`cluster.rs`) plans intervals, commits progress and handles
 //! completions/chunk-expiries/preemptions.
 
-use std::collections::BTreeMap;
-
 use crate::kvcache::PagedAllocator;
 use crate::sim::clock::SimTime;
+use crate::util::sortedmap::SortedVecMap;
 use crate::workload::{InstanceId, RequestId};
 
 /// Per-running-request state within an instance.
@@ -64,10 +63,13 @@ pub struct Instance {
     pub id: InstanceId,
     pub capacity_tokens: u64,
     pub alloc: PagedAllocator,
-    pub running: BTreeMap<RequestId, RunningReq>,
+    /// Resident batch, in ascending-id order (a dense sorted table —
+    /// iteration order feeds commit/finish event sequences and is part
+    /// of the determinism contract; see [`SortedVecMap`]).
+    pub running: SortedVecMap<RequestId, RunningReq>,
     /// KV tokens reserved for assignments whose transfer/prefill is still
     /// in flight (request -> reserved tokens).
-    pub pending: BTreeMap<RequestId, u64>,
+    pub pending: SortedVecMap<RequestId, u64>,
     pub interval: Option<Interval>,
     /// Bumped on every state change; stale wake events are ignored.
     pub epoch: u64,
@@ -87,8 +89,8 @@ impl Instance {
             id,
             capacity_tokens,
             alloc: PagedAllocator::new(capacity_tokens, block_tokens),
-            running: BTreeMap::new(),
-            pending: BTreeMap::new(),
+            running: SortedVecMap::new(),
+            pending: SortedVecMap::new(),
             interval: None,
             epoch: 0,
             busy: SimTime::ZERO,
@@ -165,6 +167,8 @@ impl Instance {
 
 #[cfg(test)]
 mod tests {
+    use std::collections::BTreeMap;
+
     use super::*;
 
     fn inst() -> Instance {

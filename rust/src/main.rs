@@ -31,7 +31,7 @@ USAGE:
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
-       [--faults FILE] [--json]
+       [--faults FILE] [--json] [--profile]
   seer sweep [--task <moonlight|qwen|kimi>] [--schedulers a,b,c] [--sd S]
        [--seeds N] [--seed BASE] [--scales a,b] [--drifts x,y] [--faults FILE]
        [--threads N] [--out FILE] [--bench-out FILE] [--full]
@@ -42,6 +42,12 @@ USAGE:
 
   rollout --json prints the unified RolloutReport as one JSON object for
   bench/trajectory tooling instead of the human summary line.
+
+  rollout --profile prints a wall-time breakdown of the event loop to
+  stderr when the run completes (scheduler passes vs engine commit/plan
+  vs observer emission, pass counts, mean waiting-set size) — perf
+  attribution without an external profiler. Wall clock never enters the
+  report, so --profile cannot change any emitted number.
 
   rollout --faults FILE replays a deterministic fault & elasticity script
   (JSON: instance crashes, stragglers, recoveries, scale events, request
@@ -84,7 +90,8 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         .system(sys)
         .scheduler(args.get_or("scheduler", "seer"))
         .sd(args.get_or("sd", "grouped-cst"))
-        .seed(scale.seed);
+        .seed(scale.seed)
+        .profile(args.has_flag("profile"));
     let mut n_faults = 0usize;
     if let Some(path) = args.get("faults") {
         let plan =
@@ -336,7 +343,9 @@ fn cmd_info() -> Result<()> {
 }
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&["full", "fast", "spec", "json", "real", "cold"]);
+    let args = Args::from_env(&[
+        "full", "fast", "spec", "json", "real", "cold", "profile",
+    ]);
     match args.positionals.first().map(|s| s.as_str()) {
         Some("experiment") => {
             let id = args

@@ -203,6 +203,8 @@ pub struct SimBackend {
     priors: Option<ContextPriors>,
     /// Deterministic fault & elasticity script.
     faults: Option<FaultPlan>,
+    /// Wall-time event-loop breakdown to stderr (`--profile`).
+    profile: bool,
 }
 
 impl RolloutBackend for SimBackend {
@@ -253,6 +255,9 @@ impl RolloutBackend for SimBackend {
         }
         if let Some(plan) = self.faults.take() {
             sim = sim.with_faults(plan);
+        }
+        if self.profile {
+            sim = sim.with_profiling();
         }
         let out = sim.run();
         if self.stop_after.is_none() {
@@ -387,6 +392,7 @@ pub struct RolloutSessionBuilder<'m> {
     groups: Option<Vec<GroupSpec>>,
     priors: Option<ContextPriors>,
     faults: Option<FaultPlan>,
+    profile: bool,
     real: Option<(&'m ModelRuntime, RealRolloutConfig)>,
     requests: Vec<SeqRequest>,
 }
@@ -407,6 +413,7 @@ impl<'m> RolloutSessionBuilder<'m> {
             groups: None,
             priors: None,
             faults: None,
+            profile: false,
             real: None,
             requests: Vec::new(),
         }
@@ -512,6 +519,16 @@ impl<'m> RolloutSessionBuilder<'m> {
         self
     }
 
+    /// Simulated backend: print a wall-time breakdown of the event loop
+    /// (scheduler passes vs engine commit/plan vs observer emission,
+    /// pass counts, mean waiting-set size) to stderr when the run
+    /// completes — `seer rollout --profile`. Wall clock never enters the
+    /// report.
+    pub fn profile(mut self, on: bool) -> Self {
+        self.profile = on;
+        self
+    }
+
     /// Attach a streaming observer (may be called repeatedly).
     pub fn observer(mut self, o: Box<dyn RolloutObserver>) -> Self {
         self.observers.push(o);
@@ -555,11 +572,13 @@ impl<'m> RolloutSessionBuilder<'m> {
                 || self.sample_interval.is_some()
                 || self.groups.is_some()
                 || self.faults.is_some()
+                || self.profile
             {
                 bail!(
                     "scheduler/sd/seed/system/n_instances/stop_after/\
-                     sample_interval/groups/faults are simulator-only; \
-                     configure the real engine via RealRolloutConfig"
+                     sample_interval/groups/faults/profile are \
+                     simulator-only; configure the real engine via \
+                     RealRolloutConfig"
                 );
             }
             return Ok(RolloutSession {
@@ -601,6 +620,7 @@ impl<'m> RolloutSessionBuilder<'m> {
                 groups: self.groups,
                 priors: self.priors,
                 faults: self.faults,
+                profile: self.profile,
             }),
             observers: self.observers,
         })

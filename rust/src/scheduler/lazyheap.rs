@@ -1,0 +1,227 @@
+//! Stamped lazy priority heaps — the incremental scheduling substrate.
+//!
+//! Every policy used to rebuild its candidate ordering from
+//! `buffer.waiting()` on each scheduling pass: collect the waiting set,
+//! partition, sort — O(W log W) per pass even when one request changed.
+//! The hot-path overhaul replaces that with *incrementally maintained*
+//! keyed heaps repaired on the scheduler's lifecycle hooks
+//! (`on_finished` / `on_chunk_end` / `on_requeued` / fault hooks), so a
+//! steady-state pass costs O(popped · log W) instead of a full rescan.
+//!
+//! The mechanism is lazy deletion with per-request stamps:
+//!
+//! * [`Stamps`] holds one generation counter per request id. Any event
+//!   that (re)classifies a request or changes its sort key *bumps* the
+//!   stamp and pushes a fresh [`Entry`]; older entries for the id become
+//!   stale and are discarded when popped.
+//! * [`LazyHeap`] is a plain max-heap of entries. The **owner validates
+//!   at pop time**: an entry counts only if its stamp is current, the
+//!   request is still `Waiting` in the buffer, and its key matches the
+//!   freshly computed one (a mismatch is repaired by re-pushing at the
+//!   corrected position — self-healing rather than silently using a
+//!   stale order).
+//! * Entries popped but not consumed by a pass (examined and skipped, or
+//!   handed to the driver which may still reject the assignment) are
+//!   returned with [`LazyHeap::push_raw`] — same stamp, no bump — so the
+//!   next pass sees them again. Exactly one *current* entry exists per
+//!   waiting request at all times: hook pushes always bump first.
+//!
+//! Determinism: the pop order of current entries equals the fully sorted
+//! order of the waiting set under the current keys — [`Entry`] ordering
+//! is total (key, then ascending request id, then stamp), so the
+//! incremental schedulers reproduce the byte-identical assignment
+//! sequences of the rebuild-and-sort implementations they replaced.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::workload::RequestId;
+
+/// Per-request generation counters shared by all heaps of one policy
+/// (a request may migrate between heaps, e.g. Seer's probe → LFS move;
+/// one bump invalidates its entries everywhere).
+#[derive(Debug, Default)]
+pub struct Stamps(Vec<u32>);
+
+impl Stamps {
+    /// Reset for an iteration of `n` contiguous request ids.
+    pub fn reset(&mut self, n: usize) {
+        self.0.clear();
+        self.0.resize(n, 0);
+    }
+
+    /// Invalidate every live entry for `req`; returns the new stamp to
+    /// push with.
+    pub fn bump(&mut self, req: RequestId) -> u32 {
+        let s = &mut self.0[req.0 as usize];
+        *s = s.wrapping_add(1);
+        *s
+    }
+
+    pub fn current(&self, req: RequestId) -> u32 {
+        self.0[req.0 as usize]
+    }
+
+    pub fn is_current<K: Ord + Copy>(&self, e: &Entry<K>) -> bool {
+        self.current(e.req) == e.stamp
+    }
+}
+
+/// One heap entry: a candidate request under sort key `K`.
+///
+/// Ordering is total and deterministic: key first (max-heap — *greater*
+/// keys pop first), then **lower request id first** among equal keys
+/// (the FCFS tie-break every policy documents), then stamp.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Entry<K: Ord + Copy> {
+    pub key: K,
+    pub req: RequestId,
+    pub stamp: u32,
+}
+
+impl<K: Ord + Copy> Ord for Entry<K> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.key
+            .cmp(&other.key)
+            // Reversed id comparison: in a max-heap, the *greater* entry
+            // pops first, so the lower id must compare greater.
+            .then_with(|| other.req.0.cmp(&self.req.0))
+            .then_with(|| self.stamp.cmp(&other.stamp))
+    }
+}
+
+impl<K: Ord + Copy> PartialOrd for Entry<K> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// A lazily-repaired candidate heap. Dumb by design: staleness checks
+/// live with the owner, which has the buffer and the key function.
+#[derive(Debug, Default)]
+pub struct LazyHeap<K: Ord + Copy> {
+    heap: BinaryHeap<Entry<K>>,
+}
+
+impl<K: Ord + Copy> LazyHeap<K> {
+    pub fn new() -> Self {
+        LazyHeap {
+            heap: BinaryHeap::new(),
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.heap.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Push a freshly stamped entry (caller bumped the stamp).
+    pub fn push(&mut self, key: K, req: RequestId, stamp: u32) {
+        self.heap.push(Entry { key, req, stamp });
+    }
+
+    /// Return an examined-but-unconsumed entry without invalidating it.
+    pub fn push_raw(&mut self, e: Entry<K>) {
+        self.heap.push(e);
+    }
+
+    /// Pop the greatest entry, stale or not — the owner validates.
+    pub fn pop(&mut self) -> Option<Entry<K>> {
+        self.heap.pop()
+    }
+
+    /// Drop stamp-stale entries when the heap has accumulated well past
+    /// the live population (`live` = current waiting-set size). Bounds
+    /// memory on long runs; deterministic, since both operands are
+    /// functions of the deterministic event history.
+    pub fn maybe_compact(&mut self, stamps: &Stamps, live: usize) {
+        if self.heap.len() > 64 && self.heap.len() > 4 * live {
+            self.heap.retain(|e| stamps.is_current(e));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pop_order_is_key_desc_then_id_asc() {
+        let mut stamps = Stamps::default();
+        stamps.reset(8);
+        let mut h: LazyHeap<u64> = LazyHeap::new();
+        for (key, id) in [(5u64, 3u32), (9, 1), (5, 0), (9, 4), (1, 2)] {
+            let r = RequestId(id);
+            let s = stamps.bump(r);
+            h.push(key, r, s);
+        }
+        let order: Vec<(u64, u32)> = std::iter::from_fn(|| h.pop())
+            .map(|e| (e.key, e.req.0))
+            .collect();
+        assert_eq!(order, vec![(9, 1), (9, 4), (5, 0), (5, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn bump_invalidates_old_entries() {
+        let mut stamps = Stamps::default();
+        stamps.reset(4);
+        let mut h: LazyHeap<u64> = LazyHeap::new();
+        let r = RequestId(2);
+        let s1 = stamps.bump(r);
+        h.push(100, r, s1);
+        let s2 = stamps.bump(r);
+        h.push(7, r, s2);
+        let first = h.pop().unwrap();
+        assert_eq!(first.key, 100);
+        assert!(!stamps.is_current(&first), "old entry must be stale");
+        let second = h.pop().unwrap();
+        assert_eq!(second.key, 7);
+        assert!(stamps.is_current(&second));
+    }
+
+    #[test]
+    fn push_raw_keeps_entry_current() {
+        let mut stamps = Stamps::default();
+        stamps.reset(2);
+        let mut h: LazyHeap<u64> = LazyHeap::new();
+        let r = RequestId(1);
+        let s = stamps.bump(r);
+        h.push(3, r, s);
+        let e = h.pop().unwrap();
+        assert!(stamps.is_current(&e));
+        h.push_raw(e);
+        let again = h.pop().unwrap();
+        assert_eq!(again, e);
+        assert!(stamps.is_current(&again));
+    }
+
+    #[test]
+    fn compaction_drops_only_stale() {
+        let mut stamps = Stamps::default();
+        stamps.reset(512);
+        let mut h: LazyHeap<u64> = LazyHeap::new();
+        // Two generations of entries for every id: half go stale.
+        for round in 0..2u64 {
+            for id in 0..256u32 {
+                let r = RequestId(id);
+                let s = stamps.bump(r);
+                h.push(round, r, s);
+            }
+        }
+        assert_eq!(h.len(), 512);
+        // live = 1 forces the 4x threshold to trip.
+        h.maybe_compact(&stamps, 1);
+        assert_eq!(h.len(), 256);
+        while let Some(e) = h.pop() {
+            assert!(stamps.is_current(&e));
+            assert_eq!(e.key, 1);
+        }
+    }
+}

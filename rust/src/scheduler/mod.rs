@@ -6,6 +6,7 @@
 //! driver re-validates every assignment against the allocator before
 //! acting (defense in depth: a buggy policy cannot corrupt accounting).
 
+pub mod lazyheap;
 pub mod seer;
 pub mod streamrl;
 pub mod verl;
@@ -78,14 +79,24 @@ pub trait Scheduler {
         false
     }
 
-    /// Produce as many assignments as current capacity allows.
-    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment>;
+    /// Produce as many assignments as current capacity allows, appended
+    /// to `out` (a reusable scratch buffer the driver clears between
+    /// passes — the steady-state loop allocates nothing).
+    fn schedule(&mut self, ctx: &SchedCtx, out: &mut Vec<Assignment>);
 
     /// A request finished (reached its true length).
     fn on_finished(&mut self, _req: &ReqState) {}
 
     /// A chunk lease ended with the request unfinished.
     fn on_chunk_end(&mut self, _req: &ReqState) {}
+
+    /// An assignment this policy produced did not materialize: the
+    /// driver's admission re-check rejected it, or the in-flight
+    /// transfer bounced off capacity on arrival — the request is back in
+    /// the waiting set with no progress change. Policies that maintain
+    /// incremental candidate structures (see [`lazyheap`]) must re-index
+    /// the request here; stateless policies can ignore it.
+    fn on_requeued(&mut self, _req: &ReqState) {}
 
     /// Fault layer: `lost` crashed or was reclaimed. The driver already
     /// returned its `drained` in-flight requests to the waiting queue;

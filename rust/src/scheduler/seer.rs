@@ -8,12 +8,37 @@
 //! * `Oracle`  — LFS on true lengths (upper bound).
 //! * `None`    — divided rollout only, FCFS (the "No-Context" ablation and
 //!   Table 4's "+ Divided Rollout" row).
+//!
+//! ## Incremental scheduling (hot-path overhaul)
+//!
+//! Earlier revisions rebuilt the candidate ordering from
+//! `buffer.waiting()` on every pass: partition into probes/rest, then
+//! two `sort_by_cached_key` calls — O(W log W) per pass (perf iterations
+//! 2–4 in EXPERIMENTS.md §Perf only shaved constants off that). The
+//! ordering is now *maintained*, not rebuilt: two stamped
+//! [`LazyHeap`]s (probe SFS on `(generated, id)`, rest LFS on the mode's
+//! priority key) are repaired by the lifecycle hooks —
+//! [`Scheduler::on_finished`] / [`Scheduler::on_chunk_end`] re-key the
+//! affected group's waiting members when (and only when) its estimate
+//! actually moved, [`Scheduler::on_requeued`] re-indexes bounced
+//! admissions, and warm-start re-keys prior'd groups. A steady-state
+//! pass pops just the candidates it examines and returns the unconsumed
+//! ones, so `schedule()` is o(waiting) amortized while producing the
+//! **byte-identical assignment sequence** of the sort-based
+//! implementation: lazy-heap pop order of current entries equals the
+//! full sort under current keys (see [`super::lazyheap`]), and the
+//! starvation-guard window replays the original vector-swap semantics
+//! through an explicit pending deque.
+
+use std::cmp::Reverse;
+use std::collections::VecDeque;
 
 use crate::config::{SystemConfig, WorkloadConfig};
-use crate::coordinator::{ContextManager, ReqState};
+use crate::coordinator::{ContextManager, Phase, ReqState};
 use crate::sim::Rng;
-use crate::workload::{GroupSpec, RequestId};
+use crate::workload::{GroupId, GroupSpec, RequestId};
 
+use super::lazyheap::{Entry, LazyHeap, Stamps};
 use super::{Assignment, SchedCtx, Scheduler};
 
 /// How much length context the scheduler may use.
@@ -22,6 +47,28 @@ pub enum ContextMode {
     Learned,
     Oracle,
     None,
+}
+
+/// Probe SFS key: fewest generated tokens first, id tie-break —
+/// `Reverse` turns the max-heap into min-(generated, id) pops.
+type ProbeKey = Reverse<(u32, u32)>;
+
+/// A candidate taken from one of the two heaps during a pass; returned
+/// to its heap at pass end whether or not it was assigned (the driver
+/// may still reject an assignment, and next pass's pop-validation
+/// discards entries for requests that really left the waiting set).
+enum Pick {
+    Probe(Entry<ProbeKey>),
+    Rest(Entry<u64>),
+}
+
+impl Pick {
+    fn req(&self) -> RequestId {
+        match self {
+            Pick::Probe(e) => e.req,
+            Pick::Rest(e) => e.req,
+        }
+    }
 }
 
 pub struct SeerScheduler {
@@ -35,6 +82,20 @@ pub struct SeerScheduler {
     /// Cross-iteration length priors (survive `init`, which rebuilds the
     /// context manager at iteration start).
     priors: Vec<(crate::workload::GroupId, u32)>,
+    // --- incremental candidate structures (see module docs) ----------
+    stamps: Stamps,
+    probe_heap: LazyHeap<ProbeKey>,
+    rest_heap: LazyHeap<u64>,
+    /// Request ids per group (for group-wide re-keying on estimate
+    /// changes), indexed by `GroupId`.
+    group_members: Vec<Vec<RequestId>>,
+    /// In-pass lookahead buffer: rest candidates popped for a starvation
+    /// window but not yet consumed, in exact pick order.
+    rest_pending: VecDeque<Entry<u64>>,
+    // Reusable pass scratch (allocation-free steady state).
+    guard_window: Vec<Entry<u64>>,
+    consumed_probe: Vec<Entry<ProbeKey>>,
+    consumed_rest: Vec<Entry<u64>>,
 }
 
 impl SeerScheduler {
@@ -47,6 +108,14 @@ impl SeerScheduler {
             rng: Rng::new(0x5EE12),
             picks_since_guard: 0,
             priors: Vec::new(),
+            stamps: Stamps::default(),
+            probe_heap: LazyHeap::new(),
+            rest_heap: LazyHeap::new(),
+            group_members: Vec::new(),
+            rest_pending: VecDeque::new(),
+            guard_window: Vec::new(),
+            consumed_probe: Vec::new(),
+            consumed_rest: Vec::new(),
         }
     }
 
@@ -61,6 +130,159 @@ impl SeerScheduler {
 
     pub fn context_manager(&self) -> &ContextManager {
         &self.ctx_mgr
+    }
+
+    /// Does `r` currently belong on the high-priority probe path? Only
+    /// while its group has no length context at all — neither an online
+    /// finish nor a warm cross-iteration prior.
+    fn is_probe_pending(&self, r: &ReqState) -> bool {
+        r.is_probe
+            && self.mode == ContextMode::Learned
+            && !self.ctx_mgr.has_context(r.group())
+    }
+
+    /// (Re-)index one request under its current classification and key.
+    /// Bumps the stamp, so every older entry for it goes stale.
+    fn reindex(&mut self, r: &ReqState) {
+        let stamp = self.stamps.bump(r.id());
+        if self.is_probe_pending(r) {
+            self.probe_heap
+                .push(Reverse((r.generated, r.id().0)), r.id(), stamp);
+        } else {
+            let key = self.priority_key(r);
+            self.rest_heap.push(key, r.id(), stamp);
+        }
+    }
+
+    /// Re-key every member of `g` in the LFS heap. Only called once the
+    /// group *has* context (post-finish, post-progress-raise, or
+    /// warm-prior'd), so all members classify as rest and share the
+    /// group estimate as their key — no per-request state needed.
+    fn repush_group(&mut self, g: GroupId) {
+        let key = self.ctx_mgr.estimate(g) as u64;
+        let Some(members) = self.group_members.get(g.0 as usize) else {
+            return;
+        };
+        for &id in members {
+            let stamp = self.stamps.bump(id);
+            self.rest_heap.push(key, id, stamp);
+        }
+    }
+
+    /// Pop the next *current* probe candidate: stamp fresh, still
+    /// waiting, still probe-classified, key matching. Mismatched keys or
+    /// classifications are repaired in place (self-healing) rather than
+    /// silently used.
+    fn pop_valid_probe(&mut self, ctx: &SchedCtx) -> Option<Entry<ProbeKey>> {
+        while let Some(e) = self.probe_heap.pop() {
+            if !self.stamps.is_current(&e) {
+                continue;
+            }
+            let r = ctx.buffer.get(e.req);
+            if !matches!(r.phase, Phase::Waiting) {
+                continue;
+            }
+            if !self.is_probe_pending(r) {
+                // Group gained context since this entry was pushed:
+                // migrate to the LFS heap at its current key.
+                let key = self.priority_key(r);
+                self.rest_heap.push_raw(Entry {
+                    key,
+                    req: e.req,
+                    stamp: e.stamp,
+                });
+                continue;
+            }
+            let key = Reverse((r.generated, r.id().0));
+            if key != e.key {
+                self.probe_heap.push_raw(Entry { key, ..e });
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Pop the next *current* rest candidate (see `pop_valid_probe`).
+    fn pop_valid_rest(&mut self, ctx: &SchedCtx) -> Option<Entry<u64>> {
+        while let Some(e) = self.rest_heap.pop() {
+            if !self.stamps.is_current(&e) {
+                continue;
+            }
+            let r = ctx.buffer.get(e.req);
+            if !matches!(r.phase, Phase::Waiting) {
+                continue;
+            }
+            if self.is_probe_pending(r) {
+                self.probe_heap.push_raw(Entry {
+                    key: Reverse((r.generated, r.id().0)),
+                    req: e.req,
+                    stamp: e.stamp,
+                });
+                continue;
+            }
+            let key = self.priority_key(r);
+            if key != e.key {
+                self.rest_heap.push_raw(Entry { key, ..e });
+                continue;
+            }
+            return Some(e);
+        }
+        None
+    }
+
+    /// Next rest candidate in exact LFS order: lookahead buffer first
+    /// (entries displaced by an earlier starvation window), then the
+    /// heap.
+    fn next_rest(&mut self, ctx: &SchedCtx) -> Option<Entry<u64>> {
+        if let Some(e) = self.rest_pending.pop_front() {
+            return Some(e);
+        }
+        self.pop_valid_rest(ctx)
+    }
+
+    /// Starvation-guard pick: look at the next ≤ 256 candidates in LFS
+    /// order (`first` included), take the most underserved group's first
+    /// entry, and leave the rest in the lookahead buffer in *exactly*
+    /// the order the original vector-swap produced — the displaced front
+    /// candidate is revisited at the chosen one's old position.
+    fn guard_pick(&mut self, first: Entry<u64>, ctx: &SchedCtx) -> Entry<u64> {
+        let mut window = std::mem::take(&mut self.guard_window);
+        window.clear();
+        window.push(first);
+        while window.len() < 256 {
+            match self.next_rest(ctx) {
+                Some(e) => window.push(e),
+                None => break,
+            }
+        }
+        let g = self
+            .ctx_mgr
+            .most_underserved(window.iter().map(|e| ctx.buffer.get(e.req).group()));
+        let pos = g
+            .and_then(|g| {
+                window
+                    .iter()
+                    .position(|e| ctx.buffer.get(e.req).group() == g)
+            })
+            .unwrap_or(0);
+        let chosen = window.remove(pos);
+        if pos > 0 {
+            let displaced = window.remove(0);
+            window.insert(pos - 1, displaced);
+        }
+        for e in window.drain(..).rev() {
+            self.rest_pending.push_front(e);
+        }
+        self.guard_window = window;
+        chosen
+    }
+
+    fn stash(&mut self, p: Pick) {
+        match p {
+            Pick::Probe(e) => self.consumed_probe.push(e),
+            Pick::Rest(e) => self.consumed_rest.push(e),
+        }
     }
 }
 
@@ -87,6 +309,49 @@ impl Scheduler for SeerScheduler {
         self.chunk_size = sys.chunk_size;
         self.starvation_frac = sys.starvation_guard_frac;
         self.picks_since_guard = 0;
+        // Rebuild the incremental candidate structures for the new
+        // iteration's id space.
+        let n_reqs = groups
+            .iter()
+            .flat_map(|g| g.requests.iter())
+            .map(|r| r.id.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.stamps.reset(n_reqs);
+        self.probe_heap.clear();
+        self.rest_heap.clear();
+        self.rest_pending.clear();
+        let n_groups = groups
+            .iter()
+            .map(|g| g.id.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.group_members.clear();
+        self.group_members.resize(n_groups, Vec::new());
+        for g in groups {
+            self.group_members[g.id.0 as usize] =
+                g.requests.iter().map(|r| r.id).collect();
+            let has_ctx = self.ctx_mgr.has_context(g.id);
+            for (i, r) in g.requests.iter().enumerate() {
+                let stamp = self.stamps.bump(r.id);
+                let probe =
+                    i == 0 && self.mode == ContextMode::Learned && !has_ctx;
+                if probe {
+                    self.probe_heap.push(Reverse((0, r.id.0)), r.id, stamp);
+                } else {
+                    // generated == 0 at iteration start, so the Oracle
+                    // key is the spec's full length.
+                    let key = match self.mode {
+                        ContextMode::Oracle => r.gen_len as u64,
+                        ContextMode::Learned => {
+                            self.ctx_mgr.estimate(g.id) as u64
+                        }
+                        ContextMode::None => 0,
+                    };
+                    self.rest_heap.push(key, r.id, stamp);
+                }
+            }
+        }
     }
 
     /// Learned mode consumes cross-iteration length priors: prior'd
@@ -100,16 +365,27 @@ impl Scheduler for SeerScheduler {
         }
         self.priors = priors.estimates.clone();
         self.ctx_mgr.inject_priors(self.priors.iter().copied());
+        // Prior'd groups flip probe → rest and take the prior as their
+        // LFS key: re-index their members.
+        for (g, _) in &priors.estimates {
+            if self.ctx_mgr.has_context(*g) {
+                self.repush_group(*g);
+            }
+        }
         true
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
+    fn schedule(&mut self, ctx: &SchedCtx, out: &mut Vec<Assignment>) {
         // Paper Alg. 2, run to fixpoint for this cycle: repeatedly pick
         // r* (probes SFS first, then LFS on estimates) and i* (most free
         // KV with room). Instance selection uses a max-heap on free KV
-        // (perf iteration 2, EXPERIMENTS.md §Perf: O(log I) per pick
-        // instead of an O(I) scan — 6x on the 3200-waiting bench).
-        let mut out = Vec::new();
+        // (perf iteration 2, EXPERIMENTS.md §Perf); candidates come from
+        // the incrementally maintained lazy heaps (module docs).
+        let n_waiting = ctx.buffer.n_waiting();
+        self.probe_heap.maybe_compact(&self.stamps, n_waiting);
+        self.rest_heap.maybe_compact(&self.stamps, n_waiting);
+        debug_assert!(self.rest_pending.is_empty());
+
         // Heap of (free_kv, slots_left, idx); stale entries are lazily
         // re-pushed after adjustment.
         let mut heap: std::collections::BinaryHeap<(u64, usize, usize)> =
@@ -122,84 +398,33 @@ impl Scheduler for SeerScheduler {
                 })
                 .collect();
 
-        // Candidate list: waiting requests.
-        let mut probes: Vec<RequestId> = Vec::new();
-        let mut rest: Vec<RequestId> = Vec::new();
-        for id in ctx.buffer.waiting() {
-            let r = ctx.buffer.get(id);
-            // A probe only needs the high-priority path while the group
-            // has no length context at all — neither an online finish
-            // nor a warm cross-iteration prior.
-            let probe_pending = r.is_probe
-                && self.mode == ContextMode::Learned
-                && !self.ctx_mgr.has_context(r.group());
-            if probe_pending {
-                probes.push(id);
-            } else {
-                rest.push(id);
-            }
-        }
-        // SFS for probes: fewest generated tokens first (they surface
-        // length signal soonest). Keys cached: priority_key hits the
-        // context manager's BTreeMap, so computing it once per element
-        // instead of per comparison matters at 3200 waiting (perf
-        // iteration 3, EXPERIMENTS.md §Perf).
-        probes.sort_by_cached_key(|id| {
-            let r = ctx.buffer.get(*id);
-            (r.generated, r.id().0)
-        });
-        // LFS for the rest on the mode's priority key; FCFS tiebreak.
-        rest.sort_by_cached_key(|id| {
-            let r = ctx.buffer.get(*id);
-            (std::cmp::Reverse(self.priority_key(r)), r.id().0)
-        });
-
         let guard_every = if self.starvation_frac > 0.0 {
             (1.0 / self.starvation_frac).round() as u64
         } else {
             u64::MAX
         };
 
-        let mut pi = 0usize;
-        let mut ri = 0usize;
         loop {
             // Pick r*: probe queue first (high-priority path).
-            let rid = if pi < probes.len() {
-                let id = probes[pi];
-                pi += 1;
-                id
-            } else if ri < rest.len() {
+            let pick = if let Some(e) = self.pop_valid_probe(ctx) {
+                Pick::Probe(e)
+            } else if let Some(first) = self.next_rest(ctx) {
                 // Starvation guard: periodically pick the most
                 // underserved group's first waiting request instead.
                 self.picks_since_guard += 1;
-                if self.mode == ContextMode::Learned
+                let e = if self.mode == ContextMode::Learned
                     && self.picks_since_guard % guard_every == 0
                 {
-                    // Bounded scan window (perf iteration 4): an O(W)
-                    // scan per guard pick made the decision loop
-                    // quadratic at 3200 waiting; 256 candidates is ample
-                    // to find a starved group.
-                    let window = (ri + 256).min(rest.len());
-                    let cand_groups = rest[ri..window]
-                        .iter()
-                        .map(|id| ctx.buffer.get(*id).group());
-                    if let Some(g) = self.ctx_mgr.most_underserved(cand_groups)
-                    {
-                        if let Some(pos) = rest[ri..window]
-                            .iter()
-                            .position(|id| ctx.buffer.get(*id).group() == g)
-                        {
-                            rest.swap(ri, ri + pos);
-                        }
-                    }
-                }
-                let id = rest[ri];
-                ri += 1;
-                id
+                    self.guard_pick(first, ctx)
+                } else {
+                    first
+                };
+                Pick::Rest(e)
             } else {
                 break;
             };
 
+            let rid = pick.req();
             let r = ctx.buffer.get(rid);
             let chunk = self.chunk_size;
             let demand = r.kv_demand(chunk);
@@ -215,6 +440,7 @@ impl Scheduler for SeerScheduler {
                     if slots_left > 1 {
                         heap.push((free - demand, slots_left - 1, i));
                     }
+                    self.stash(pick);
                 }
                 _ => {
                     // Alg. 2 line 20: the most-free instance can't take
@@ -222,6 +448,7 @@ impl Scheduler for SeerScheduler {
                     // near-uniform: existing KV + one chunk). Probes are
                     // precious — keep trying; for the LFS queue, stop
                     // after a bounded lookahead to keep cycles cheap.
+                    self.stash(pick);
                     if out.len() > 4 * ctx.instances.len()
                         || heap.is_empty()
                     {
@@ -230,12 +457,37 @@ impl Scheduler for SeerScheduler {
                 }
             }
         }
+
+        // Pass end: every examined candidate returns to its heap with
+        // its stamp intact — assigned ones too. If the driver applies an
+        // assignment the request leaves Waiting and the entry is
+        // discarded by next pass's validation; if the driver rejects it,
+        // `on_requeued` re-stamps and the zombie goes stale either way.
+        while let Some(e) = self.rest_pending.pop_front() {
+            self.rest_heap.push_raw(e);
+        }
+        while let Some(e) = self.consumed_probe.pop() {
+            self.probe_heap.push_raw(e);
+        }
+        while let Some(e) = self.consumed_rest.pop() {
+            self.rest_heap.push_raw(e);
+        }
+
         let _ = self.rng.next_u64(); // reserved for future stochastic tie-breaks
-        out
     }
 
     fn on_finished(&mut self, req: &ReqState) {
-        self.ctx_mgr.on_finished(req.group(), req.generated);
+        let g = req.group();
+        let had_ctx = self.ctx_mgr.has_context(g);
+        let before = self.ctx_mgr.estimate(g);
+        self.ctx_mgr.on_finished(g, req.generated);
+        // Re-key the group's waiting members when its LFS key moved (or
+        // its probe lost the fast path on the first finish).
+        if self.mode == ContextMode::Learned
+            && (!had_ctx || self.ctx_mgr.estimate(g) != before)
+        {
+            self.repush_group(g);
+        }
     }
 
     /// The missed update path (regression fix): a chunk lease ended and
@@ -243,7 +495,24 @@ impl Scheduler for SeerScheduler {
     /// progress so a stale learned/prior estimate can't demote a
     /// demonstrably long group.
     fn on_chunk_end(&mut self, req: &ReqState) {
-        self.ctx_mgr.on_progress(req.group(), req.generated);
+        let g = req.group();
+        let before = self.ctx_mgr.estimate(g);
+        self.ctx_mgr.on_progress(g, req.generated);
+        // The request itself re-enters the waiting set with new
+        // progress: re-index it under its current key.
+        self.reindex(req);
+        if self.mode == ContextMode::Learned
+            && self.ctx_mgr.estimate(g) != before
+        {
+            self.repush_group(g);
+        }
+    }
+
+    /// A produced assignment bounced (driver re-check or in-flight
+    /// capacity loss): the request is back in the waiting set unchanged —
+    /// restore exactly one current candidate entry for it.
+    fn on_requeued(&mut self, req: &ReqState) {
+        self.reindex(req);
     }
 
     fn uses_global_pool(&self) -> bool {
@@ -296,15 +565,25 @@ mod tests {
         (s, buffer, instances)
     }
 
+    fn run_pass(
+        s: &mut SeerScheduler,
+        buffer: &RequestBuffer,
+        instances: &[InstanceView],
+    ) -> Vec<Assignment> {
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances,
+            buffer,
+        };
+        let mut out = Vec::new();
+        s.schedule(&ctx, &mut out);
+        out
+    }
+
     #[test]
     fn schedules_probes_first() {
         let (mut s, buffer, instances) = setup(ContextMode::Learned);
-        let ctx = SchedCtx {
-            now: SimTime::ZERO,
-            instances: &instances,
-            buffer: &buffer,
-        };
-        let assignments = s.schedule(&ctx);
+        let assignments = run_pass(&mut s, &buffer, &instances);
         assert!(!assignments.is_empty());
         // The earliest assignments must all be probes (one per group,
         // scheduled before any non-probe).
@@ -330,12 +609,7 @@ mod tests {
             i.free_kv_tokens = 9000;
             i.max_batch = 1;
         }
-        let ctx = SchedCtx {
-            now: SimTime::ZERO,
-            instances: &instances,
-            buffer: &buffer,
-        };
-        let assignments = s.schedule(&ctx);
+        let assignments = run_pass(&mut s, &buffer, &instances);
         assert!(!assignments.is_empty());
         let mut lens: Vec<u32> = assignments
             .iter()
@@ -357,12 +631,7 @@ mod tests {
         for i in &mut instances {
             i.max_batch = 2;
         }
-        let ctx = SchedCtx {
-            now: SimTime::ZERO,
-            instances: &instances,
-            buffer: &buffer,
-        };
-        let assignments = s.schedule(&ctx);
+        let assignments = run_pass(&mut s, &buffer, &instances);
         // No instance may receive more than max_batch assignments.
         let mut per_inst = std::collections::BTreeMap::new();
         for a in &assignments {
@@ -371,6 +640,25 @@ mod tests {
         for (_, n) in per_inst {
             assert!(n <= 2);
         }
+    }
+
+    /// The incremental heaps must make repeated passes over an unchanged
+    /// buffer behave exactly like the rebuild-per-pass implementation:
+    /// examined candidates are returned at pass end, so a second pass
+    /// sees the identical candidate set.
+    #[test]
+    fn repeated_passes_without_application_are_stable() {
+        let (mut s, buffer, mut instances) = setup(ContextMode::Learned);
+        for i in &mut instances {
+            i.max_batch = 4;
+        }
+        let first = run_pass(&mut s, &buffer, &instances);
+        let second = run_pass(&mut s, &buffer, &instances);
+        assert!(!first.is_empty());
+        assert_eq!(
+            first, second,
+            "unapplied assignments must be re-producible next pass"
+        );
     }
 
     #[test]
@@ -398,12 +686,7 @@ mod tests {
             running: 0,
             max_batch: 4,
         }];
-        let ctx = SchedCtx {
-            now: SimTime::ZERO,
-            instances: &instances,
-            buffer: &buffer,
-        };
-        let assignments = s.schedule(&ctx);
+        let assignments = run_pass(&mut s, &buffer, &instances);
         assert!(!assignments.is_empty());
         // Re-init for a new iteration must retain the injected priors.
         s.init(&w.groups, &cfg, &SystemConfig::default());

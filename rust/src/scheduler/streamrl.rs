@@ -12,19 +12,41 @@
 //! observes (it can even lose to veRL on out-of-distribution workloads
 //! like Kimi-K2, where capping concurrency wastes an instance that is not
 //! actually memory-constrained).
+//!
+//! Hot-path overhaul: pin and true-length tables are dense `Vec`s over
+//! the contiguous id space, and the global longest-first order lives in
+//! one incrementally maintained [`LazyHeap`] — true lengths never change
+//! within an iteration, so entries only need repair on waiting-set
+//! re-entry (preemption, fault drains, bounced admissions). A pass pops
+//! candidates in exact `(len desc, id asc)` order and stops as soon as
+//! every live instance has reached its concurrency cap, instead of
+//! re-collecting and re-sorting the whole waiting set.
 
 use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, WorkloadConfig};
-use crate::coordinator::RequestBuffer;
+use crate::coordinator::{Phase, ReqState, RequestBuffer};
 use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
 
+use super::lazyheap::{Entry, LazyHeap, Stamps};
 use super::{Assignment, SchedCtx, Scheduler};
 
 pub struct StreamRlOracle {
-    pin: BTreeMap<RequestId, InstanceId>,
-    /// True total length per request (oracle information).
-    true_len: BTreeMap<RequestId, u32>,
+    /// Pinned instance per request, indexed by request id.
+    pin: Vec<InstanceId>,
+    /// True total length per request (oracle information), indexed by
+    /// request id.
+    true_len: Vec<u32>,
+    /// Global longest-first candidate heap over the waiting set (key =
+    /// true length; entry tie-break pops ascending id among equals).
+    lfs: LazyHeap<u32>,
+    stamps: Stamps,
+    /// Pass scratch: examined entries, returned afterwards; per-view
+    /// admission state.
+    consumed: Vec<Entry<u32>>,
+    scratch_reserved: Vec<u64>,
+    scratch_slots: Vec<usize>,
+    scratch_view_of: Vec<usize>,
     /// Per-instance concurrency cap from the bucketing model, keyed by
     /// instance id (the fleet can grow or shrink under elasticity, so a
     /// positional Vec would silently misattribute caps).
@@ -41,8 +63,14 @@ pub struct StreamRlOracle {
 impl StreamRlOracle {
     pub fn new() -> Self {
         StreamRlOracle {
-            pin: BTreeMap::new(),
-            true_len: BTreeMap::new(),
+            pin: Vec::new(),
+            true_len: Vec::new(),
+            lfs: LazyHeap::new(),
+            stamps: Stamps::default(),
+            consumed: Vec::new(),
+            scratch_reserved: Vec::new(),
+            scratch_slots: Vec::new(),
+            scratch_view_of: Vec::new(),
             conc_cap: BTreeMap::new(),
             max_len: u32::MAX,
             safety: 1.15,
@@ -66,6 +94,15 @@ impl StreamRlOracle {
         let mean_len = (len_sum / reqs).max(1);
         ((kv_capacity as f64 / (mean_len as f64 * safety)).floor() as usize)
             .clamp(1, max_batch)
+    }
+
+    /// Restore the candidate entry for a request that is (back) in the
+    /// waiting set. The key is its static true length, so re-pins never
+    /// require repair — only waiting-set re-entry does.
+    fn push_waiting(&mut self, id: RequestId) {
+        let key = self.true_len[id.0 as usize];
+        let stamp = self.stamps.bump(id);
+        self.lfs.push(key, id, stamp);
     }
 
     /// Elastic re-placement: move the movable groups LPT-style onto the
@@ -93,13 +130,11 @@ impl StreamRlOracle {
                 continue;
             }
             let g = r.group();
-            if let Some(p) = self.pin.get(&r.id()) {
-                group_pin.insert(g, *p);
-            }
+            group_pin.insert(g, self.pin[r.id().0 as usize]);
             *group_work.entry(g).or_insert(0) +=
                 (r.spec.prompt_len + r.spec.gen_len) as u64;
             let movable = match from {
-                Some(lost) => self.pin.get(&r.id()) == Some(&lost),
+                Some(lost) => self.pin[r.id().0 as usize] == lost,
                 None => !r.is_running(),
             };
             let e = group_movable.entry(g).or_insert(true);
@@ -138,7 +173,7 @@ impl StreamRlOracle {
         }
         for r in buffer.all() {
             if let Some(t) = new_pin.get(&r.group()) {
-                self.pin.insert(r.id(), *t);
+                self.pin[r.id().0 as usize] = *t;
             }
         }
         // Refresh caps for the live fleet from the new placement.
@@ -148,11 +183,10 @@ impl StreamRlOracle {
             if r.is_finished() {
                 continue;
             }
-            if let Some(p) = self.pin.get(&r.id()) {
-                if let Some(s) = sums.get_mut(&p.0) {
-                    s.0 += (r.spec.prompt_len + r.spec.gen_len) as u64;
-                    s.1 += 1;
-                }
+            let p = self.pin[r.id().0 as usize];
+            if let Some(s) = sums.get_mut(&p.0) {
+                s.0 += (r.spec.prompt_len + r.spec.gen_len) as u64;
+                s.1 += 1;
             }
         }
         for (id, (len_sum, reqs)) in sums {
@@ -187,9 +221,19 @@ impl Scheduler for StreamRlOracle {
         cfg: &WorkloadConfig,
         _sys: &SystemConfig,
     ) {
-        self.pin.clear();
-        self.true_len.clear();
         self.max_len = cfg.max_gen_len;
+        let n_reqs = groups
+            .iter()
+            .flat_map(|g| g.requests.iter())
+            .map(|r| r.id.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.pin.clear();
+        self.pin.resize(n_reqs, InstanceId(0));
+        self.true_len.clear();
+        self.true_len.resize(n_reqs, 0);
+        self.stamps.reset(n_reqs);
+        self.lfs.clear();
 
         // Sort groups by total true work, longest first (LPT), and assign
         // each to the currently least-loaded instance.
@@ -212,8 +256,10 @@ impl Scheduler for StreamRlOracle {
                 .unwrap();
             load[target] += work(g);
             for r in &g.requests {
-                self.pin.insert(r.id, InstanceId(target as u32));
-                self.true_len.insert(r.id, r.gen_len);
+                self.pin[r.id.0 as usize] = InstanceId(target as u32);
+                self.true_len[r.id.0 as usize] = r.gen_len;
+                let stamp = self.stamps.bump(r.id);
+                self.lfs.push(r.gen_len, r.id, stamp);
                 inst_len_sum[target] += (r.prompt_len + r.gen_len) as u64;
                 inst_reqs[target] += 1;
             }
@@ -237,44 +283,75 @@ impl Scheduler for StreamRlOracle {
             .collect();
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
-        let mut out = Vec::new();
-        let mut reserved = vec![0u64; ctx.instances.len()];
-        let mut slots: Vec<usize> =
-            ctx.instances.iter().map(|i| i.running).collect();
-        let index_of: BTreeMap<u32, usize> = ctx
+    fn schedule(&mut self, ctx: &SchedCtx, out: &mut Vec<Assignment>) {
+        self.lfs.maybe_compact(&self.stamps, ctx.buffer.n_waiting());
+        // Per-view admission state (reused scratch): reservation totals,
+        // running counts, and a dense instance-id → view-index map.
+        let mut reserved = std::mem::take(&mut self.scratch_reserved);
+        let mut slots = std::mem::take(&mut self.scratch_slots);
+        let mut view_of = std::mem::take(&mut self.scratch_view_of);
+        reserved.clear();
+        reserved.resize(ctx.instances.len(), 0);
+        slots.clear();
+        slots.extend(ctx.instances.iter().map(|v| v.running));
+        let max_id = ctx
             .instances
             .iter()
-            .enumerate()
-            .map(|(i, v)| (v.id.0, i))
-            .collect();
+            .map(|v| v.id.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        view_of.clear();
+        view_of.resize(max_id, usize::MAX);
+        let mut active = 0usize;
+        for (i, v) in ctx.instances.iter().enumerate() {
+            view_of[v.id.0 as usize] = i;
+            let cap = self
+                .conc_cap
+                .get(&v.id.0)
+                .copied()
+                .unwrap_or(v.max_batch)
+                .min(v.max_batch);
+            if slots[i] < cap {
+                active += 1;
+            }
+        }
 
-        // Longest-first within each instance's pinned queue.
-        let mut waiting: Vec<RequestId> = ctx.buffer.waiting().collect();
-        waiting.sort_by_key(|id| {
-            std::cmp::Reverse(self.true_len.get(id).copied().unwrap_or(0))
-        });
-
-        for id in waiting {
-            let inst = *self.pin.get(&id).expect("unpinned request");
+        // Longest-first over the whole waiting set, exactly the order
+        // the collect-and-sort implementation produced; stop as soon as
+        // no live instance can admit anything more.
+        let mut consumed = std::mem::take(&mut self.consumed);
+        while active > 0 {
+            let Some(e) = self.lfs.pop() else {
+                break;
+            };
+            if !self.stamps.is_current(&e) {
+                continue;
+            }
+            let r = ctx.buffer.get(e.req);
+            if !matches!(r.phase, Phase::Waiting) {
+                continue;
+            }
+            consumed.push(e);
+            let inst = self.pin[e.req.0 as usize];
             // The pinned instance may be down (fault layer): wait for it
             // to recover or for a loss/scale hook to re-place the group.
-            let Some(&i) = index_of.get(&inst.0) else {
-                continue;
+            let i = match view_of.get(inst.0 as usize) {
+                Some(&i) if i != usize::MAX => i,
+                _ => continue,
             };
             let cap = self
                 .conc_cap
                 .get(&inst.0)
                 .copied()
-                .unwrap_or(ctx.instances[i].max_batch);
-            if slots[i] >= cap || slots[i] >= ctx.instances[i].max_batch {
+                .unwrap_or(ctx.instances[i].max_batch)
+                .min(ctx.instances[i].max_batch);
+            if slots[i] >= cap {
                 continue;
             }
-            let r = ctx.buffer.get(id);
             // Oracle admission: reserve the *full* final KV footprint —
             // no preemption ever, at the cost of conservatism.
             let final_kv = (r.spec.prompt_len as u64
-                + self.true_len.get(&id).copied().unwrap_or(0) as u64)
+                + self.true_len[e.req.0 as usize] as u64)
                 as f64
                 * self.safety;
             let demand = (final_kv as u64)
@@ -286,13 +363,34 @@ impl Scheduler for StreamRlOracle {
                 reserved[i] += demand;
                 slots[i] += 1;
                 out.push(Assignment {
-                    req: id,
+                    req: e.req,
                     instance: inst,
                     chunk: self.max_len,
                 });
+                if slots[i] >= cap {
+                    active -= 1;
+                }
             }
         }
-        out
+        for e in consumed.drain(..) {
+            self.lfs.push_raw(e);
+        }
+        self.consumed = consumed;
+        self.scratch_reserved = reserved;
+        self.scratch_slots = slots;
+        self.scratch_view_of = view_of;
+    }
+
+    /// A preempted request re-entered the waiting queue: restore its
+    /// candidate entry.
+    fn on_chunk_end(&mut self, req: &ReqState) {
+        self.push_waiting(req.id());
+    }
+
+    /// A produced assignment bounced off the driver's admission
+    /// re-check: the request is still waiting — re-stamp its entry.
+    fn on_requeued(&mut self, req: &ReqState) {
+        self.push_waiting(req.id());
     }
 
     /// Elasticity: re-place the lost instance's groups LPT over the
@@ -301,10 +399,16 @@ impl Scheduler for StreamRlOracle {
     fn on_instance_lost(
         &mut self,
         lost: InstanceId,
-        _drained: &[RequestId],
+        drained: &[RequestId],
         live: &[InstanceId],
         buffer: &RequestBuffer,
     ) {
+        // Drained requests just re-entered the waiting set: restore
+        // their candidate entries (keys are static, so the later re-pin
+        // needs no further repair).
+        for &id in drained {
+            self.push_waiting(id);
+        }
         self.conc_cap.remove(&lost.0);
         self.rebalance(Some(lost), live, buffer);
     }
@@ -334,6 +438,10 @@ mod tests {
     use crate::config::TaskPreset;
     use crate::workload::generate_iteration;
 
+    fn pin_of(s: &StreamRlOracle, id: RequestId) -> InstanceId {
+        s.pin[id.0 as usize]
+    }
+
     #[test]
     fn lpt_balances_total_work() {
         let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
@@ -344,7 +452,7 @@ mod tests {
         // (LPT guarantee is 4/3 OPT for makespan; totals are near-even).
         let mut load = vec![0u64; cfg.n_instances];
         for g in &w.groups {
-            let inst = s.pin[&g.requests[0].id].0 as usize;
+            let inst = pin_of(&s, g.requests[0].id).0 as usize;
             for r in &g.requests {
                 load[inst] += (r.prompt_len + r.gen_len) as u64;
             }
@@ -364,7 +472,7 @@ mod tests {
         // anti-monotone in length (longer => cap no larger).
         let mut sums = vec![(0u64, 0u64); cfg.n_instances];
         for g in &w.groups {
-            let inst = s.pin[&g.requests[0].id].0 as usize;
+            let inst = pin_of(&s, g.requests[0].id).0 as usize;
             for r in &g.requests {
                 sums[inst].0 += r.gen_len as u64;
                 sums[inst].1 += 1;
@@ -386,6 +494,44 @@ mod tests {
     }
 
     #[test]
+    fn schedule_emits_longest_first_order() {
+        use crate::coordinator::RequestBuffer;
+        use crate::scheduler::InstanceView;
+        use crate::sim::clock::SimTime;
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let w = generate_iteration(&cfg, 4);
+        let buffer = RequestBuffer::from_groups(&w.groups);
+        let mut s = StreamRlOracle::new();
+        s.init(&w.groups, &cfg, &SystemConfig::default());
+        let instances: Vec<InstanceView> = (0..cfg.n_instances as u32)
+            .map(|i| InstanceView {
+                id: InstanceId(i),
+                free_kv_tokens: cfg.hw.kv_capacity_tokens,
+                capacity_tokens: cfg.hw.kv_capacity_tokens,
+                running: 0,
+                max_batch: cfg.hw.max_batch,
+            })
+            .collect();
+        let ctx = SchedCtx {
+            now: SimTime::ZERO,
+            instances: &instances,
+            buffer: &buffer,
+        };
+        let mut out = Vec::new();
+        s.schedule(&ctx, &mut out);
+        assert!(!out.is_empty());
+        let keys: Vec<(std::cmp::Reverse<u32>, u32)> = out
+            .iter()
+            .map(|a| {
+                (std::cmp::Reverse(s.true_len[a.req.0 as usize]), a.req.0)
+            })
+            .collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted, "not in (len desc, id asc) order");
+    }
+
+    #[test]
     fn instance_lost_replaces_groups_on_survivors() {
         use crate::coordinator::RequestBuffer;
         let cfg = TaskPreset::Qwen2Vl72b.workload_for_test();
@@ -400,10 +546,10 @@ mod tests {
         assert!(!s.conc_cap.contains_key(&lost.0));
         let mut survivor_load = vec![0u64; cfg.n_instances];
         for g in &w.groups {
-            let inst = s.pin[&g.requests[0].id];
+            let inst = pin_of(&s, g.requests[0].id);
             assert_ne!(inst, lost, "group still pinned to lost instance");
             for r in &g.requests {
-                assert_eq!(s.pin[&r.id], inst, "group split by re-place");
+                assert_eq!(pin_of(&s, r.id), inst, "group split by re-place");
                 survivor_load[inst.0 as usize] +=
                     (r.prompt_len + r.gen_len) as u64;
             }
@@ -431,7 +577,7 @@ mod tests {
         assert!(
             w.groups
                 .iter()
-                .any(|g| s.pin[&g.requests[0].id] == added[0]),
+                .any(|g| pin_of(&s, g.requests[0].id) == added[0]),
             "newcomer got no groups"
         );
         let cap = s.conc_cap[&added[0].0];

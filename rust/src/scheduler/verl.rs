@@ -3,18 +3,38 @@
 //! re-prefill). This is the paper's primary baseline (§4.1): a
 //! well-engineered synchronous system whose scheduling treats each prompt
 //! group as a monolithic unit pinned to one instance.
+//!
+//! Hot-path overhaul: the pin table is a dense `Vec` over the contiguous
+//! request-id space (O(1) lookups instead of a tree walk), and each
+//! instance keeps an incrementally maintained FCFS candidate heap (see
+//! [`super::lazyheap`]) instead of re-scanning the whole waiting set per
+//! pass. A pass touches only instances with free batch slots and pops
+//! only the candidates it examines — o(waiting) amortized when the fleet
+//! is saturated — while emitting the byte-identical ascending-id
+//! assignment order of the old global scan (per-instance admission is
+//! independent, so processing queue-by-queue and sorting the output by
+//! request id reproduces it exactly).
 
 use std::collections::BTreeMap;
 
 use crate::config::{SystemConfig, WorkloadConfig};
-use crate::coordinator::RequestBuffer;
+use crate::coordinator::{Phase, ReqState, RequestBuffer};
 use crate::workload::{GroupId, GroupSpec, InstanceId, RequestId};
 
+use super::lazyheap::{Entry, LazyHeap, Stamps};
 use super::{Assignment, SchedCtx, Scheduler};
 
 pub struct VerlScheduler {
-    /// Pinned instance per request (group-level round-robin).
-    pin: BTreeMap<RequestId, InstanceId>,
+    /// Pinned instance per request (group-level round-robin), indexed by
+    /// request id.
+    pin: Vec<InstanceId>,
+    /// Per-instance FCFS candidate heaps over the waiting set (key `()`:
+    /// the entry tie-break pops ascending request id), indexed by
+    /// instance id. Repaired by the lifecycle hooks.
+    queues: Vec<LazyHeap<()>>,
+    stamps: Stamps,
+    /// Pass scratch: entries examined this pass, returned afterwards.
+    consumed: Vec<Entry<()>>,
     /// Admission watermark: tokens of decode headroom reserved beyond the
     /// current KV when admitting (vLLM-style optimistic admission — the
     /// source of later preemptions).
@@ -25,9 +45,40 @@ pub struct VerlScheduler {
 impl VerlScheduler {
     pub fn new() -> Self {
         VerlScheduler {
-            pin: BTreeMap::new(),
+            pin: Vec::new(),
+            queues: Vec::new(),
+            stamps: Stamps::default(),
+            consumed: Vec::new(),
             watermark: 256,
             max_len: u32::MAX,
+        }
+    }
+
+    fn ensure_queue(&mut self, inst: InstanceId) {
+        let i = inst.0 as usize;
+        if i >= self.queues.len() {
+            self.queues.resize_with(i + 1, LazyHeap::new);
+        }
+    }
+
+    /// Restore the candidate entry for a request that is (back) in the
+    /// waiting set, into its current pin's queue.
+    fn push_waiting(&mut self, id: RequestId) {
+        let inst = self.pin[id.0 as usize];
+        self.ensure_queue(inst);
+        let stamp = self.stamps.bump(id);
+        self.queues[inst.0 as usize].push((), id, stamp);
+    }
+
+    /// Move a request's pin; if it is currently waiting, migrate its
+    /// candidate entry to the new instance's queue.
+    fn repin(&mut self, id: RequestId, to: InstanceId, buffer: &RequestBuffer) {
+        if self.pin[id.0 as usize] == to {
+            return;
+        }
+        self.pin[id.0 as usize] = to;
+        if matches!(buffer.get(id).phase, Phase::Waiting) {
+            self.push_waiting(id);
         }
     }
 }
@@ -49,53 +100,102 @@ impl Scheduler for VerlScheduler {
         cfg: &WorkloadConfig,
         _sys: &SystemConfig,
     ) {
-        self.pin.clear();
         self.max_len = cfg.max_gen_len;
+        let n_reqs = groups
+            .iter()
+            .flat_map(|g| g.requests.iter())
+            .map(|r| r.id.0 as usize + 1)
+            .max()
+            .unwrap_or(0);
+        self.pin.clear();
+        self.pin.resize(n_reqs, InstanceId(0));
+        self.stamps.reset(n_reqs);
+        self.queues.clear();
+        self.queues.resize_with(cfg.n_instances.max(1), LazyHeap::new);
         for (gi, g) in groups.iter().enumerate() {
             let inst = InstanceId((gi % cfg.n_instances) as u32);
             for r in &g.requests {
-                self.pin.insert(r.id, inst);
+                self.pin[r.id.0 as usize] = inst;
+                let stamp = self.stamps.bump(r.id);
+                self.queues[inst.0 as usize].push((), r.id, stamp);
             }
         }
     }
 
-    fn schedule(&mut self, ctx: &SchedCtx) -> Vec<Assignment> {
-        let mut out = Vec::new();
-        let mut reserved = vec![0u64; ctx.instances.len()];
-        let mut slots: Vec<usize> =
-            ctx.instances.iter().map(|i| i.running).collect();
-        let index_of: BTreeMap<u32, usize> = ctx
-            .instances
-            .iter()
-            .enumerate()
-            .map(|(i, v)| (v.id.0, i))
-            .collect();
-
-        // FCFS by request id within each instance's pinned queue.
-        for id in ctx.buffer.waiting() {
-            let inst = *self.pin.get(&id).expect("unpinned request");
-            // The pinned instance may be down (fault layer): wait for it
-            // to recover or for a loss/scale hook to re-pin the group.
-            let Some(&i) = index_of.get(&inst.0) else {
-                continue;
-            };
-            let r = ctx.buffer.get(id);
-            // Optimistic admission: current KV + watermark only.
-            let demand = r.kv_demand(self.watermark);
-            let free =
-                ctx.instances[i].free_kv_tokens.saturating_sub(reserved[i]);
-            if free >= demand && slots[i] < ctx.instances[i].max_batch {
-                reserved[i] += demand;
-                slots[i] += 1;
-                out.push(Assignment {
-                    req: id,
-                    instance: inst,
-                    // Whole-request lease: no divided rollout.
-                    chunk: self.max_len,
-                });
+    fn schedule(&mut self, ctx: &SchedCtx, out: &mut Vec<Assignment>) {
+        let start = out.len();
+        let n_waiting = ctx.buffer.n_waiting();
+        let mut consumed = std::mem::take(&mut self.consumed);
+        // Per-instance admission is independent (FCFS by id within each
+        // pinned queue against that instance's own KV/slots), so the
+        // fleet is processed queue-by-queue; instances without a free
+        // slot cost O(1).
+        for v in ctx.instances {
+            let qi = v.id.0 as usize;
+            if qi >= self.queues.len() {
+                continue; // newcomer with nothing pinned to it yet
+            }
+            self.queues[qi].maybe_compact(&self.stamps, n_waiting);
+            let mut slots = v.running;
+            let mut reserved = 0u64;
+            while slots < v.max_batch {
+                let Some(e) = self.queues[qi].pop() else {
+                    break;
+                };
+                if !self.stamps.is_current(&e) {
+                    continue;
+                }
+                let r = ctx.buffer.get(e.req);
+                if !matches!(r.phase, Phase::Waiting) {
+                    continue;
+                }
+                debug_assert_eq!(
+                    self.pin[e.req.0 as usize], v.id,
+                    "candidate in the wrong instance queue"
+                );
+                consumed.push(e);
+                // Optimistic admission: current KV + watermark only. A
+                // KV-blocked candidate does not stop the scan — later
+                // (smaller) requests may still fit, exactly like the old
+                // full id-order scan.
+                let demand = r.kv_demand(self.watermark);
+                let free = v.free_kv_tokens.saturating_sub(reserved);
+                if free >= demand {
+                    reserved += demand;
+                    slots += 1;
+                    out.push(Assignment {
+                        req: e.req,
+                        instance: v.id,
+                        // Whole-request lease: no divided rollout.
+                        chunk: self.max_len,
+                    });
+                }
+            }
+            // Examined candidates return with stamps intact; entries for
+            // requests the driver actually places go stale at their next
+            // pop (phase check), rejected ones are re-stamped via
+            // `on_requeued`.
+            for e in consumed.drain(..) {
+                self.queues[qi].push_raw(e);
             }
         }
-        out
+        self.consumed = consumed;
+        // The old implementation scanned the global waiting set in
+        // ascending id order, so its assignment order interleaved
+        // instances by request id: restore that exact order.
+        out[start..].sort_by_key(|a| a.req.0);
+    }
+
+    /// A preempted request re-entered the waiting queue: restore its
+    /// candidate entry (veRL has no voluntary chunk ends).
+    fn on_chunk_end(&mut self, req: &ReqState) {
+        self.push_waiting(req.id());
+    }
+
+    /// A produced assignment bounced off the driver's admission
+    /// re-check: the request is still waiting — re-stamp its entry.
+    fn on_requeued(&mut self, req: &ReqState) {
+        self.push_waiting(req.id());
     }
 
     /// Elasticity: a lost instance's groups re-pin, whole, onto the
@@ -106,25 +206,33 @@ impl Scheduler for VerlScheduler {
     fn on_instance_lost(
         &mut self,
         lost: InstanceId,
-        _drained: &[RequestId],
+        drained: &[RequestId],
         live: &[InstanceId],
         buffer: &RequestBuffer,
     ) {
+        // The drained requests just re-entered the waiting set: restore
+        // their candidate entries first (into the current pin's queue),
+        // so they survive even a full outage — the dead instance's queue
+        // is simply served again when it recovers.
+        for &id in drained {
+            self.push_waiting(id);
+        }
         if live.is_empty() {
             return;
         }
         let mut target: BTreeMap<GroupId, InstanceId> = BTreeMap::new();
         let mut rr = 0usize;
-        for r in buffer.all() {
-            if self.pin.get(&r.id()) != Some(&lost) {
+        for id in buffer.all().iter().map(|r| r.id()) {
+            if self.pin[id.0 as usize] != lost {
                 continue;
             }
-            let tgt = *target.entry(r.group()).or_insert_with(|| {
+            let group = buffer.get(id).group();
+            let tgt = *target.entry(group).or_insert_with(|| {
                 let t = live[rr % live.len()];
                 rr += 1;
                 t
             });
-            self.pin.insert(r.id(), tgt);
+            self.repin(id, tgt, buffer);
         }
     }
 
@@ -173,7 +281,7 @@ impl Scheduler for VerlScheduler {
         }
         for r in buffer.all() {
             if let Some(t) = retarget.get(&r.group()) {
-                self.pin.insert(r.id(), *t);
+                self.repin(r.id(), *t, buffer);
             }
         }
     }
@@ -191,6 +299,10 @@ mod tests {
     use crate::sim::clock::SimTime;
     use crate::workload::generate_iteration;
 
+    fn pin_of(s: &VerlScheduler, id: RequestId) -> InstanceId {
+        s.pin[id.0 as usize]
+    }
+
     #[test]
     fn groups_are_pinned_whole() {
         let cfg = TaskPreset::Moonlight.workload_for_test();
@@ -199,7 +311,7 @@ mod tests {
         s.init(&w.groups, &cfg, &SystemConfig::default());
         for g in &w.groups {
             let insts: Vec<_> =
-                g.requests.iter().map(|r| s.pin[&r.id]).collect();
+                g.requests.iter().map(|r| pin_of(&s, r.id)).collect();
             assert!(
                 insts.windows(2).all(|w| w[0] == w[1]),
                 "group split across instances"
@@ -207,8 +319,8 @@ mod tests {
         }
         // Round-robin: consecutive groups on consecutive instances.
         assert_ne!(
-            s.pin[&w.groups[0].requests[0].id],
-            s.pin[&w.groups[1].requests[0].id]
+            pin_of(&s, w.groups[0].requests[0].id),
+            pin_of(&s, w.groups[1].requests[0].id)
         );
     }
 
@@ -233,10 +345,19 @@ mod tests {
             instances: &instances,
             buffer: &buffer,
         };
-        for a in s.schedule(&ctx) {
-            assert_eq!(a.instance, s.pin[&a.req]);
+        let mut assignments = Vec::new();
+        s.schedule(&ctx, &mut assignments);
+        assert!(!assignments.is_empty());
+        for a in &assignments {
+            assert_eq!(a.instance, pin_of(&s, a.req));
             assert_eq!(a.chunk, cfg.max_gen_len);
         }
+        // The emitted order is ascending request id — the order the old
+        // global waiting-set scan produced.
+        assert!(
+            assignments.windows(2).all(|w| w[0].req.0 < w[1].req.0),
+            "assignments must come out in ascending id order"
+        );
     }
 
     #[test]
@@ -252,7 +373,7 @@ mod tests {
         s.on_instance_lost(lost, &[], &live, &buffer);
         for g in &w.groups {
             let insts: Vec<_> =
-                g.requests.iter().map(|r| s.pin[&r.id]).collect();
+                g.requests.iter().map(|r| pin_of(&s, r.id)).collect();
             assert!(
                 insts.windows(2).all(|w| w[0] == w[1]),
                 "group split by re-pin"
@@ -282,12 +403,16 @@ mod tests {
         let moved: Vec<&GroupSpec> = w
             .groups
             .iter()
-            .filter(|g| s.pin[&g.requests[0].id] == added[0])
+            .filter(|g| pin_of(&s, g.requests[0].id) == added[0])
             .collect();
         assert!(!moved.is_empty(), "scale-up instance got no work");
         for g in moved {
             for r in &g.requests {
-                assert_eq!(s.pin[&r.id], added[0], "group split by re-home");
+                assert_eq!(
+                    pin_of(&s, r.id),
+                    added[0],
+                    "group split by re-home"
+                );
             }
         }
     }

@@ -53,9 +53,17 @@ use crate::rollout::RolloutSession;
 use crate::util::bench::BenchSuite;
 
 /// Benchmark the sim hot path — one full rollout session per scheduler
-/// at test scale — into a [`BenchSuite`] ready to be written as
-/// `BENCH_rollout.json`. Honors `SEER_BENCH_MS` (0 = single-iteration
-/// CI smoke mode).
+/// at test scale, plus the lifecycle-accounting micro pair — into a
+/// [`BenchSuite`] ready to be written as `BENCH_rollout.json`. Honors
+/// `SEER_BENCH_MS` (0 = single-iteration CI smoke mode).
+///
+/// The `accounting_*` pair is an in-binary before/after of the O(1)
+/// lifecycle-counter overhaul: `scan_before` measures the retained
+/// `n_finished_scan` cross-check (the per-event cost the event loop's
+/// `done()` used to pay once the waiting set drained), `counter_after`
+/// the O(1) counters it pays now. End-to-end `rollout_*` numbers are
+/// compared against the checked-in `BENCH_rollout.json` baseline by the
+/// CI perf guard (>2x regression fails the job).
 pub fn rollout_bench_suite<S: AsRef<str>>(schedulers: &[S]) -> Result<BenchSuite> {
     let cfg = crate::config::TaskPreset::Moonlight.workload_for_test();
     let mut suite = BenchSuite::new("rollout");
@@ -79,6 +87,17 @@ pub fn rollout_bench_suite<S: AsRef<str>>(schedulers: &[S]) -> Result<BenchSuite
             std::hint::black_box(report.metrics.tokens_generated);
         });
     }
+    // Lifecycle-accounting pair over a paper-scale buffer (full-scale
+    // request count, so the scan cost is what a real tail phase paid).
+    let full = crate::config::TaskPreset::Moonlight.workload();
+    let w = crate::workload::generate_iteration(&full, 1);
+    let buffer = crate::coordinator::RequestBuffer::from_groups(&w.groups);
+    suite.run("accounting_done_scan_before", || {
+        std::hint::black_box(buffer.n_finished_scan());
+    });
+    suite.run("accounting_done_counter_after", || {
+        std::hint::black_box((buffer.all_finished(), buffer.n_finished()));
+    });
     Ok(suite)
 }
 

@@ -1,0 +1,136 @@
+//! A dense bitset over contiguous `u32` ids.
+//!
+//! The coordinator's waiting set used to be a `BTreeSet<RequestId>`;
+//! request ids are contiguous from 0 by construction
+//! (`RequestBuffer::from_groups` asserts it), so a fixed-capacity bitset
+//! gives O(1) insert/remove/contains and word-at-a-time iteration while
+//! preserving the property the rest of the system relies on: **iteration
+//! yields ids in ascending order**, exactly like the ordered set it
+//! replaces. Schedulers and the event loop depend on that order for
+//! byte-identical reports — do not swap this for a hash set.
+
+/// Fixed-capacity set of `u32` ids in `0..capacity`.
+#[derive(Debug, Clone, Default)]
+pub struct IdBitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl IdBitSet {
+    /// An empty set able to hold ids `0..capacity`.
+    pub fn with_capacity(capacity: usize) -> Self {
+        IdBitSet {
+            words: vec![0; capacity.div_ceil(64)],
+            len: 0,
+        }
+    }
+
+    /// Number of ids currently in the set (O(1)).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        let (w, b) = (id as usize / 64, id as usize % 64);
+        self.words.get(w).is_some_and(|word| word & (1 << b) != 0)
+    }
+
+    /// Insert `id`; returns whether it was newly inserted.
+    pub fn insert(&mut self, id: u32) -> bool {
+        let (w, b) = (id as usize / 64, id as usize % 64);
+        let word = &mut self.words[w];
+        let mask = 1u64 << b;
+        if *word & mask != 0 {
+            return false;
+        }
+        *word |= mask;
+        self.len += 1;
+        true
+    }
+
+    /// Remove `id`; returns whether it was present.
+    pub fn remove(&mut self, id: u32) -> bool {
+        let (w, b) = (id as usize / 64, id as usize % 64);
+        let Some(word) = self.words.get_mut(w) else {
+            return false;
+        };
+        let mask = 1u64 << b;
+        if *word & mask == 0 {
+            return false;
+        }
+        *word &= !mask;
+        self.len -= 1;
+        true
+    }
+
+    /// Iterate the set ids in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    return None;
+                }
+                let b = w.trailing_zeros();
+                w &= w - 1;
+                Some(wi as u32 * 64 + b)
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains_len() {
+        let mut s = IdBitSet::with_capacity(200);
+        assert!(s.is_empty());
+        assert!(s.insert(0));
+        assert!(s.insert(63));
+        assert!(s.insert(64));
+        assert!(s.insert(199));
+        assert!(!s.insert(63), "double insert must report false");
+        assert_eq!(s.len(), 4);
+        assert!(s.contains(64));
+        assert!(!s.contains(65));
+        assert!(s.remove(64));
+        assert!(!s.remove(64), "double remove must report false");
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn iterates_in_ascending_order() {
+        let mut s = IdBitSet::with_capacity(300);
+        for id in [250u32, 3, 64, 0, 127, 128, 65] {
+            s.insert(id);
+        }
+        let got: Vec<u32> = s.iter().collect();
+        assert_eq!(got, vec![0, 3, 64, 65, 127, 128, 250]);
+    }
+
+    #[test]
+    fn matches_btreeset_on_random_churn() {
+        use std::collections::BTreeSet;
+        let mut rng = crate::sim::Rng::new(0xB17);
+        let mut s = IdBitSet::with_capacity(512);
+        let mut reference: BTreeSet<u32> = BTreeSet::new();
+        for _ in 0..4000 {
+            let id = rng.below(512) as u32;
+            if rng.bool(0.5) {
+                assert_eq!(s.insert(id), reference.insert(id));
+            } else {
+                assert_eq!(s.remove(id), reference.remove(&id));
+            }
+        }
+        assert_eq!(s.len(), reference.len());
+        let got: Vec<u32> = s.iter().collect();
+        let want: Vec<u32> = reference.iter().copied().collect();
+        assert_eq!(got, want);
+    }
+}

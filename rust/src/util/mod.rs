@@ -9,8 +9,10 @@
 
 pub mod bench;
 pub mod cli;
+pub mod idset;
 pub mod json;
 pub mod prop;
+pub mod sortedmap;
 pub mod stats;
 pub mod table;
 

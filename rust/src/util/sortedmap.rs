@@ -1,0 +1,151 @@
+//! A dense ordered map over small key sets: a sorted `Vec` of
+//! `(key, value)` pairs with binary-search lookup.
+//!
+//! This is the engine's slot-table replacement for `BTreeMap` on the
+//! event-loop hot path (per-instance `running`/`pending` sets). Batch
+//! sizes are bounded by the instance batch cap, so a contiguous sorted
+//! vector beats a node-based tree on every operation that matters here:
+//! lookups are a cache-friendly binary search, iteration is a linear
+//! scan over one allocation, and inserts/removes are a short `memmove`.
+//!
+//! **Iteration order is ascending key order and is load-bearing**: the
+//! cluster driver iterates these tables to build commit/finish event
+//! sequences, and the determinism (and byte-identity) of report JSON
+//! depends on visiting requests in ascending `RequestId` order — exactly
+//! the order the previous `BTreeMap` representation produced. Do not
+//! replace this with a hash map or an insertion-ordered table.
+
+/// A map from `K` to `V` stored as a sorted vector of pairs.
+#[derive(Debug, Clone, Default)]
+pub struct SortedVecMap<K: Ord + Copy, V> {
+    entries: Vec<(K, V)>,
+}
+
+impl<K: Ord + Copy, V> SortedVecMap<K, V> {
+    pub fn new() -> Self {
+        SortedVecMap { entries: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        SortedVecMap {
+            entries: Vec::with_capacity(n),
+        }
+    }
+
+    fn pos(&self, k: &K) -> Result<usize, usize> {
+        self.entries.binary_search_by(|(ek, _)| ek.cmp(k))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    pub fn contains_key(&self, k: &K) -> bool {
+        self.pos(k).is_ok()
+    }
+
+    pub fn get(&self, k: &K) -> Option<&V> {
+        self.pos(k).ok().map(|i| &self.entries[i].1)
+    }
+
+    pub fn get_mut(&mut self, k: &K) -> Option<&mut V> {
+        match self.pos(k) {
+            Ok(i) => Some(&mut self.entries[i].1),
+            Err(_) => None,
+        }
+    }
+
+    /// Insert `v` under `k`, returning the previous value if any
+    /// (`BTreeMap::insert` semantics).
+    pub fn insert(&mut self, k: K, v: V) -> Option<V> {
+        match self.pos(&k) {
+            Ok(i) => Some(std::mem::replace(&mut self.entries[i].1, v)),
+            Err(i) => {
+                self.entries.insert(i, (k, v));
+                None
+            }
+        }
+    }
+
+    /// Remove the entry under `k`, returning its value if present.
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        match self.pos(k) {
+            Ok(i) => Some(self.entries.remove(i).1),
+            Err(_) => None,
+        }
+    }
+
+    /// Keys in ascending order.
+    pub fn keys(&self) -> impl Iterator<Item = &K> + '_ {
+        self.entries.iter().map(|(k, _)| k)
+    }
+
+    /// Values in ascending key order.
+    pub fn values(&self) -> impl Iterator<Item = &V> + '_ {
+        self.entries.iter().map(|(_, v)| v)
+    }
+
+    /// `(key, value)` pairs in ascending key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&K, &V)> + '_ {
+        self.entries.iter().map(|(k, v)| (k, v))
+    }
+
+    /// Mutable `(key, value)` pairs in ascending key order.
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&K, &mut V)> + '_ {
+        self.entries.iter_mut().map(|(k, v)| (&*k, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut m: SortedVecMap<u32, &str> = SortedVecMap::new();
+        assert!(m.is_empty());
+        assert_eq!(m.insert(5, "five"), None);
+        assert_eq!(m.insert(1, "one"), None);
+        assert_eq!(m.insert(3, "three"), None);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.get(&3), Some(&"three"));
+        assert_eq!(m.insert(3, "drei"), Some("three"));
+        assert_eq!(m.remove(&3), Some("drei"));
+        assert_eq!(m.remove(&3), None);
+        assert!(!m.contains_key(&3));
+        assert!(m.contains_key(&1));
+    }
+
+    #[test]
+    fn iteration_is_ascending_key_order() {
+        let mut m: SortedVecMap<u32, u32> = SortedVecMap::new();
+        for k in [9u32, 2, 7, 4, 0] {
+            m.insert(k, k * 10);
+        }
+        let keys: Vec<u32> = m.keys().copied().collect();
+        assert_eq!(keys, vec![0, 2, 4, 7, 9]);
+        let pairs: Vec<(u32, u32)> = m.iter().map(|(k, v)| (*k, *v)).collect();
+        assert_eq!(pairs, vec![(0, 0), (2, 20), (4, 40), (7, 70), (9, 90)]);
+    }
+
+    #[test]
+    fn get_mut_and_iter_mut_mutate_in_place() {
+        let mut m: SortedVecMap<u32, u32> = SortedVecMap::new();
+        m.insert(1, 10);
+        m.insert(2, 20);
+        *m.get_mut(&1).unwrap() += 5;
+        for (_, v) in m.iter_mut() {
+            *v += 1;
+        }
+        assert_eq!(m.get(&1), Some(&16));
+        assert_eq!(m.get(&2), Some(&21));
+    }
+}

@@ -40,6 +40,28 @@ pub fn flatten_key_paths(j: &Json) -> Vec<String> {
     out
 }
 
+/// Golden byte-for-byte value snapshot: compare `text` against the
+/// fixture at `path`. With `SEER_REGEN_GOLDEN` set — or when the
+/// fixture does not exist yet, in which case the first run seeds it —
+/// write the current bytes and pass (commit the file). Used by the
+/// sweep value-identity test pinning that scheduler optimizations never
+/// change emitted report JSON.
+#[allow(dead_code)] // each test crate compiles its own copy of common
+pub fn check_golden_text(text: &str, path: &Path) {
+    if std::env::var("SEER_REGEN_GOLDEN").is_ok() || !path.exists() {
+        std::fs::write(path, text).unwrap();
+        eprintln!("wrote golden fixture {path:?} ({} bytes)", text.len());
+        return;
+    }
+    let golden = std::fs::read_to_string(path).unwrap();
+    assert_eq!(
+        text, golden,
+        "report bytes drifted from the golden fixture {path:?}; a pure \
+         mechanical-sympathy change must not alter emitted JSON — if the \
+         change is intentional, regen with SEER_REGEN_GOLDEN=1"
+    );
+}
+
 /// Golden key-schema check: compare `keys` against the fixture at
 /// `path`, or — with `SEER_REGEN_GOLDEN` set — rewrite the fixture from
 /// the current keys and pass (commit the updated file).

@@ -268,11 +268,14 @@ impl RolloutObserver for MonotoneClock {
 /// asserting the cross-cutting invariants *under concurrent execution*:
 /// every request completes or is explicitly aborted (none silently
 /// lost), the KV pool is never over-committed, per-instance concurrency
-/// stays within the batch cap (checked inside the sim at every
-/// telemetry sample via `with_invariant_checks`), the sim clock is
-/// monotone over the whole event stream, and the `EventCounts` observer
-/// tally agrees with the driver-side `RolloutMetrics`. A failure panics
-/// with the case's seed, like the serial harness.
+/// stays within the batch cap, the buffer's O(1) lifecycle counters
+/// (`n_finished`/`n_running`/`n_aborted`, ISSUE 5) equal their full
+/// phase scans (both checked inside the sim **at every telemetry
+/// sample** via `with_invariant_checks` →
+/// `RequestBuffer::check_invariants`), the sim clock is monotone over
+/// the whole event stream, and the `EventCounts` observer tally agrees
+/// with the driver-side `RolloutMetrics`. A failure panics with the
+/// case's seed, like the serial harness.
 #[test]
 fn faulty_runs_conserve_requests_and_invariants() {
     let cases = case_params(&PropConfig {
@@ -326,6 +329,18 @@ fn faulty_runs_conserve_requests_and_invariants() {
             assert_eq!(ids.len(), m.completions.len(), "{name} dup completion");
             out.buffer.check_invariants();
             assert_eq!(out.buffer.n_aborted() as u64, m.aborted);
+            // End-of-run counter-vs-scan equality (also asserted at
+            // every telemetry sample inside the run): the O(1) tallies
+            // the event loop's done() check trusts match ground truth.
+            assert_eq!(out.buffer.n_finished(), out.buffer.n_finished_scan());
+            assert_eq!(out.buffer.n_aborted(), out.buffer.n_aborted_scan());
+            assert_eq!(out.buffer.n_running(), 0, "{name} left runners");
+            assert_eq!(out.buffer.n_running_scan(), 0);
+            assert_eq!(
+                out.buffer.n_finished(),
+                n,
+                "{name}: every request must end finished or aborted"
+            );
             // Observer tally consistent with driver-side metrics.
             let ec = *counts.borrow();
             assert_eq!(ec.finished, m.completions.len() as u64);

@@ -174,6 +174,43 @@ fn report_aggregates_and_pairs_cover_the_grid() {
 /// `SEER_REGEN_GOLDEN=1 cargo test -q --test sweep sweep_report_schema`
 /// rewrites `tests/fixtures/sweep_golden_keys.json` and passes; commit
 /// the updated fixture.
+/// Value-level golden (ISSUE 5): the optimized schedulers — O(1)
+/// lifecycle counters, incremental lazy-heap candidate ordering, dense
+/// side tables — must produce byte-identical sweep report JSON to the
+/// checked-in fixture for the same seeds, across all three policies.
+///
+/// Honest scope: the fixture freezes the report bytes **from the commit
+/// that seeds it forward** — it is the standing tripwire that future
+/// "mechanical sympathy" changes move no emitted number. Equivalence to
+/// the *pre-overhaul* sort-based schedulers is established by
+/// construction (identical iteration orders; lazy-heap pop order equals
+/// the full sort under current keys — see ARCHITECTURE.md §Performance
+/// model), and can be spot-checked by running this grid on the
+/// overhaul's parent commit and diffing the JSON.
+///
+/// Seeding/regen: the fixture is written on first run (or with
+/// `SEER_REGEN_GOLDEN=1`) — commit the generated
+/// `tests/fixtures/sweep_golden_values.json`; any later divergence
+/// fails. A fresh checkout without the committed fixture re-seeds
+/// (loudly, on stderr) rather than failing, so the authoring
+/// environment's missing toolchain cannot wedge CI — committing the
+/// first CI run's fixture arms the test.
+#[test]
+fn sweep_report_bytes_match_golden_fixture() {
+    let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+        .schedulers(&["seer", "verl", "streamrl"])
+        .seeds([1, 2]);
+    let json = SweepRunner::new(2)
+        .run(&spec)
+        .unwrap()
+        .report
+        .to_json()
+        .to_string();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/sweep_golden_values.json");
+    common::check_golden_text(&json, &path);
+}
+
 #[test]
 fn sweep_report_schema_matches_golden() {
     let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
