@@ -15,12 +15,15 @@
 //! Everything is deterministic in the config: two drivers with the same
 //! [`TrainingConfig`] produce bit-identical summaries.
 
-use anyhow::Result;
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
 
 use crate::config::{SystemConfig, WorkloadConfig};
 use crate::rl::PhaseModel;
 use crate::rollout::session::RolloutReport;
-use crate::rollout::RolloutSession;
+use crate::rollout::{RolloutObserver, RolloutSession};
+use crate::util::json::Json;
 use crate::workload::generate_epoch;
 
 use super::store::{ContextStore, ContextStoreConfig};
@@ -84,6 +87,66 @@ pub struct IterationSummary {
     pub iter_total_secs: f64,
 }
 
+impl IterationSummary {
+    /// Serialize as one JSON object. Floats print in shortest-roundtrip
+    /// form and counters fit f64's 2^53 integer range at any simulated
+    /// scale, so [`IterationSummary::from_json`] recovers an *equal*
+    /// summary — the serve plane's checkpoint/resume path depends on
+    /// this exactness for byte-identical resumed reports.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("iter", Json::Num(self.iter as f64));
+        put("warm", Json::Bool(self.warm));
+        put("makespan_secs", Json::Num(self.makespan_secs));
+        put("p99_finish_secs", Json::Num(self.p99_finish_secs));
+        put("tail_secs", Json::Num(self.tail_secs));
+        put("throughput_tok_s", Json::Num(self.throughput_tok_s));
+        put("tokens", Json::Num(self.tokens as f64));
+        put("preemptions", Json::Num(self.preemptions as f64));
+        put("migrations", Json::Num(self.migrations as f64));
+        put("train_secs", Json::Num(self.train_secs));
+        put("weight_update_secs", Json::Num(self.weight_update_secs));
+        put("iter_total_secs", Json::Num(self.iter_total_secs));
+        Json::Obj(o)
+    }
+
+    /// Inverse of [`IterationSummary::to_json`]; every missing or
+    /// type-confused field is a named error (checkpoints are read back
+    /// from disk, which may have been truncated or hand-edited).
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let f = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .with_context(|| format!("iteration summary: bad '{k}'"))
+        };
+        let u = |k: &str| -> Result<u64> {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("iteration summary: bad '{k}'"))
+        };
+        Ok(IterationSummary {
+            iter: u("iter")? as usize,
+            warm: j
+                .get("warm")
+                .and_then(Json::as_bool)
+                .context("iteration summary: bad 'warm'")?,
+            makespan_secs: f("makespan_secs")?,
+            p99_finish_secs: f("p99_finish_secs")?,
+            tail_secs: f("tail_secs")?,
+            throughput_tok_s: f("throughput_tok_s")?,
+            tokens: u("tokens")?,
+            preemptions: u("preemptions")?,
+            migrations: u("migrations")?,
+            train_secs: f("train_secs")?,
+            weight_update_secs: f("weight_update_secs")?,
+            iter_total_secs: f("iter_total_secs")?,
+        })
+    }
+}
+
 /// Drives N GRPO iterations through the session layer, threading the
 /// cross-iteration [`ContextStore`] between them.
 pub struct TrainingDriver {
@@ -133,6 +196,33 @@ impl TrainingDriver {
         Ok(Self::build(cfg, store))
     }
 
+    /// Resume an *interrupted* run from checkpointed state: the store
+    /// plus the summaries of the iterations already completed. Beyond
+    /// the [`with_store`](Self::with_store) fingerprint checks, the
+    /// history length must equal the store's observed iteration count —
+    /// they are written atomically together by the serve plane's
+    /// checkpointer, so a mismatch means a corrupt or mixed-up file.
+    /// The resumed driver continues the epoch sequence and appends to
+    /// `history`, so its final history is identical to an uninterrupted
+    /// run's.
+    pub fn with_resume(
+        cfg: TrainingConfig,
+        store: ContextStore,
+        history: Vec<IterationSummary>,
+    ) -> Result<Self> {
+        if history.len() as u64 != store.iterations() {
+            bail!(
+                "resume history has {} summaries but the store observed {} \
+                 iterations",
+                history.len(),
+                store.iterations()
+            );
+        }
+        let mut d = Self::with_store(cfg, store)?;
+        d.history = history;
+        Ok(d)
+    }
+
     fn build(cfg: TrainingConfig, store: ContextStore) -> Self {
         TrainingDriver {
             cfg,
@@ -162,6 +252,19 @@ impl TrainingDriver {
 
     /// Run one iteration (epoch `iter`), returning its summary.
     pub fn run_iteration(&mut self, iter: usize) -> Result<IterationSummary> {
+        self.run_iteration_observed(iter, None)
+    }
+
+    /// [`run_iteration`](Self::run_iteration) with an optional event
+    /// observer attached to the epoch's rollout session — the serve
+    /// plane threads its fan-out mux through here so `subscribe` streams
+    /// a train job's events live. Observation never changes the result:
+    /// summaries are identical with and without an observer.
+    pub fn run_iteration_observed(
+        &mut self,
+        iter: usize,
+        observer: Option<Box<dyn RolloutObserver>>,
+    ) -> Result<IterationSummary> {
         let cfg = &self.cfg;
         let w = generate_epoch(&cfg.workload, cfg.seed, iter as u64, cfg.drift);
         let mut builder = RolloutSession::builder()
@@ -174,6 +277,9 @@ impl TrainingDriver {
         let warm = cfg.warm_start && !self.store.is_empty();
         if warm {
             builder = builder.context_store(&self.store);
+        }
+        if let Some(obs) = observer {
+            builder = builder.observer(obs);
         }
         let report = builder.run()?;
         let summary = self.summarize(iter, warm, &report);
@@ -269,6 +375,104 @@ mod tests {
         let sums = d.run().unwrap();
         assert!(sums[0].warm, "loaded store must warm the first iteration");
         assert_eq!(sums[0].iter, 1);
+    }
+
+    #[test]
+    fn summary_json_round_trips_exactly() {
+        let mut d = TrainingDriver::new(quick_cfg(true, 2));
+        for s in d.run().unwrap() {
+            let j = s.to_json();
+            let back = IterationSummary::from_json(
+                &Json::parse(&j.to_string()).unwrap(),
+            )
+            .unwrap();
+            // Exact equality (floats included): shortest-roundtrip
+            // printing makes the JSON hop lossless.
+            assert_eq!(back, s);
+        }
+    }
+
+    #[test]
+    fn summary_from_json_rejects_bad_fields() {
+        let s = TrainingDriver::new(quick_cfg(true, 1))
+            .run_iteration(0)
+            .unwrap();
+        let Json::Obj(o) = s.to_json() else { unreachable!() };
+        for key in o.keys() {
+            let mut broken = o.clone();
+            broken.insert(key.clone(), Json::Null);
+            let e = IterationSummary::from_json(&Json::Obj(broken))
+                .unwrap_err()
+                .to_string();
+            assert!(e.contains(key.as_str()), "{key}: {e}");
+        }
+        assert!(IterationSummary::from_json(&Json::Arr(vec![])).is_err());
+    }
+
+    #[test]
+    fn resumed_run_matches_uninterrupted_history_exactly() {
+        let cfg = TrainingConfig {
+            drift: 0.1,
+            ..quick_cfg(true, 4)
+        };
+        let mut full = TrainingDriver::new(cfg.clone());
+        full.run().unwrap();
+
+        // Interrupt after 2 iterations; round-trip state through JSON
+        // the way a checkpoint does.
+        let mut part = TrainingDriver::new(cfg.clone());
+        part.run_iteration(0).unwrap();
+        part.run_iteration(1).unwrap();
+        let history: Vec<IterationSummary> = part
+            .history()
+            .iter()
+            .map(|s| {
+                IterationSummary::from_json(
+                    &Json::parse(&s.to_json().to_string()).unwrap(),
+                )
+                .unwrap()
+            })
+            .collect();
+        let store = crate::iteration::ContextStore::from_json(
+            &Json::parse(&part.into_store().to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+
+        let mut resumed =
+            TrainingDriver::with_resume(cfg, store, history).unwrap();
+        assert_eq!(resumed.next_epoch(), 2);
+        resumed.run_iteration(2).unwrap();
+        resumed.run_iteration(3).unwrap();
+        assert_eq!(resumed.history(), full.history());
+    }
+
+    #[test]
+    fn with_resume_rejects_inconsistent_history() {
+        let mut d = TrainingDriver::new(quick_cfg(true, 2));
+        let sums = d.run().unwrap();
+        let store = d.into_store();
+        // One summary short of the store's two observed iterations.
+        let e = TrainingDriver::with_resume(
+            quick_cfg(true, 2),
+            store,
+            sums[..1].to_vec(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("summaries"), "{e}");
+    }
+
+    #[test]
+    fn observer_does_not_change_the_summary() {
+        let mut plain = TrainingDriver::new(quick_cfg(true, 1));
+        let a = plain.run_iteration(0).unwrap();
+        let mut observed = TrainingDriver::new(quick_cfg(true, 1));
+        let mux = crate::rollout::EventMux::new();
+        let b = observed
+            .run_iteration_observed(0, Some(Box::new(mux.clone())))
+            .unwrap();
+        assert_eq!(a, b);
+        assert_eq!(mux.counts().tokens, b.tokens);
     }
 
     #[test]

@@ -555,6 +555,41 @@ mod tests {
     }
 
     #[test]
+    fn from_json_rejects_malformed_documents() {
+        // The `--load-ctx` load path (and the serve checkpoint path
+        // behind it) must turn every malformed document into an Err,
+        // never a panic.
+        let mut s = ContextStore::new();
+        s.set_fingerprint("moonlight", 42);
+        s.observe_group(GroupId(0), &[10, 20], &[&[1, 2][..]]);
+        let full = s.to_json().to_string();
+        for cut in 1..full.len() {
+            assert!(
+                Json::parse(&full[..cut]).is_err(),
+                "truncated at {cut} parsed"
+            );
+        }
+        let deep = format!("{}1{}", "[".repeat(50_000), "]".repeat(50_000));
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.msg.contains("nesting too deep"), "{e}");
+        // Type confusion at every schema level.
+        for bad in [
+            r#"[]"#,
+            r#"{"version": "one"}"#,
+            r#"{"version": 1, "task": 3, "seed": "42", "iterations": 1, "config": {}, "groups": {}}"#,
+            r#"{"version": 1, "task": "m", "seed": 42, "iterations": 1, "config": {}, "groups": {}}"#,
+            r#"{"version": 1, "task": "m", "seed": "42", "iterations": 1, "config": [], "groups": {}}"#,
+            r#"{"version": 1, "task": "m", "seed": "42", "iterations": 1, "config": {"decay": 0.5, "warm_ref_weight": 1, "prior_margin": 1, "max_streams_per_group": 1, "max_stream_tokens": 1}, "groups": []}"#,
+            r#"{"version": 1, "task": "m", "seed": "42", "iterations": 1, "config": {"decay": 0.5, "warm_ref_weight": 1, "prior_margin": 1, "max_streams_per_group": 1, "max_stream_tokens": 1}, "groups": {"x": {}}}"#,
+        ] {
+            assert!(
+                ContextStore::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted {bad}"
+            );
+        }
+    }
+
+    #[test]
     fn from_json_rejects_malformed_streams() {
         // Valid store, then corrupt one stream token into a string.
         let mut s = ContextStore::new();

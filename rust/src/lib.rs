@@ -91,6 +91,11 @@
 //! * [`experiments`] — regenerates every table and figure of the paper's
 //!   evaluation section, measuring through sessions (multi-run
 //!   experiments fan out through the sweep runner).
+//! * [`serve`] — the persistent control plane (`seer serve`): a TCP
+//!   daemon with a job API over line-delimited JSON, per-tenant
+//!   admission control, live NDJSON event streaming through
+//!   [`rollout::EventMux`], and crash-durable train-job checkpoints
+//!   that a restarted daemon resumes byte-identically.
 
 pub mod config;
 pub mod coordinator;
@@ -103,6 +108,7 @@ pub mod rl;
 pub mod rollout;
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod sim;
 pub mod spec;
 pub mod sweep;

@@ -7,6 +7,7 @@
 //!   seer sweep [--task moonlight] [--schedulers a,b] [--seeds N] [--threads N] [--out F] [--bench-out F]
 //!   seer train [--task moonlight] [--iters N] [--save-ctx F] [--load-ctx F]
 //!   seer train --real [--preset small] [--iters N] [--artifacts DIR]
+//!   seer serve [--addr HOST:PORT] [--workers N] [--state-dir DIR]
 //!   seer info
 //!
 //! All rollout construction goes through `rollout::RolloutSession` and
@@ -38,6 +39,8 @@ USAGE:
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
        [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
+  seer serve [--addr HOST:PORT] [--workers N] [--state-dir DIR]
+       [--max-per-tenant N] [--max-jobs N]
   seer info
 
   rollout --json prints the unified RolloutReport as one JSON object for
@@ -73,6 +76,16 @@ USAGE:
   (disable with --cold). --save-ctx / --load-ctx persist the store
   between runs. --real instead drives the real-model GRPO loop over the
   AOT HLO artifacts.
+
+  serve runs the persistent control plane: a daemon accepting rollout /
+  sweep / train jobs as line-delimited JSON over TCP (verbs submit,
+  status, result, cancel, subscribe, shutdown) with per-tenant admission
+  quotas, live NDJSON event streaming, and — with --state-dir — train
+  checkpoints written after every iteration, which a restarted daemon
+  recovers and resumes to a byte-identical final report. All human
+  output goes to stderr (threshold via SEER_LOG=error|warn|info|debug);
+  stdout carries only protocol replies. The protocol grammar and a
+  sample shell client are in ARCHITECTURE.md (serve-plane section).
 ";
 
 fn cmd_rollout(args: &Args) -> Result<()> {
@@ -146,6 +159,7 @@ fn cmd_rollout(args: &Args) -> Result<()> {
 /// Parallel deterministic sweep: expand a study grid and execute it
 /// across worker threads, printing the byte-stable JSON report.
 fn cmd_sweep(args: &Args) -> Result<()> {
+    use seer::serve::log;
     use seer::sweep::{SweepRunner, SweepSpec};
     let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
         .ok_or_else(|| anyhow::anyhow!("unknown --task"))?;
@@ -193,33 +207,39 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         0 => SweepRunner::from_env(),
         n => SweepRunner::new(n),
     };
-    eprintln!(
-        "sweep: task={} cells={} threads={} (schedulers {:?}, {} seeds)",
-        spec.workload.name,
-        spec.cardinality(),
-        runner.threads(),
-        spec.schedulers,
-        n_seeds,
+    log::info(
+        "sweep",
+        format!(
+            "task={} cells={} threads={} (schedulers {:?}, {} seeds)",
+            spec.workload.name,
+            spec.cardinality(),
+            runner.threads(),
+            spec.schedulers,
+            n_seeds,
+        ),
     );
     let outcome = runner.run(&spec)?;
-    eprintln!(
-        "sweep: wall {:.2}s for {} cells on {} threads",
-        outcome.wall_secs,
-        outcome.report.cells.len(),
-        runner.threads(),
+    log::info(
+        "sweep",
+        format!(
+            "wall {:.2}s for {} cells on {} threads",
+            outcome.wall_secs,
+            outcome.report.cells.len(),
+            runner.threads(),
+        ),
     );
     let json = outcome.report.to_json().to_string();
     match args.get("out") {
         Some(path) => {
             std::fs::write(path, &json)?;
-            eprintln!("sweep: report written to {path}");
+            log::info("sweep", format!("report written to {path}"));
         }
         None => println!("{json}"),
     }
     if let Some(path) = args.get("bench-out") {
         let suite = seer::sweep::rollout_bench_suite(&spec.schedulers)?;
         suite.write(std::path::Path::new(path))?;
-        eprintln!("sweep: bench baselines written to {path}");
+        log::info("sweep", format!("bench baselines written to {path}"));
     }
     Ok(())
 }
@@ -320,6 +340,25 @@ fn cmd_train_real(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Persistent control plane: a daemon running rollout/sweep/train jobs
+/// submitted as line-delimited JSON over TCP. Blocks until a client
+/// sends `shutdown` and the admitted jobs finish.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use seer::serve::{QuotaConfig, ServeConfig, Server};
+    let defaults = QuotaConfig::default();
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        workers: args.get_usize("workers", 0),
+        quota: QuotaConfig {
+            max_per_tenant: args
+                .get_usize("max-per-tenant", defaults.max_per_tenant),
+            max_jobs: args.get_usize("max-jobs", defaults.max_jobs),
+        },
+        state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+    };
+    Server::bind(cfg)?.run()
+}
+
 fn cmd_info() -> Result<()> {
     println!("seer {} — ARCHITECTURE.md documents the architecture;", env!("CARGO_PKG_VERSION"));
     println!("README.md maps every paper table/figure to its experiment id.");
@@ -359,6 +398,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args),
         Some("train") if args.has_flag("real") => cmd_train_real(&args),
         Some("train") => cmd_train_sim(&args),
+        Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(),
         _ => {
             print!("{USAGE}");

@@ -197,6 +197,30 @@ pub struct EventCounts {
     pub events: u64,
 }
 
+impl EventCounts {
+    /// Serialize the tally as a flat JSON object (the serve plane's
+    /// telemetry frames embed exactly this).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut o = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: u64| {
+            o.insert(k.to_string(), Json::Num(v as f64));
+        };
+        put("scheduled", self.scheduled);
+        put("chunk_ends", self.chunk_ends);
+        put("preemptions", self.preemptions);
+        put("migrations", self.migrations);
+        put("finished", self.finished);
+        put("steps", self.steps);
+        put("tokens", self.tokens);
+        put("instances_lost", self.instances_lost);
+        put("rebalanced", self.rebalanced);
+        put("aborted", self.aborted);
+        put("events", self.events);
+        Json::Obj(o)
+    }
+}
+
 impl RolloutObserver for EventCounts {
     fn on_event(&mut self, ev: &RolloutEvent) {
         self.events += 1;

@@ -19,7 +19,9 @@ pub mod registry;
 pub mod session;
 
 pub use engine::{RealRollout, RealRolloutConfig, SeqRequest, StopRule};
-pub use observer::{ObserverHub, RolloutEvent, RolloutObserver};
+pub use observer::{
+    EventMux, MuxFrame, ObserverHub, RolloutEvent, RolloutObserver,
+};
 pub use registry::PolicyRegistry;
 pub use session::{
     RealBackend, RolloutBackend, RolloutReport, RolloutSession,

@@ -36,9 +36,14 @@
 //! ```
 
 use std::cell::RefCell;
+use std::collections::BTreeMap;
 use std::rc::Rc;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
 
+use crate::metrics::EventCounts;
 use crate::sim::clock::SimTime;
+use crate::util::json::Json;
 use crate::workload::{InstanceId, RequestId};
 
 /// One request-lifecycle or engine-progress event.
@@ -135,6 +140,84 @@ impl RolloutEvent {
             | RolloutEvent::Aborted { now, .. } => *now,
         }
     }
+
+    /// The event's wire name (`"scheduled"`, `"chunk_end"`, …) — the
+    /// `event` field of [`RolloutEvent::to_json`].
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RolloutEvent::Scheduled { .. } => "scheduled",
+            RolloutEvent::ChunkEnd { .. } => "chunk_end",
+            RolloutEvent::Migration { .. } => "migration",
+            RolloutEvent::Finished { .. } => "finished",
+            RolloutEvent::Step { .. } => "step",
+            RolloutEvent::InstanceLost { .. } => "instance_lost",
+            RolloutEvent::Rebalanced { .. } => "rebalanced",
+            RolloutEvent::Aborted { .. } => "aborted",
+        }
+    }
+
+    /// Serialize the event as one JSON object — the serve plane's
+    /// `subscribe` stream emits exactly this (plus a `type` tag), so a
+    /// streamed sequence is directly comparable with a locally observed
+    /// one. Timestamps are integer microseconds (`t_us`): lossless and
+    /// byte-stable.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("event", Json::Str(self.kind().to_string()));
+        put("t_us", Json::Num(self.now().as_micros() as f64));
+        match *self {
+            RolloutEvent::Scheduled { req, instance, .. } => {
+                put("req", Json::Num(req.0 as f64));
+                put("instance", Json::Num(instance.0 as f64));
+            }
+            RolloutEvent::ChunkEnd {
+                req,
+                instance,
+                preempted,
+                ..
+            } => {
+                put("req", Json::Num(req.0 as f64));
+                put("instance", Json::Num(instance.0 as f64));
+                put("preempted", Json::Bool(preempted));
+            }
+            RolloutEvent::Migration { req, to, .. } => {
+                put("req", Json::Num(req.0 as f64));
+                put("to", Json::Num(to.0 as f64));
+            }
+            RolloutEvent::Finished { req, gen_len, .. } => {
+                put("req", Json::Num(req.0 as f64));
+                put("gen_len", Json::Num(gen_len as f64));
+            }
+            RolloutEvent::Step {
+                instance,
+                steps,
+                tokens,
+                ..
+            } => {
+                put("instance", Json::Num(instance.0 as f64));
+                put("steps", Json::Num(steps as f64));
+                put("tokens", Json::Num(tokens as f64));
+            }
+            RolloutEvent::InstanceLost {
+                instance, drained, ..
+            } => {
+                put("instance", Json::Num(instance.0 as f64));
+                put("drained", Json::Num(drained as f64));
+            }
+            RolloutEvent::Rebalanced { req, to, .. } => {
+                put("req", Json::Num(req.0 as f64));
+                put("to", Json::Num(to.0 as f64));
+            }
+            RolloutEvent::Aborted { req, generated, .. } => {
+                put("req", Json::Num(req.0 as f64));
+                put("generated", Json::Num(generated as f64));
+            }
+        }
+        Json::Obj(o)
+    }
 }
 
 /// A sink for the rollout event stream.
@@ -179,6 +262,178 @@ impl ObserverHub {
         for o in &mut self.observers {
             o.on_event(&ev);
         }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Multiplexing observer (the serve plane's event fan-out).
+// ---------------------------------------------------------------------
+
+/// One frame of a multiplexed event stream (see [`EventMux`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MuxFrame {
+    /// A replay-buffered sequence was truncated at the mux's cap before
+    /// this subscriber attached: the subscriber sees a suffix, not the
+    /// full stream. Always the first frame when it applies.
+    Truncated,
+    /// One rollout lifecycle event, in emission order.
+    Event(RolloutEvent),
+    /// Periodic progress telemetry: the running [`EventCounts`] tally
+    /// plus the timestamp of the event that triggered the sample.
+    Telemetry { counts: EventCounts, now: SimTime },
+    /// The stream is over; no further frames will arrive.
+    Closed,
+}
+
+#[derive(Debug, Default)]
+struct MuxState {
+    /// Full event history for late subscribers, up to `replay_cap`.
+    buffer: Vec<RolloutEvent>,
+    /// The buffer stopped growing at the cap (subscribers attaching
+    /// after that point get [`MuxFrame::Truncated`] first).
+    truncated: bool,
+    /// Live subscriber channels; senders whose receiver hung up are
+    /// dropped on the next emission.
+    subs: Vec<Sender<MuxFrame>>,
+    /// In-process metrics tally — the mux is itself an observer hub of
+    /// sorts: metrics always consume the stream even with no subscriber.
+    counts: EventCounts,
+    /// Events since the last telemetry frame.
+    since_telemetry: u64,
+    closed: bool,
+}
+
+/// A thread-safe fan-out observer: every event is tallied into an
+/// in-process [`EventCounts`] and broadcast to any number of
+/// dynamically attached subscribers, with a bounded replay buffer so a
+/// subscriber attaching *after* the run started still sees the stream
+/// from the beginning (until the cap).
+///
+/// This is the serve plane's `subscribe` primitive: the job executor
+/// attaches a clone of the mux to the session (it implements
+/// [`RolloutObserver`]), and every `subscribe` connection registers a
+/// channel via [`EventMux::subscribe`] from another thread. Unlike
+/// [`ObserverHub`] — which owns its observers for the duration of one
+/// single-threaded run — the mux is `Clone + Send + Sync` and accepts
+/// subscribers while the rollout is in flight.
+#[derive(Debug, Clone)]
+pub struct EventMux {
+    state: Arc<Mutex<MuxState>>,
+    /// A telemetry frame is emitted every this many events (0 = never).
+    telemetry_every: u64,
+    /// Replay-buffer cap, in events.
+    replay_cap: usize,
+}
+
+impl EventMux {
+    /// Default telemetry cadence (events per telemetry frame).
+    pub const DEFAULT_TELEMETRY_EVERY: u64 = 4096;
+    /// Default replay-buffer cap (events). At the default cap the buffer
+    /// tops out at a few MB; longer streams are delivered as suffixes to
+    /// late subscribers ([`MuxFrame::Truncated`]).
+    pub const DEFAULT_REPLAY_CAP: usize = 1 << 17;
+
+    pub fn new() -> Self {
+        Self::with_limits(Self::DEFAULT_TELEMETRY_EVERY, Self::DEFAULT_REPLAY_CAP)
+    }
+
+    /// A mux with explicit telemetry cadence (0 disables telemetry
+    /// frames) and replay-buffer cap.
+    pub fn with_limits(telemetry_every: u64, replay_cap: usize) -> Self {
+        EventMux {
+            state: Arc::new(Mutex::new(MuxState::default())),
+            telemetry_every,
+            replay_cap,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MuxState> {
+        // A poisoned mux mutex means an observer thread panicked while
+        // holding it; the state is plain data, so keep serving it.
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Attach a subscriber: returns a receiver that first replays every
+    /// buffered frame (prefixed by [`MuxFrame::Truncated`] if the buffer
+    /// hit its cap), then delivers live frames as they happen, and ends
+    /// with [`MuxFrame::Closed`] once [`EventMux::close`] is called.
+    pub fn subscribe(&self) -> Receiver<MuxFrame> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut s = self.lock();
+        if s.truncated {
+            let _ = tx.send(MuxFrame::Truncated);
+        }
+        for ev in &s.buffer {
+            let _ = tx.send(MuxFrame::Event(*ev));
+        }
+        if s.closed {
+            let _ = tx.send(MuxFrame::Closed);
+        } else {
+            s.subs.push(tx);
+        }
+        rx
+    }
+
+    /// Snapshot of the in-process tally.
+    pub fn counts(&self) -> EventCounts {
+        self.lock().counts
+    }
+
+    /// End the stream: every current and future subscriber receives
+    /// [`MuxFrame::Closed`] after the buffered frames. Idempotent.
+    pub fn close(&self) {
+        let mut s = self.lock();
+        if s.closed {
+            return;
+        }
+        s.closed = true;
+        for tx in s.subs.drain(..) {
+            let _ = tx.send(MuxFrame::Closed);
+        }
+    }
+
+    /// Whether the replay buffer overflowed its cap.
+    pub fn truncated(&self) -> bool {
+        self.lock().truncated
+    }
+}
+
+impl Default for EventMux {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RolloutObserver for EventMux {
+    fn on_event(&mut self, ev: &RolloutEvent) {
+        let mut s = self.lock();
+        s.counts.on_event(ev);
+        if s.buffer.len() < self.replay_cap {
+            s.buffer.push(*ev);
+        } else {
+            s.truncated = true;
+        }
+        let mut telemetry = None;
+        if self.telemetry_every > 0 {
+            s.since_telemetry += 1;
+            if s.since_telemetry >= self.telemetry_every {
+                s.since_telemetry = 0;
+                telemetry = Some(MuxFrame::Telemetry {
+                    counts: s.counts,
+                    now: ev.now(),
+                });
+            }
+        }
+        // Broadcast, dropping subscribers whose receiver hung up.
+        s.subs.retain(|tx| {
+            if tx.send(MuxFrame::Event(*ev)).is_err() {
+                return false;
+            }
+            match &telemetry {
+                Some(t) => tx.send(t.clone()).is_ok(),
+                None => true,
+            }
+        });
     }
 }
 
@@ -253,5 +508,120 @@ mod tests {
             tokens: 1,
             now: SimTime::ZERO,
         });
+    }
+
+    #[test]
+    fn event_json_carries_kind_and_fields() {
+        let ev = RolloutEvent::Finished {
+            req: RequestId(7),
+            gen_len: 128,
+            now: SimTime::from_micros(1500),
+        };
+        let j = ev.to_json();
+        assert_eq!(j.get("event").and_then(Json::as_str), Some("finished"));
+        assert_eq!(j.get("t_us").and_then(Json::as_u64), Some(1500));
+        assert_eq!(j.get("req").and_then(Json::as_u64), Some(7));
+        assert_eq!(j.get("gen_len").and_then(Json::as_u64), Some(128));
+    }
+
+    fn nth_event(i: u64) -> RolloutEvent {
+        RolloutEvent::Step {
+            instance: InstanceId((i % 4) as u32),
+            steps: 1,
+            tokens: i,
+            now: SimTime::from_micros(i),
+        }
+    }
+
+    #[test]
+    fn mux_live_and_late_subscribers_see_identical_sequences() {
+        let mut mux = EventMux::with_limits(0, 1024);
+        let live = mux.subscribe();
+        for i in 0..5 {
+            mux.on_event(&nth_event(i));
+        }
+        // A late subscriber replays the buffer and then runs live.
+        let late = mux.subscribe();
+        for i in 5..8 {
+            mux.on_event(&nth_event(i));
+        }
+        mux.close();
+        let drain = |rx: Receiver<MuxFrame>| -> Vec<MuxFrame> {
+            rx.iter().collect()
+        };
+        let a = drain(live);
+        let b = drain(late);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 9); // 8 events + Closed
+        assert_eq!(a.last(), Some(&MuxFrame::Closed));
+        for (i, frame) in a.iter().take(8).enumerate() {
+            assert_eq!(*frame, MuxFrame::Event(nth_event(i as u64)));
+        }
+        assert_eq!(mux.counts().events, 8);
+        assert_eq!(mux.counts().tokens, (0..8).sum::<u64>());
+    }
+
+    #[test]
+    fn mux_emits_telemetry_on_cadence() {
+        let mut mux = EventMux::with_limits(3, 1024);
+        let rx = mux.subscribe();
+        for i in 0..7 {
+            mux.on_event(&nth_event(i));
+        }
+        mux.close();
+        let frames: Vec<MuxFrame> = rx.iter().collect();
+        let telemetry: Vec<&MuxFrame> = frames
+            .iter()
+            .filter(|f| matches!(f, MuxFrame::Telemetry { .. }))
+            .collect();
+        // 7 events at cadence 3 → telemetry after events 3 and 6.
+        assert_eq!(telemetry.len(), 2);
+        match telemetry[0] {
+            MuxFrame::Telemetry { counts, now } => {
+                assert_eq!(counts.events, 3);
+                assert_eq!(*now, SimTime::from_micros(2));
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn mux_replay_cap_marks_truncation() {
+        let mut mux = EventMux::with_limits(0, 4);
+        for i in 0..10 {
+            mux.on_event(&nth_event(i));
+        }
+        assert!(mux.truncated());
+        let rx = mux.subscribe();
+        mux.close();
+        let frames: Vec<MuxFrame> = rx.iter().collect();
+        assert_eq!(frames.first(), Some(&MuxFrame::Truncated));
+        // 4 buffered events survive; counts still cover all 10.
+        assert_eq!(frames.len(), 6); // Truncated + 4 events + Closed
+        assert_eq!(mux.counts().events, 10);
+    }
+
+    #[test]
+    fn mux_subscribing_after_close_gets_closed_frame() {
+        let mut mux = EventMux::with_limits(0, 16);
+        mux.on_event(&nth_event(0));
+        mux.close();
+        mux.close(); // idempotent
+        let rx = mux.subscribe();
+        let frames: Vec<MuxFrame> = rx.iter().collect();
+        assert_eq!(
+            frames,
+            vec![MuxFrame::Event(nth_event(0)), MuxFrame::Closed]
+        );
+    }
+
+    #[test]
+    fn mux_drops_hung_up_subscribers() {
+        let mut mux = EventMux::with_limits(0, 16);
+        let rx = mux.subscribe();
+        drop(rx);
+        mux.on_event(&nth_event(0));
+        mux.on_event(&nth_event(1));
+        assert_eq!(mux.counts().events, 2);
     }
 }

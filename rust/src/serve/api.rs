@@ -1,0 +1,599 @@
+//! The serve plane's wire protocol: line-delimited JSON over TCP.
+//!
+//! Every client request is one JSON object on one line, tagged by a
+//! `verb`; every reply is one JSON object with an `ok` boolean. Error
+//! replies carry a machine code (`bad-request`, `quota`, `not-found`,
+//! `shutting-down`) plus a human `error` string. The grammar is spelled
+//! out in ARCHITECTURE.md (serve-plane section); this module is its
+//! single implementation — the server parses with [`Request::parse`],
+//! and the integration tests build their reference runs from the *same*
+//! [`RolloutParams::session`] / [`TrainParams::training_config`]
+//! helpers the executor uses, which is what makes "the stream equals a
+//! direct run" testable at all.
+//!
+//! Parsing is strict about types: an absent optional field takes its
+//! default, but a present field of the wrong JSON type is an error —
+//! silently defaulting a mistyped `"seed": "42"` would run the wrong
+//! job and report nothing.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{TaskPreset, WorkloadConfig};
+use crate::iteration::{IterationSummary, TrainingConfig};
+use crate::rollout::{PolicyRegistry, RolloutSession, RolloutSessionBuilder};
+use crate::util::json::Json;
+
+/// Upper bound on request-line length the server will read (1 MiB).
+/// Longer lines are answered with `bad-request` and the connection is
+/// closed — an unbounded line is memory exhaustion, not a request.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Parameters of a single-rollout job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RolloutParams {
+    /// Task preset name ([`TaskPreset::from_name`]).
+    pub task: String,
+    pub scheduler: String,
+    pub sd: String,
+    pub seed: u64,
+    /// Paper-scale workload instead of the test-scale variant.
+    pub full: bool,
+}
+
+/// Parameters of a sweep-grid job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepParams {
+    pub task: String,
+    pub schedulers: Vec<String>,
+    pub sd: String,
+    pub seeds: Vec<u64>,
+    pub full: bool,
+}
+
+/// Parameters of a multi-iteration train job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainParams {
+    pub task: String,
+    pub scheduler: String,
+    pub sd: String,
+    pub iters: usize,
+    pub seed: u64,
+    pub drift: f64,
+    /// Disable warm starts from the context store.
+    pub cold: bool,
+    /// Sleep this long after each iteration. Emulates the pacing of an
+    /// external training engine (weight sync, optimizer step) that the
+    /// simulator models but does not wait for — and gives the recovery
+    /// tests a deterministic window to interrupt a job mid-run.
+    pub throttle_ms: u64,
+    pub full: bool,
+}
+
+/// What a `submit` asks the daemon to run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobSpec {
+    Rollout(RolloutParams),
+    Sweep(SweepParams),
+    Train(TrainParams),
+}
+
+/// One parsed client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Submit { tenant: String, spec: JobSpec },
+    /// One job's status, or — with no id — a whole-daemon summary.
+    Status { job: Option<u64> },
+    /// Block until the job is terminal, then return its result.
+    Result { job: u64 },
+    Cancel { job: u64 },
+    /// Switch the connection to an NDJSON event stream for the job.
+    Subscribe { job: u64 },
+    /// Stop the daemon: `abort` cancels running jobs at their next
+    /// cancellation point (checkpoints retained), otherwise every
+    /// admitted job drains first.
+    Shutdown { abort: bool },
+}
+
+// -- typed field access ------------------------------------------------
+// Absent → default; present-but-mistyped → named error.
+
+fn opt_str(j: &Json, k: &str, default: &str) -> Result<String> {
+    match j.get(k) {
+        None => Ok(default.to_string()),
+        Some(v) => v
+            .as_str()
+            .map(str::to_string)
+            .with_context(|| format!("field '{k}' must be a string")),
+    }
+}
+
+fn opt_u64(j: &Json, k: &str, default: u64) -> Result<u64> {
+    match j.get(k) {
+        None => Ok(default),
+        Some(v) => v
+            .as_u64()
+            .with_context(|| format!("field '{k}' must be a number")),
+    }
+}
+
+fn opt_f64(j: &Json, k: &str, default: f64) -> Result<f64> {
+    match j.get(k) {
+        None => Ok(default),
+        Some(v) => v
+            .as_f64()
+            .with_context(|| format!("field '{k}' must be a number")),
+    }
+}
+
+fn opt_bool(j: &Json, k: &str, default: bool) -> Result<bool> {
+    match j.get(k) {
+        None => Ok(default),
+        Some(v) => v
+            .as_bool()
+            .with_context(|| format!("field '{k}' must be a boolean")),
+    }
+}
+
+fn req_u64(j: &Json, k: &str) -> Result<u64> {
+    j.get(k)
+        .with_context(|| format!("missing field '{k}'"))?
+        .as_u64()
+        .with_context(|| format!("field '{k}' must be a number"))
+}
+
+/// Resolve and validate a task name.
+fn preset(task: &str) -> Result<TaskPreset> {
+    TaskPreset::from_name(task)
+        .with_context(|| format!("unknown task '{task}'"))
+}
+
+fn workload_of(task: &str, full: bool) -> Result<WorkloadConfig> {
+    let p = preset(task)?;
+    Ok(if full { p.workload() } else { p.workload_for_test() })
+}
+
+/// Validate scheduler / SD names against the builtin registry at parse
+/// time, so a typo is rejected at `submit` — not hours later when the
+/// job reaches a worker.
+fn check_policies(scheduler: &str, sd: &str) -> Result<()> {
+    let reg = PolicyRegistry::builtin();
+    reg.scheduler(scheduler)?;
+    reg.sd(sd)?;
+    Ok(())
+}
+
+impl JobSpec {
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        if j.as_obj().is_none() {
+            bail!("job must be an object");
+        }
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .context("job needs a string 'kind' (rollout|sweep|train)")?;
+        let full = opt_bool(j, "full", false)?;
+        match kind {
+            "rollout" => {
+                let p = RolloutParams {
+                    task: opt_str(j, "task", "moonlight")?,
+                    scheduler: opt_str(j, "scheduler", "seer")?,
+                    sd: opt_str(j, "sd", "grouped-cst")?,
+                    seed: opt_u64(j, "seed", 42)?,
+                    full,
+                };
+                preset(&p.task)?;
+                check_policies(&p.scheduler, &p.sd)?;
+                Ok(JobSpec::Rollout(p))
+            }
+            "sweep" => {
+                let schedulers = match j.get("schedulers") {
+                    None => vec!["seer".to_string(), "verl".to_string()],
+                    Some(v) => v
+                        .as_arr()
+                        .context("field 'schedulers' must be an array")?
+                        .iter()
+                        .map(|s| {
+                            s.as_str().map(str::to_string).context(
+                                "field 'schedulers' must hold strings",
+                            )
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                let seeds = match j.get("seeds") {
+                    None => vec![42, 43],
+                    Some(v) => v
+                        .as_arr()
+                        .context("field 'seeds' must be an array")?
+                        .iter()
+                        .map(|s| {
+                            s.as_u64()
+                                .context("field 'seeds' must hold numbers")
+                        })
+                        .collect::<Result<Vec<_>>>()?,
+                };
+                if schedulers.is_empty() || seeds.is_empty() {
+                    bail!("sweep needs at least one scheduler and one seed");
+                }
+                let p = SweepParams {
+                    task: opt_str(j, "task", "moonlight")?,
+                    sd: opt_str(j, "sd", "grouped-cst")?,
+                    schedulers,
+                    seeds,
+                    full,
+                };
+                preset(&p.task)?;
+                for s in &p.schedulers {
+                    check_policies(s, &p.sd)?;
+                }
+                Ok(JobSpec::Sweep(p))
+            }
+            "train" => {
+                let p = TrainParams {
+                    task: opt_str(j, "task", "moonlight")?,
+                    scheduler: opt_str(j, "scheduler", "seer")?,
+                    sd: opt_str(j, "sd", "grouped-cst")?,
+                    iters: opt_u64(j, "iters", 3)? as usize,
+                    seed: opt_u64(j, "seed", 42)?,
+                    drift: opt_f64(j, "drift", 0.05)?,
+                    cold: opt_bool(j, "cold", false)?,
+                    throttle_ms: opt_u64(j, "throttle_ms", 0)?,
+                    full,
+                };
+                if p.iters == 0 {
+                    bail!("train needs iters >= 1");
+                }
+                if !(p.drift.is_finite() && p.drift >= 0.0) {
+                    bail!("train drift must be finite and >= 0");
+                }
+                preset(&p.task)?;
+                check_policies(&p.scheduler, &p.sd)?;
+                Ok(JobSpec::Train(p))
+            }
+            other => bail!("unknown job kind '{other}'"),
+        }
+    }
+
+    /// Wire/checkpoint form; [`JobSpec::from_json`] inverts it.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        match self {
+            JobSpec::Rollout(p) => {
+                put("kind", Json::Str("rollout".into()));
+                put("task", Json::Str(p.task.clone()));
+                put("scheduler", Json::Str(p.scheduler.clone()));
+                put("sd", Json::Str(p.sd.clone()));
+                put("seed", Json::Num(p.seed as f64));
+                put("full", Json::Bool(p.full));
+            }
+            JobSpec::Sweep(p) => {
+                put("kind", Json::Str("sweep".into()));
+                put("task", Json::Str(p.task.clone()));
+                put("sd", Json::Str(p.sd.clone()));
+                put(
+                    "schedulers",
+                    Json::Arr(
+                        p.schedulers
+                            .iter()
+                            .map(|s| Json::Str(s.clone()))
+                            .collect(),
+                    ),
+                );
+                put(
+                    "seeds",
+                    Json::Arr(
+                        p.seeds.iter().map(|s| Json::Num(*s as f64)).collect(),
+                    ),
+                );
+                put("full", Json::Bool(p.full));
+            }
+            JobSpec::Train(p) => {
+                put("kind", Json::Str("train".into()));
+                put("task", Json::Str(p.task.clone()));
+                put("scheduler", Json::Str(p.scheduler.clone()));
+                put("sd", Json::Str(p.sd.clone()));
+                put("iters", Json::Num(p.iters as f64));
+                put("seed", Json::Num(p.seed as f64));
+                put("drift", Json::Num(p.drift));
+                put("cold", Json::Bool(p.cold));
+                put("throttle_ms", Json::Num(p.throttle_ms as f64));
+                put("full", Json::Bool(p.full));
+            }
+        }
+        Json::Obj(o)
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            JobSpec::Rollout(_) => "rollout",
+            JobSpec::Sweep(_) => "sweep",
+            JobSpec::Train(_) => "train",
+        }
+    }
+}
+
+impl RolloutParams {
+    /// The session this job runs — public so a test can run the *same*
+    /// rollout directly and compare event streams / reports.
+    pub fn session(&self) -> Result<RolloutSessionBuilder<'static>> {
+        Ok(RolloutSession::builder()
+            .workload(workload_of(&self.task, self.full)?)
+            .scheduler(&self.scheduler)
+            .sd(&self.sd)
+            .seed(self.seed))
+    }
+}
+
+impl SweepParams {
+    pub fn sweep_spec(&self) -> Result<crate::sweep::SweepSpec> {
+        let mut spec =
+            crate::sweep::SweepSpec::new(workload_of(&self.task, self.full)?)
+                .sd(&self.sd)
+                .seeds(self.seeds.iter().copied());
+        spec.schedulers = self.schedulers.clone();
+        Ok(spec)
+    }
+}
+
+impl TrainParams {
+    /// The training config this job runs — shared with the recovery
+    /// tests' uninterrupted reference run.
+    pub fn training_config(&self) -> Result<TrainingConfig> {
+        Ok(TrainingConfig {
+            scheduler: self.scheduler.clone(),
+            sd: self.sd.clone(),
+            iters: self.iters,
+            seed: self.seed,
+            drift: self.drift,
+            warm_start: !self.cold,
+            ..TrainingConfig::new(workload_of(&self.task, self.full)?)
+        })
+    }
+}
+
+/// The deterministic final report of a train job: the spec echo plus
+/// every per-iteration summary and whole-run totals. Built from
+/// [`IterationSummary`] values only, in iteration order, so a resumed
+/// run whose history matches an uninterrupted run's produces the same
+/// bytes.
+pub fn train_report(params: &TrainParams, history: &[IterationSummary]) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("spec".to_string(), JobSpec::Train(params.clone()).to_json());
+    o.insert(
+        "iterations".to_string(),
+        Json::Arr(history.iter().map(|s| s.to_json()).collect()),
+    );
+    let total: f64 = history.iter().map(|s| s.iter_total_secs).sum();
+    let tokens: u64 = history.iter().map(|s| s.tokens).sum();
+    o.insert("total_secs".to_string(), Json::Num(total));
+    o.insert("total_tokens".to_string(), Json::Num(tokens as f64));
+    if let Some(last) = history.last() {
+        o.insert(
+            "final_p99_finish_secs".to_string(),
+            Json::Num(last.p99_finish_secs),
+        );
+    }
+    Json::Obj(o)
+}
+
+impl Request {
+    /// Parse one request line. The error string is ready to embed in a
+    /// `bad-request` reply.
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        if j.as_obj().is_none() {
+            bail!("request must be a JSON object");
+        }
+        let verb = j
+            .get("verb")
+            .and_then(Json::as_str)
+            .context("request needs a string 'verb'")?;
+        match verb {
+            "submit" => {
+                let tenant = opt_str(&j, "tenant", "default")?;
+                if tenant.is_empty() {
+                    bail!("tenant must be non-empty");
+                }
+                let spec = JobSpec::from_json(
+                    j.get("job").context("submit needs a 'job' object")?,
+                )?;
+                Ok(Request::Submit { tenant, spec })
+            }
+            "status" => Ok(Request::Status {
+                job: match j.get("job") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64()
+                            .context("field 'job' must be a number")?,
+                    ),
+                },
+            }),
+            "result" => Ok(Request::Result {
+                job: req_u64(&j, "job")?,
+            }),
+            "cancel" => Ok(Request::Cancel {
+                job: req_u64(&j, "job")?,
+            }),
+            "subscribe" => Ok(Request::Subscribe {
+                job: req_u64(&j, "job")?,
+            }),
+            "shutdown" => {
+                let mode = opt_str(&j, "mode", "graceful")?;
+                let abort = match mode.as_str() {
+                    "graceful" => false,
+                    "abort" => true,
+                    m => bail!("unknown shutdown mode '{m}'"),
+                };
+                Ok(Request::Shutdown { abort })
+            }
+            other => bail!("unknown verb '{other}'"),
+        }
+    }
+}
+
+/// `{"ok":true, ...fields}`.
+pub fn ok_reply(fields: Vec<(&str, Json)>) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("ok".to_string(), Json::Bool(true));
+    for (k, v) in fields {
+        o.insert(k.to_string(), v);
+    }
+    Json::Obj(o)
+}
+
+/// `{"ok":false,"code":code,"error":msg}`.
+pub fn err_reply(code: &str, msg: &str) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("ok".to_string(), Json::Bool(false));
+    o.insert("code".to_string(), Json::Str(code.to_string()));
+    o.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_submit_with_defaults() {
+        let r = Request::parse(
+            r#"{"verb":"submit","job":{"kind":"rollout"}}"#,
+        )
+        .unwrap();
+        let Request::Submit { tenant, spec } = r else {
+            panic!("not a submit")
+        };
+        assert_eq!(tenant, "default");
+        let JobSpec::Rollout(p) = spec else { panic!("not rollout") };
+        assert_eq!(p.task, "moonlight");
+        assert_eq!(p.scheduler, "seer");
+        assert_eq!(p.seed, 42);
+        assert!(!p.full);
+    }
+
+    #[test]
+    fn job_spec_json_round_trips() {
+        let specs = [
+            JobSpec::Rollout(RolloutParams {
+                task: "moonlight".into(),
+                scheduler: "verl".into(),
+                sd: "none".into(),
+                seed: 7,
+                full: false,
+            }),
+            JobSpec::Sweep(SweepParams {
+                task: "kimi-k2".into(),
+                schedulers: vec!["seer".into(), "verl".into()],
+                sd: "grouped-cst".into(),
+                seeds: vec![1, 2, 3],
+                full: false,
+            }),
+            JobSpec::Train(TrainParams {
+                task: "moonlight".into(),
+                scheduler: "seer".into(),
+                sd: "grouped-cst".into(),
+                iters: 4,
+                seed: 9,
+                drift: 0.1,
+                cold: true,
+                throttle_ms: 25,
+                full: false,
+            }),
+        ];
+        for spec in specs {
+            let j = Json::parse(&spec.to_json().to_string()).unwrap();
+            assert_eq!(JobSpec::from_json(&j).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests_with_reasons() {
+        for (line, needle) in [
+            ("nonsense", "parse"),
+            ("[1,2]", "object"),
+            (r#"{"x":1}"#, "verb"),
+            (r#"{"verb":"frobnicate"}"#, "unknown verb"),
+            (r#"{"verb":"result"}"#, "missing field 'job'"),
+            (r#"{"verb":"result","job":"three"}"#, "must be a number"),
+            (r#"{"verb":"submit"}"#, "'job'"),
+            (r#"{"verb":"submit","job":{"kind":"bake"}}"#, "unknown job kind"),
+            (
+                r#"{"verb":"submit","job":{"kind":"rollout","task":"nope"}}"#,
+                "unknown task",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"rollout","scheduler":"bogus"}}"#,
+                "bogus",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"rollout","seed":"x"}}"#,
+                "'seed'",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","iters":0}}"#,
+                "iters",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"sweep","schedulers":[]}}"#,
+                "at least one",
+            ),
+            (r#"{"verb":"shutdown","mode":"maybe"}"#, "shutdown mode"),
+        ] {
+            let e = Request::parse(line).unwrap_err().to_string();
+            assert!(
+                e.to_lowercase().contains(&needle.to_lowercase()),
+                "{line}: {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn shutdown_modes() {
+        assert_eq!(
+            Request::parse(r#"{"verb":"shutdown"}"#).unwrap(),
+            Request::Shutdown { abort: false }
+        );
+        assert_eq!(
+            Request::parse(r#"{"verb":"shutdown","mode":"abort"}"#).unwrap(),
+            Request::Shutdown { abort: true }
+        );
+    }
+
+    #[test]
+    fn replies_have_stable_shape() {
+        let ok = ok_reply(vec![("job", Json::Num(3.0))]).to_string();
+        assert_eq!(ok, r#"{"job":3,"ok":true}"#);
+        let err = err_reply("quota", "full").to_string();
+        assert_eq!(err, r#"{"code":"quota","error":"full","ok":false}"#);
+    }
+
+    #[test]
+    fn train_report_is_deterministic_in_history() {
+        let p = TrainParams {
+            task: "moonlight".into(),
+            scheduler: "seer".into(),
+            sd: "grouped-cst".into(),
+            iters: 1,
+            seed: 1,
+            drift: 0.0,
+            cold: false,
+            throttle_ms: 0,
+            full: false,
+        };
+        let mut d = crate::iteration::TrainingDriver::new(
+            p.training_config().unwrap(),
+        );
+        let h = vec![d.run_iteration(0).unwrap()];
+        assert_eq!(
+            train_report(&p, &h).to_string(),
+            train_report(&p, &h).to_string()
+        );
+        assert!(train_report(&p, &h)
+            .get("final_p99_finish_secs")
+            .is_some());
+    }
+}

@@ -1,0 +1,245 @@
+//! Crash-durable train-job state.
+//!
+//! After every completed iteration the job executor snapshots the
+//! driver's recoverable state — the job identity, its [`TrainParams`],
+//! the per-iteration summaries so far, and the full [`ContextStore`] —
+//! to `train_<id>.ckpt.json` in the daemon's state directory. The write
+//! is atomic (temp file + rename), so a crash mid-write leaves the
+//! previous checkpoint intact. On restart the server scans the
+//! directory and re-queues every checkpointed job;
+//! [`crate::iteration::TrainingDriver::with_resume`] then continues the
+//! epoch sequence, and because every field round-trips through
+//! [`crate::util::json`] exactly (shortest-roundtrip floats), the
+//! resumed job's final report is byte-identical to an uninterrupted
+//! run's. Checkpoints are deleted when their job completes, fails, or
+//! is cancelled by a client (an *abort shutdown* retains them — that is
+//! the recovery path).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::iteration::{ContextStore, IterationSummary};
+use crate::util::json::Json;
+
+use super::api::{JobSpec, TrainParams};
+
+/// Everything needed to resume one interrupted train job.
+#[derive(Debug, Clone)]
+pub struct TrainCheckpoint {
+    pub job_id: u64,
+    pub tenant: String,
+    pub params: TrainParams,
+    /// Summaries of the iterations already completed, in order.
+    pub history: Vec<IterationSummary>,
+    pub store: ContextStore,
+}
+
+impl TrainCheckpoint {
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("job_id".to_string(), Json::Num(self.job_id as f64));
+        o.insert("tenant".to_string(), Json::Str(self.tenant.clone()));
+        o.insert(
+            "params".to_string(),
+            JobSpec::Train(self.params.clone()).to_json(),
+        );
+        o.insert(
+            "history".to_string(),
+            Json::Arr(self.history.iter().map(|s| s.to_json()).collect()),
+        );
+        o.insert("store".to_string(), self.store.to_json());
+        Json::Obj(o)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainCheckpoint> {
+        let job_id = j
+            .get("job_id")
+            .and_then(Json::as_u64)
+            .context("checkpoint: bad 'job_id'")?;
+        let tenant = j
+            .get("tenant")
+            .and_then(Json::as_str)
+            .context("checkpoint: bad 'tenant'")?
+            .to_string();
+        let params = match JobSpec::from_json(
+            j.get("params").context("checkpoint: missing 'params'")?,
+        )? {
+            JobSpec::Train(p) => p,
+            other => anyhow::bail!(
+                "checkpoint: params is a {} job, not train",
+                other.kind()
+            ),
+        };
+        let history = j
+            .get("history")
+            .and_then(Json::as_arr)
+            .context("checkpoint: bad 'history'")?
+            .iter()
+            .map(IterationSummary::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let store = ContextStore::from_json(
+            j.get("store").context("checkpoint: missing 'store'")?,
+        )?;
+        Ok(TrainCheckpoint {
+            job_id,
+            tenant,
+            params,
+            history,
+            store,
+        })
+    }
+
+    /// `<dir>/train_<id>.ckpt.json`.
+    pub fn path_for(dir: &Path, job_id: u64) -> PathBuf {
+        dir.join(format!("train_{job_id}.ckpt.json"))
+    }
+
+    /// Atomically persist: write `.tmp`, then rename over the target.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir).with_context(|| {
+            format!("creating checkpoint dir {}", dir.display())
+        })?;
+        let path = Self::path_for(dir, self.job_id);
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().to_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| {
+            anyhow::anyhow!("checkpoint {}: {e}", path.display())
+        })?;
+        Self::from_json(&j)
+    }
+
+    /// Delete the checkpoint for `job_id`, if present.
+    pub fn remove(dir: &Path, job_id: u64) -> Result<()> {
+        let path = Self::path_for(dir, job_id);
+        match std::fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(e).with_context(|| format!("removing {}", path.display()))
+            }
+        }
+    }
+
+    /// All checkpoints in `dir`, sorted by job id. A missing directory
+    /// is an empty recovery set; an unreadable *file* is an error — a
+    /// daemon silently dropping a recoverable job is the one behavior
+    /// this module exists to prevent.
+    pub fn scan_dir(dir: &Path) -> Result<Vec<TrainCheckpoint>> {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Vec::new())
+            }
+            Err(e) => {
+                return Err(e)
+                    .with_context(|| format!("scanning {}", dir.display()))
+            }
+        };
+        let mut out = Vec::new();
+        for entry in entries {
+            let path = entry?.path();
+            let name = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or_default();
+            if name.starts_with("train_") && name.ends_with(".ckpt.json") {
+                out.push(Self::load(&path)?);
+            }
+        }
+        out.sort_by_key(|c| c.job_id);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iteration::TrainingDriver;
+
+    fn params() -> TrainParams {
+        TrainParams {
+            task: "moonlight".into(),
+            scheduler: "seer".into(),
+            sd: "grouped-cst".into(),
+            iters: 2,
+            seed: 5,
+            drift: 0.1,
+            cold: false,
+            throttle_ms: 0,
+            full: false,
+        }
+    }
+
+    fn checkpoint_after_one_iteration() -> TrainCheckpoint {
+        let p = params();
+        let mut d = TrainingDriver::new(p.training_config().unwrap());
+        d.run_iteration(0).unwrap();
+        TrainCheckpoint {
+            job_id: 3,
+            tenant: "alice".into(),
+            params: p,
+            history: d.history().to_vec(),
+            store: d.into_store(),
+        }
+    }
+
+    #[test]
+    fn save_load_round_trips_and_resumes() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-ckpt-test-{}", std::process::id()));
+        let ckpt = checkpoint_after_one_iteration();
+        ckpt.save(&dir).unwrap();
+        // Save twice: the atomic tmp+rename path must be re-entrant.
+        ckpt.save(&dir).unwrap();
+
+        let scanned = TrainCheckpoint::scan_dir(&dir).unwrap();
+        assert_eq!(scanned.len(), 1);
+        let back = &scanned[0];
+        assert_eq!(back.job_id, 3);
+        assert_eq!(back.tenant, "alice");
+        assert_eq!(back.params, ckpt.params);
+        assert_eq!(back.history, ckpt.history);
+        assert_eq!(back.store, ckpt.store);
+
+        // The loaded state actually resumes: epoch numbering continues.
+        let d = TrainingDriver::with_resume(
+            back.params.training_config().unwrap(),
+            back.store.clone(),
+            back.history.clone(),
+        )
+        .unwrap();
+        assert_eq!(d.next_epoch(), 1);
+
+        TrainCheckpoint::remove(&dir, 3).unwrap();
+        TrainCheckpoint::remove(&dir, 3).unwrap(); // idempotent
+        assert!(TrainCheckpoint::scan_dir(&dir).unwrap().is_empty());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_of_missing_dir_is_empty() {
+        let dir = std::env::temp_dir().join("seer-ckpt-never-created");
+        assert!(TrainCheckpoint::scan_dir(&dir).unwrap().is_empty());
+    }
+
+    #[test]
+    fn corrupt_checkpoint_is_an_error_not_a_skip() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-ckpt-corrupt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train_9.ckpt.json"), "{\"job_id\":").unwrap();
+        assert!(TrainCheckpoint::scan_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,723 @@
+//! The job queue, lifecycle state machine, and executors.
+//!
+//! [`JobManager`] is the daemon's shared state: a monotonically
+//! numbered job table behind one mutex/condvar pair. Connection
+//! handlers call [`submit`](JobManager::submit) /
+//! [`status_json`](JobManager::status_json) /
+//! [`result_json`](JobManager::result_json) /
+//! [`cancel_json`](JobManager::cancel_json); the
+//! [`crate::sweep::SweepRunner`] worker pool calls
+//! [`worker_loop`](JobManager::worker_loop). Every job carries a
+//! [`CancelToken`] (checked at sweep-cell / train-iteration
+//! granularity) and an [`EventMux`] so any number of `subscribe`
+//! connections can watch it live.
+//!
+//! Lifecycle: `queued → running → done | failed | cancelled` (queued
+//! jobs may cancel directly). Train jobs additionally checkpoint after
+//! every iteration ([`TrainCheckpoint`]); an abort shutdown leaves the
+//! checkpoint on disk, and [`JobManager::new`] re-queues whatever it
+//! finds there — that pair is the kill-then-restart recovery path.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::iteration::TrainingDriver;
+use crate::rollout::EventMux;
+use crate::sweep::{CancelToken, SweepRunner};
+use crate::util::json::Json;
+
+use super::api::{self, JobSpec};
+use super::checkpoint::TrainCheckpoint;
+use super::log;
+use super::quota::QuotaConfig;
+
+/// Where a job is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal states never transition again.
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            JobState::Done | JobState::Failed | JobState::Cancelled
+        )
+    }
+}
+
+/// How one execution ended (errors travel separately as `Result`).
+enum Outcome {
+    Done(Json),
+    Cancelled,
+}
+
+struct Job {
+    id: u64,
+    tenant: String,
+    spec: JobSpec,
+    state: JobState,
+    result: Option<Json>,
+    error: Option<String>,
+    cancel: CancelToken,
+    mux: EventMux,
+    /// Train jobs: (iterations done, iterations total).
+    progress: Option<(usize, usize)>,
+    /// Re-queued from an on-disk checkpoint at daemon start.
+    recovered: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs: BTreeMap<u64, Job>,
+    queue: VecDeque<u64>,
+    next_id: u64,
+}
+
+impl Inner {
+    fn in_flight(&self) -> usize {
+        self.jobs
+            .values()
+            .filter(|job| !job.state.is_terminal())
+            .count()
+    }
+
+    fn tenant_in_flight(&self, tenant: &str) -> usize {
+        self.jobs
+            .values()
+            .filter(|job| job.tenant == tenant && !job.state.is_terminal())
+            .count()
+    }
+}
+
+/// The daemon's shared job table + queue. All methods are `&self`; the
+/// manager is designed to sit behind an `Arc` shared by the acceptor,
+/// the connection handlers, and the worker pool.
+pub struct JobManager {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    quota: QuotaConfig,
+    state_dir: Option<PathBuf>,
+    shutdown: AtomicBool,
+    abort: AtomicBool,
+}
+
+impl JobManager {
+    /// Create the manager, recovering any train-job checkpoints found in
+    /// `state_dir` as freshly queued jobs (same ids; `next_id` continues
+    /// past them).
+    pub fn new(
+        quota: QuotaConfig,
+        state_dir: Option<PathBuf>,
+    ) -> Result<JobManager> {
+        let mut inner = Inner {
+            next_id: 1,
+            ..Inner::default()
+        };
+        if let Some(dir) = &state_dir {
+            for ck in TrainCheckpoint::scan_dir(dir)? {
+                log::info(
+                    "jobs",
+                    format!(
+                        "recovered job {} (tenant '{}', {}/{} iterations \
+                         done) from checkpoint",
+                        ck.job_id,
+                        ck.tenant,
+                        ck.history.len(),
+                        ck.params.iters
+                    ),
+                );
+                inner.next_id = inner.next_id.max(ck.job_id + 1);
+                inner.queue.push_back(ck.job_id);
+                inner.jobs.insert(
+                    ck.job_id,
+                    Job {
+                        id: ck.job_id,
+                        tenant: ck.tenant.clone(),
+                        progress: Some((ck.history.len(), ck.params.iters)),
+                        spec: JobSpec::Train(ck.params),
+                        state: JobState::Queued,
+                        result: None,
+                        error: None,
+                        cancel: CancelToken::new(),
+                        mux: EventMux::new(),
+                        recovered: true,
+                    },
+                );
+            }
+        }
+        Ok(JobManager {
+            inner: Mutex::new(inner),
+            cv: Condvar::new(),
+            quota,
+            state_dir,
+            shutdown: AtomicBool::new(false),
+            abort: AtomicBool::new(false),
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        // Job state is plain data: a panicking worker must not wedge
+        // every subsequent request into a poison error.
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+
+    /// True once a shutdown was requested *and* no job is queued or
+    /// running — the accept loop's exit condition.
+    pub fn drained(&self) -> bool {
+        self.is_shutdown() && self.lock().in_flight() == 0
+    }
+
+    /// Admission control + enqueue. `Err` is a ready-to-send reply.
+    pub fn submit(&self, tenant: &str, spec: JobSpec) -> Result<u64, Json> {
+        if self.is_shutdown() {
+            return Err(api::err_reply(
+                "shutting-down",
+                "daemon is shutting down; not accepting jobs",
+            ));
+        }
+        let mut g = self.lock();
+        self.quota
+            .admit(tenant, g.tenant_in_flight(tenant), g.in_flight())
+            .map_err(|reason| api::err_reply("quota", &reason))?;
+        let id = g.next_id;
+        g.next_id += 1;
+        let progress = match &spec {
+            JobSpec::Train(p) => Some((0, p.iters)),
+            _ => None,
+        };
+        log::info(
+            "jobs",
+            format!("job {id}: submitted ({} by '{tenant}')", spec.kind()),
+        );
+        g.jobs.insert(
+            id,
+            Job {
+                id,
+                tenant: tenant.to_string(),
+                spec,
+                state: JobState::Queued,
+                result: None,
+                error: None,
+                cancel: CancelToken::new(),
+                mux: EventMux::new(),
+                progress,
+                recovered: false,
+            },
+        );
+        g.queue.push_back(id);
+        drop(g);
+        self.cv.notify_all();
+        Ok(id)
+    }
+
+    fn job_status_json(job: &Job) -> Json {
+        let mut fields = vec![
+            ("job", Json::Num(job.id as f64)),
+            ("tenant", Json::Str(job.tenant.clone())),
+            ("kind", Json::Str(job.spec.kind().to_string())),
+            ("state", Json::Str(job.state.name().to_string())),
+            ("recovered", Json::Bool(job.recovered)),
+        ];
+        if let Some((done, total)) = job.progress {
+            let mut p = BTreeMap::new();
+            p.insert("iters_done".to_string(), Json::Num(done as f64));
+            p.insert("iters_total".to_string(), Json::Num(total as f64));
+            fields.push(("progress", Json::Obj(p)));
+        }
+        if let Some(e) = &job.error {
+            fields.push(("error", Json::Str(e.clone())));
+        }
+        api::ok_reply(fields)
+    }
+
+    /// Status of one job, or a whole-daemon summary with no id.
+    pub fn status_json(&self, job: Option<u64>) -> Json {
+        let g = self.lock();
+        match job {
+            Some(id) => match g.jobs.get(&id) {
+                Some(job) => Self::job_status_json(job),
+                None => api::err_reply("not-found", &format!("no job {id}")),
+            },
+            None => {
+                let count = |s: JobState| {
+                    Json::Num(
+                        g.jobs.values().filter(|j| j.state == s).count() as f64,
+                    )
+                };
+                api::ok_reply(vec![
+                    ("jobs", Json::Num(g.jobs.len() as f64)),
+                    ("queued", count(JobState::Queued)),
+                    ("running", count(JobState::Running)),
+                    ("done", count(JobState::Done)),
+                    ("failed", count(JobState::Failed)),
+                    ("cancelled", count(JobState::Cancelled)),
+                    ("shutting_down", Json::Bool(self.is_shutdown())),
+                ])
+            }
+        }
+    }
+
+    /// Block until the job is terminal, then reply with its result
+    /// (`done`), error (`failed`), or cancellation.
+    pub fn result_json(&self, id: u64) -> Json {
+        let mut g = self.lock();
+        loop {
+            let Some(job) = g.jobs.get(&id) else {
+                return api::err_reply("not-found", &format!("no job {id}"));
+            };
+            match job.state {
+                JobState::Done => {
+                    return api::ok_reply(vec![
+                        ("job", Json::Num(id as f64)),
+                        ("state", Json::Str("done".to_string())),
+                        (
+                            "result",
+                            job.result.clone().unwrap_or(Json::Null),
+                        ),
+                    ])
+                }
+                JobState::Failed => {
+                    return api::err_reply(
+                        "job-failed",
+                        job.error.as_deref().unwrap_or("job failed"),
+                    )
+                }
+                JobState::Cancelled => {
+                    return api::err_reply(
+                        "cancelled",
+                        &format!("job {id} was cancelled"),
+                    )
+                }
+                JobState::Queued | JobState::Running => {
+                    let (g2, _) = self
+                        .cv
+                        .wait_timeout(g, Duration::from_millis(100))
+                        .unwrap_or_else(|e| e.into_inner());
+                    g = g2;
+                }
+            }
+        }
+    }
+
+    /// Cancel a job: queued jobs cancel immediately (and drop their
+    /// checkpoint — the client asked for the job to *go away*), running
+    /// jobs get their token set and transition when the executor reaches
+    /// its next cancellation point. Terminal jobs are a no-op reply.
+    pub fn cancel_json(&self, id: u64) -> Json {
+        let mut g = self.lock();
+        let Some(job) = g.jobs.get_mut(&id) else {
+            return api::err_reply("not-found", &format!("no job {id}"));
+        };
+        match job.state {
+            JobState::Queued => {
+                job.state = JobState::Cancelled;
+                job.cancel.cancel();
+                job.mux.close();
+                if let Some(dir) = &self.state_dir {
+                    let _ = TrainCheckpoint::remove(dir, id);
+                }
+                drop(g);
+                self.cv.notify_all();
+                log::info("jobs", format!("job {id}: cancelled while queued"));
+                api::ok_reply(vec![
+                    ("job", Json::Num(id as f64)),
+                    ("state", Json::Str("cancelled".to_string())),
+                ])
+            }
+            JobState::Running => {
+                job.cancel.cancel();
+                log::info("jobs", format!("job {id}: cancellation requested"));
+                api::ok_reply(vec![
+                    ("job", Json::Num(id as f64)),
+                    ("state", Json::Str("running".to_string())),
+                    ("cancelling", Json::Bool(true)),
+                ])
+            }
+            terminal => api::ok_reply(vec![
+                ("job", Json::Num(id as f64)),
+                ("state", Json::Str(terminal.name().to_string())),
+            ]),
+        }
+    }
+
+    /// The job's event mux, for `subscribe` connections.
+    pub fn mux_of(&self, id: u64) -> Option<EventMux> {
+        self.lock().jobs.get(&id).map(|j| j.mux.clone())
+    }
+
+    pub fn state_of(&self, id: u64) -> Option<JobState> {
+        self.lock().jobs.get(&id).map(|j| j.state)
+    }
+
+    /// Begin shutdown: stop admitting, and either let admitted jobs
+    /// drain (`abort == false`) or cancel them at their next
+    /// cancellation point — retaining train checkpoints so a restarted
+    /// daemon resumes them.
+    pub fn request_shutdown(&self, abort: bool) {
+        self.shutdown.store(true, Ordering::Release);
+        if abort {
+            self.abort.store(true, Ordering::Release);
+            let mut g = self.lock();
+            g.queue.clear();
+            for job in g.jobs.values_mut() {
+                match job.state {
+                    JobState::Queued => {
+                        job.state = JobState::Cancelled;
+                        job.cancel.cancel();
+                        job.mux.close();
+                    }
+                    JobState::Running => job.cancel.cancel(),
+                    _ => {}
+                }
+            }
+        }
+        self.cv.notify_all();
+        log::info(
+            "jobs",
+            format!(
+                "shutdown requested ({})",
+                if abort { "abort" } else { "graceful" }
+            ),
+        );
+    }
+
+    fn set_progress(&self, id: u64, done: usize, total: usize) {
+        if let Some(job) = self.lock().jobs.get_mut(&id) {
+            job.progress = Some((done, total));
+        }
+        self.cv.notify_all();
+    }
+
+    /// One worker's service loop: pop → run → record, until shutdown
+    /// (graceful: after the queue drains; abort: immediately). Runs on
+    /// the [`SweepRunner`] scoped worker pool — see
+    /// [`crate::serve::server::Server::run`].
+    pub fn worker_loop(&self, worker_id: usize) {
+        loop {
+            let (id, spec, cancel, mux, tenant) = {
+                let mut g = self.lock();
+                loop {
+                    // Skip queue entries whose job was cancelled while
+                    // queued (cancel leaves the id in the deque).
+                    match g.queue.pop_front() {
+                        Some(id) => {
+                            let job = g.jobs.get_mut(&id).expect("queued job");
+                            if job.state != JobState::Queued {
+                                continue;
+                            }
+                            job.state = JobState::Running;
+                            break (
+                                id,
+                                job.spec.clone(),
+                                job.cancel.clone(),
+                                job.mux.clone(),
+                                job.tenant.clone(),
+                            );
+                        }
+                        None => {
+                            if self.is_shutdown() {
+                                return;
+                            }
+                            g = self
+                                .cv
+                                .wait(g)
+                                .unwrap_or_else(|e| e.into_inner());
+                        }
+                    }
+                }
+            };
+            log::info(
+                "jobs",
+                format!(
+                    "job {id}: running {} on worker {worker_id}",
+                    spec.kind()
+                ),
+            );
+            let outcome = self.execute(id, &spec, &cancel, &mux, &tenant);
+            let mut g = self.lock();
+            let job = g.jobs.get_mut(&id).expect("running job");
+            match outcome {
+                Ok(Outcome::Done(result)) => {
+                    job.state = JobState::Done;
+                    job.result = Some(result);
+                    log::info("jobs", format!("job {id}: done"));
+                }
+                Ok(Outcome::Cancelled) => {
+                    job.state = JobState::Cancelled;
+                    log::info("jobs", format!("job {id}: cancelled"));
+                }
+                Err(e) => {
+                    job.state = JobState::Failed;
+                    job.error = Some(format!("{e:#}"));
+                    log::warn("jobs", format!("job {id}: failed: {e:#}"));
+                }
+            }
+            job.mux.close();
+            drop(g);
+            self.cv.notify_all();
+        }
+    }
+
+    fn execute(
+        &self,
+        id: u64,
+        spec: &JobSpec,
+        cancel: &CancelToken,
+        mux: &EventMux,
+        tenant: &str,
+    ) -> Result<Outcome> {
+        if cancel.is_cancelled() {
+            return Ok(Outcome::Cancelled);
+        }
+        match spec {
+            JobSpec::Rollout(p) => {
+                let report = p
+                    .session()?
+                    .observer(Box::new(mux.clone()))
+                    .run()?;
+                Ok(Outcome::Done(report.to_json()))
+            }
+            JobSpec::Sweep(p) => {
+                // Serial inner runner: parallelism across *jobs* belongs
+                // to the worker pool; nesting pools would oversubscribe.
+                let outcome =
+                    SweepRunner::new(1).run_with_cancel(&p.sweep_spec()?, cancel);
+                match outcome {
+                    Ok(o) => Ok(Outcome::Done(o.report.to_json())),
+                    Err(_) if cancel.is_cancelled() => Ok(Outcome::Cancelled),
+                    Err(e) => Err(e),
+                }
+            }
+            JobSpec::Train(p) => self.execute_train(id, p, cancel, mux, tenant),
+        }
+    }
+
+    fn execute_train(
+        &self,
+        id: u64,
+        p: &api::TrainParams,
+        cancel: &CancelToken,
+        mux: &EventMux,
+        tenant: &str,
+    ) -> Result<Outcome> {
+        let cfg = p.training_config()?;
+        let ckpt_path = self
+            .state_dir
+            .as_ref()
+            .map(|dir| TrainCheckpoint::path_for(dir, id));
+        let mut driver = match &ckpt_path {
+            Some(path) if path.exists() => {
+                let ck = TrainCheckpoint::load(path)?;
+                log::info(
+                    "jobs",
+                    format!(
+                        "job {id}: resuming from checkpoint at iteration {}",
+                        ck.history.len()
+                    ),
+                );
+                TrainingDriver::with_resume(cfg, ck.store, ck.history)
+                    .context("resuming from checkpoint")?
+            }
+            _ => TrainingDriver::new(cfg),
+        };
+        while driver.history().len() < p.iters {
+            if cancel.is_cancelled() {
+                // Abort-shutdown keeps the checkpoint for restart
+                // recovery; a client cancel means the job is dead.
+                if !self.abort.load(Ordering::Acquire) {
+                    if let Some(dir) = &self.state_dir {
+                        TrainCheckpoint::remove(dir, id)?;
+                    }
+                }
+                return Ok(Outcome::Cancelled);
+            }
+            let epoch = driver.next_epoch();
+            driver.run_iteration_observed(epoch, Some(Box::new(mux.clone())))?;
+            self.set_progress(id, driver.history().len(), p.iters);
+            if let Some(dir) = &self.state_dir {
+                TrainCheckpoint {
+                    job_id: id,
+                    tenant: tenant.to_string(),
+                    params: p.clone(),
+                    history: driver.history().to_vec(),
+                    store: driver.store().clone(),
+                }
+                .save(dir)?;
+            }
+            if p.throttle_ms > 0 && driver.history().len() < p.iters {
+                std::thread::sleep(Duration::from_millis(p.throttle_ms));
+            }
+        }
+        if let Some(dir) = &self.state_dir {
+            TrainCheckpoint::remove(dir, id)?;
+        }
+        Ok(Outcome::Done(api::train_report(p, driver.history())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::api::{RolloutParams, TrainParams};
+
+    fn rollout_spec() -> JobSpec {
+        JobSpec::Rollout(RolloutParams {
+            task: "moonlight".into(),
+            scheduler: "seer".into(),
+            sd: "grouped-cst".into(),
+            seed: 42,
+            full: false,
+        })
+    }
+
+    fn train_spec(iters: usize, throttle_ms: u64) -> JobSpec {
+        JobSpec::Train(TrainParams {
+            task: "moonlight".into(),
+            scheduler: "seer".into(),
+            sd: "grouped-cst".into(),
+            iters,
+            seed: 42,
+            drift: 0.0,
+            cold: false,
+            throttle_ms,
+            full: false,
+        })
+    }
+
+    /// Run `f` against a manager with `workers` live pool threads, then
+    /// shut the pool down gracefully.
+    fn with_pool<R>(
+        manager: &JobManager,
+        workers: usize,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let runner = SweepRunner::new(workers);
+        let worker = |i: usize| manager.worker_loop(i);
+        std::thread::scope(|s| {
+            runner.spawn_workers(s, &worker);
+            let out = f();
+            manager.request_shutdown(false);
+            out
+        })
+    }
+
+    #[test]
+    fn submit_run_result_lifecycle() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        let reply = with_pool(&m, 1, || {
+            let id = m.submit("alice", rollout_spec()).unwrap();
+            m.result_json(id)
+        });
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+        let result = reply.get("result").unwrap();
+        assert!(result.get("completions").and_then(Json::as_u64).unwrap() > 0);
+        // Events were tallied through the mux even with no subscriber.
+        assert!(m.mux_of(1).unwrap().counts().finished > 0);
+        assert_eq!(m.state_of(1), Some(JobState::Done));
+    }
+
+    #[test]
+    fn quota_rejects_but_distinct_tenants_pass() {
+        let m = JobManager::new(
+            QuotaConfig {
+                max_per_tenant: 1,
+                max_jobs: 64,
+            },
+            None,
+        )
+        .unwrap();
+        // No workers: jobs stay queued, holding their quota.
+        m.submit("a", train_spec(1, 0)).unwrap();
+        let rejected = m.submit("a", train_spec(1, 0)).unwrap_err();
+        assert_eq!(
+            rejected.get("code").and_then(Json::as_str),
+            Some("quota")
+        );
+        m.submit("b", train_spec(1, 0)).unwrap();
+        // Cancelling frees the quota slot.
+        m.cancel_json(1);
+        assert!(m.submit("a", train_spec(1, 0)).is_ok());
+    }
+
+    #[test]
+    fn cancel_queued_job_never_runs() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        let id = m.submit("a", rollout_spec()).unwrap();
+        let reply = m.cancel_json(id);
+        assert_eq!(
+            reply.get("state").and_then(Json::as_str),
+            Some("cancelled")
+        );
+        let result = with_pool(&m, 1, || m.result_json(id));
+        assert_eq!(
+            result.get("code").and_then(Json::as_str),
+            Some("cancelled")
+        );
+    }
+
+    #[test]
+    fn unknown_ids_are_not_found() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        for reply in [
+            m.status_json(Some(99)),
+            m.result_json(99),
+            m.cancel_json(99),
+        ] {
+            assert_eq!(
+                reply.get("code").and_then(Json::as_str),
+                Some("not-found")
+            );
+        }
+        assert!(m.mux_of(99).is_none());
+    }
+
+    #[test]
+    fn submit_after_shutdown_is_rejected() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        m.request_shutdown(false);
+        let e = m.submit("a", rollout_spec()).unwrap_err();
+        assert_eq!(
+            e.get("code").and_then(Json::as_str),
+            Some("shutting-down")
+        );
+        assert!(m.drained());
+    }
+
+    #[test]
+    fn status_summary_counts_states() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        m.submit("a", train_spec(2, 0)).unwrap();
+        let s = m.status_json(None);
+        assert_eq!(s.get("jobs").and_then(Json::as_u64), Some(1));
+        assert_eq!(s.get("queued").and_then(Json::as_u64), Some(1));
+        let per = m.status_json(Some(1));
+        assert_eq!(per.get("kind").and_then(Json::as_str), Some("train"));
+        let p = per.get("progress").unwrap();
+        assert_eq!(p.get("iters_total").and_then(Json::as_u64), Some(2));
+    }
+}

@@ -1,0 +1,91 @@
+//! One leveled logging helper for the daemon *and* the CLI paths.
+//!
+//! Everything human-readable goes to **stderr**, tagged
+//! `[seer][LEVEL][component]`; stdout is reserved for machine output
+//! (JSON reports, NDJSON streams), which is what lets the CI smoke
+//! tests assert a quiet stdout. The threshold comes from the `SEER_LOG`
+//! environment variable (`error`, `warn`, `info`, `debug`; default
+//! `info`) and is re-read on every call — log volume here is human
+//! scale, and re-reading keeps tests free to flip it.
+
+use std::fmt::Display;
+
+/// Log severity, ordered from most to least severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error,
+    Warn,
+    Info,
+    Debug,
+}
+
+impl Level {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// The active threshold: `SEER_LOG`, else `info`. Unparsable values
+/// fall back to `info` rather than erroring — logging must never be the
+/// thing that kills a daemon.
+pub fn threshold() -> Level {
+    std::env::var("SEER_LOG")
+        .ok()
+        .and_then(|s| Level::from_name(&s))
+        .unwrap_or(Level::Info)
+}
+
+/// Emit one line to stderr if `level` passes the threshold.
+pub fn emit(level: Level, component: &str, msg: impl Display) {
+    if level <= threshold() {
+        eprintln!("[seer][{}][{component}] {msg}", level.name());
+    }
+}
+
+pub fn error(component: &str, msg: impl Display) {
+    emit(Level::Error, component, msg);
+}
+
+pub fn warn(component: &str, msg: impl Display) {
+    emit(Level::Warn, component, msg);
+}
+
+pub fn info(component: &str, msg: impl Display) {
+    emit(Level::Info, component, msg);
+}
+
+pub fn debug(component: &str, msg: impl Display) {
+    emit(Level::Debug, component, msg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_round_trip() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::from_name(l.name()), Some(l));
+        }
+        assert_eq!(Level::from_name("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::from_name("verbose"), None);
+    }
+}

@@ -1,0 +1,41 @@
+//! The serve plane: a persistent rollout control plane over TCP.
+//!
+//! `seer serve` turns the binary into a daemon. Everything below the
+//! wire is the *kernel* the rest of the crate already provides —
+//! sessions, sweeps, the training driver — and this module adds only
+//! the plane around it:
+//!
+//! * [`api`] — the line-delimited JSON protocol: requests, replies,
+//!   and the typed [`api::JobSpec`] a `submit` carries.
+//! * [`quota`] — admission control: per-tenant and global in-flight
+//!   caps, rejections with machine-readable reasons.
+//! * [`jobs`] — the job table, queue, lifecycle state machine, and
+//!   the executors that run each [`api::JobSpec`] kind on the
+//!   [`crate::sweep::SweepRunner`] worker pool, with job-granular
+//!   cancellation ([`crate::sweep::CancelToken`]) and live event
+//!   fan-out ([`crate::rollout::EventMux`]).
+//! * [`checkpoint`] — crash-durable train-job state: atomic
+//!   per-iteration snapshots that a restarted daemon resumes
+//!   byte-identically.
+//! * [`server`] — the TCP front end: accept loop, bounded line
+//!   reader, verb dispatch, NDJSON `subscribe` streaming, graceful
+//!   and abort shutdown.
+//! * [`log`] — the one leveled stderr logger shared by the daemon
+//!   and the CLI paths (stdout stays machine-readable).
+//!
+//! The protocol grammar and checkpoint format are documented in
+//! ARCHITECTURE.md (serve-plane section); `tests/serve.rs` exercises
+//! the whole plane over real sockets.
+
+pub mod api;
+pub mod checkpoint;
+pub mod jobs;
+pub mod log;
+pub mod quota;
+pub mod server;
+
+pub use api::{JobSpec, Request, RolloutParams, SweepParams, TrainParams};
+pub use checkpoint::TrainCheckpoint;
+pub use jobs::{JobManager, JobState};
+pub use quota::QuotaConfig;
+pub use server::{ServeConfig, Server};

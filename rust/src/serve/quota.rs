@@ -1,0 +1,92 @@
+//! Admission control: per-tenant and global in-flight job caps.
+//!
+//! The serve plane admits a job only while it can name the tenant a
+//! truthful answer about capacity; everything past admission is the
+//! queue's problem. A rejected submit carries a machine-readable code
+//! (`"quota"`) plus a human reason, so clients can distinguish "try
+//! later" from "your request is malformed".
+//!
+//! Quotas bound *in-flight* jobs (queued + running), not the run rate:
+//! a tenant with quota 1 can keep exactly one job in the system at a
+//! time, while worker-pool capacity — not the quota — decides whether
+//! an admitted job runs immediately or waits in the queue.
+
+/// Admission limits for a [`crate::serve::jobs::JobManager`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QuotaConfig {
+    /// In-flight jobs allowed per tenant.
+    pub max_per_tenant: usize,
+    /// In-flight jobs allowed across all tenants.
+    pub max_jobs: usize,
+}
+
+impl Default for QuotaConfig {
+    fn default() -> Self {
+        QuotaConfig {
+            max_per_tenant: 4,
+            max_jobs: 64,
+        }
+    }
+}
+
+impl QuotaConfig {
+    /// Decide admission for a tenant currently holding
+    /// `tenant_in_flight` jobs, with `total_in_flight` jobs in the
+    /// system. `Err` is the rejection reason, ready to send back.
+    pub fn admit(
+        &self,
+        tenant: &str,
+        tenant_in_flight: usize,
+        total_in_flight: usize,
+    ) -> Result<(), String> {
+        if total_in_flight >= self.max_jobs {
+            return Err(format!(
+                "global job cap reached ({} in flight, cap {})",
+                total_in_flight, self.max_jobs
+            ));
+        }
+        if tenant_in_flight >= self.max_per_tenant {
+            return Err(format!(
+                "tenant '{}' quota reached ({} in flight, quota {})",
+                tenant, tenant_in_flight, self.max_per_tenant
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_under_both_caps() {
+        let q = QuotaConfig {
+            max_per_tenant: 2,
+            max_jobs: 3,
+        };
+        assert!(q.admit("a", 0, 0).is_ok());
+        assert!(q.admit("a", 1, 2).is_ok());
+    }
+
+    #[test]
+    fn rejects_at_tenant_quota_with_reason() {
+        let q = QuotaConfig {
+            max_per_tenant: 1,
+            max_jobs: 64,
+        };
+        let e = q.admit("alice", 1, 1).unwrap_err();
+        assert!(e.contains("alice"), "{e}");
+        assert!(e.contains("quota"), "{e}");
+    }
+
+    #[test]
+    fn global_cap_wins_over_tenant_headroom() {
+        let q = QuotaConfig {
+            max_per_tenant: 4,
+            max_jobs: 2,
+        };
+        let e = q.admit("bob", 0, 2).unwrap_err();
+        assert!(e.contains("global"), "{e}");
+    }
+}

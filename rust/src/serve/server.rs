@@ -1,0 +1,375 @@
+//! The TCP front end of the serve plane.
+//!
+//! [`Server::bind`] opens a [`std::net::TcpListener`] and builds the
+//! [`JobManager`] (recovering checkpoints); [`Server::run`] then hosts
+//! everything on one [`std::thread::scope`]: the
+//! [`crate::sweep::SweepRunner`] worker pool executing jobs, plus one
+//! scoped thread per client connection. Each connection speaks the
+//! line-delimited JSON protocol of [`super::api`]; `subscribe` switches
+//! it to an NDJSON frame stream until the job's mux closes, then the
+//! connection goes back to serving verbs. The accept loop is
+//! non-blocking so it can notice shutdown: once a `shutdown` request
+//! arrived *and* every admitted job is terminal, the listener stops,
+//! the connection handlers see the same condition at their next read
+//! timeout, and the scope joins — that is the whole graceful-exit
+//! story, no detached threads anywhere.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::rollout::MuxFrame;
+use crate::sweep::SweepRunner;
+use crate::util::json::Json;
+
+use super::api::{self, Request, MAX_LINE_BYTES};
+use super::jobs::JobManager;
+use super::log;
+use super::quota::QuotaConfig;
+
+/// How often blocked reads and the accept loop re-check for shutdown.
+const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// Daemon configuration, filled in from CLI flags by `main`.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Listen address; port 0 picks a free port (tests rely on this).
+    pub addr: String,
+    /// Worker-pool size; 0 means auto ([`SweepRunner::from_env`]).
+    pub workers: usize,
+    pub quota: QuotaConfig,
+    /// Where train jobs checkpoint; `None` disables checkpointing.
+    pub state_dir: Option<PathBuf>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            workers: 0,
+            quota: QuotaConfig::default(),
+            state_dir: None,
+        }
+    }
+}
+
+/// A bound-but-not-yet-running daemon. Splitting bind from run lets
+/// tests bind port 0, read [`Server::local_addr`], and only then hand
+/// the server to a thread.
+pub struct Server {
+    listener: TcpListener,
+    manager: Arc<JobManager>,
+    workers: usize,
+}
+
+impl Server {
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting listener non-blocking")?;
+        let workers = if cfg.workers == 0 {
+            SweepRunner::from_env().threads()
+        } else {
+            cfg.workers
+        };
+        let manager = Arc::new(JobManager::new(cfg.quota, cfg.state_dir)?);
+        Ok(Server {
+            listener,
+            manager,
+            workers,
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading local addr")
+    }
+
+    /// Serve until a client-requested shutdown completes.
+    pub fn run(self) -> Result<()> {
+        let Server {
+            listener,
+            manager,
+            workers,
+        } = self;
+        log::info(
+            "server",
+            format!(
+                "listening on {} ({workers} workers)",
+                listener.local_addr().context("reading local addr")?
+            ),
+        );
+        let pool = SweepRunner::new(workers);
+        let worker = |i: usize| manager.worker_loop(i);
+        std::thread::scope(|s| {
+            pool.spawn_workers(s, &worker);
+            loop {
+                match listener.accept() {
+                    Ok((stream, peer)) => {
+                        let mgr = Arc::clone(&manager);
+                        s.spawn(move || {
+                            if let Err(e) = handle_conn(stream, &mgr) {
+                                log::debug(
+                                    "server",
+                                    format!("connection {peer}: {e:#}"),
+                                );
+                            }
+                        });
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        if manager.drained() {
+                            break;
+                        }
+                        std::thread::sleep(POLL_INTERVAL);
+                    }
+                    Err(e) => {
+                        log::warn("server", format!("accept failed: {e}"));
+                        std::thread::sleep(POLL_INTERVAL);
+                    }
+                }
+            }
+        });
+        log::info("server", "shut down cleanly");
+        Ok(())
+    }
+}
+
+/// What one bounded line read produced.
+enum LineIn {
+    Line(String),
+    /// The client exceeded [`MAX_LINE_BYTES`] without a newline.
+    TooLong,
+    /// Peer closed its write side.
+    Eof,
+    /// The daemon finished shutting down while the client was idle.
+    ServerClosing,
+}
+
+/// A newline-framed reader over a timeout-polling stream. Plain
+/// `BufReader::read_line` would buffer without bound and block without
+/// a shutdown check; this does neither.
+struct LineReader {
+    stream: TcpStream,
+    pending: Vec<u8>,
+}
+
+impl LineReader {
+    fn next_line(&mut self, manager: &JobManager) -> std::io::Result<LineIn> {
+        loop {
+            if let Some(pos) = self.pending.iter().position(|&b| b == b'\n') {
+                if pos > MAX_LINE_BYTES {
+                    return Ok(LineIn::TooLong);
+                }
+                let rest = self.pending.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.pending, rest);
+                line.pop();
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(LineIn::Line(
+                    String::from_utf8_lossy(&line).into_owned(),
+                ));
+            }
+            if self.pending.len() > MAX_LINE_BYTES {
+                return Ok(LineIn::TooLong);
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(LineIn::Eof),
+                Ok(n) => self.pending.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    if manager.drained() {
+                        return Ok(LineIn::ServerClosing);
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Discard input up to and including the next newline (or EOF), in
+    /// constant memory. Called after an over-long line so the reply can
+    /// be sent and the socket closed cleanly — closing with unread data
+    /// still queued would reset the connection under the reply.
+    fn discard_line(&mut self, manager: &JobManager) -> std::io::Result<()> {
+        if self.pending.iter().any(|&b| b == b'\n') {
+            return Ok(());
+        }
+        self.pending.clear();
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => return Ok(()),
+                Ok(n) if chunk[..n].contains(&b'\n') => return Ok(()),
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut
+                    ) =>
+                {
+                    if manager.drained() {
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn send(w: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    let mut line = reply.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())
+}
+
+/// One NDJSON stream frame. Event frames are the event's own
+/// [`crate::rollout::RolloutEvent::to_json`] plus a `"type":"event"`
+/// tag — strip the tag and you have exactly what a direct in-process
+/// observer saw, which is what the stream-equivalence test checks.
+fn frame_json(job: u64, frame: &MuxFrame, manager: &JobManager) -> Json {
+    let mut o = BTreeMap::new();
+    match frame {
+        MuxFrame::Event(ev) => {
+            let mut j = ev.to_json();
+            if let Json::Obj(fields) = &mut j {
+                fields.insert(
+                    "type".to_string(),
+                    Json::Str("event".to_string()),
+                );
+            }
+            return j;
+        }
+        MuxFrame::Telemetry { counts, now } => {
+            o.insert("type".to_string(), Json::Str("telemetry".to_string()));
+            o.insert("counts".to_string(), counts.to_json());
+            o.insert("t_us".to_string(), Json::Num(now.as_micros() as f64));
+        }
+        MuxFrame::Truncated => {
+            o.insert("type".to_string(), Json::Str("truncated".to_string()));
+        }
+        MuxFrame::Closed => {
+            o.insert("type".to_string(), Json::Str("end".to_string()));
+            o.insert("job".to_string(), Json::Num(job as f64));
+            let state = manager
+                .state_of(job)
+                .map(|s| s.name())
+                .unwrap_or("unknown");
+            o.insert("state".to_string(), Json::Str(state.to_string()));
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Serve one connection until EOF, an oversized line, or daemon exit.
+fn handle_conn(stream: TcpStream, manager: &JobManager) -> Result<()> {
+    stream
+        .set_read_timeout(Some(POLL_INTERVAL))
+        .context("setting read timeout")?;
+    let mut writer = stream.try_clone().context("cloning stream")?;
+    let mut reader = LineReader {
+        stream,
+        pending: Vec::new(),
+    };
+    loop {
+        let line = match reader.next_line(manager)? {
+            LineIn::Line(l) => l,
+            LineIn::TooLong => {
+                reader.discard_line(manager)?;
+                send(
+                    &mut writer,
+                    &api::err_reply(
+                        "bad-request",
+                        "request line exceeds 1 MiB",
+                    ),
+                )?;
+                return Ok(());
+            }
+            LineIn::Eof | LineIn::ServerClosing => return Ok(()),
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match Request::parse(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                send(
+                    &mut writer,
+                    &api::err_reply("bad-request", &format!("{e:#}")),
+                )?;
+                continue;
+            }
+        };
+        match req {
+            Request::Submit { tenant, spec } => {
+                let reply = match manager.submit(&tenant, spec) {
+                    Ok(id) => {
+                        api::ok_reply(vec![("job", Json::Num(id as f64))])
+                    }
+                    Err(rejection) => rejection,
+                };
+                send(&mut writer, &reply)?;
+            }
+            Request::Status { job } => {
+                send(&mut writer, &manager.status_json(job))?;
+            }
+            Request::Result { job } => {
+                send(&mut writer, &manager.result_json(job))?;
+            }
+            Request::Cancel { job } => {
+                send(&mut writer, &manager.cancel_json(job))?;
+            }
+            Request::Subscribe { job } => {
+                let Some(mux) = manager.mux_of(job) else {
+                    send(
+                        &mut writer,
+                        &api::err_reply("not-found", &format!("no job {job}")),
+                    )?;
+                    continue;
+                };
+                let rx = mux.subscribe();
+                send(
+                    &mut writer,
+                    &api::ok_reply(vec![
+                        ("job", Json::Num(job as f64)),
+                        ("streaming", Json::Bool(true)),
+                    ]),
+                )?;
+                for frame in rx {
+                    send(&mut writer, &frame_json(job, &frame, manager))?;
+                    if frame == MuxFrame::Closed {
+                        break;
+                    }
+                }
+            }
+            Request::Shutdown { abort } => {
+                send(
+                    &mut writer,
+                    &api::ok_reply(vec![
+                        ("shutting_down", Json::Bool(true)),
+                        (
+                            "mode",
+                            Json::Str(
+                                if abort { "abort" } else { "graceful" }
+                                    .to_string(),
+                            ),
+                        ),
+                    ]),
+                )?;
+                manager.request_shutdown(abort);
+            }
+        }
+    }
+}

@@ -362,6 +362,37 @@ mod tests {
     }
 
     #[test]
+    fn from_json_str_rejects_malformed_documents() {
+        // The `--faults` load path (and the serve API behind it) must
+        // turn every malformed document into an Err, never a panic.
+        let full = sample_plan().sorted().to_json().to_string();
+        // Truncated at every byte boundary.
+        for cut in 1..full.len() {
+            assert!(
+                FaultPlan::from_json_str(&full[..cut]).is_err(),
+                "truncated at {cut} parsed"
+            );
+        }
+        // Over-deep nesting bombs fail fast in the parser.
+        let deep = format!("{}1{}", "[".repeat(50_000), "]".repeat(50_000));
+        let e = FaultPlan::from_json_str(&deep).unwrap_err().to_string();
+        assert!(e.contains("nesting too deep"), "{e}");
+        // Type confusion at every schema level.
+        for bad in [
+            r#"42"#,
+            r#"{"events": 42}"#,
+            r#"{"events": [42]}"#,
+            r#"{"events": [{"kind": "instance_down"}]}"#,
+            r#"{"events": [{"at_secs": "soon", "kind": "scale_up", "n": 1}]}"#,
+            r#"{"events": [{"at_secs": -1, "kind": "scale_up", "n": 1}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "warp", "n": 1}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "instance_slowdown", "instance": 0, "factor": "fast"}]}"#,
+        ] {
+            assert!(FaultPlan::from_json_str(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
     fn sorted_orders_by_time_stably() {
         let plan = sample_plan().sorted();
         let times: Vec<u64> =

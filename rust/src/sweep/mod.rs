@@ -43,7 +43,8 @@ pub mod runner;
 pub mod spec;
 
 pub use runner::{
-    Aggregate, PairedComparison, SweepOutcome, SweepReport, SweepRunner,
+    Aggregate, CancelToken, PairedComparison, SweepOutcome, SweepReport,
+    SweepRunner,
 };
 pub use spec::{CellResult, SweepCell, SweepSpec};
 

@@ -11,11 +11,12 @@
 //! results into a [`SweepReport`] with seeded-bootstrap CIs and paired
 //! per-seed comparisons against the baseline scheduler.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 use crate::util::stats::{
@@ -29,6 +30,30 @@ use super::spec::{CellResult, SweepSpec};
 /// and paired comparison offsets it by its stable group ordinal, so the
 /// report is deterministic in the spec alone.
 const BOOT_SEED: u64 = 0x5EE2_B007;
+
+/// A shared cooperative-cancellation flag checked at work-item
+/// granularity: [`SweepRunner::run_with_cancel`] consults it before each
+/// cell, and the serve plane's job executors consult it between train
+/// iterations. Cloning shares the flag; cancelling is idempotent and
+/// sticky (there is no un-cancel).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation. Work already in flight finishes its current
+    /// item; nothing new starts.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
 
 /// Executes sweep cells across worker threads.
 #[derive(Debug, Clone, Copy)]
@@ -150,11 +175,27 @@ impl SweepRunner {
     /// whose dimension values would mislabel report rows
     /// ([`SweepSpec::validate`]).
     pub fn run(&self, spec: &SweepSpec) -> Result<SweepOutcome> {
+        self.run_with_cancel(spec, &CancelToken::new())
+    }
+
+    /// [`run`](Self::run) with a job-granular cancellation hook: the
+    /// token is checked before each cell starts, so cancelling stops the
+    /// sweep at cell boundaries (in-flight cells complete). A cancelled
+    /// sweep returns an error mentioning "cancelled" rather than a
+    /// partial report — partial grids would aggregate misleadingly.
+    pub fn run_with_cancel(
+        &self,
+        spec: &SweepSpec,
+        cancel: &CancelToken,
+    ) -> Result<SweepOutcome> {
         let start = Instant::now();
         spec.validate()?;
         let cells = spec.expand();
         let results = self
             .try_map(&cells, |_, cell| {
+                if cancel.is_cancelled() {
+                    bail!("sweep cancelled before cell {}", cell.index);
+                }
                 cell.run().with_context(|| {
                     format!(
                         "sweep cell {} ({} seed {} scale {} fault {} drift {})",
@@ -172,6 +213,25 @@ impl SweepRunner {
             report,
             wall_secs: start.elapsed().as_secs_f64(),
         })
+    }
+
+    /// Spawn this runner's worker pool as long-lived scoped threads: one
+    /// call to `worker(i)` per worker, each expected to loop until its
+    /// work source drains (the serve plane's job-queue loop lives in the
+    /// closure). The threads are owned by `scope`, so the caller's
+    /// `thread::scope` block joins them — same lifetime discipline as
+    /// [`SweepRunner::map`], but for open-ended queue service instead of
+    /// a fixed item list.
+    pub fn spawn_workers<'scope, 'env, F>(
+        &self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        worker: &'scope F,
+    ) where
+        F: Fn(usize) + Sync,
+    {
+        for i in 0..self.threads {
+            scope.spawn(move || worker(i));
+        }
     }
 }
 
@@ -469,5 +529,41 @@ mod tests {
     fn runner_clamps_threads() {
         assert_eq!(SweepRunner::new(0).threads(), 1);
         assert!(SweepRunner::auto().threads() >= 1);
+    }
+
+    #[test]
+    fn cancel_token_is_shared_and_sticky() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        assert!(!t.is_cancelled());
+        clone.cancel();
+        clone.cancel(); // idempotent
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn run_with_cancel_stops_before_any_cell() {
+        use crate::config::TaskPreset;
+        let spec =
+            SweepSpec::new(TaskPreset::Moonlight.workload_for_test());
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let e = SweepRunner::new(1)
+            .run_with_cancel(&spec, &cancel)
+            .unwrap_err();
+        assert!(e.to_string().contains("cancelled"), "{e}");
+    }
+
+    #[test]
+    fn spawn_workers_runs_each_worker_once() {
+        let hits = AtomicUsize::new(0);
+        let runner = SweepRunner::new(3);
+        let worker = |_i: usize| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        };
+        std::thread::scope(|s| {
+            runner.spawn_workers(s, &worker);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 }

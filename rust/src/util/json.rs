@@ -1,5 +1,6 @@
 //! Minimal JSON parser and serializer — enough for the AOT artifact
-//! manifest and the `seer rollout --json` report output.
+//! manifest, the `seer rollout --json` report output, and the `seer
+//! serve` wire protocol.
 //!
 //! Supports the full JSON value grammar (objects, arrays, strings with
 //! escapes, numbers, booleans, null). Does not aim for serde performance;
@@ -7,9 +8,21 @@
 //! (`Display`) is compact (no whitespace) and round-trips through
 //! [`Json::parse`]; non-finite numbers serialize as `null` since JSON
 //! has no representation for them.
+//!
+//! The parser is hardened for untrusted input (the serve plane feeds it
+//! raw socket bytes): nesting depth is bounded by [`MAX_DEPTH`] so a
+//! `[[[[…` bomb returns a positioned [`ParseError`] instead of
+//! overflowing the stack, and every malformed, truncated, or
+//! type-confused document is a positioned `Err` — the parser never
+//! panics on any byte sequence.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting depth the parser accepts. Real documents in
+/// this repo nest a handful of levels; 128 leaves generous headroom
+/// while keeping worst-case recursion far below stack limits.
+pub const MAX_DEPTH: usize = 128;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
@@ -39,6 +52,7 @@ impl Json {
         let mut p = Parser {
             bytes: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -168,6 +182,8 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting depth (bounded by [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -176,6 +192,17 @@ impl<'a> Parser<'a> {
             pos: self.pos,
             msg: msg.to_string(),
         }
+    }
+
+    /// Enter one container level; errors once [`MAX_DEPTH`] is exceeded
+    /// so adversarially deep documents fail fast instead of recursing
+    /// toward a stack overflow.
+    fn descend(&mut self) -> Result<(), ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        self.depth += 1;
+        Ok(())
     }
 
     fn peek(&self) -> Option<u8> {
@@ -195,11 +222,14 @@ impl<'a> Parser<'a> {
     }
 
     fn expect_byte(&mut self, b: u8) -> Result<(), ParseError> {
-        if self.bump() == Some(b) {
-            Ok(())
-        } else {
-            self.pos -= 1;
-            Err(self.err(&format!("expected '{}'", b as char)))
+        match self.bump() {
+            Some(got) if got == b => Ok(()),
+            Some(_) => {
+                // Undo the bump so the error points at the bad byte.
+                self.pos -= 1;
+                Err(self.err(&format!("expected '{}'", b as char)))
+            }
+            None => Err(self.err(&format!("expected '{}', got end", b as char))),
         }
     }
 
@@ -227,10 +257,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, ParseError> {
         self.expect_byte(b'{')?;
+        self.descend()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -244,7 +276,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Json::Obj(m)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Json::Obj(m));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -252,10 +287,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, ParseError> {
         self.expect_byte(b'[')?;
+        self.descend()?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(v));
         }
         loop {
@@ -264,7 +301,10 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b']') => return Ok(Json::Arr(v)),
+                Some(b']') => {
+                    self.depth -= 1;
+                    return Ok(Json::Arr(v));
+                }
                 _ => return Err(self.err("expected ',' or ']'")),
             }
         }
@@ -430,6 +470,69 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("\"abc").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_documents_with_position() {
+        // Every truncation point of a valid document must be a
+        // positioned Err, never a panic (the serve plane feeds the
+        // parser raw socket bytes).
+        let full = r#"{"a": [1, {"b": "xA", "c": -2.5e3}], "d": null}"#;
+        for cut in 1..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            let doc = &full[..cut];
+            match Json::parse(doc) {
+                Ok(_) => panic!("truncated '{doc}' parsed"),
+                Err(e) => assert!(e.pos <= doc.len(), "{e}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_over_deep_documents_without_overflow() {
+        // A nesting bomb must fail fast at MAX_DEPTH, not recurse
+        // toward a stack overflow.
+        for (open, close) in [("[", "]"), ("{\"k\":", "}")] {
+            let deep =
+                format!("{}1{}", open.repeat(100_000), close.repeat(100_000));
+            let e = Json::parse(&deep).unwrap_err();
+            assert!(e.msg.contains("nesting too deep"), "{e}");
+        }
+        // Depth within the limit still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
+        // Sibling containers do not accumulate depth.
+        let wide = format!("[{}]", vec!["[0]"; 1000].join(","));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn type_confused_accessors_return_none() {
+        // Typed accessors on the wrong variant are None, so load paths
+        // built on them surface Err instead of panicking.
+        let j = Json::parse(r#"{"s": "x", "n": 3, "a": [1], "o": {}}"#).unwrap();
+        assert_eq!(j.expect("s").as_f64(), None);
+        assert_eq!(j.expect("n").as_str(), None);
+        assert_eq!(j.expect("a").as_obj(), None);
+        assert_eq!(j.expect("o").as_arr(), None);
+        assert_eq!(j.expect("n").as_bool(), None);
+        assert_eq!(Json::Null.get("k"), None);
+        // Negative / huge numbers saturate through the integer casts
+        // rather than wrapping or panicking.
+        assert_eq!(Json::Num(-4.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(1e300).as_usize(), Some(usize::MAX));
+    }
+
+    #[test]
+    fn bad_escape_and_surrogate_inputs_error() {
+        assert!(Json::parse(r#""\q""#).is_err());
+        assert!(Json::parse(r#""\u12"#).is_err());
+        assert!(Json::parse(r#""\ud800""#).is_err()); // lone high surrogate
+        assert!(Json::parse(r#""\udfff\udfff""#).is_err()); // bad codepoint
+        assert!(Json::parse("-").is_err());
+        assert!(Json::parse("1e").is_err());
     }
 
     #[test]

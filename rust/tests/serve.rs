@@ -1,0 +1,397 @@
+//! End-to-end tests of the serve plane over real TCP sockets.
+//!
+//! Each test binds its own daemon on port 0, drives it with a plain
+//! line-delimited JSON client, and shuts it down through the protocol —
+//! the same path `seer serve` takes, minus argument parsing. The
+//! recovery test additionally kills a daemon mid-train (abort shutdown)
+//! and restarts it on the same state directory.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use seer::iteration::TrainingDriver;
+use seer::rollout::{EventMux, MuxFrame};
+use seer::serve::api::{train_report, MAX_LINE_BYTES};
+use seer::serve::{
+    QuotaConfig, RolloutParams, ServeConfig, Server, TrainCheckpoint,
+    TrainParams,
+};
+use seer::util::json::Json;
+
+/// Bind a daemon on a free port and run it on its own thread.
+fn start_server(
+    quota: QuotaConfig,
+    workers: usize,
+    state_dir: Option<PathBuf>,
+) -> (String, JoinHandle<()>) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        quota,
+        state_dir,
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        Client {
+            reader: BufReader::new(
+                TcpStream::connect(addr).expect("connect"),
+            ),
+        }
+    }
+
+    fn send(&mut self, line: &str) {
+        let stream = self.reader.get_mut();
+        stream.write_all(line.as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send newline");
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).expect("recv");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(line.trim_end()).expect("reply is valid JSON")
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn ok(j: &Json) -> bool {
+    j.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+fn code(j: &Json) -> Option<&str> {
+    j.get("code").and_then(Json::as_str)
+}
+
+fn state_of(status: &Json) -> &str {
+    status.get("state").and_then(Json::as_str).unwrap_or("?")
+}
+
+/// Poll `probe` every 10 ms until it returns true; panic after 60 s.
+fn wait_for(what: &str, mut probe: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !probe() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("seer-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn submit_subscribe_result_matches_direct_run() {
+    let (addr, handle) = start_server(QuotaConfig::default(), 1, None);
+    let mut c = Client::connect(&addr);
+
+    let reply =
+        c.request(r#"{"verb":"submit","job":{"kind":"rollout","seed":7}}"#);
+    assert!(ok(&reply), "{reply}");
+    let job = reply.get("job").and_then(Json::as_u64).unwrap();
+
+    let result = c.request(&format!(r#"{{"verb":"result","job":{job}}}"#));
+    assert!(ok(&result), "{result}");
+    let report = result.get("result").unwrap();
+    assert!(
+        report.get("completions").and_then(Json::as_u64).unwrap() > 0,
+        "{report}"
+    );
+
+    // Subscribing after completion replays the job's full event buffer.
+    let sub = c.request(&format!(r#"{{"verb":"subscribe","job":{job}}}"#));
+    assert!(ok(&sub), "{sub}");
+    assert_eq!(sub.get("streaming").and_then(Json::as_bool), Some(true));
+    let mut streamed = Vec::new();
+    loop {
+        let frame = c.recv();
+        match frame.get("type").and_then(Json::as_str).unwrap() {
+            "event" => {
+                let Json::Obj(mut fields) = frame else { unreachable!() };
+                fields.remove("type");
+                streamed.push(Json::Obj(fields).to_string());
+            }
+            "end" => {
+                assert_eq!(state_of(&frame), "done", "{frame}");
+                break;
+            }
+            // Telemetry / truncation frames are not per-event payloads.
+            _ => {}
+        }
+    }
+
+    // The same job run directly, observed through the same mux type.
+    let params = RolloutParams {
+        task: "moonlight".to_string(),
+        scheduler: "seer".to_string(),
+        sd: "grouped-cst".to_string(),
+        seed: 7,
+        full: false,
+    };
+    let mux = EventMux::new();
+    let direct_report = params
+        .session()
+        .unwrap()
+        .observer(Box::new(mux.clone()))
+        .run()
+        .unwrap();
+    mux.close();
+    let direct: Vec<String> = mux
+        .subscribe()
+        .iter()
+        .filter_map(|f| match f {
+            MuxFrame::Event(ev) => Some(ev.to_json().to_string()),
+            _ => None,
+        })
+        .collect();
+
+    assert!(!direct.is_empty());
+    assert_eq!(streamed, direct, "streamed events != direct-run events");
+    assert_eq!(
+        report.get("tokens_generated").and_then(Json::as_u64),
+        direct_report.to_json().get("tokens_generated").and_then(Json::as_u64),
+    );
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn quota_one_each_runs_two_tenants_concurrently_third_queues() {
+    let quota = QuotaConfig {
+        max_per_tenant: 1,
+        max_jobs: 64,
+    };
+    let (addr, handle) = start_server(quota, 2, None);
+    let mut c = Client::connect(&addr);
+
+    let train =
+        r#"{"kind":"train","iters":3,"throttle_ms":150,"seed":5}"#.to_string();
+    let a = c.request(&format!(
+        r#"{{"verb":"submit","tenant":"a","job":{train}}}"#
+    ));
+    assert!(ok(&a), "{a}");
+
+    // Tenant 'a' is at quota: a second submit is rejected with a reason.
+    let again = c.request(&format!(
+        r#"{{"verb":"submit","tenant":"a","job":{train}}}"#
+    ));
+    assert!(!ok(&again), "{again}");
+    assert_eq!(code(&again), Some("quota"));
+    assert!(
+        again.get("error").and_then(Json::as_str).unwrap().contains("'a'"),
+        "{again}"
+    );
+
+    let b = c.request(&format!(
+        r#"{{"verb":"submit","tenant":"b","job":{train}}}"#
+    ));
+    assert!(ok(&b), "{b}");
+    let third = c.request(
+        r#"{"verb":"submit","tenant":"c","job":{"kind":"rollout"}}"#,
+    );
+    assert!(ok(&third), "{third}");
+    let third_id = third.get("job").and_then(Json::as_u64).unwrap();
+
+    // Both quota-1 tenants run at the same time on the 2 workers, while
+    // the third admitted job waits for a free worker.
+    wait_for("both tenants running concurrently", || {
+        let s1 = c.request(r#"{"verb":"status","job":1}"#);
+        let s2 = c.request(r#"{"verb":"status","job":2}"#);
+        state_of(&s1) == "running" && state_of(&s2) == "running"
+    });
+    let queued = c.request(&format!(r#"{{"verb":"status","job":{third_id}}}"#));
+    assert_eq!(state_of(&queued), "queued", "{queued}");
+
+    // Once the trains drain, the queued job runs to completion.
+    let done = c.request(&format!(r#"{{"verb":"result","job":{third_id}}}"#));
+    assert!(ok(&done), "{done}");
+
+    let summary = c.request(r#"{"verb":"status"}"#);
+    assert_eq!(summary.get("jobs").and_then(Json::as_u64), Some(3));
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn cancel_hits_running_and_queued_jobs() {
+    let (addr, handle) = start_server(QuotaConfig::default(), 1, None);
+    let mut c = Client::connect(&addr);
+
+    let long_train =
+        r#"{"verb":"submit","job":{"kind":"train","iters":500,"throttle_ms":50}}"#;
+    let first = c.request(long_train);
+    assert!(ok(&first), "{first}");
+    wait_for("job 1 running", || {
+        state_of(&c.request(r#"{"verb":"status","job":1}"#)) == "running"
+    });
+
+    // The single worker is busy, so this one stays queued.
+    let second =
+        c.request(r#"{"verb":"submit","job":{"kind":"rollout"}}"#);
+    assert!(ok(&second), "{second}");
+    let cancelled_queued = c.request(r#"{"verb":"cancel","job":2}"#);
+    assert!(ok(&cancelled_queued), "{cancelled_queued}");
+    assert_eq!(state_of(&cancelled_queued), "cancelled");
+
+    let cancelling = c.request(r#"{"verb":"cancel","job":1}"#);
+    assert!(ok(&cancelling), "{cancelling}");
+    assert_eq!(
+        cancelling.get("cancelling").and_then(Json::as_bool),
+        Some(true),
+        "{cancelling}"
+    );
+    let r1 = c.request(r#"{"verb":"result","job":1}"#);
+    assert_eq!(code(&r1), Some("cancelled"), "{r1}");
+    let r2 = c.request(r#"{"verb":"result","job":2}"#);
+    assert_eq!(code(&r2), Some("cancelled"), "{r2}");
+
+    // Cancelling a terminal job is a no-op report, not an error.
+    let again = c.request(r#"{"verb":"cancel","job":1}"#);
+    assert!(ok(&again), "{again}");
+    assert_eq!(state_of(&again), "cancelled");
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn malformed_requests_get_reasoned_errors() {
+    let (addr, handle) = start_server(QuotaConfig::default(), 1, None);
+    let mut c = Client::connect(&addr);
+
+    for (line, needle) in [
+        ("this is not json", "parse"),
+        (r#"{"verb":"frobnicate"}"#, "unknown verb"),
+        (r#"{"verb":"result"}"#, "missing field 'job'"),
+        (r#"{"verb":"submit","job":{"kind":"rollout","task":"nope"}}"#, "unknown task"),
+        (r#"{"verb":"submit","job":{"kind":"rollout","seed":"x"}}"#, "'seed'"),
+    ] {
+        let reply = c.request(line);
+        assert!(!ok(&reply), "{line}: {reply}");
+        assert_eq!(code(&reply), Some("bad-request"), "{line}: {reply}");
+        let msg = reply.get("error").and_then(Json::as_str).unwrap();
+        assert!(
+            msg.to_lowercase().contains(&needle.to_lowercase()),
+            "{line}: {msg}"
+        );
+    }
+
+    // Unknown ids are addressed errors, not connection killers.
+    for verb in ["status", "result", "cancel", "subscribe"] {
+        let reply = c.request(&format!(r#"{{"verb":"{verb}","job":404}}"#));
+        assert_eq!(code(&reply), Some("not-found"), "{verb}: {reply}");
+    }
+
+    // An over-long line gets a reply, then the connection is dropped.
+    let mut flood = Client::connect(&addr);
+    let huge = "a".repeat(MAX_LINE_BYTES + 10);
+    flood.send(&huge);
+    let reply = flood.recv();
+    assert_eq!(code(&reply), Some("bad-request"), "{reply}");
+    assert!(
+        reply.get("error").and_then(Json::as_str).unwrap().contains("1 MiB"),
+        "{reply}"
+    );
+    let mut rest = String::new();
+    assert_eq!(flood.reader.read_line(&mut rest).expect("eof"), 0);
+
+    // The first connection still works after all of the above.
+    assert!(ok(&c.request(r#"{"verb":"status"}"#)));
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn train_job_killed_mid_run_resumes_byte_identically() {
+    let dir = temp_dir("recover");
+    let params = TrainParams {
+        task: "moonlight".to_string(),
+        scheduler: "seer".to_string(),
+        sd: "grouped-cst".to_string(),
+        iters: 3,
+        seed: 11,
+        drift: 0.1,
+        cold: false,
+        throttle_ms: 300,
+        full: false,
+    };
+
+    // Reference: the same job uninterrupted, straight on the driver.
+    let mut driver = TrainingDriver::new(params.training_config().unwrap());
+    for _ in 0..params.iters {
+        driver.run_iteration(driver.next_epoch()).unwrap();
+    }
+    let expected = train_report(&params, driver.history()).to_string();
+
+    // Round 1: run the job, then abort-kill the daemon mid-train.
+    let (addr, handle) =
+        start_server(QuotaConfig::default(), 1, Some(dir.clone()));
+    let mut c = Client::connect(&addr);
+    let submitted = c.request(
+        r#"{"verb":"submit","tenant":"t","job":{"kind":"train","iters":3,"seed":11,"drift":0.1,"throttle_ms":300}}"#,
+    );
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").and_then(Json::as_u64).unwrap();
+    wait_for("first iteration checkpointed", || {
+        let s = c.request(&format!(r#"{{"verb":"status","job":{job}}}"#));
+        s.get("progress")
+            .and_then(|p| p.get("iters_done"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0)
+            >= 1
+    });
+    assert!(ok(&c.request(r#"{"verb":"shutdown","mode":"abort"}"#)));
+    handle.join().unwrap();
+    assert!(
+        TrainCheckpoint::path_for(&dir, job).exists(),
+        "abort shutdown must retain the train checkpoint"
+    );
+
+    // Round 2: a fresh daemon on the same state dir resumes the job.
+    let (addr, handle) =
+        start_server(QuotaConfig::default(), 1, Some(dir.clone()));
+    let mut c = Client::connect(&addr);
+    let status = c.request(&format!(r#"{{"verb":"status","job":{job}}}"#));
+    assert!(ok(&status), "recovered job must exist: {status}");
+    assert_eq!(
+        status.get("recovered").and_then(Json::as_bool),
+        Some(true),
+        "{status}"
+    );
+    let result = c.request(&format!(r#"{{"verb":"result","job":{job}}}"#));
+    assert!(ok(&result), "{result}");
+    assert_eq!(
+        result.get("result").unwrap().to_string(),
+        expected,
+        "resumed final report differs from the uninterrupted run"
+    );
+    assert!(
+        !TrainCheckpoint::path_for(&dir, job).exists(),
+        "completed job must clean up its checkpoint"
+    );
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
