@@ -42,5 +42,11 @@ fn main() {
         time_one(&format!("{name}_streamrl"), preset, "streamrl", "none");
         time_one(&format!("{name}_seer_nosd"), preset, "seer", "none");
         time_one(&format!("{name}_seer_full"), preset, "seer", "grouped-cst");
+        time_one(
+            &format!("{name}_rollpacker"),
+            preset,
+            "rollpacker",
+            "grouped-cst",
+        );
     }
 }

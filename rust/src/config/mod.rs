@@ -94,6 +94,11 @@ pub struct SystemConfig {
     /// Target per-instance KV utilization the admission controller aims
     /// for (headroom below 1.0 avoids immediate preemptions).
     pub kv_target_util: f64,
+    /// Fraction of live instances the `rollpacker` policy dedicates to
+    /// tail-packing lanes (RollPacker-style stop-and-resume; ignored by
+    /// every other scheduler). Clamped to at least one lane — and at
+    /// least one general lane — whenever two or more instances are live.
+    pub tail_lane_frac: f64,
 }
 
 impl Default for SystemConfig {
@@ -107,6 +112,7 @@ impl Default for SystemConfig {
             mba_replan_interval: SimTime::from_secs(5),
             starvation_guard_frac: 0.05,
             kv_target_util: 0.92,
+            tail_lane_frac: 0.25,
         }
     }
 }

@@ -522,6 +522,9 @@ impl ClusterSim {
         } else {
             1.0
         };
+        let (tail_packed, tail_resume) = self.scheduler.tail_stats();
+        self.metrics.tail_packed = tail_packed;
+        self.metrics.tail_resume_tokens = tail_resume;
         if self.verify_invariants {
             self.assert_runtime_invariants();
         }

@@ -10,6 +10,8 @@ use crate::rollout::{RolloutReport, RolloutSession};
 use crate::spec::simmodel::SdStrategy;
 use crate::sweep::SweepRunner;
 use crate::util::cli::Args;
+use crate::util::stats::{paired_speedup, paired_tail_reduction, Paired};
+use crate::util::table::{fmt_x, Table};
 
 /// The sweep runner multi-run experiments fan out through. Thread count
 /// comes from `SEER_SWEEP_THREADS` (default: one per core, capped at 8);
@@ -111,6 +113,53 @@ pub fn measure(
         label: label.to_string(),
         report,
     }
+}
+
+/// One labelled system's aligned samples for [`print_paired_vs`]: the
+/// per-observation makespans and tail times, in the same observation
+/// order for every system (seeds, or (group-size, seed) pairs — any
+/// axis, as long as it is identical across systems).
+pub struct PairedRow {
+    pub label: String,
+    pub makespans: Vec<f64>,
+    pub tails: Vec<f64>,
+}
+
+/// The shared paired-statistics script (ISSUE 7 acceptance): per-paired-
+/// observation speedup (`other_makespan / candidate_makespan`, mean with
+/// seeded-bootstrap CI) and tail reduction (`1 − candidate_tail /
+/// other_tail`) of `candidate` against every other system. Both the
+/// `faults` and `fig7` experiments (and `multi-iter`, on warm
+/// per-iteration samples) report through this one function, so the
+/// comparison methodology cannot drift between experiments.
+pub fn print_paired_vs(title: &str, candidate: &str, rows: &[PairedRow], seed: u64) {
+    let Some(cand) = rows.iter().find(|r| r.label == candidate) else {
+        return;
+    };
+    let mut t = Table::new(
+        &format!("{title} — paired statistics, {candidate} vs the rest"),
+        &["Versus", "n", "Speedup", "CI 95%", "wins", "Tail redux", "CI 95%", "wins"],
+    );
+    let fmt_ci = |p: &Paired| format!("[{:.2}, {:.2}]", p.ci.lo, p.ci.hi);
+    for other in rows.iter().filter(|r| r.label != candidate) {
+        let sp = paired_speedup(&other.makespans, &cand.makespans, seed);
+        let tr = paired_tail_reduction(&other.tails, &cand.tails, seed);
+        t.row(&[
+            other.label.clone(),
+            sp.n.to_string(),
+            fmt_x(sp.mean),
+            fmt_ci(&sp),
+            format!("{}/{}", sp.wins, sp.n),
+            format!("{:+.0}%", 100.0 * tr.mean),
+            fmt_ci(&tr),
+            format!("{}/{}", tr.wins, tr.n),
+        ]);
+    }
+    t.note(
+        "per-observation pairing: speedup = other/candidate makespan, \
+         tail redux = 1 - candidate/other tail time (positive = shorter)",
+    );
+    t.print();
 }
 
 /// Multi-iteration mean throughput (tokens/s).

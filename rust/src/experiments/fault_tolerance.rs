@@ -1,14 +1,18 @@
 //! `faults` experiment (extension beyond the paper): tail latency and
 //! wasted-work overhead under an *identical* deterministic fault script —
-//! Seer vs veRL vs StreamRL-Oracle.
+//! Seer vs veRL vs StreamRL-Oracle vs RollPacker, plus paired per-seed
+//! speedup/tail-reduction statistics for the tail-packing policy against
+//! every baseline (through the shared script in
+//! [`super::common::print_paired_vs`]).
 //!
 //! The script crashes one instance early, turns another into a straggler
 //! mid-run, scales a replacement in, and finally recovers the crashed
 //! instance — the elastic-fleet scenario Seer's divided rollout was built
 //! for (PAPER.md §4; Laminar makes the same argument for RL post-training
-//! at scale). All three systems replay the same script at the same
+//! at scale). All four systems replay the same script at the same
 //! virtual timestamps, so differences are pure scheduling policy: Seer's
-//! chunk-level leases bound the work resident on any one instance, so a
+//! and RollPacker's chunk-level leases bound the work resident on any
+//! one instance, so a
 //! crash loses less progress and the drained requests re-enter the LFS
 //! queue with their context intact; the baselines re-pin whole groups and
 //! re-prefill everything the crash destroyed.
@@ -19,7 +23,7 @@ use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_secs, Table};
 use crate::workload::InstanceId;
 
-use super::common::{runner, Scale};
+use super::common::{print_paired_vs, runner, PairedRow, Scale};
 
 pub fn run(scale: &Scale) -> anyhow::Result<()> {
     let preset = TaskPreset::Qwen2Vl72b;
@@ -65,18 +69,34 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
             "Recovery",
         ],
     );
-    // All three systems replay the same script concurrently (sweep
-    // runner); results come back in row order.
+    // All four systems replay the same script concurrently (sweep
+    // runner) at every paired seed; results come back in grid order
+    // (system-major, seed-minor).
     let systems = [
         ("veRL", "verl", SdStrategy::None),
         ("StreamRL-O", "streamrl", SdStrategy::None),
         ("SEER", "seer", SdStrategy::GroupedCst),
+        ("RollPacker", "rollpacker", SdStrategy::GroupedCst),
     ];
-    let reports = runner().try_map(&systems, |_, &(_, scheduler, sd)| {
-        scale.session(preset, scheduler, sd).faults(plan.clone()).run()
+    let seeds: Vec<u64> =
+        (0..scale.iters.max(2)).map(|i| scale.seed + i as u64).collect();
+    let mut items = Vec::new();
+    for &(_, scheduler, sd) in &systems {
+        for &seed in &seeds {
+            items.push((scheduler, sd, seed));
+        }
+    }
+    let reports = runner().try_map(&items, |_, &(scheduler, sd, seed)| {
+        scale
+            .session(preset, scheduler, sd)
+            .seed(seed)
+            .faults(plan.clone())
+            .run()
     })?;
-    for (&(label, _, _), report) in systems.iter().zip(&reports) {
-        let m = &report.metrics;
+    for (si, &(label, _, _)) in systems.iter().enumerate() {
+        // Table rows show the base seed; the paired statistics below
+        // use every seed.
+        let m = &reports[si * seeds.len()].metrics;
         anyhow::ensure!(
             m.instances_lost >= 1,
             "{label}: fault script never fired (horizon {horizon:.0}s)"
@@ -96,5 +116,26 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
          per-crash work loss and re-queues with context intact",
     );
     t.print();
+    // Paired speedup / tail-reduction of the tail-packing policy vs
+    // every baseline, from the same runs (shared script — common.rs).
+    let rows: Vec<PairedRow> = systems
+        .iter()
+        .enumerate()
+        .map(|(si, &(label, _, _))| {
+            let rs = &reports[si * seeds.len()..(si + 1) * seeds.len()];
+            PairedRow {
+                label: label.to_string(),
+                makespans: rs
+                    .iter()
+                    .map(|r| r.metrics.makespan.as_secs_f64())
+                    .collect(),
+                tails: rs
+                    .iter()
+                    .map(|r| r.metrics.tail_time(0.10).as_secs_f64())
+                    .collect(),
+            }
+        })
+        .collect();
+    print_paired_vs("faults", "RollPacker", &rows, scale.seed);
     Ok(())
 }

@@ -1,5 +1,8 @@
 //! Figure 7: end-to-end rollout throughput of RL systems across tasks and
-//! group sizes — veRL, veRL+vanilla-SD, StreamRL-Oracle, and SEER.
+//! group sizes — veRL, veRL+vanilla-SD, StreamRL-Oracle, SEER, and the
+//! RollPacker tail-packing policy, plus paired speedup/tail-reduction
+//! statistics for RollPacker against every other system (through the
+//! shared script in [`super::common::print_paired_vs`]).
 //!
 //! The measurement grid (system × group size × seed) fans out through
 //! the parallel [`crate::sweep::SweepRunner`]; results are order-restored
@@ -10,7 +13,7 @@ use crate::rollout::RolloutSession;
 use crate::spec::simmodel::SdStrategy;
 use crate::util::table::{fmt_x, Table};
 
-use super::common::{runner, Scale};
+use super::common::{print_paired_vs, runner, PairedRow, Scale};
 
 /// The paper's per-task vanilla SD baseline (§4.1).
 pub fn vanilla_sd_for(preset: TaskPreset) -> SdStrategy {
@@ -31,6 +34,7 @@ pub fn systems(
         ("veRL+SD", "verl", vanilla),
         ("StreamRL-Oracle", "streamrl", SdStrategy::None),
         ("SEER", "seer", SdStrategy::GroupedCst),
+        ("RollPacker", "rollpacker", SdStrategy::GroupedCst),
     ]
 }
 
@@ -60,14 +64,19 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
                 .sd_strategy(sd)
                 .seed(seed)
                 .run()?;
-            Ok(report.metrics.throughput())
+            let m = &report.metrics;
+            Ok((
+                m.throughput(),
+                m.makespan.as_secs_f64(),
+                m.tail_time(0.10).as_secs_f64(),
+            ))
         })?;
         let mean_tp = |si: usize, gi: usize| {
             let vals: Vec<f64> = items
                 .iter()
                 .zip(&tps)
                 .filter(|((s, g, ..), _)| *s == si && *g == gi)
-                .map(|(_, &tp)| tp)
+                .map(|(_, &(tp, _, _))| tp)
                 .collect();
             vals.iter().sum::<f64>() / vals.len() as f64
         };
@@ -90,6 +99,32 @@ pub fn run(scale: &Scale) -> anyhow::Result<()> {
         }
         t.note("paper: SEER gains 44-104% over veRL; StreamRL-Oracle can lose to veRL on kimi-k2");
         t.print();
+        // Paired statistics for the tail-packing policy vs every other
+        // system, over the aligned (group-size, seed) observations
+        // (shared script — common.rs).
+        let rows: Vec<PairedRow> = systems
+            .iter()
+            .enumerate()
+            .map(|(si, (label, _, _))| {
+                let mine: Vec<&(f64, f64, f64)> = items
+                    .iter()
+                    .zip(&tps)
+                    .filter(|((s, ..), _)| *s == si)
+                    .map(|(_, v)| v)
+                    .collect();
+                PairedRow {
+                    label: label.to_string(),
+                    makespans: mine.iter().map(|v| v.1).collect(),
+                    tails: mine.iter().map(|v| v.2).collect(),
+                }
+            })
+            .collect();
+        print_paired_vs(
+            &format!("fig7 {}", base.name),
+            "RollPacker",
+            &rows,
+            scale.seed,
+        );
     }
     Ok(())
 }

@@ -10,7 +10,10 @@
 //! synchronous RL systems), the *warm* one consumes the store from
 //! iteration 2 on. The warm driver's p99 finish time and tail time drop
 //! below both its own iteration 1 and the cold baseline's matching
-//! iterations.
+//! iterations. Both context-consuming schedulers (seer and the
+//! rollpacker tail-packing policy) run the identical warm/cold pairing,
+//! and the warm per-iteration samples feed the shared cross-policy
+//! paired statistics ([`super::common::print_paired_vs`]).
 
 use anyhow::Result;
 
@@ -18,7 +21,7 @@ use crate::config::TaskPreset;
 use crate::iteration::{IterationSummary, TrainingConfig, TrainingDriver};
 use crate::util::table::Table;
 
-use super::common::{runner, Scale};
+use super::common::{print_paired_vs, runner, PairedRow, Scale};
 
 /// Paired per-iteration measurements (same seed, same epochs).
 pub struct MultiIterResult {
@@ -34,9 +37,20 @@ impl MultiIterResult {
 }
 
 pub fn measure(scale: &Scale) -> Result<MultiIterResult> {
+    measure_scheduler(scale, "seer")
+}
+
+/// Warm/cold driver pair for one scheduling policy. Both schedulers in
+/// [`run`] go through this, so the warm-start comparison methodology is
+/// identical for seer and rollpacker.
+pub fn measure_scheduler(
+    scale: &Scale,
+    scheduler: &str,
+) -> Result<MultiIterResult> {
     let iters = scale.iters.max(3);
     let cfg = |warm: bool| TrainingConfig {
         system: scale.sys(&scale.workload(TaskPreset::Moonlight)),
+        scheduler: scheduler.to_string(),
         iters,
         seed: scale.seed,
         warm_start: warm,
@@ -54,13 +68,30 @@ pub fn measure(scale: &Scale) -> Result<MultiIterResult> {
 }
 
 pub fn run(scale: &Scale) -> Result<()> {
-    let r = measure(scale)?;
+    let mut warm_rows: Vec<PairedRow> = Vec::new();
+    for scheduler in ["seer", "rollpacker"] {
+        let r = measure_scheduler(scale, scheduler)?;
+        print_scheduler(scheduler, &r);
+        // Warm per-iteration samples feed the cross-policy paired
+        // statistics below (iterations are seed/epoch-aligned).
+        warm_rows.push(PairedRow {
+            label: scheduler.to_string(),
+            makespans: r.warm.iter().map(|s| s.makespan_secs).collect(),
+            tails: r.warm.iter().map(|s| s.tail_secs).collect(),
+        });
+    }
+    print_paired_vs("multi-iter warm", "rollpacker", &warm_rows, scale.seed);
+    Ok(())
+}
+
+fn print_scheduler(scheduler: &str, r: &MultiIterResult) {
     println!(
-        "Cross-iteration context store: {} GRPO iterations, same seed/epochs",
+        "Cross-iteration context store ({scheduler}): {} GRPO iterations, \
+         same seed/epochs",
         r.cold.len()
     );
     let mut t = Table::new(
-        "multi-iter: warm vs cold long-tail latency",
+        &format!("multi-iter ({scheduler}): warm vs cold long-tail latency"),
         &[
             "iter",
             "cold p99 (s)",
@@ -91,5 +122,4 @@ pub fn run(scale: &Scale) -> Result<()> {
          offer yet; from iteration 2 the warm run consumes last epoch's \
          learned context)"
     );
-    Ok(())
 }

@@ -30,7 +30,7 @@ schedulers and SD strategies resolved by name from the policy registry.
 USAGE:
   seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|all>
        [--full] [--seed N] [--iters N]
-  seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|no-context|oracle>]
+  seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|rollpacker|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
        [--faults FILE] [--json] [--profile]
   seer sweep [--task <moonlight|qwen|kimi>] [--schedulers a,b,c] [--sd S]
@@ -170,7 +170,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let workload = scale.workload(preset);
     let system = scale.sys(&workload);
     let schedulers: Vec<String> = args
-        .get_or("schedulers", "seer,verl,streamrl")
+        .get_or("schedulers", "seer,verl,streamrl,rollpacker")
         .split(',')
         .filter(|s| !s.is_empty())
         .map(str::to_string)

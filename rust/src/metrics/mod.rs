@@ -72,6 +72,12 @@ pub struct RolloutMetrics {
     pub fault_recovery_time: SimTime,
     /// Fault-drained requests re-admitted onto a live instance.
     pub fault_recovered: u64,
+    // --- tail packing (rollpacker; zero for other policies) ----------
+    /// Requests the scheduler diverted onto its tail-packing path.
+    pub tail_packed: u64,
+    /// Generated tokens those requests carried when first diverted (the
+    /// progress that resumed packed instead of restarting).
+    pub tail_resume_tokens: u64,
 }
 
 impl RolloutMetrics {

@@ -14,7 +14,8 @@ use std::collections::BTreeMap;
 use anyhow::{anyhow, Result};
 
 use crate::scheduler::{
-    ContextMode, Scheduler, SeerScheduler, StreamRlOracle, VerlScheduler,
+    ContextMode, RollPackerScheduler, Scheduler, SeerScheduler,
+    StreamRlOracle, VerlScheduler,
 };
 use crate::spec::simmodel::SdStrategy;
 
@@ -49,6 +50,9 @@ impl PolicyRegistry {
         });
         r.register_scheduler("verl", || Box::new(VerlScheduler::new()));
         r.register_scheduler("streamrl", || Box::new(StreamRlOracle::new()));
+        r.register_scheduler("rollpacker", || {
+            Box::new(RollPackerScheduler::new())
+        });
         for sd in [
             SdStrategy::None,
             SdStrategy::GroupedCst,
@@ -118,7 +122,14 @@ mod tests {
         let r = PolicyRegistry::builtin();
         assert_eq!(
             r.scheduler_names(),
-            vec!["no-context", "oracle", "seer", "streamrl", "verl"]
+            vec![
+                "no-context",
+                "oracle",
+                "rollpacker",
+                "seer",
+                "streamrl",
+                "verl"
+            ]
         );
         assert_eq!(
             r.sd_names(),

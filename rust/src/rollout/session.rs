@@ -144,6 +144,12 @@ impl RolloutReport {
             Json::Num(m.spec_accepted_tokens as f64),
         );
         put("tau", Json::Num(m.mean_acceptance_len()));
+        // Tail packing (zero for policies without tail lanes).
+        put("tail_packed", Json::Num(m.tail_packed as f64));
+        put(
+            "tail_resume_tokens",
+            Json::Num(m.tail_resume_tokens as f64),
+        );
         // Fault & elasticity layer (all zero on a healthy run).
         put("aborted", Json::Num(m.aborted as f64));
         put("instances_lost", Json::Num(m.instances_lost as f64));

@@ -7,10 +7,12 @@
 //! acting (defense in depth: a buggy policy cannot corrupt accounting).
 
 pub mod lazyheap;
+pub mod rollpacker;
 pub mod seer;
 pub mod streamrl;
 pub mod verl;
 
+pub use rollpacker::RollPackerScheduler;
 pub use seer::{ContextMode, SeerScheduler};
 pub use streamrl::StreamRlOracle;
 pub use verl::VerlScheduler;
@@ -153,6 +155,15 @@ pub trait Scheduler {
     /// conventional baselines).
     fn uses_global_pool(&self) -> bool {
         true
+    }
+
+    /// Tail-packing telemetry, read once by the driver at finalize time:
+    /// `(tail_packed, tail_resume_tokens)` — how many requests this
+    /// policy diverted onto its tail-packing path, and the generated
+    /// tokens those requests carried when first diverted. Policies
+    /// without a tail-packing path report zeros.
+    fn tail_stats(&self) -> (u64, u64) {
+        (0, 0)
     }
 }
 

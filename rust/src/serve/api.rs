@@ -511,6 +511,43 @@ mod tests {
     }
 
     #[test]
+    fn accepts_every_registered_scheduler_in_jobs() {
+        // `check_policies` resolves through the builtin registry, so a
+        // newly registered policy (e.g. rollpacker) must be submittable
+        // both as a rollout job and inside a sweep's scheduler list
+        // without touching the serve layer.
+        for name in crate::rollout::PolicyRegistry::builtin()
+            .scheduler_names()
+        {
+            let line = format!(
+                r#"{{"verb":"submit","job":{{"kind":"rollout","scheduler":"{name}"}}}}"#
+            );
+            let r = Request::parse(&line).unwrap();
+            let Request::Submit {
+                spec: JobSpec::Rollout(p),
+                ..
+            } = r
+            else {
+                panic!("{name}: not a rollout submit")
+            };
+            assert_eq!(p.scheduler, name);
+        }
+        let r = Request::parse(
+            r#"{"verb":"submit","job":{"kind":"sweep","schedulers":["seer","verl","streamrl","rollpacker"]}}"#,
+        )
+        .unwrap();
+        let Request::Submit {
+            spec: JobSpec::Sweep(p),
+            ..
+        } = r
+        else {
+            panic!("not a sweep submit")
+        };
+        assert_eq!(p.schedulers.len(), 4);
+        assert_eq!(p.schedulers[3], "rollpacker");
+    }
+
+    #[test]
     fn rejects_bad_requests_with_reasons() {
         for (line, needle) in [
             ("nonsense", "parse"),

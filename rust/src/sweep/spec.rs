@@ -296,6 +296,8 @@ impl SweepCell {
             throughput_tok_s: m.throughput(),
             tail_secs: m.tail_time(0.10).as_secs_f64(),
             p99_finish_secs: m.finish_percentile(99.0),
+            tail_packed: m.tail_packed,
+            tail_resume_tokens: m.tail_resume_tokens,
             tokens: m.tokens_generated,
             completions: m.completions.len(),
             preemptions: m.preemptions,
@@ -321,6 +323,9 @@ pub struct CellResult {
     pub throughput_tok_s: f64,
     pub tail_secs: f64,
     pub p99_finish_secs: f64,
+    /// Tail-packing telemetry (zero for policies without tail lanes).
+    pub tail_packed: u64,
+    pub tail_resume_tokens: u64,
     pub tokens: u64,
     pub completions: usize,
     pub preemptions: u64,
@@ -345,6 +350,11 @@ impl CellResult {
         put("throughput_tok_s", Json::Num(self.throughput_tok_s));
         put("tail_secs", Json::Num(self.tail_secs));
         put("p99_finish_secs", Json::Num(self.p99_finish_secs));
+        put("tail_packed", Json::Num(self.tail_packed as f64));
+        put(
+            "tail_resume_tokens",
+            Json::Num(self.tail_resume_tokens as f64),
+        );
         put("tokens", Json::Num(self.tokens as f64));
         put("completions", Json::Num(self.completions as f64));
         put("preemptions", Json::Num(self.preemptions as f64));

@@ -62,22 +62,42 @@ pub fn check_golden_text(text: &str, path: &Path) {
     );
 }
 
+/// Self-describing header written into (and accepted from) key-schema
+/// fixtures, so the regen path travels with the file instead of living
+/// only in test docs.
+const GOLDEN_KEYS_DOC: &str = "Golden JSON key-path schema. Regen: \
+     SEER_REGEN_GOLDEN=1 cargo test -q (then commit this file). Arrays \
+     descend into their first element as [].";
+
 /// Golden key-schema check: compare `keys` against the fixture at
 /// `path`, or — with `SEER_REGEN_GOLDEN` set — rewrite the fixture from
 /// the current keys and pass (commit the updated file).
+///
+/// Fixture format: `{"_doc": <regen instructions>, "keys": [...]}` —
+/// the header documents the `SEER_REGEN_GOLDEN` regen path inside the
+/// fixture itself. A bare JSON array (the pre-ISSUE-7 format) is still
+/// accepted on read; regeneration always writes the object form.
 pub fn check_golden_keys(keys: &[String], path: &Path) {
+    let arr = Json::Arr(keys.iter().map(|k| Json::Str(k.clone())).collect());
     if std::env::var("SEER_REGEN_GOLDEN").is_ok() {
-        let arr =
-            Json::Arr(keys.iter().map(|k| Json::Str(k.clone())).collect());
-        std::fs::write(path, arr.to_string()).unwrap();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("_doc".to_string(), Json::Str(GOLDEN_KEYS_DOC.to_string()));
+        obj.insert("keys".to_string(), arr);
+        std::fs::write(path, Json::Obj(obj).to_string()).unwrap();
         eprintln!("regenerated {path:?} ({} keys)", keys.len());
         return;
     }
     let golden_text = std::fs::read_to_string(path).unwrap();
-    let golden: Vec<String> = Json::parse(&golden_text)
-        .unwrap()
+    let parsed = Json::parse(&golden_text).unwrap();
+    let golden_arr = match &parsed {
+        Json::Obj(_) => parsed
+            .get("keys")
+            .expect("object-form golden fixture must have a 'keys' field"),
+        _ => &parsed,
+    };
+    let golden: Vec<String> = golden_arr
         .as_arr()
-        .expect("golden fixture must be a JSON array")
+        .expect("golden fixture keys must be a JSON array")
         .iter()
         .map(|j| j.as_str().unwrap().to_string())
         .collect();

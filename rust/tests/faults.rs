@@ -109,7 +109,7 @@ fn determinism_same_seed_same_plan_identical_report() {
 
 #[test]
 fn no_request_lost_under_down_and_scale_any_scheduler() {
-    for scheduler in ["seer", "verl", "streamrl"] {
+    for scheduler in ["seer", "verl", "streamrl", "rollpacker"] {
         let horizon = clean_makespan(scheduler, 7);
         let plan = crash_and_scale_plan(horizon);
         let report = run(scheduler, 7, plan);

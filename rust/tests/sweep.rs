@@ -174,10 +174,12 @@ fn report_aggregates_and_pairs_cover_the_grid() {
 /// `SEER_REGEN_GOLDEN=1 cargo test -q --test sweep sweep_report_schema`
 /// rewrites `tests/fixtures/sweep_golden_keys.json` and passes; commit
 /// the updated fixture.
-/// Value-level golden (ISSUE 5): the optimized schedulers — O(1)
-/// lifecycle counters, incremental lazy-heap candidate ordering, dense
-/// side tables — must produce byte-identical sweep report JSON to the
-/// checked-in fixture for the same seeds, across all three policies.
+/// Value-level golden (ISSUE 5, extended by ISSUE 7 with the rollpacker
+/// tail-packing policy): the optimized schedulers — O(1) lifecycle
+/// counters, incremental lazy-heap candidate ordering, dense side
+/// tables — must produce byte-identical sweep report JSON to the
+/// checked-in fixture for the same seeds, across all four comparison
+/// policies.
 ///
 /// Honest scope: the fixture freezes the report bytes **from the commit
 /// that seeds it forward** — it is the standing tripwire that future
@@ -198,7 +200,7 @@ fn report_aggregates_and_pairs_cover_the_grid() {
 #[test]
 fn sweep_report_bytes_match_golden_fixture() {
     let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
-        .schedulers(&["seer", "verl", "streamrl"])
+        .schedulers(&["seer", "verl", "streamrl", "rollpacker"])
         .seeds([1, 2]);
     let json = SweepRunner::new(2)
         .run(&spec)
