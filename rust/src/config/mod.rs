@@ -99,6 +99,14 @@ pub struct SystemConfig {
     /// every other scheduler). Clamped to at least one lane — and at
     /// least one general lane — whenever two or more instances are live.
     pub tail_lane_frac: f64,
+    /// Bubble drafting (BubbleSpec-style): fraction of end-of-rollout
+    /// idle-instance capacity redirected into extra draft generation for
+    /// the remaining stragglers. When > 0 and some instances have
+    /// drained with no request waiting, each still-busy instance's draft
+    /// budget deepens toward `gamma_max` and the offloaded share of its
+    /// draft cost leaves the critical path. 0.0 (the default) disables
+    /// the mechanism entirely.
+    pub bubble_draft_frac: f64,
 }
 
 impl Default for SystemConfig {
@@ -113,6 +121,7 @@ impl Default for SystemConfig {
             starvation_guard_frac: 0.05,
             kv_target_util: 0.92,
             tail_lane_frac: 0.25,
+            bubble_draft_frac: 0.0,
         }
     }
 }

@@ -73,6 +73,20 @@ struct GroupProgress {
     warm_ctx: bool,
 }
 
+/// Per-interval bubble-drafting terms (BubbleSpec-style): set at plan
+/// time when end-of-rollout idle capacity backs this instance's draft
+/// generation, consumed at commit time scaled by the steps actually
+/// run. Zeroed whenever an interval plans without an active bubble, so
+/// stale terms never leak into later intervals.
+#[derive(Debug, Clone, Copy, Default)]
+struct BubbleStep {
+    /// Draft seconds offloaded to idle instances, per engine step.
+    draft_secs: f64,
+    /// Expected extra accepted tokens per step (Σ over the batch of the
+    /// γ-uplift acceptance-rate delta).
+    rate_delta: f64,
+}
+
 /// Wall-time attribution of the event loop (`seer rollout --profile`):
 /// where the host CPU goes, without reaching for an external profiler.
 /// Collected only when profiling is enabled — the disabled path costs
@@ -179,6 +193,19 @@ pub struct ClusterSim {
     /// running request-intervals (for the τ metric).
     accept_len_weighted: f64,
     accept_steps: f64,
+    /// Policy drift since the warm-start priors were recorded (0 when
+    /// cold or same-policy). Discounts warm reference streams in the SD
+    /// acceptance model — RhymeRL-style history replay: old-policy
+    /// streams draft well while the policy still rhymes with the one
+    /// that produced them, and fade as it moves.
+    warm_drift: f64,
+    /// Per-instance bubble-drafting terms for the interval in flight,
+    /// indexed by instance (dense side table, resized on scale-up).
+    bubble_interval: Vec<BubbleStep>,
+    /// Σ virtual draft seconds offloaded to idle instances.
+    bubble_draft_secs: f64,
+    /// Σ expected extra accepted tokens from bubble γ uplift.
+    bubble_accept_est: f64,
     /// Upper bound on events (runaway guard).
     max_events: u64,
     schedule_dirty: bool,
@@ -241,6 +268,7 @@ impl ClusterSim {
             group_progress.push(GroupProgress::default());
         }
         let n_reqs = buffer.len();
+        let n_inst = instances.len();
         ClusterSim {
             cost: CostModel::new(&cfg.hw),
             spec: SpecSim::new(sd).with_richness(cfg.sd_richness),
@@ -262,6 +290,10 @@ impl ClusterSim {
             load_ticks: Vec::new(),
             accept_len_weighted: 0.0,
             accept_steps: 0.0,
+            warm_drift: 0.0,
+            bubble_interval: vec![BubbleStep::default(); n_inst],
+            bubble_draft_secs: 0.0,
+            bubble_accept_est: 0.0,
             max_events: 50_000_000,
             schedule_dirty: true,
             observers: ObserverHub::new(),
@@ -317,10 +349,19 @@ impl ClusterSim {
     /// the length priors (via [`Scheduler::warm_start`]) and the SD model
     /// starts each group with its historical reference-stream count
     /// instead of zero. A no-op with empty priors.
+    ///
+    /// `drift` is the policy drift (epoch-drift sigma) accumulated since
+    /// the priors were recorded: warm reference streams are discounted
+    /// by it inside the acceptance model ([`SpecCtx::effective_refs`]),
+    /// so same-policy replay drafts like fresh siblings while
+    /// far-drifted history is worth nothing. Fresh in-rollout siblings
+    /// are never discounted.
     pub fn with_warm_context(
         mut self,
         priors: &crate::iteration::ContextPriors,
+        drift: f64,
     ) -> Self {
+        self.warm_drift = drift.max(0.0);
         let consumed = self.scheduler.warm_start(priors);
         // Warm reference streams model CST *contents*, which exist
         // independent of the scheduling policy — they apply even when a
@@ -525,6 +566,10 @@ impl ClusterSim {
         let (tail_packed, tail_resume) = self.scheduler.tail_stats();
         self.metrics.tail_packed = tail_packed;
         self.metrics.tail_resume_tokens = tail_resume;
+        self.metrics.bubble_draft_time =
+            SimTime::from_secs_f64(self.bubble_draft_secs);
+        self.metrics.bubble_accept_tokens =
+            self.bubble_accept_est.round() as u64;
         if self.verify_invariants {
             self.assert_runtime_invariants();
         }
@@ -608,6 +653,8 @@ impl ClusterSim {
                 self.metrics
                     .busy_time
                     .resize(self.instances.len(), SimTime::ZERO);
+                self.bubble_interval
+                    .resize(self.instances.len(), BubbleStep::default());
                 self.metrics.instances_added += n as u64;
                 let added: Vec<InstanceId> = (start..start + n)
                     .map(|i| InstanceId(i as u32))
@@ -828,10 +875,13 @@ impl ClusterSim {
         for id in &ids {
             let r = self.buffer.get(*id);
             let gp = self.group_progress[r.group().0 as usize];
-            // References the group CST holds: finished siblings plus
-            // concurrently-running ones (their prefixes are aggregated),
-            // plus discounted streams surviving from previous iterations.
-            let refs = gp.finished + gp.running.saturating_sub(1) + gp.warm_refs;
+            // Fresh references the group CST holds: finished siblings
+            // plus concurrently-running ones (their prefixes are
+            // aggregated). Streams surviving from previous iterations
+            // travel separately in `warm_refs` — the acceptance model
+            // discounts them by policy drift (RhymeRL history replay)
+            // instead of counting them like same-policy siblings.
+            let fresh = gp.finished + gp.running.saturating_sub(1);
             // Probes only get the high-priority SD budget while the
             // group is truly context-less — the same condition the
             // scheduler's probe-skip uses (finish signal or warm prior).
@@ -845,7 +895,9 @@ impl ClusterSim {
                 *id,
                 SpecCtx {
                     generated: r.generated,
-                    group_refs: refs,
+                    group_refs: fresh,
+                    warm_refs: gp.warm_refs,
+                    drift: self.warm_drift,
                     top_k,
                 },
                 hp,
@@ -868,6 +920,12 @@ impl ClusterSim {
                         .map(|(_, c, _)| c.group_refs)
                         .sum::<usize>()
                         / batch,
+                    warm_refs: ctxs
+                        .iter()
+                        .map(|(_, c, _)| c.warm_refs)
+                        .sum::<usize>()
+                        / batch,
+                    drift: self.warm_drift,
                     top_k: ctxs[0].1.top_k,
                 };
                 let beta =
@@ -913,17 +971,67 @@ impl ClusterSim {
             }
         };
 
+        // --- Bubble drafting (BubbleSpec, §PAPERS.md) --------------------
+        // Near end-of-rollout, drained instances sit idle while the
+        // stragglers finish. With the knob on, that spare capacity backs
+        // extra draft generation for the still-busy instances: γ deepens
+        // toward γ_max and the offloaded share of the draft cost leaves
+        // the critical path. Only fires when idle peers exist AND no
+        // request is waiting — otherwise idle capacity would be serving
+        // real work, not bubbles. The fleet scan is gated on the knob,
+        // so the default path pays one float compare.
+        let bubble_boost = if self.sys.bubble_draft_frac > 0.0
+            && self.buffer.n_waiting() == 0
+        {
+            let mut idle = 0usize;
+            let mut working = 0usize;
+            for inst in &self.instances {
+                if !inst.up {
+                    continue;
+                }
+                if inst.running.is_empty() && inst.pending.is_empty() {
+                    idle += 1;
+                } else {
+                    working += 1;
+                }
+            }
+            if idle > 0 && working > 0 {
+                (self.sys.bubble_draft_frac * idle as f64 / working as f64)
+                    .min(1.0)
+            } else {
+                0.0
+            }
+        } else {
+            0.0
+        };
+
         // --- Rates -------------------------------------------------------
         let inst = &mut self.instances[idx];
         let mut min_steps = u64::MAX;
+        let mut bubble_rate_delta = 0.0f64;
         for (id, ctx, hp) in &ctxs {
-            let gamma = if *hp { gamma_h } else { gamma_l };
+            let base_gamma = if *hp { gamma_h } else { gamma_l };
+            let gamma = self.spec.bubble_gamma(
+                base_gamma,
+                self.sys.gamma_max,
+                bubble_boost,
+            );
             let alpha = self.spec.alpha(ctx);
             let rate = if gamma == 0 {
                 1.0
             } else {
                 CostModel::expected_accept_len(gamma, alpha)
             };
+            if gamma > base_gamma {
+                // Expected extra accepted tokens per step from the
+                // bubble-deepened draft budget.
+                let base_rate = if base_gamma == 0 {
+                    1.0
+                } else {
+                    CostModel::expected_accept_len(base_gamma, alpha)
+                };
+                bubble_rate_delta += rate - base_rate;
+            }
             let r = self.buffer.get(*id);
             let budget =
                 r.remaining_true().min(r.chunk_remaining).max(1);
@@ -992,8 +1100,24 @@ impl ClusterSim {
             / batch as f64)
             .round() as u32;
         let _ = max_gamma;
-        let step_time = self.cost.step_time(batch, kv_tokens, positions)
-            + self.spec.draft_cost(batch, mean_gamma);
+        // The bubble-offloaded share of draft generation runs on idle
+        // instances, so only the remainder stays on this instance's
+        // critical path (inert at boost 0: `bubble_draft_cost` is then
+        // exactly `draft_cost`).
+        let full_draft = self.spec.draft_cost(batch, mean_gamma);
+        let paid_draft =
+            self.spec.bubble_draft_cost(batch, mean_gamma, bubble_boost);
+        let step_time =
+            self.cost.step_time(batch, kv_tokens, positions) + paid_draft;
+        // Record this interval's bubble terms; commits scale them by the
+        // steps actually run. Written unconditionally so an interval
+        // planned without a bubble zeroes any stale entry.
+        self.bubble_interval[idx] = BubbleStep {
+            draft_secs: (full_draft.as_secs_f64()
+                - paid_draft.as_secs_f64())
+            .max(0.0),
+            rate_delta: bubble_rate_delta,
+        };
         // Straggler model: a slowed instance pays `slow_factor`× the
         // modeled step time until it recovers.
         let step_us = ((step_time.as_micros().max(1) as f64)
@@ -1091,6 +1215,14 @@ impl ClusterSim {
         let commit = self.instances[idx].commit_until(now);
         if commit.gained.is_empty() {
             return false;
+        }
+        // Bubble drafting: charge the interval's per-step offload/uplift
+        // terms for the steps that actually ran (intervals close early on
+        // arrivals and faults, so plan-time totals would over-count).
+        let bs = self.bubble_interval[idx];
+        if bs.draft_secs > 0.0 || bs.rate_delta > 0.0 {
+            self.bubble_draft_secs += bs.draft_secs * commit.steps;
+            self.bubble_accept_est += bs.rate_delta * commit.steps;
         }
         let mut completed = Vec::new();
         let mut chunk_ended = Vec::new();

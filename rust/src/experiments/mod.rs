@@ -18,6 +18,7 @@ pub mod fig7_throughput;
 pub mod fig8_tail;
 pub mod fig9_seer_util;
 pub mod multi_iter;
+pub mod sd_realism;
 pub mod table1_phases;
 pub mod table2_acceptance;
 pub mod table3_config;
@@ -45,6 +46,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "fig12" => fig12_partial::run(&scale),
         "multi-iter" => multi_iter::run(&scale),
         "faults" => fault_tolerance::run(&scale),
+        "sd-realism" => sd_realism::run(&scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n================ {id} ================");
@@ -58,7 +60,8 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 15] = [
+pub const ALL_IDS: [&str; 16] = [
     "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
     "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter", "faults",
+    "sd-realism",
 ];

@@ -276,7 +276,12 @@ impl TrainingDriver {
             .groups(w.groups);
         let warm = cfg.warm_start && !self.store.is_empty();
         if warm {
-            builder = builder.context_store(&self.store);
+            // The store's streams are one epoch old, so the policy has
+            // drifted by exactly the per-epoch sigma since they were
+            // recorded — the SD model discounts warm references by it.
+            builder = builder
+                .context_store(&self.store)
+                .warm_drift(cfg.drift);
         }
         if let Some(obs) = observer {
             builder = builder.observer(obs);

@@ -28,14 +28,14 @@ discrete-event cluster simulator and the real-model engine, with
 schedulers and SD strategies resolved by name from the policy registry.
 
 USAGE:
-  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|all>
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|sd-realism|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|rollpacker|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
-       [--faults FILE] [--json] [--profile]
+       [--faults FILE] [--bubble F] [--json] [--profile]
   seer sweep [--task <moonlight|qwen|kimi>] [--schedulers a,b,c] [--sd S]
        [--seeds N] [--seed BASE] [--scales a,b] [--drifts x,y] [--faults FILE]
-       [--threads N] [--out FILE] [--bench-out FILE] [--full]
+       [--bubble F] [--threads N] [--out FILE] [--bench-out FILE] [--full]
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
        [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
@@ -51,6 +51,11 @@ USAGE:
   vs observer emission, pass counts, mean waiting-set size) — perf
   attribution without an external profiler. Wall clock never enters the
   report, so --profile cannot change any emitted number.
+
+  rollout/sweep --bubble F sets the bubble-drafting fraction
+  (SystemConfig::bubble_draft_frac, BubbleSpec-style): end-of-rollout
+  idle instances back deeper draft windows for the stragglers. 0 (the
+  default) disables it; `seer experiment sd-realism` measures the gain.
 
   rollout --faults FILE replays a deterministic fault & elasticity script
   (JSON: instance crashes, stragglers, recoveries, scale events, request
@@ -96,7 +101,8 @@ fn cmd_rollout(args: &Args) -> Result<()> {
         args,
     );
     let cfg = scale.workload(preset);
-    let sys = scale.sys(&cfg);
+    let mut sys = scale.sys(&cfg);
+    sys.bubble_draft_frac = args.get_f64("bubble", 0.0);
     let json = args.has_flag("json");
     let mut builder = RolloutSession::builder()
         .workload(cfg.clone())
@@ -168,7 +174,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         args,
     );
     let workload = scale.workload(preset);
-    let system = scale.sys(&workload);
+    let mut system = scale.sys(&workload);
+    system.bubble_draft_frac = args.get_f64("bubble", 0.0);
     let schedulers: Vec<String> = args
         .get_or("schedulers", "seer,verl,streamrl,rollpacker")
         .split(',')

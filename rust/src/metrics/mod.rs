@@ -78,6 +78,13 @@ pub struct RolloutMetrics {
     /// Generated tokens those requests carried when first diverted (the
     /// progress that resumed packed instead of restarting).
     pub tail_resume_tokens: u64,
+    // --- bubble drafting (BubbleSpec; zero with the knob off) ---------
+    /// Virtual draft-generation time offloaded onto end-of-rollout idle
+    /// instances (removed from busy instances' critical path).
+    pub bubble_draft_time: SimTime,
+    /// Expected extra accepted tokens contributed by the bubble-deepened
+    /// draft budgets (γ uplift toward γ_max on straggler instances).
+    pub bubble_accept_tokens: u64,
 }
 
 impl RolloutMetrics {

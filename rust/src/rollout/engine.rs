@@ -263,7 +263,12 @@ impl<'m> RealRollout<'m> {
             gs.sort();
             gs.dedup();
             for gid in &gs {
-                server.register_group(&format!("g{}", gid.0), 3600);
+                // TTL in logical server ticks (messages), not seconds:
+                // groups must outlive every update of this rollout.
+                server.register_group(
+                    &format!("g{}", gid.0),
+                    DraftServer::DEFAULT_TTL_TICKS,
+                );
             }
             gs.iter().map(|gi| format!("g{}", gi.0)).collect()
         };

@@ -150,6 +150,15 @@ impl RolloutReport {
             "tail_resume_tokens",
             Json::Num(m.tail_resume_tokens as f64),
         );
+        // Bubble drafting (zero with the knob off).
+        put(
+            "bubble_draft_secs",
+            Json::Num(m.bubble_draft_time.as_secs_f64()),
+        );
+        put(
+            "bubble_accept_tokens",
+            Json::Num(m.bubble_accept_tokens as f64),
+        );
         // Fault & elasticity layer (all zero on a healthy run).
         put("aborted", Json::Num(m.aborted as f64));
         put("instances_lost", Json::Num(m.instances_lost as f64));
@@ -207,6 +216,9 @@ pub struct SimBackend {
     groups: Option<Vec<GroupSpec>>,
     /// Cross-iteration warm-start context.
     priors: Option<ContextPriors>,
+    /// Policy drift since the warm priors were recorded (discounts warm
+    /// reference streams in the SD acceptance model; 0 = same policy).
+    warm_drift: f64,
     /// Deterministic fault & elasticity script.
     faults: Option<FaultPlan>,
     /// Wall-time event-loop breakdown to stderr (`--profile`).
@@ -251,7 +263,7 @@ impl RolloutBackend for SimBackend {
         )
         .with_observers(observers);
         if let Some(priors) = self.priors.take() {
-            sim = sim.with_warm_context(&priors);
+            sim = sim.with_warm_context(&priors, self.warm_drift);
         }
         if let Some(n) = self.stop_after {
             sim = sim.stop_after(n);
@@ -397,6 +409,7 @@ pub struct RolloutSessionBuilder<'m> {
     sample_interval: Option<SimTime>,
     groups: Option<Vec<GroupSpec>>,
     priors: Option<ContextPriors>,
+    warm_drift: f64,
     faults: Option<FaultPlan>,
     profile: bool,
     real: Option<(&'m ModelRuntime, RealRolloutConfig)>,
@@ -418,6 +431,7 @@ impl<'m> RolloutSessionBuilder<'m> {
             sample_interval: None,
             groups: None,
             priors: None,
+            warm_drift: 0.0,
             faults: None,
             profile: false,
             real: None,
@@ -513,6 +527,17 @@ impl<'m> RolloutSessionBuilder<'m> {
         self
     }
 
+    /// Policy drift accumulated since the warm-start priors were
+    /// recorded (epoch-drift sigma; simulated backend). The SD
+    /// acceptance model discounts warm reference streams by it —
+    /// RhymeRL-style history replay fades as the policy moves. Ignored
+    /// without priors; 0 (the default) treats history like fresh
+    /// same-policy streams.
+    pub fn warm_drift(mut self, drift: f64) -> Self {
+        self.warm_drift = drift.max(0.0);
+        self
+    }
+
     /// Simulated backend: replay a deterministic fault & elasticity
     /// script ([`FaultPlan`]) during the rollout — instance crashes,
     /// stragglers, recoveries, elastic scale events and request aborts
@@ -578,12 +603,13 @@ impl<'m> RolloutSessionBuilder<'m> {
                 || self.sample_interval.is_some()
                 || self.groups.is_some()
                 || self.faults.is_some()
+                || self.warm_drift != 0.0
                 || self.profile
             {
                 bail!(
                     "scheduler/sd/seed/system/n_instances/stop_after/\
-                     sample_interval/groups/faults/profile are \
-                     simulator-only; configure the real engine via \
+                     sample_interval/groups/faults/warm_drift/profile \
+                     are simulator-only; configure the real engine via \
                      RealRolloutConfig"
                 );
             }
@@ -625,6 +651,7 @@ impl<'m> RolloutSessionBuilder<'m> {
                 sample_interval: self.sample_interval,
                 groups: self.groups,
                 priors: self.priors,
+                warm_drift: self.warm_drift,
                 faults: self.faults,
                 profile: self.profile,
             }),

@@ -38,6 +38,9 @@ pub struct RolloutParams {
     pub scheduler: String,
     pub sd: String,
     pub seed: u64,
+    /// Bubble-drafting fraction (`SystemConfig::bubble_draft_frac`);
+    /// 0 disables, validated into `[0, 1]` at parse time.
+    pub bubble: f64,
     /// Paper-scale workload instead of the test-scale variant.
     pub full: bool,
 }
@@ -181,8 +184,12 @@ impl JobSpec {
                     scheduler: opt_str(j, "scheduler", "seer")?,
                     sd: opt_str(j, "sd", "grouped-cst")?,
                     seed: opt_u64(j, "seed", 42)?,
+                    bubble: opt_f64(j, "bubble", 0.0)?,
                     full,
                 };
+                if !(p.bubble.is_finite() && (0.0..=1.0).contains(&p.bubble)) {
+                    bail!("rollout bubble must be in [0, 1]");
+                }
                 preset(&p.task)?;
                 check_policies(&p.scheduler, &p.sd)?;
                 Ok(JobSpec::Rollout(p))
@@ -268,6 +275,7 @@ impl JobSpec {
                 put("scheduler", Json::Str(p.scheduler.clone()));
                 put("sd", Json::Str(p.sd.clone()));
                 put("seed", Json::Num(p.seed as f64));
+                put("bubble", Json::Num(p.bubble));
                 put("full", Json::Bool(p.full));
             }
             JobSpec::Sweep(p) => {
@@ -320,8 +328,13 @@ impl RolloutParams {
     /// The session this job runs — public so a test can run the *same*
     /// rollout directly and compare event streams / reports.
     pub fn session(&self) -> Result<RolloutSessionBuilder<'static>> {
+        let sys = crate::config::SystemConfig {
+            bubble_draft_frac: self.bubble,
+            ..Default::default()
+        };
         Ok(RolloutSession::builder()
             .workload(workload_of(&self.task, self.full)?)
+            .system(sys)
             .scheduler(&self.scheduler)
             .sd(&self.sd)
             .seed(self.seed))
@@ -483,6 +496,7 @@ mod tests {
                 scheduler: "verl".into(),
                 sd: "none".into(),
                 seed: 7,
+                bubble: 0.5,
                 full: false,
             }),
             JobSpec::Sweep(SweepParams {
@@ -569,6 +583,10 @@ mod tests {
             (
                 r#"{"verb":"submit","job":{"kind":"rollout","seed":"x"}}"#,
                 "'seed'",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"rollout","bubble":1.5}}"#,
+                "bubble",
             ),
             (
                 r#"{"verb":"submit","job":{"kind":"train","iters":0}}"#,

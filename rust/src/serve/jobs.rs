@@ -591,6 +591,7 @@ mod tests {
             scheduler: "seer".into(),
             sd: "grouped-cst".into(),
             seed: 42,
+            bubble: 0.0,
             full: false,
         })
     }

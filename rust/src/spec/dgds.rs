@@ -14,12 +14,19 @@
 //! * `fetch_cst(group_ids) -> handles` (incremental: handles are shared)
 //! * `register_group(group_id, ttl)`
 //! * `batch_speculate(...)` on [`DraftClient`]
+//!
+//! Group lifetime is driven by a **logical clock** — one tick per
+//! message the server processes — never by host wall time, so expiry is
+//! a pure function of the message sequence (deterministic replay). An
+//! expired group leaves a tombstone: late `update_cst`/`warm_start`
+//! traffic for it is dropped rather than silently resurrecting the
+//! group with a fresh default lifetime; resurrection requires an
+//! explicit [`DraftServer::register_group`].
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
 
 use super::cst::Cst;
 use super::multipath::{speculate_multipath, DraftPath};
@@ -35,7 +42,8 @@ enum Msg {
     },
     Register {
         group: String,
-        ttl: Duration,
+        /// Lifetime in logical ticks (messages processed after this one).
+        ttl: u64,
     },
     /// Cross-iteration warm start: preload historical streams into the
     /// group's CST (reserved request ids; see [`Cst::preload`]).
@@ -61,6 +69,12 @@ pub struct DraftServer {
 }
 
 impl DraftServer {
+    /// Default group lifetime for implicitly-created groups, in logical
+    /// ticks (one tick = one server message). Effectively unbounded for
+    /// a single rollout while still being a finite, deterministic
+    /// horizon.
+    pub const DEFAULT_TTL_TICKS: u64 = 1 << 32;
+
     pub fn spawn() -> Self {
         let (tx, rx) = channel::<Msg>();
         let handle = std::thread::Builder::new()
@@ -76,14 +90,43 @@ impl DraftServer {
     fn serve(rx: Receiver<Msg>) {
         struct Entry {
             cst: GroupHandle,
-            expires: Instant,
+            /// Logical tick after which the group is pruned.
+            expires: u64,
+        }
+        /// Live entry for an update-like message: an unknown group is
+        /// created implicitly with the default TTL, but an *expired*
+        /// group (tombstoned) is NOT resurrected — the caller must
+        /// re-register it explicitly.
+        fn live_or_new<'a>(
+            groups: &'a mut BTreeMap<String, Entry>,
+            expired: &BTreeSet<String>,
+            group: String,
+            tick: u64,
+        ) -> Option<&'a mut Entry> {
+            if expired.contains(&group) {
+                return None;
+            }
+            Some(groups.entry(group).or_insert_with(|| Entry {
+                cst: Arc::new(RwLock::new(Cst::new())),
+                expires: tick.saturating_add(DraftServer::DEFAULT_TTL_TICKS),
+            }))
         }
         let mut groups: BTreeMap<String, Entry> = BTreeMap::new();
-        let default_ttl = Duration::from_secs(3600);
+        let mut expired: BTreeSet<String> = BTreeSet::new();
+        // Logical clock: one tick per message processed. Host wall time
+        // never enters lifetime decisions, so group expiry replays
+        // identically for an identical message sequence.
+        let mut tick: u64 = 0;
         while let Ok(msg) = rx.recv() {
-            // Opportunistic TTL pruning.
-            let now = Instant::now();
-            groups.retain(|_, e| e.expires > now);
+            tick += 1;
+            // Opportunistic TTL pruning; pruned groups leave tombstones.
+            groups.retain(|g, e| {
+                let live = e.expires > tick;
+                if !live {
+                    expired.insert(g.clone());
+                }
+                live
+            });
             match msg {
                 Msg::Update {
                     group,
@@ -91,31 +134,34 @@ impl DraftServer {
                     prev_token_count,
                     tokens,
                 } => {
-                    let e = groups.entry(group).or_insert_with(|| Entry {
-                        cst: Arc::new(RwLock::new(Cst::new())),
-                        expires: now + default_ttl,
-                    });
-                    e.cst
-                        .write()
-                        .expect("cst lock poisoned")
-                        .append(request, prev_token_count, &tokens);
+                    if let Some(e) =
+                        live_or_new(&mut groups, &expired, group, tick)
+                    {
+                        e.cst
+                            .write()
+                            .expect("cst lock poisoned")
+                            .append(request, prev_token_count, &tokens);
+                    }
                 }
                 Msg::WarmStart { group, streams } => {
-                    let e = groups.entry(group).or_insert_with(|| Entry {
-                        cst: Arc::new(RwLock::new(Cst::new())),
-                        expires: now + default_ttl,
-                    });
-                    e.cst
-                        .write()
-                        .expect("cst lock poisoned")
-                        .preload(&streams);
+                    if let Some(e) =
+                        live_or_new(&mut groups, &expired, group, tick)
+                    {
+                        e.cst
+                            .write()
+                            .expect("cst lock poisoned")
+                            .preload(&streams);
+                    }
                 }
                 Msg::Register { group, ttl } => {
+                    // Explicit registration is the one path that
+                    // resurrects an expired group (with a fresh CST).
+                    expired.remove(&group);
                     let e = groups.entry(group).or_insert_with(|| Entry {
                         cst: Arc::new(RwLock::new(Cst::new())),
-                        expires: now + ttl,
+                        expires: tick.saturating_add(ttl),
                     });
-                    e.expires = now + ttl;
+                    e.expires = tick.saturating_add(ttl);
                 }
                 Msg::Fetch { groups: ids, reply } => {
                     let out = ids
@@ -165,10 +211,14 @@ impl DraftServer {
         });
     }
 
-    pub fn register_group(&self, group_id: &str, ttl_seconds: u64) {
+    /// Register (or explicitly resurrect) a group with a lifetime of
+    /// `ttl_ticks` logical ticks — one tick per message the server
+    /// processes, never wall time, so expiry is deterministic. A TTL of
+    /// 0 expires the group at the very next message.
+    pub fn register_group(&self, group_id: &str, ttl_ticks: u64) {
         let _ = self.tx.send(Msg::Register {
             group: group_id.to_string(),
-            ttl: Duration::from_secs(ttl_seconds),
+            ttl: ttl_ticks,
         });
     }
 
@@ -374,14 +424,38 @@ mod tests {
     #[test]
     fn ttl_expires_groups() {
         let server = DraftServer::spawn();
-        server.register_group("ephemeral", 0); // expires immediately
-        server.flush();
-        std::thread::sleep(Duration::from_millis(5));
-        // Any subsequent message triggers pruning.
-        server.register_group("other", 60);
+        server.register_group("ephemeral", 0); // expires at the next message
+        // No sleeps: expiry is a pure function of the message sequence.
+        server.register_group("other", 1 << 20);
         server.flush();
         let got = server.fetch_cst(&["ephemeral".to_string()]);
         assert!(got.is_empty());
+        assert_eq!(server.fetch_cst(&["other".to_string()]).len(), 1);
+    }
+
+    #[test]
+    fn expired_group_needs_explicit_reregistration() {
+        let server = DraftServer::spawn();
+        // tick 1: register with a 2-tick lifetime (expires after tick 3).
+        server.register_group("g", 2);
+        // tick 2: still live — the append applies.
+        server.update_cst("g", 0, 0, &[1, 2, 3, 4]);
+        // tick 3: prune runs first, the group is gone and tombstoned.
+        server.flush();
+        assert!(server.fetch_cst(&["g".to_string()]).is_empty());
+        // A late update must NOT silently resurrect the expired group.
+        server.update_cst("g", 0, 4, &[5, 6]);
+        server.flush();
+        assert!(server.fetch_cst(&["g".to_string()]).is_empty());
+        // Explicit re-registration does — with a fresh CST.
+        server.register_group("g", 1 << 20);
+        server.update_cst("g", 1, 0, &[7, 8]);
+        server.flush();
+        let got = server.fetch_cst(&["g".to_string()]);
+        assert_eq!(got.len(), 1);
+        let cst = got[0].1.read().unwrap();
+        assert!(cst.contains(&[7, 8]));
+        assert!(!cst.contains(&[1, 2]), "expired tree must not survive");
     }
 
     #[test]

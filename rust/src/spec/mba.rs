@@ -10,8 +10,15 @@
 //! 2. Γ* = γ*·B is the total token budget;
 //! 3. if Γ* can't even give every high-priority request one draft token,
 //!    disable SD entirely;
-//! 4. otherwise allocate greedily by marginal benefit
-//!    B_h·(β[γ_h] − β[γ_h+1])  vs  λ · B_l·(β[γ_l] − β[γ_l+1]).
+//! 4. otherwise allocate greedily by priority-weighted marginal benefit
+//!    *per budget token*: λ·(β[γ_h] − β[γ_h+1]) vs (β[γ_l] − β[γ_l+1]).
+//!    One more draft position for a class costs `batch` budget tokens and
+//!    yields `batch · Δβ` expected accepted tokens, so the batch factors
+//!    cancel; λ ≥ 1 weights the high-priority (probe) class. β[0] = 1 by
+//!    definition (position 0 is the already-verified context), so the 0→1
+//!    marginal benefit of a class's *first* draft token is 1 − β[1] — the
+//!    largest marginal of all, which is what keeps low priority from being
+//!    starved of its first token.
 
 use crate::engine::costmodel::CostModel;
 use crate::sim::clock::SimTime;
@@ -22,7 +29,8 @@ pub struct MbaInputs {
     pub batch_high: usize,
     pub batch_low: usize,
     /// β[k] = acceptance probability at draft position k (1-indexed via
-    /// `beta(k)`; β[0] is unused). Must be non-increasing.
+    /// `beta(k)`; `beta(0)` is defined as 1.0 — the already-verified
+    /// context). Must be non-increasing.
     pub beta: Vec<f64>,
     pub gamma_max: u32,
     pub lambda: f64,
@@ -37,6 +45,11 @@ pub struct MbaInputs {
 
 impl MbaInputs {
     fn beta(&self, k: u32) -> f64 {
+        // β[0] = 1: position 0 is the verified context itself, always
+        // accepted, so the 0→1 marginal benefit is 1 − β[1] (Alg. 1).
+        if k == 0 {
+            return 1.0;
+        }
         // β beyond the profiled horizon decays to 0 (no benefit).
         self.beta.get(k as usize - 1).copied().unwrap_or(0.0)
     }
@@ -49,17 +62,15 @@ pub struct MbaDecision {
     pub gamma_low: u32,
 }
 
-/// Paper Algorithm 1.
-pub fn mba_allocate(cost: &CostModel, inp: &MbaInputs) -> MbaDecision {
+/// Line 2 of Algorithm 1: γ* = argmin_γ T_SD(B, γ) for the combined
+/// batch — the throughput-optimal uniform draft length (0 = plain
+/// decode). Exposed so tests can reconstruct the Γ* = γ*·B token budget
+/// that bounds every [`mba_allocate`] decision.
+pub fn optimal_uniform_gamma(cost: &CostModel, inp: &MbaInputs) -> u32 {
     let b = inp.batch_high + inp.batch_low;
     if b == 0 {
-        return MbaDecision {
-            gamma_high: 0,
-            gamma_low: 0,
-        };
+        return 0;
     }
-
-    // Line 2: γ* = argmin_γ T_SD(B, γ). γ = 0 means plain decode.
     let draft_cost = |gamma: u32| {
         SimTime::from_micros(
             inp.draft_cost_per_gamma.as_micros() * gamma as u64,
@@ -75,42 +86,58 @@ pub fn mba_allocate(cost: &CostModel, inp: &MbaInputs) -> MbaDecision {
             best_gamma = gamma;
         }
     }
+    best_gamma
+}
 
-    // Line 3: total token budget.
-    let budget = best_gamma as u64 * b as u64;
-
-    // Line 4-5: not enough budget to serve high priority at all.
-    if budget < inp.batch_high as u64 {
+/// Paper Algorithm 1.
+pub fn mba_allocate(cost: &CostModel, inp: &MbaInputs) -> MbaDecision {
+    let b = inp.batch_high + inp.batch_low;
+    if b == 0 {
         return MbaDecision {
             gamma_high: 0,
             gamma_low: 0,
         };
     }
 
-    // Lines 7-18: greedy marginal-benefit allocation.
+    // Line 2-3: γ* and the total token budget Γ* = γ*·B.
+    let budget = optimal_uniform_gamma(cost, inp) as u64 * b as u64;
+
+    // Line 4-5: no budget at all (γ* = 0), or not enough to serve high
+    // priority even one token each — disable SD.
+    if budget == 0 || budget < inp.batch_high as u64 {
+        return MbaDecision {
+            gamma_high: 0,
+            gamma_low: 0,
+        };
+    }
+
+    // Lines 7-18: greedy allocation by priority-weighted marginal
+    // benefit per budget token (see module docs: the batch factors
+    // cancel, λ weights the high-priority class, and β[0] = 1 makes a
+    // class's first token its most valuable). When the preferred class
+    // is capped (γ_max) or can't afford its batch, the token goes to
+    // the other class instead of being dropped; ties go high.
     let (bh, bl) = (inp.batch_high as u64, inp.batch_low as u64);
-    let mut gamma_h = 1u32;
+    // Every high-priority request is guaranteed its first token up
+    // front (the budget check above ensures it fits); an empty high
+    // batch gets γ_h = 0 instead of a meaningless 1.
+    let mut gamma_h = u32::from(bh > 0);
     let mut gamma_l = 0u32;
     let mut remaining = budget - bh;
     while remaining > 0 {
-        let benefit_h = bh as f64
-            * (inp.beta(gamma_h) - inp.beta(gamma_h + 1)).max(0.0);
-        let benefit_l = if bl > 0 {
-            bl as f64 * (inp.beta(gamma_l.max(1)) - inp.beta(gamma_l + 1)).max(0.0)
-        } else {
-            0.0
-        };
-        if benefit_h > inp.lambda * benefit_l
-            && gamma_h < inp.gamma_max
-            && remaining >= bh
-        {
+        let can_h = bh > 0 && gamma_h < inp.gamma_max && remaining >= bh;
+        let can_l = bl > 0 && gamma_l < inp.gamma_max && remaining >= bl;
+        if !can_h && !can_l {
+            break;
+        }
+        let benefit_h = (inp.beta(gamma_h) - inp.beta(gamma_h + 1)).max(0.0);
+        let benefit_l = (inp.beta(gamma_l) - inp.beta(gamma_l + 1)).max(0.0);
+        if can_h && (!can_l || inp.lambda * benefit_h >= benefit_l) {
             gamma_h += 1;
             remaining -= bh;
-        } else if bl > 0 && gamma_l < inp.gamma_max && remaining >= bl {
+        } else {
             gamma_l += 1;
             remaining -= bl;
-        } else {
-            break;
         }
     }
     MbaDecision {
@@ -195,20 +222,76 @@ mod tests {
 
     #[test]
     fn budget_and_caps_respected() {
-        for (bh, bl) in [(1, 0), (1, 31), (16, 16), (0, 8), (5, 200)] {
-            let inp = inputs(bh, bl);
-            let d = mba_allocate(&cost(), &inp);
-            assert!(d.gamma_high <= inp.gamma_max);
-            assert!(d.gamma_low <= inp.gamma_max);
-            if bh == 0 {
-                // Degenerate: all budget flows to low priority; γ_h is
-                // meaningless but must stay bounded.
-                continue;
+        // Property sweep over a deterministic pseudo-random input space
+        // (xorshift — no external rand dep): `mba_allocate` must never
+        // panic, both γ stay within γ_max, and the spend fits the
+        // Γ* = γ*·B token budget reconstructed via
+        // `optimal_uniform_gamma` — γh·Bh + γl·Bl ≤ γ*·B.
+        let c = cost();
+        let mut state = 0x9e37_79b9_7f4a_7c15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for case in 0..500 {
+            let batch_high = (next() % 300) as usize;
+            let batch_low = (next() % 300) as usize;
+            // Non-increasing β profile of random length (possibly empty).
+            let n_beta = (next() % 10) as usize;
+            let mut beta = Vec::with_capacity(n_beta);
+            let mut b = 0.95f64;
+            for _ in 0..n_beta {
+                beta.push(b);
+                b *= 0.55 + (next() % 40) as f64 / 100.0;
             }
-            // Reconstruct budget bound: γh·Bh + γl·Bl ≤ γ*·B for the γ*
-            // the algorithm chose; we can't see γ* directly, but the cap
-            // γ ≤ γ_max bounds both.
+            let inp = MbaInputs {
+                batch_high,
+                batch_low,
+                beta,
+                gamma_max: (next() % 12) as u32, // including 0
+                lambda: 1.0 + (next() % 80) as f64 / 10.0,
+                alpha: (next() % 95) as f64 / 100.0,
+                kv_tokens: next() % 4_000_000,
+                draft_cost_per_gamma: SimTime::from_micros(next() % 200),
+            };
+            let d = mba_allocate(&c, &inp);
+            assert!(d.gamma_high <= inp.gamma_max, "case {case}: {d:?} {inp:?}");
+            assert!(d.gamma_low <= inp.gamma_max, "case {case}: {d:?} {inp:?}");
+            let budget = optimal_uniform_gamma(&c, &inp) as u64
+                * (batch_high + batch_low) as u64;
+            let spend = d.gamma_high as u64 * batch_high as u64
+                + d.gamma_low as u64 * batch_low as u64;
+            assert!(
+                spend <= budget,
+                "case {case}: spend {spend} > budget {budget} ({d:?} {inp:?})"
+            );
+            if batch_high == 0 {
+                assert_eq!(d.gamma_high, 0, "case {case}: {d:?}");
+            }
         }
+    }
+
+    #[test]
+    fn first_low_priority_token_not_starved() {
+        // Regression for the β(1)−β(1)=0 bug: with λ = 1, symmetric
+        // batches, and a budget that covers a first draft token for
+        // every request (γ* = 1 here, so Γ* = B_h + B_l exactly), the
+        // old formula scored the 0→1 low-priority marginal as zero and
+        // spent the whole budget extending high priority (γ_l = 0).
+        // With β[0] = 1 the 0→1 marginal is 1 − β[1] = 0.3 — larger
+        // than high priority's 1→2 marginal of 0.1 — so low priority
+        // must receive its first token.
+        let mut inp = inputs(200, 200);
+        inp.lambda = 1.0;
+        inp.kv_tokens = 1_000_000;
+        let d = mba_allocate(&cost(), &inp);
+        assert!(d.gamma_high >= 1, "{d:?}");
+        assert!(
+            d.gamma_low >= 1,
+            "low priority starved of its first draft token: {d:?}"
+        );
     }
 
     #[test]

@@ -43,11 +43,45 @@ impl SdStrategy {
 pub struct SpecCtx {
     /// Tokens this request has generated (own-history signal).
     pub generated: u32,
-    /// Same-group sibling streams available as references: finished
-    /// siblings plus concurrently-running ones with progress.
+    /// *Fresh* same-group sibling streams available as references:
+    /// finished siblings plus concurrently-running ones with progress —
+    /// all produced by the current policy.
     pub group_refs: usize,
+    /// Historical reference streams replayed from a previous iteration
+    /// (RhymeRL-style warm start via the `ContextStore`). These came
+    /// from an *older* policy, so their draft value decays with
+    /// [`SpecCtx::drift`] instead of counting like fresh siblings.
+    pub warm_refs: usize,
+    /// Policy drift (epoch-drift sigma) since the warm streams were
+    /// produced; 0 = same policy, larger = history rhymes less.
+    pub drift: f64,
     /// Multi-path branching factor in use (1 = linear).
     pub top_k: u32,
+}
+
+impl Default for SpecCtx {
+    fn default() -> Self {
+        SpecCtx {
+            generated: 0,
+            group_refs: 0,
+            warm_refs: 0,
+            drift: 0.0,
+            top_k: 1,
+        }
+    }
+}
+
+impl SpecCtx {
+    /// Effective reference-stream count: fresh siblings at full weight
+    /// plus warm historical streams discounted by policy drift. The
+    /// discount is linear and hits zero at drift σ = 0.25 — by then the
+    /// length/token statistics of the old policy no longer predict the
+    /// new one's outputs (RhymeRL's "history rhymes" fades as the
+    /// policy moves).
+    pub fn effective_refs(&self) -> f64 {
+        let discount = (1.0 - 4.0 * self.drift).clamp(0.0, 1.0);
+        self.group_refs as f64 + discount * self.warm_refs as f64
+    }
 }
 
 /// Acceptance + cost profiles for one strategy.
@@ -92,8 +126,10 @@ impl SpecSim {
             SdStrategy::GroupedCst => {
                 // Calibrated to Table 2: α(n=0) ≈ 0.41 rising to
                 // α(n=15) ≈ 0.60, saturating; multi-path adds a small
-                // bump (k=2: +0.025, k=4: +0.05).
-                let n = ctx.group_refs as f64;
+                // bump (k=2: +0.025, k=4: +0.05). Warm historical
+                // streams count through the drift-discounted
+                // effective-reference total (see `SpecCtx::effective_refs`).
+                let n = ctx.effective_refs();
                 let base = 0.41 + 0.19 * (1.0 - (-n / 5.0).exp()) / (1.0 - (-3.0f64).exp());
                 let mp = match ctx.top_k {
                     0 | 1 => 0.0,
@@ -159,6 +195,39 @@ impl SpecSim {
         }
     }
 
+    /// BubbleSpec-style draft-budget uplift: `boost` in [0, 1] is the
+    /// share of this verify batch's draft generation backed by
+    /// otherwise-idle instances (end-of-rollout bubbles). Spare draft
+    /// capacity deepens the draft budget from `gamma` toward
+    /// `gamma_max` — the MBA budget Γ* only rations the *instance's
+    /// own* draft time, which bubble capacity does not consume.
+    /// Inert for `None` and for requests SD already skipped (γ = 0).
+    pub fn bubble_gamma(&self, gamma: u32, gamma_max: u32, boost: f64) -> u32 {
+        if self.strategy == SdStrategy::None || gamma == 0 || boost <= 0.0 {
+            return gamma;
+        }
+        let head = gamma_max.saturating_sub(gamma) as f64;
+        gamma + (head * boost.clamp(0.0, 1.0)).round() as u32
+    }
+
+    /// Draft cost with the bubble-offloaded share removed from the
+    /// critical path: the `boost` fraction of draft generation runs on
+    /// idle instances, so the busy instance only pays the rest.
+    pub fn bubble_draft_cost(
+        &self,
+        batch: usize,
+        gamma: u32,
+        boost: f64,
+    ) -> SimTime {
+        let full = self.draft_cost(batch, gamma);
+        if boost <= 0.0 {
+            return full;
+        }
+        SimTime::from_secs_f64(
+            full.as_secs_f64() * (1.0 - boost.clamp(0.0, 1.0)),
+        )
+    }
+
     /// Default/preferred draft budget for strategies that do not use MBA.
     pub fn static_gamma(&self) -> u32 {
         match self.strategy {
@@ -179,7 +248,7 @@ mod tests {
         SpecCtx {
             generated: 2000,
             group_refs: refs,
-            top_k: 1,
+            ..Default::default()
         }
     }
 
@@ -208,6 +277,49 @@ mod tests {
         let linear = s.alpha(&SpecCtx { top_k: 1, ..ctx(5) });
         let k4 = s.alpha(&SpecCtx { top_k: 4, ..ctx(5) });
         assert!(k4 > linear);
+    }
+
+    #[test]
+    fn warm_refs_help_but_decay_with_drift() {
+        let s = SpecSim::new(SdStrategy::GroupedCst);
+        let cold = s.alpha(&ctx(0));
+        let warm = |drift: f64| {
+            s.alpha(&SpecCtx {
+                warm_refs: 6,
+                drift,
+                ..ctx(0)
+            })
+        };
+        // Same-policy history counts like fresh references.
+        assert!(warm(0.0) > cold + 0.05, "{} vs {cold}", warm(0.0));
+        assert!((warm(0.0) - s.alpha(&ctx(6))).abs() < 1e-12);
+        // Monotone decay toward the cold rate as the policy drifts...
+        assert!(warm(0.05) > warm(0.1));
+        assert!(warm(0.1) > warm(0.2));
+        // ...and fully decayed history is worth nothing.
+        assert_eq!(warm(0.3), cold);
+        // Fresh siblings are never discounted.
+        let fresh = s.alpha(&SpecCtx { drift: 0.3, ..ctx(6) });
+        assert_eq!(fresh, s.alpha(&ctx(6)));
+    }
+
+    #[test]
+    fn bubble_boost_deepens_gamma_and_offloads_cost() {
+        let s = SpecSim::new(SdStrategy::GroupedCst);
+        // γ uplift grows toward γ_max with the boost fraction.
+        assert_eq!(s.bubble_gamma(4, 8, 0.0), 4);
+        assert_eq!(s.bubble_gamma(4, 8, 0.5), 6);
+        assert_eq!(s.bubble_gamma(4, 8, 1.0), 8);
+        // SD-disabled requests stay disabled; None stays inert.
+        assert_eq!(s.bubble_gamma(0, 8, 1.0), 0);
+        let none = SpecSim::new(SdStrategy::None);
+        assert_eq!(none.bubble_gamma(4, 8, 1.0), 4);
+        // Offloaded draft cost shrinks with the boost; never negative.
+        let full = s.bubble_draft_cost(16, 8, 0.0);
+        let half = s.bubble_draft_cost(16, 8, 0.5);
+        let all = s.bubble_draft_cost(16, 8, 1.0);
+        assert_eq!(full, s.draft_cost(16, 8));
+        assert!(half < full && all <= half, "{full:?} {half:?} {all:?}");
     }
 
     #[test]

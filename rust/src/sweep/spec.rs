@@ -298,6 +298,8 @@ impl SweepCell {
             p99_finish_secs: m.finish_percentile(99.0),
             tail_packed: m.tail_packed,
             tail_resume_tokens: m.tail_resume_tokens,
+            bubble_draft_secs: m.bubble_draft_time.as_secs_f64(),
+            bubble_accept_tokens: m.bubble_accept_tokens,
             tokens: m.tokens_generated,
             completions: m.completions.len(),
             preemptions: m.preemptions,
@@ -326,6 +328,9 @@ pub struct CellResult {
     /// Tail-packing telemetry (zero for policies without tail lanes).
     pub tail_packed: u64,
     pub tail_resume_tokens: u64,
+    /// Bubble-drafting telemetry (zero with `bubble_draft_frac` 0).
+    pub bubble_draft_secs: f64,
+    pub bubble_accept_tokens: u64,
     pub tokens: u64,
     pub completions: usize,
     pub preemptions: u64,
@@ -354,6 +359,14 @@ impl CellResult {
         put(
             "tail_resume_tokens",
             Json::Num(self.tail_resume_tokens as f64),
+        );
+        put(
+            "bubble_draft_secs",
+            Json::Num(self.bubble_draft_secs),
+        );
+        put(
+            "bubble_accept_tokens",
+            Json::Num(self.bubble_accept_tokens as f64),
         );
         put("tokens", Json::Num(self.tokens as f64));
         put("completions", Json::Num(self.completions as f64));

@@ -145,6 +145,7 @@ fn submit_subscribe_result_matches_direct_run() {
         scheduler: "seer".to_string(),
         sd: "grouped-cst".to_string(),
         seed: 7,
+        bubble: 0.0,
         full: false,
     };
     let mux = EventMux::new();
