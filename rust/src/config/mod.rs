@@ -126,6 +126,96 @@ impl Default for SystemConfig {
     }
 }
 
+/// How rollout and training phases interleave across epochs
+/// (Laminar-style bounded-staleness pipelining).
+///
+/// * `Sync` — today's strictly synchronous loop: epoch *k*'s rollout
+///   fully drains, then training + weight update run, then epoch *k+1*
+///   starts. Every request trains on-policy.
+/// * `Hybrid` — one-step overlap: epoch *k+1*'s rollout starts as soon
+///   as epoch *k*'s rollout drains, running concurrently with epoch
+///   *k*'s training/weight-update phases. Equivalent to `Async { lag: 1 }`
+///   under a distinct name (the common deployment point).
+/// * `Async { lag }` — bounded staleness: epoch *k*'s rollout may start
+///   once the weight update from epoch *k − 1 − lag* has landed, so up
+///   to `lag` training phases overlap generation. `lag = 0` reproduces
+///   `Sync` byte-identically (pinned by test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainingMode {
+    Sync,
+    Hybrid,
+    Async { lag: u32 },
+}
+
+impl Default for TrainingMode {
+    fn default() -> Self {
+        TrainingMode::Sync
+    }
+}
+
+impl TrainingMode {
+    /// Parse a `--mode`/`--lag` pair ("sync" | "hybrid" | "async").
+    /// `lag` is only meaningful for `async`; passing it with another
+    /// mode is rejected so a typo cannot silently run synchronously.
+    pub fn parse(mode: &str, lag: Option<u64>) -> anyhow::Result<TrainingMode> {
+        match mode {
+            "sync" => match lag {
+                None => Ok(TrainingMode::Sync),
+                Some(_) => anyhow::bail!("--lag only applies to --mode async"),
+            },
+            "hybrid" => match lag {
+                None => Ok(TrainingMode::Hybrid),
+                Some(_) => anyhow::bail!("--lag only applies to --mode async"),
+            },
+            "async" => {
+                let lag = lag.unwrap_or(1);
+                if lag > u32::MAX as u64 {
+                    anyhow::bail!("--lag {lag} out of range");
+                }
+                Ok(TrainingMode::Async { lag: lag as u32 })
+            }
+            other => anyhow::bail!(
+                "unknown training mode '{other}'; one of sync, hybrid, async"
+            ),
+        }
+    }
+
+    /// Off-policy version lag this mode admits (how many weight updates
+    /// may still be in flight when a rollout starts).
+    pub fn lag(&self) -> u32 {
+        match self {
+            TrainingMode::Sync => 0,
+            TrainingMode::Hybrid => 1,
+            TrainingMode::Async { lag } => *lag,
+        }
+    }
+
+    /// The CLI/JSON name ("sync" | "hybrid" | "async").
+    pub fn mode_str(&self) -> &'static str {
+        match self {
+            TrainingMode::Sync => "sync",
+            TrainingMode::Hybrid => "hybrid",
+            TrainingMode::Async { .. } => "async",
+        }
+    }
+
+    /// True for the modes that run the suspend/resume stream path
+    /// (everything except `Sync` — including `Async { lag: 0 }`, whose
+    /// results must nonetheless match `Sync` byte-for-byte).
+    pub fn is_pipelined(&self) -> bool {
+        !matches!(self, TrainingMode::Sync)
+    }
+
+    /// Unambiguous report tag: `"sync"`, `"hybrid"`, or `"async:N"`
+    /// with the lag bound embedded (sweep rows and experiment labels).
+    pub fn tag(&self) -> String {
+        match self {
+            TrainingMode::Async { lag } => format!("async:{lag}"),
+            m => m.mode_str().to_string(),
+        }
+    }
+}
+
 impl WorkloadConfig {
     /// Total KV bytes a fully-generated request of length `gen` (plus its
     /// prompt) occupies.
@@ -216,5 +306,40 @@ mod tests {
         let c = TaskPreset::Moonlight.workload().with_group_size(16);
         assert_eq!(c.group_size, 16);
         assert_eq!(c.reqs_per_iter % 16, 0);
+    }
+
+    #[test]
+    fn training_mode_parses_and_round_trips() {
+        assert_eq!(TrainingMode::parse("sync", None).unwrap(), TrainingMode::Sync);
+        assert_eq!(
+            TrainingMode::parse("hybrid", None).unwrap(),
+            TrainingMode::Hybrid
+        );
+        assert_eq!(
+            TrainingMode::parse("async", None).unwrap(),
+            TrainingMode::Async { lag: 1 }
+        );
+        assert_eq!(
+            TrainingMode::parse("async", Some(0)).unwrap(),
+            TrainingMode::Async { lag: 0 }
+        );
+        assert_eq!(TrainingMode::Sync.lag(), 0);
+        assert_eq!(TrainingMode::Hybrid.lag(), 1);
+        assert_eq!(TrainingMode::Async { lag: 3 }.lag(), 3);
+        assert!(!TrainingMode::Sync.is_pipelined());
+        assert!(TrainingMode::Async { lag: 0 }.is_pipelined());
+        for (m, s) in [
+            (TrainingMode::Sync, "sync"),
+            (TrainingMode::Hybrid, "hybrid"),
+            (TrainingMode::Async { lag: 2 }, "async"),
+        ] {
+            assert_eq!(m.mode_str(), s);
+        }
+        assert_eq!(TrainingMode::Sync.tag(), "sync");
+        assert_eq!(TrainingMode::Hybrid.tag(), "hybrid");
+        assert_eq!(TrainingMode::Async { lag: 2 }.tag(), "async:2");
+        assert!(TrainingMode::parse("laminar", None).is_err());
+        assert!(TrainingMode::parse("sync", Some(1)).is_err());
+        assert!(TrainingMode::parse("hybrid", Some(2)).is_err());
     }
 }

@@ -208,6 +208,23 @@ pub struct ClusterSim {
     bubble_accept_est: f64,
     /// Upper bound on events (runaway guard).
     max_events: u64,
+    /// Events processed so far (stepping keeps the runaway guard and the
+    /// SEER_DEBUG cadence across `step_until` segments).
+    events: u64,
+    /// Whether [`ClusterSim::start`] already primed the queue (faults,
+    /// first scheduling pass, telemetry cadence).
+    started: bool,
+    /// Policy version stamped onto completions as they finish. The
+    /// single-shot `run` path leaves it 0 (synchronous: one version per
+    /// rollout); the suspend/resume stream path bumps it live as
+    /// overlapped weight updates land mid-rollout.
+    policy_version: u64,
+    /// Per-instance accumulated live time (closed intervals) and the
+    /// open-interval start, if the instance is currently part of the
+    /// fleet. Feeds `RolloutMetrics::live_time` so utilization divides
+    /// each instance's busy time by the span it actually existed.
+    live_acc: Vec<SimTime>,
+    live_since: Vec<Option<SimTime>>,
     schedule_dirty: bool,
     /// Streaming lifecycle-event sinks (the session layer's observer
     /// API); empty by default and free when empty.
@@ -295,6 +312,11 @@ impl ClusterSim {
             bubble_draft_secs: 0.0,
             bubble_accept_est: 0.0,
             max_events: 50_000_000,
+            events: 0,
+            started: false,
+            policy_version: 0,
+            live_acc: vec![SimTime::ZERO; n_inst],
+            live_since: vec![Some(SimTime::ZERO); n_inst],
             schedule_dirty: true,
             observers: ObserverHub::new(),
             faults: FaultPlan::default(),
@@ -417,22 +439,50 @@ impl ClusterSim {
 
     /// Run the rollout to completion. Panics if the event loop stalls
     /// (a scheduling deadlock — treated as a bug, not a result).
+    ///
+    /// This is exactly `start()` + `step_until(FAR_FUTURE)` + `finish()`
+    /// — the suspend/resume stream path
+    /// ([`crate::rollout::RolloutStream`]) composes the same three
+    /// primitives with finite deadlines, so a single-shot run and a
+    /// never-suspended stream execute the identical event sequence.
     pub fn run(mut self) -> RolloutOutcome {
-        let debug = std::env::var("SEER_DEBUG").is_ok();
-        // Pin every scripted fault to its virtual timestamp up front, in
-        // plan order (the queue's FIFO tie-break preserves authored order
-        // for same-timestamp events — determinism).
+        self.start();
+        self.step_until(SimTime::FAR_FUTURE);
+        self.finish()
+    }
+
+    /// Prime the event queue: pin every scripted fault to its virtual
+    /// timestamp up front, in plan order (the queue's FIFO tie-break
+    /// preserves authored order for same-timestamp events —
+    /// determinism), run the first scheduling pass, and start the
+    /// telemetry cadence. Idempotent: only the first call does anything.
+    pub fn start(&mut self) {
+        if self.started {
+            return;
+        }
+        self.started = true;
         for (idx, f) in self.faults.events.iter().enumerate() {
             self.queue.schedule_at(f.at, Event::Fault { idx });
         }
         self.try_schedule();
         self.queue.schedule_in(self.sample_interval, Event::Sample);
-        let mut events = 0u64;
+    }
+
+    /// Advance the event loop, processing every event with virtual
+    /// timestamp ≤ `deadline` (events *at* the deadline are processed —
+    /// a weight update landing exactly at an event's timestamp sees that
+    /// event's completions stamped with the pre-update version). Returns
+    /// `true` when the rollout finished, `false` when it paused at the
+    /// deadline with work still in flight. Panics if the event loop
+    /// stalls (a scheduling deadlock — treated as a bug, not a result).
+    pub fn step_until(&mut self, deadline: SimTime) -> bool {
+        debug_assert!(self.started, "step_until before start");
+        let debug = std::env::var("SEER_DEBUG").is_ok();
         while !self.done() {
-            if debug && events % 200_000 == 0 && events > 0 {
+            if debug && self.events % 200_000 == 0 && self.events > 0 {
                 eprintln!(
                     "[sim] events={} t={:.1}s finished={}/{} waiting={} preempt={} tokens={}",
-                    events,
+                    self.events,
                     self.queue.now().as_secs_f64(),
                     self.buffer.n_finished(),
                     self.buffer.len(),
@@ -453,80 +503,105 @@ impl ClusterSim {
                     );
                 }
             }
-            let Some(ev) = self.queue.pop() else {
-                // Nothing in flight but requests remain: scheduling must
-                // make progress, otherwise the configuration is infeasible.
-                self.schedule_dirty = true;
-                self.try_schedule();
-                if self.queue.is_empty() {
-                    panic!(
-                        "rollout stalled: {} waiting, {} finished of {}",
-                        self.buffer.n_waiting(),
-                        self.buffer.n_finished(),
-                        self.buffer.len()
-                    );
+            match self.queue.peek_time() {
+                Some(t) if t > deadline => return false,
+                Some(_) => {}
+                None => {
+                    // Nothing in flight but requests remain: scheduling
+                    // must make progress, otherwise the configuration is
+                    // infeasible.
+                    self.schedule_dirty = true;
+                    self.try_schedule();
+                    if self.queue.is_empty() {
+                        panic!(
+                            "rollout stalled: {} waiting, {} finished of {}",
+                            self.buffer.n_waiting(),
+                            self.buffer.n_finished(),
+                            self.buffer.len()
+                        );
+                    }
+                    continue;
                 }
-                continue;
-            };
-            events += 1;
+            }
+            let ev = self.queue.pop().expect("peeked event vanished");
+            self.events += 1;
             assert!(
-                events < self.max_events,
+                self.events < self.max_events,
                 "event budget exceeded — runaway simulation"
             );
             if let Some(p) = self.profile.as_deref_mut() {
                 p.events += 1;
             }
             let now = self.queue.now();
-            match ev.payload {
-                Event::Wake { instance, epoch } => {
-                    let idx = instance.0 as usize;
-                    if self.instances[idx].epoch != epoch {
-                        continue; // stale wake
-                    }
-                    self.commit_and_handle(idx, now);
-                    self.try_schedule();
-                    self.plan_interval(idx, now);
-                }
-                Event::Arrive { req, chunk_seq } => {
-                    self.handle_arrival(req, chunk_seq, now);
-                }
-                Event::Sample => {
-                    self.record_sample(now);
-                    if self.verify_invariants {
-                        self.assert_runtime_invariants();
-                    }
-                    if !self.done() {
-                        // A fully downed fleet with no recover/scale-up
-                        // left to revive it can never finish: fail
-                        // loudly instead of sampling forever.
-                        assert!(
-                            self.instances.iter().any(|i| i.up)
-                                || self.revivals_remaining > 0,
-                            "fault plan leaves no live instances with {} \
-                             requests unfinished",
-                            self.buffer.n_waiting()
-                        );
-                        self.queue
-                            .schedule_in(self.sample_interval, Event::Sample);
-                    }
-                }
-                Event::Fault { idx } => {
-                    let fault = self.faults.events[idx].event;
-                    if matches!(
-                        fault,
-                        FaultEvent::InstanceRecover { .. }
-                            | FaultEvent::ScaleUp { .. }
-                    ) {
-                        self.revivals_remaining -= 1;
-                    }
-                    self.apply_fault(fault, now);
-                }
-            }
+            self.handle_event(ev.payload, now);
         }
+        true
+    }
+
+    /// Finalize metrics and hand the outcome back. The counterpart of
+    /// `step_until` returning `true`.
+    pub fn finish(mut self) -> RolloutOutcome {
         self.finalize();
         RolloutOutcome {
             metrics: self.metrics,
             buffer: self.buffer,
+        }
+    }
+
+    /// Set the policy version stamped onto completions from now on. The
+    /// stream path calls this as overlapped weight updates land
+    /// mid-rollout; the single-shot path never does (every completion
+    /// stays at version 0 — one policy per synchronous rollout).
+    pub fn set_policy_version(&mut self, v: u64) {
+        self.policy_version = v;
+    }
+
+    /// Dispatch one popped event.
+    fn handle_event(&mut self, ev: Event, now: SimTime) {
+        match ev {
+            Event::Wake { instance, epoch } => {
+                let idx = instance.0 as usize;
+                if self.instances[idx].epoch != epoch {
+                    return; // stale wake
+                }
+                self.commit_and_handle(idx, now);
+                self.try_schedule();
+                self.plan_interval(idx, now);
+            }
+            Event::Arrive { req, chunk_seq } => {
+                self.handle_arrival(req, chunk_seq, now);
+            }
+            Event::Sample => {
+                self.record_sample(now);
+                if self.verify_invariants {
+                    self.assert_runtime_invariants();
+                }
+                if !self.done() {
+                    // A fully downed fleet with no recover/scale-up
+                    // left to revive it can never finish: fail
+                    // loudly instead of sampling forever.
+                    assert!(
+                        self.instances.iter().any(|i| i.up)
+                            || self.revivals_remaining > 0,
+                        "fault plan leaves no live instances with {} \
+                         requests unfinished",
+                        self.buffer.n_waiting()
+                    );
+                    self.queue
+                        .schedule_in(self.sample_interval, Event::Sample);
+                }
+            }
+            Event::Fault { idx } => {
+                let fault = self.faults.events[idx].event;
+                if matches!(
+                    fault,
+                    FaultEvent::InstanceRecover { .. }
+                        | FaultEvent::ScaleUp { .. }
+                ) {
+                    self.revivals_remaining -= 1;
+                }
+                self.apply_fault(fault, now);
+            }
         }
     }
 
@@ -558,6 +633,16 @@ impl ClusterSim {
             self.metrics.busy_time[i] = inst.busy;
             self.metrics.engine_steps += inst.steps_total;
         }
+        // Close every open live interval at the makespan: an instance
+        // live at the end was live for `makespan − joined`, and a
+        // scale-up that landed after the last completion contributes
+        // nothing (saturating).
+        for (i, open) in self.live_since.iter_mut().enumerate() {
+            if let Some(s) = open.take() {
+                self.live_acc[i] += last_completion.saturating_sub(s);
+            }
+        }
+        self.metrics.live_time = std::mem::take(&mut self.live_acc);
         self.metrics.tau = if self.accept_steps > 0.0 {
             self.accept_len_weighted / self.accept_steps
         } else {
@@ -629,6 +714,9 @@ impl ClusterSim {
                 inst.up = true;
                 inst.slow_factor = 1.0;
                 inst.epoch += 1;
+                // Reopen the live interval: downtime does not count
+                // against this instance's utilization denominator.
+                self.live_since[idx] = Some(now);
                 // Recovery is capacity arriving, exactly like scale-up:
                 // without this hook a pinned policy would leave the
                 // recovered instance idle (its groups were re-homed at
@@ -655,6 +743,9 @@ impl ClusterSim {
                     .resize(self.instances.len(), SimTime::ZERO);
                 self.bubble_interval
                     .resize(self.instances.len(), BubbleStep::default());
+                // Late joiners' live intervals open now, not at t=0.
+                self.live_acc.resize(self.instances.len(), SimTime::ZERO);
+                self.live_since.resize(self.instances.len(), Some(now));
                 self.metrics.instances_added += n as u64;
                 let added: Vec<InstanceId> = (start..start + n)
                     .map(|i| InstanceId(i as u32))
@@ -704,6 +795,11 @@ impl ClusterSim {
         let lost: u64 = doomed.gained.iter().map(|(_, g)| *g as u64).sum();
         self.metrics.fault_lost_tokens += lost;
 
+        // Close the live interval: from here until recovery (if any)
+        // this instance is not part of the fleet.
+        if let Some(s) = self.live_since[idx].take() {
+            self.live_acc[idx] += now.saturating_sub(s);
+        }
         let inst = &mut self.instances[idx];
         inst.up = false;
         inst.slow_factor = 1.0;
@@ -1299,6 +1395,7 @@ impl ClusterSim {
             finished_at: now,
             first_scheduled_at: first,
             gen_len,
+            policy_version: self.policy_version,
         });
         let gp = &mut self.group_progress[group.0 as usize];
         gp.finished += 1;
@@ -1795,6 +1892,101 @@ mod tests {
             out.metrics.busy_time[cfg.n_instances] > SimTime::ZERO,
             "scale-up instance never did any work"
         );
+    }
+
+    /// The stepping surface is the single-shot path: `start` +
+    /// `step_until` segments + `finish` must reproduce `run` exactly,
+    /// whatever the segment boundaries (the stream/pipeline layer relies
+    /// on this to keep async-lag-0 byte-identical to sync).
+    #[test]
+    fn stepped_run_matches_single_shot() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let build = || {
+            let w = crate::workload::generate_iteration(&cfg, 42);
+            ClusterSim::new(
+                cfg.clone(),
+                SystemConfig {
+                    chunk_size: 128,
+                    ..Default::default()
+                },
+                w.groups,
+                Box::new(SeerScheduler::new(ContextMode::Learned)),
+                SdStrategy::GroupedCst,
+            )
+        };
+        let single = build().run();
+        let mut sim = build();
+        sim.start();
+        let mut deadline = SimTime::ZERO;
+        while !sim.step_until(deadline) {
+            deadline += SimTime::from_secs(3);
+        }
+        let stepped = sim.finish();
+        assert_eq!(single.metrics.makespan, stepped.metrics.makespan);
+        assert_eq!(
+            single.metrics.tokens_generated,
+            stepped.metrics.tokens_generated
+        );
+        assert_eq!(single.metrics.preemptions, stepped.metrics.preemptions);
+        assert_eq!(single.metrics.engine_steps, stepped.metrics.engine_steps);
+        assert_eq!(single.metrics.busy_time, stepped.metrics.busy_time);
+        let fin = |o: &RolloutOutcome| {
+            o.metrics
+                .completions
+                .iter()
+                .map(|c| (c.id.0, c.finished_at, c.gen_len, c.policy_version))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(fin(&single), fin(&stepped));
+    }
+
+    /// Live-interval accounting (utilization bugfix): always-live fleets
+    /// report `live_time == makespan` per instance, while a scale-up
+    /// instance is only live from its join — so a busy late joiner no
+    /// longer deflates `mean_utilization`.
+    #[test]
+    fn live_time_excludes_pre_join_intervals() {
+        let cfg = TaskPreset::Moonlight.workload_for_test();
+        let run_with = |plan: crate::sim::faults::FaultPlan| {
+            let w = crate::workload::generate_iteration(&cfg, 42);
+            ClusterSim::new(
+                cfg.clone(),
+                SystemConfig::default(),
+                w.groups,
+                Box::new(VerlScheduler::new()),
+                SdStrategy::None,
+            )
+            .with_faults(plan)
+            .run()
+        };
+        let clean = run_with(crate::sim::faults::FaultPlan::new());
+        for t in &clean.metrics.live_time {
+            assert_eq!(*t, clean.metrics.makespan);
+        }
+        let horizon = clean.metrics.makespan.as_secs_f64();
+        let out = run_with(
+            crate::sim::faults::FaultPlan::new()
+                .at(0.3 * horizon, crate::sim::faults::FaultEvent::ScaleUp { n: 1 }),
+        );
+        let m = &out.metrics;
+        assert_eq!(m.instances_added, 1);
+        let joined = m.live_time[cfg.n_instances];
+        assert!(joined > SimTime::ZERO, "late joiner never went live");
+        assert!(
+            joined < m.makespan,
+            "live interval must start at the join, not t=0"
+        );
+        assert!(m.busy_time[cfg.n_instances] > SimTime::ZERO);
+        assert!(m.busy_time[cfg.n_instances] <= joined);
+        // The old formula divided the joiner's busy time by the full
+        // makespan; the live-interval denominator can only raise it.
+        let naive: f64 = m
+            .busy_time
+            .iter()
+            .map(|t| t.as_secs_f64())
+            .sum::<f64>()
+            / (m.makespan.as_secs_f64() * m.busy_time.len() as f64);
+        assert!(m.mean_utilization() > naive);
     }
 
     #[test]

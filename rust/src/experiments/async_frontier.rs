@@ -1,0 +1,168 @@
+//! `async-frontier` experiment (extension beyond the paper): the
+//! staleness/throughput frontier of bounded-staleness overlap training
+//! (Laminar-style, arXiv:2510.12633) on Seer's rollout machinery.
+//!
+//! One scheduler (seer + grouped-CST) runs the same multi-epoch
+//! pipeline under every training mode — `sync`, `hybrid` (one-step
+//! overlap), and `async` at increasing lag bounds — across a
+//! fault-plan × drift grid with paired seeds. Sync is the correctness
+//! anchor: zero staleness by construction, epochs strictly serialized.
+//! Each overlap mode buys pipeline span (epoch k+1's rollout starts
+//! before epoch k's weights land) at the price of rollouts sampled from
+//! stale policy versions; the per-request staleness is bounded by the
+//! mode's lag, and this experiment prints the measured frontier plus
+//! the shared paired per-seed statistics
+//! ([`super::common::print_paired_vs`]) so the span win is a CI, not a
+//! point estimate.
+
+use anyhow::Result;
+
+use crate::config::{TaskPreset, TrainingMode};
+use crate::sim::faults::{FaultEvent, FaultPlan};
+use crate::spec::simmodel::SdStrategy;
+use crate::sweep::SweepSpec;
+use crate::util::table::Table;
+use crate::workload::InstanceId;
+
+use super::common::{print_paired_vs, runner, PairedRow, Scale};
+
+/// The mode grid: sync anchor, one-step overlap, then the async lag
+/// ladder.
+fn modes() -> Vec<TrainingMode> {
+    vec![
+        TrainingMode::Sync,
+        TrainingMode::Hybrid,
+        TrainingMode::Async { lag: 1 },
+        TrainingMode::Async { lag: 2 },
+    ]
+}
+
+pub fn run(scale: &Scale) -> Result<()> {
+    let preset = TaskPreset::Moonlight;
+    let cfg = scale.workload(preset);
+    let sys = scale.sys(&cfg);
+
+    // Size the fault script to the workload (same idiom as `faults`):
+    // fractions of a clean single-rollout makespan, so the scenario
+    // shape holds at every scale.
+    let clean = scale
+        .session(preset, "seer", SdStrategy::GroupedCst)
+        .run()?;
+    let horizon = clean.metrics.makespan.as_secs_f64();
+    let plan = FaultPlan::new()
+        .at(
+            0.20 * horizon,
+            FaultEvent::InstanceDown {
+                instance: InstanceId(1),
+            },
+        )
+        .at(0.50 * horizon, FaultEvent::ScaleUp { n: 1 })
+        .at(
+            0.70 * horizon,
+            FaultEvent::InstanceRecover {
+                instance: InstanceId(1),
+            },
+        )
+        .sorted();
+
+    let seeds: Vec<u64> =
+        (0..scale.iters.max(2)).map(|i| scale.seed + i as u64).collect();
+    let mut spec = SweepSpec::new(cfg)
+        .system(sys)
+        .sd("grouped-cst")
+        .seeds(seeds)
+        .drifts([0.0, 0.05])
+        .fault_plan("none", FaultPlan::new())
+        .fault_plan("crash+scale", plan)
+        .pipeline_iters(3);
+    spec.schedulers = vec!["seer".to_string()];
+    for mode in modes() {
+        spec = spec.mode(mode);
+    }
+
+    let report = runner().run(&spec)?.report;
+
+    // Invariants the frontier rests on: staleness never exceeds the
+    // mode's bound, and the sync anchor never sees a stale request.
+    for cell in &report.cells {
+        anyhow::ensure!(
+            cell.staleness_max <= cell.lag,
+            "{} cell (seed {}): staleness {} exceeds lag bound {}",
+            cell.mode,
+            cell.seed,
+            cell.staleness_max,
+            cell.lag
+        );
+        if cell.mode == "sync" {
+            anyhow::ensure!(
+                cell.stale_requests == 0,
+                "sync cell (seed {}) saw {} stale requests",
+                cell.seed,
+                cell.stale_requests
+            );
+        }
+    }
+
+    let mut t = Table::new(
+        "async-frontier — mode x lag staleness/throughput frontier \
+         (seer, grouped-cst, 3-epoch pipeline)",
+        &[
+            "Mode",
+            "Lag",
+            "Fault",
+            "Drift",
+            "Span (s)",
+            "Tok/s",
+            "Tok/s CI 95%",
+            "Staleness",
+        ],
+    );
+    for a in &report.aggregates {
+        t.row(&[
+            a.mode.clone(),
+            a.lag.to_string(),
+            a.fault_name.clone(),
+            format!("{:.2}", a.drift),
+            format!("{:.1}", a.mean_makespan_secs),
+            format!("{:.0}", a.mean_throughput_tok_s),
+            format!(
+                "[{:.0}, {:.0}]",
+                a.throughput_ci.lo, a.throughput_ci.hi
+            ),
+            format!("{:.3}", a.mean_staleness),
+        ]);
+    }
+    t.note(
+        "span = pipeline makespan of 3 epochs (last weight-update land); \
+         staleness = mean policy-version lag per completed request, \
+         bounded by the mode's lag (sync ≡ async lag 0)",
+    );
+    t.print();
+
+    // Paired per-seed statistics: each mode's cells cover the identical
+    // (fault, drift, seed) observation axis in the identical order (the
+    // mode dimension sits between scheduler and scale in the grid), so
+    // the samples pair exactly.
+    let (_, grid_modes, _, faults, drifts, grid_seeds) = spec.dims();
+    let per_mode = faults.len() * drifts.len() * grid_seeds.len();
+    let rows: Vec<PairedRow> = grid_modes
+        .iter()
+        .enumerate()
+        .map(|(mi, mode)| {
+            let cells = &report.cells[mi * per_mode..(mi + 1) * per_mode];
+            PairedRow {
+                label: mode.tag(),
+                makespans: cells.iter().map(|c| c.makespan_secs).collect(),
+                tails: cells.iter().map(|c| c.tail_secs).collect(),
+            }
+        })
+        .collect();
+    print_paired_vs("async-frontier", "async:1", &rows, scale.seed);
+    let stale_total: u64 =
+        report.cells.iter().map(|c| c.stale_requests).sum();
+    println!(
+        "(total stale requests across overlap cells: {stale_total}; \
+         every one bounded by its mode's lag)"
+    );
+    Ok(())
+}

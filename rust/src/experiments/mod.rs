@@ -6,6 +6,7 @@
 //! same rows/series the paper reports and returns machine-readable
 //! results for the smoke tests.
 
+pub mod async_frontier;
 pub mod common;
 pub mod fault_tolerance;
 pub mod fig10_context;
@@ -47,6 +48,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "multi-iter" => multi_iter::run(&scale),
         "faults" => fault_tolerance::run(&scale),
         "sd-realism" => sd_realism::run(&scale),
+        "async-frontier" => async_frontier::run(&scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n================ {id} ================");
@@ -60,8 +62,8 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 16] = [
+pub const ALL_IDS: [&str; 17] = [
     "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
     "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter", "faults",
-    "sd-realism",
+    "sd-realism", "async-frontier",
 ];

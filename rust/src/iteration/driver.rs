@@ -14,15 +14,37 @@
 //!
 //! Everything is deterministic in the config: two drivers with the same
 //! [`TrainingConfig`] produce bit-identical summaries.
+//!
+//! # Training modes
+//!
+//! [`TrainingMode`] selects how epoch *k+1*'s rollout overlaps epoch
+//! *k*'s training/weight-update phases on the pipeline clock:
+//!
+//! * `Sync` — strictly serial (today's default): rollout *k+1* starts
+//!   only after update *k* lands. Single-shot session path.
+//! * `Hybrid` — one-step overlap: rollout *k+1* runs concurrently with
+//!   training *k* (off-policy lag ≤ 1). Laminar-style.
+//! * `Async { lag }` — bounded staleness: rollout *k* may start as soon
+//!   as update *k−1−lag* has landed; updates land mid-rollout and bump
+//!   the stamped policy version via
+//!   [`crate::rollout::RolloutStream::set_policy_version`]. `lag = 0`
+//!   reproduces `Sync` byte-identically (pinned by test).
+//!
+//! The rollout start `S_k`, finish `R_k = S_k + makespan`, and update
+//! landing `U_k` follow the recurrence `S_k = max(R_{k-1}, U_{k-1-lag})`
+//! and `U_k = max(R_k, U_{k-1}) + train_k + weight_update_k` with
+//! `U_j = 0` for `j < 0`; per-completion staleness is folded into the
+//! epoch metrics by [`crate::metrics::RolloutMetrics::apply_staleness`].
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{SystemConfig, WorkloadConfig};
+use crate::config::{SystemConfig, TrainingMode, WorkloadConfig};
 use crate::rl::PhaseModel;
 use crate::rollout::session::RolloutReport;
 use crate::rollout::{RolloutObserver, RolloutSession};
+use crate::sim::clock::SimTime;
 use crate::util::json::Json;
 use crate::workload::generate_epoch;
 
@@ -45,6 +67,9 @@ pub struct TrainingConfig {
     /// Consume the context store's priors from iteration 2 on. The store
     /// *learns* either way; cold runs just never read it back.
     pub warm_start: bool,
+    /// Rollout/training overlap discipline (see the module docs).
+    /// `Sync` (the default) is today's strictly serial pipeline.
+    pub mode: TrainingMode,
     pub store: ContextStoreConfig,
 }
 
@@ -59,6 +84,7 @@ impl TrainingConfig {
             seed: 42,
             drift: 0.05,
             warm_start: true,
+            mode: TrainingMode::Sync,
             store: ContextStoreConfig::default(),
         }
     }
@@ -85,6 +111,20 @@ pub struct IterationSummary {
     pub weight_update_secs: f64,
     /// Full iteration wall: rollout + training + weight update.
     pub iter_total_secs: f64,
+    /// Pipeline-clock time this epoch's rollout started (`S_k`, seconds
+    /// since the pipeline began). Equals the previous update's landing
+    /// time under `Sync`; earlier under overlap modes.
+    pub rollout_start_secs: f64,
+    /// Pipeline-clock time this epoch's trained update lands (`U_k`).
+    pub update_land_secs: f64,
+    /// Mean per-completion policy-version lag of this epoch's data
+    /// (0 under `Sync` and `Async { lag: 0 }`).
+    pub staleness_mean: f64,
+    /// Largest per-completion policy-version lag.
+    pub staleness_max: u64,
+    /// Completions generated under an older policy version than the one
+    /// training consumed them at.
+    pub stale_requests: u64,
 }
 
 impl IterationSummary {
@@ -110,6 +150,11 @@ impl IterationSummary {
         put("train_secs", Json::Num(self.train_secs));
         put("weight_update_secs", Json::Num(self.weight_update_secs));
         put("iter_total_secs", Json::Num(self.iter_total_secs));
+        put("rollout_start_secs", Json::Num(self.rollout_start_secs));
+        put("update_land_secs", Json::Num(self.update_land_secs));
+        put("staleness_mean", Json::Num(self.staleness_mean));
+        put("staleness_max", Json::Num(self.staleness_max as f64));
+        put("stale_requests", Json::Num(self.stale_requests as f64));
         Json::Obj(o)
     }
 
@@ -143,6 +188,11 @@ impl IterationSummary {
             train_secs: f("train_secs")?,
             weight_update_secs: f("weight_update_secs")?,
             iter_total_secs: f("iter_total_secs")?,
+            rollout_start_secs: f("rollout_start_secs")?,
+            update_land_secs: f("update_land_secs")?,
+            staleness_mean: f("staleness_mean")?,
+            staleness_max: u("staleness_max")?,
+            stale_requests: u("stale_requests")?,
         })
     }
 }
@@ -158,6 +208,17 @@ pub struct TrainingDriver {
     /// resumed driver *continues* the drift sequence instead of
     /// replaying already-observed epochs into the decayed statistics.
     next_epoch: usize,
+    /// Pipeline clock: `R_{k-1}` — when the previous epoch's rollout
+    /// finished, in seconds since the pipeline started. Reconstructed
+    /// from `history` on [`with_resume`](Self::with_resume), so a
+    /// resumed overlap run continues the recurrence exactly.
+    pipe_r_prev: f64,
+    /// Pipeline clock: `U_j` — when each completed training step's
+    /// update landed, indexed by *pipeline-relative* epoch (0 = the
+    /// first epoch this pipeline ran). A store-only resume
+    /// ([`with_store`](Self::with_store)) restarts the pipeline clock
+    /// at 0 while epoch numbering continues.
+    pipe_u: Vec<f64>,
 }
 
 impl TrainingDriver {
@@ -219,6 +280,11 @@ impl TrainingDriver {
             );
         }
         let mut d = Self::with_store(cfg, store)?;
+        d.pipe_u = history.iter().map(|s| s.update_land_secs).collect();
+        d.pipe_r_prev = history
+            .last()
+            .map(|s| s.rollout_start_secs + s.makespan_secs)
+            .unwrap_or(0.0);
         d.history = history;
         Ok(d)
     }
@@ -229,6 +295,8 @@ impl TrainingDriver {
             next_epoch: store.iterations() as usize,
             store,
             history: Vec::new(),
+            pipe_r_prev: 0.0,
+            pipe_u: Vec::new(),
         }
     }
 
@@ -266,6 +334,14 @@ impl TrainingDriver {
         observer: Option<Box<dyn RolloutObserver>>,
     ) -> Result<IterationSummary> {
         let cfg = &self.cfg;
+        // Pipeline-relative epoch index and the staleness gate: rollout
+        // may start once the cluster is free (R_{k-1}) AND version
+        // k-lag exists (update k-1-lag landed).
+        let rel = self.pipe_u.len();
+        let lag = cfg.mode.lag() as usize;
+        let gate = if rel > lag { self.pipe_u[rel - 1 - lag] } else { 0.0 };
+        let start_at = self.pipe_r_prev.max(gate);
+
         let w = generate_epoch(&cfg.workload, cfg.seed, iter as u64, cfg.drift);
         let mut builder = RolloutSession::builder()
             .workload(cfg.workload.clone())
@@ -286,20 +362,74 @@ impl TrainingDriver {
         if let Some(obs) = observer {
             builder = builder.observer(obs);
         }
-        let report = builder.run()?;
-        let summary = self.summarize(iter, warm, &report);
+        let report = if cfg.mode.is_pipelined() {
+            self.run_epoch_pipelined(builder, rel, start_at)?
+        } else {
+            builder.run()?
+        };
+        let summary = self.summarize(iter, warm, start_at, &report);
         self.store
             .set_fingerprint(self.cfg.workload.name, self.cfg.seed);
         self.store.observe_report(&report);
         self.history.push(summary);
         self.next_epoch = iter + 1;
+        self.pipe_r_prev = summary.rollout_start_secs + summary.makespan_secs;
+        self.pipe_u.push(summary.update_land_secs);
         Ok(summary)
     }
 
-    /// Run all configured iterations, continuing the epoch sequence.
+    /// Run one overlap-mode epoch through the suspendable
+    /// [`crate::rollout::RolloutStream`]: park the stream across the
+    /// staleness-gate wait, then advance it in segments, bumping the
+    /// stamped policy version as earlier epochs' trained updates land
+    /// mid-rollout, and fold per-completion lag into the metrics.
+    fn run_epoch_pipelined(
+        &self,
+        builder: crate::rollout::RolloutSessionBuilder<'static>,
+        rel: usize,
+        start_at: f64,
+    ) -> Result<RolloutReport> {
+        let mut stream = builder.start_stream()?;
+        if start_at > self.pipe_r_prev {
+            // The cluster sits idle from R_{k-1} until the bounding
+            // version lands — model the wait as a suspend/resume pair
+            // (virtual time inside the rollout is unaffected).
+            stream.suspend()?;
+            stream.resume()?;
+        }
+        // Versions landed before the rollout started…
+        let landed = self.pipe_u.iter().filter(|&&u| u <= start_at).count();
+        stream.set_policy_version(landed as u64);
+        // …and those landing mid-rollout, at sim-relative deadlines.
+        for j in landed..rel {
+            stream.run_until(SimTime::from_secs_f64(self.pipe_u[j] - start_at))?;
+            stream.set_policy_version((j + 1) as u64);
+        }
+        stream.run_until(SimTime::FAR_FUTURE)?;
+        let mut report = stream.finish()?;
+        // Training consumes this data at version `rel` — the version a
+        // synchronous run would have generated it under.
+        report.metrics.apply_staleness(rel as u64);
+        Ok(report)
+    }
+
+    /// Run all configured iterations:
+    /// [`run_to`](Self::run_to)`(cfg.iters)`. On a fresh driver that is
+    /// `cfg.iters` epochs; on a resumed one it *completes* the run to
+    /// the configured total, matching the serve plane's accounting.
     pub fn run(&mut self) -> Result<Vec<IterationSummary>> {
+        self.run_to(self.cfg.iters)
+    }
+
+    /// Run iterations until `total` epochs have completed overall
+    /// (total-count semantics: a driver resumed past `total` runs
+    /// nothing). Returns the summaries this call produced. Gates on the
+    /// epoch counter, not the in-memory history, so a store-only resume
+    /// (`--load-ctx`, which starts with an empty history but a non-zero
+    /// epoch) still counts the already-observed epochs toward `total`.
+    pub fn run_to(&mut self, total: usize) -> Result<Vec<IterationSummary>> {
         let start = self.history.len();
-        for _ in 0..self.cfg.iters {
+        while self.next_epoch < total {
             self.run_iteration(self.next_epoch)?;
         }
         Ok(self.history[start..].to_vec())
@@ -309,11 +439,19 @@ impl TrainingDriver {
         &self,
         iter: usize,
         warm: bool,
+        start_at: f64,
         report: &RolloutReport,
     ) -> IterationSummary {
         let m = &report.metrics;
         let phases = PhaseModel::for_workload(&self.cfg.workload)
             .split(m.makespan, m.tokens_generated);
+        // U_k = max(R_k, U_{k-1}) + T_k: training starts when its data
+        // is ready and the trainer finished the previous step.
+        let rollout_end = start_at + m.makespan.as_secs_f64();
+        let u_prev = self.pipe_u.last().copied().unwrap_or(0.0);
+        let update_land = rollout_end.max(u_prev)
+            + phases.training.as_secs_f64()
+            + phases.weight_update.as_secs_f64();
         IterationSummary {
             iter,
             warm,
@@ -327,6 +465,11 @@ impl TrainingDriver {
             train_secs: phases.training.as_secs_f64(),
             weight_update_secs: phases.weight_update.as_secs_f64(),
             iter_total_secs: phases.total().as_secs_f64(),
+            rollout_start_secs: start_at,
+            update_land_secs: update_land,
+            staleness_mean: m.staleness_mean(),
+            staleness_max: m.staleness_max,
+            stale_requests: m.stale_requests,
         }
     }
 }
@@ -374,12 +517,83 @@ mod tests {
         let mut cold = TrainingDriver::new(quick_cfg(true, 1));
         cold.run().unwrap();
         let store = cold.into_store();
+        // Total-count semantics: the store already observed 1 epoch, so
+        // `iters: 2` runs exactly one more (epoch 1).
         let mut d =
-            TrainingDriver::with_store(quick_cfg(true, 1), store).unwrap();
+            TrainingDriver::with_store(quick_cfg(true, 2), store).unwrap();
         assert_eq!(d.next_epoch(), 1, "resume must not replay epoch 0");
         let sums = d.run().unwrap();
+        assert_eq!(sums.len(), 1);
         assert!(sums[0].warm, "loaded store must warm the first iteration");
         assert_eq!(sums[0].iter, 1);
+    }
+
+    #[test]
+    fn run_counts_total_epochs_not_additional_ones() {
+        let mut d = TrainingDriver::new(quick_cfg(true, 2));
+        d.run().unwrap();
+        assert_eq!(d.history().len(), 2);
+        // Already at the configured total: run() is a no-op…
+        assert!(d.run().unwrap().is_empty());
+        assert_eq!(d.history().len(), 2);
+        // …and run_to past it continues the epoch sequence.
+        let more = d.run_to(3).unwrap();
+        assert_eq!(more.len(), 1);
+        assert_eq!(more[0].iter, 2);
+    }
+
+    #[test]
+    fn async_lag_zero_matches_sync_history_byte_for_byte() {
+        let history_json = |mode: TrainingMode| {
+            let cfg = TrainingConfig {
+                mode,
+                ..quick_cfg(true, 3)
+            };
+            let mut d = TrainingDriver::new(cfg);
+            d.run().unwrap();
+            Json::Arr(d.history().iter().map(|s| s.to_json()).collect())
+                .to_string()
+        };
+        assert_eq!(
+            history_json(TrainingMode::Sync),
+            history_json(TrainingMode::Async { lag: 0 }),
+            "lag 0 must reproduce the synchronous pipeline byte-identically"
+        );
+    }
+
+    #[test]
+    fn overlap_modes_pipeline_epochs_and_bound_staleness() {
+        let run = |mode: TrainingMode| {
+            let cfg = TrainingConfig {
+                mode,
+                ..quick_cfg(true, 3)
+            };
+            let mut d = TrainingDriver::new(cfg);
+            d.run().unwrap()
+        };
+        let sync = run(TrainingMode::Sync);
+        let hybrid = run(TrainingMode::Hybrid);
+        let deep = run(TrainingMode::Async { lag: 2 });
+        for k in 1..3 {
+            // Overlap starts rollouts before the previous update lands…
+            assert!(
+                hybrid[k].rollout_start_secs < sync[k].rollout_start_secs,
+                "epoch {k} must start early under hybrid overlap"
+            );
+            // …with off-policy lag bounded by the mode.
+            assert!(hybrid[k].staleness_max <= 1);
+            assert!(deep[k].staleness_max <= 2);
+        }
+        // Version stamping never perturbs rollout dynamics: per-epoch
+        // makespans are identical, overlap only shifts them earlier on
+        // the pipeline clock, so the pipeline finishes strictly sooner.
+        assert_eq!(sync[2].makespan_secs, hybrid[2].makespan_secs);
+        assert!(hybrid[2].update_land_secs < sync[2].update_land_secs);
+        assert!(
+            hybrid.iter().map(|s| s.stale_requests).sum::<u64>() > 0,
+            "overlapped rollouts must see mid-stream version bumps"
+        );
+        assert!(sync.iter().all(|s| s.stale_requests == 0));
     }
 
     #[test]

@@ -28,16 +28,18 @@ discrete-event cluster simulator and the real-model engine, with
 schedulers and SD strategies resolved by name from the policy registry.
 
 USAGE:
-  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|sd-realism|all>
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|sd-realism|async-frontier|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|rollpacker|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
        [--faults FILE] [--bubble F] [--json] [--profile]
   seer sweep [--task <moonlight|qwen|kimi>] [--schedulers a,b,c] [--sd S]
-       [--seeds N] [--seed BASE] [--scales a,b] [--drifts x,y] [--faults FILE]
-       [--bubble F] [--threads N] [--out FILE] [--bench-out FILE] [--full]
+       [--mode m1,m2] [--lag N] [--seeds N] [--seed BASE] [--scales a,b]
+       [--drifts x,y] [--faults FILE] [--bubble F] [--threads N] [--out FILE]
+       [--bench-out FILE] [--full]
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
-       [--cold] [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
+       [--mode sync|hybrid|async] [--lag N] [--json] [--cold]
+       [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
   seer serve [--addr HOST:PORT] [--workers N] [--state-dir DIR]
        [--max-per-tenant N] [--max-jobs N]
@@ -76,11 +78,26 @@ USAGE:
   additionally writes the sim hot-path BENCH_rollout.json baselines
   (SEER_BENCH_MS=0 for the single-iteration CI smoke mode).
 
-  train runs N simulated GRPO iterations through the multi-iteration
-  driver, warm-starting each from the cross-iteration context store
-  (disable with --cold). --save-ctx / --load-ctx persist the store
-  between runs. --real instead drives the real-model GRPO loop over the
-  AOT HLO artifacts.
+  train runs the simulation to N total GRPO iterations through the
+  multi-iteration driver, warm-starting each from the cross-iteration
+  context store (disable with --cold). --save-ctx / --load-ctx persist
+  the store between runs; --iters is a *total* count, so a run resumed
+  with --load-ctx continues the epoch sequence up to N overall (a store
+  that already observed N iterations runs nothing) — identical to the
+  serve plane's train-job accounting. --real instead drives the
+  real-model GRPO loop over the AOT HLO artifacts.
+
+  train --mode selects the rollout/training overlap discipline: sync
+  (strictly serial, the default), hybrid (one-step overlap, Laminar
+  style), or async with --lag N (epoch k's rollout may start once
+  update k-1-N has landed; updates land mid-rollout and bump the
+  stamped policy version). --mode async --lag 0 reproduces sync
+  byte-identically. --json prints one IterationSummary JSON object per
+  line (NDJSON) instead of the human table; the summaries carry the
+  pipeline clock (rollout_start_secs, update_land_secs) and the
+  per-epoch staleness aggregates. sweep --mode m1,m2 adds the same
+  knob as a grid dimension (every cell runs under each mode; --lag
+  applies to async entries).
 
   serve runs the persistent control plane: a daemon accepting rollout /
   sweep / train jobs as line-delimited JSON over TCP (verbs submit,
@@ -92,6 +109,17 @@ USAGE:
   stdout carries only protocol replies. The protocol grammar and a
   sample shell client are in ARCHITECTURE.md (serve-plane section).
 ";
+
+/// Parse the shared `--lag` flag (async off-policy bound).
+fn parse_lag(args: &Args) -> Result<Option<u64>> {
+    match args.get("lag") {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<u64>()
+            .map(Some)
+            .map_err(|_| anyhow::anyhow!("bad --lag: {v}")),
+    }
+}
 
 fn cmd_rollout(args: &Args) -> Result<()> {
     let preset = TaskPreset::from_name(args.get_or("task", "moonlight"))
@@ -202,6 +230,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     // Dimension validity (scale >= 1, drifts finite and >= 0) is checked
     // once, by SweepSpec::validate inside SweepRunner::run.
+    if let Some(s) = args.get("mode") {
+        // Training-mode dimension: every cell runs under each listed
+        // overlap discipline; --lag applies to the async entries.
+        let lag = parse_lag(args)?;
+        for item in s.split(',').filter(|m| !m.is_empty()) {
+            let mode = seer::config::TrainingMode::parse(
+                item,
+                if item == "async" { lag } else { None },
+            )?;
+            spec = spec.mode(mode);
+        }
+    }
     if let Some(path) = args.get("faults") {
         let plan =
             seer::sim::faults::FaultPlan::load(std::path::Path::new(path))?;
@@ -263,6 +303,10 @@ fn cmd_train_sim(args: &Args) -> Result<()> {
     );
     let workload = scale.workload(preset);
     let system = scale.sys(&workload);
+    let mode = seer::config::TrainingMode::parse(
+        args.get_or("mode", "sync"),
+        parse_lag(args)?,
+    )?;
     let cfg = TrainingConfig {
         system,
         scheduler: args.get_or("scheduler", "seer").to_string(),
@@ -271,48 +315,73 @@ fn cmd_train_sim(args: &Args) -> Result<()> {
         seed: scale.seed,
         drift: args.get_f64("drift", 0.05),
         warm_start: !args.has_flag("cold"),
+        mode,
         ..TrainingConfig::new(workload)
     };
+    let json = args.has_flag("json");
     let mut driver = match args.get("load-ctx") {
         Some(path) => {
             let store = ContextStore::load(std::path::Path::new(path))?;
-            println!(
-                "loaded context store from {path}: {} groups, {} iterations",
-                store.len(),
-                store.iterations()
-            );
+            if !json {
+                println!(
+                    "loaded context store from {path}: {} groups, {} iterations",
+                    store.len(),
+                    store.iterations()
+                );
+            }
             // with_store refuses fingerprint mismatches (task/seed/scale).
             TrainingDriver::with_store(cfg.clone(), store)?
         }
         None => TrainingDriver::new(cfg.clone()),
     };
-    println!(
-        "train: task={} scheduler={} sd={} iters={} drift={} warm={}",
-        cfg.workload.name, cfg.scheduler, cfg.sd, cfg.iters, cfg.drift, cfg.warm_start
-    );
-    for _ in 0..cfg.iters {
-        let s = driver.run_iteration(driver.next_epoch())?;
+    if !json {
         println!(
-            "iter {:>3} {}  rollout {:>8.1}s  p99 {:>8.1}s  tail {:>7.1}s  \
-             train {:>6.1}s  update {:>5.1}s  total {:>8.1}s  {:>7.0} tok/s",
-            s.iter,
-            if s.warm { "warm" } else { "cold" },
-            s.makespan_secs,
-            s.p99_finish_secs,
-            s.tail_secs,
-            s.train_secs,
-            s.weight_update_secs,
-            s.iter_total_secs,
-            s.throughput_tok_s,
+            "train: task={} scheduler={} sd={} iters={} drift={} warm={} mode={} lag={}",
+            cfg.workload.name,
+            cfg.scheduler,
+            cfg.sd,
+            cfg.iters,
+            cfg.drift,
+            cfg.warm_start,
+            cfg.mode.mode_str(),
+            cfg.mode.lag(),
         );
+    }
+    // Total-count semantics, shared with the serve plane: run *to*
+    // cfg.iters epochs overall, counting epochs a --load-ctx store
+    // already observed.
+    while driver.next_epoch() < cfg.iters {
+        let s = driver.run_iteration(driver.next_epoch())?;
+        if json {
+            // NDJSON: one IterationSummary object per line.
+            println!("{}", s.to_json());
+        } else {
+            println!(
+                "iter {:>3} {}  rollout {:>8.1}s  p99 {:>8.1}s  tail {:>7.1}s  \
+                 train {:>6.1}s  update {:>5.1}s  total {:>8.1}s  {:>7.0} tok/s  \
+                 stale {:>4}",
+                s.iter,
+                if s.warm { "warm" } else { "cold" },
+                s.makespan_secs,
+                s.p99_finish_secs,
+                s.tail_secs,
+                s.train_secs,
+                s.weight_update_secs,
+                s.iter_total_secs,
+                s.throughput_tok_s,
+                s.stale_requests,
+            );
+        }
     }
     if let Some(path) = args.get("save-ctx") {
         driver.store().save(std::path::Path::new(path))?;
-        println!(
-            "saved context store to {path}: {} groups, {} iterations",
-            driver.store().len(),
-            driver.store().iterations()
-        );
+        if !json {
+            println!(
+                "saved context store to {path}: {} groups, {} iterations",
+                driver.store().len(),
+                driver.store().iterations()
+            );
+        }
     }
     Ok(())
 }

@@ -17,6 +17,11 @@ pub struct Completion {
     pub finished_at: SimTime,
     pub first_scheduled_at: SimTime,
     pub gen_len: u32,
+    /// Policy version the request was generated under. Synchronous
+    /// rollouts stamp every completion with the epoch's single version;
+    /// async/hybrid pipelines stamp the version live when the request
+    /// *finished generating* (mid-stream weight updates bump it).
+    pub policy_version: u64,
 }
 
 /// A sampled point of one instance's load.
@@ -53,6 +58,12 @@ pub struct RolloutMetrics {
     pub tau: f64,
     /// Per-instance busy time (forward passes running).
     pub busy_time: Vec<SimTime>,
+    /// Per-instance *live* time: how long each instance was actually part
+    /// of the fleet (scale-up instances join late; crashed instances stop
+    /// accruing while down). Empty (or zero entries) fall back to the
+    /// makespan — backends that never lose or add instances need not
+    /// fill it.
+    pub live_time: Vec<SimTime>,
     pub makespan: SimTime,
     // --- fault & elasticity layer ------------------------------------
     /// Requests terminated by a scripted abort (never completed).
@@ -85,6 +96,16 @@ pub struct RolloutMetrics {
     /// Expected extra accepted tokens contributed by the bubble-deepened
     /// draft budgets (γ uplift toward γ_max on straggler instances).
     pub bubble_accept_tokens: u64,
+    // --- off-policy staleness (async/hybrid pipelines; zero in sync) --
+    /// Σ over completions of (consuming policy version − version stamped
+    /// at generation completion). Filled by
+    /// [`RolloutMetrics::apply_staleness`].
+    pub staleness_sum: u64,
+    /// Max per-request staleness (versions).
+    pub staleness_max: u64,
+    /// Completions with staleness ≥ 1 (i.e. generated under an older
+    /// policy than the one that trains on them).
+    pub stale_requests: u64,
 }
 
 impl RolloutMetrics {
@@ -119,14 +140,31 @@ impl RolloutMetrics {
         self.makespan.saturating_sub(times[cut])
     }
 
-    /// Mean instance utilization: busy time / makespan.
+    /// Mean instance utilization: the mean over instances of
+    /// `busy_time[i] / live_time[i]`. Instances without a recorded live
+    /// interval (always-live fleets, the real backend) fall back to the
+    /// full makespan as denominator — for such fleets this is exactly
+    /// the old `Σ busy / (makespan · n)`. Instances added mid-run by
+    /// elastic `ScaleUp` (or lost to `InstanceDown`) are measured only
+    /// over the interval they were actually part of the fleet, so late
+    /// joiners no longer deflate the mean.
     pub fn mean_utilization(&self) -> f64 {
         if self.makespan == SimTime::ZERO || self.busy_time.is_empty() {
             return 0.0;
         }
-        let total: f64 =
-            self.busy_time.iter().map(|t| t.as_secs_f64()).sum();
-        total / (self.makespan.as_secs_f64() * self.busy_time.len() as f64)
+        let total: f64 = self
+            .busy_time
+            .iter()
+            .enumerate()
+            .map(|(i, busy)| {
+                let live = match self.live_time.get(i) {
+                    Some(t) if *t > SimTime::ZERO => *t,
+                    _ => self.makespan,
+                };
+                busy.as_secs_f64() / live.as_secs_f64()
+            })
+            .sum();
+        total / self.busy_time.len() as f64
     }
 
     /// Mean accepted tokens per request-step, including the bonus token —
@@ -168,6 +206,33 @@ impl RolloutMetrics {
             SimTime::from_micros(
                 self.fault_recovery_time.as_micros() / self.fault_recovered,
             )
+        }
+    }
+
+    /// Fold per-request policy-version staleness into the aggregate
+    /// counters: the epoch that trains on this rollout consumes it at
+    /// `consume_version`, so each completion's staleness is
+    /// `consume_version − policy_version`. Synchronous rollouts (and
+    /// async with lag 0) stamp every completion at `consume_version`, so
+    /// all three counters stay 0.
+    pub fn apply_staleness(&mut self, consume_version: u64) {
+        for c in &self.completions {
+            let lag = consume_version.saturating_sub(c.policy_version);
+            self.staleness_sum += lag;
+            self.staleness_max = self.staleness_max.max(lag);
+            if lag > 0 {
+                self.stale_requests += 1;
+            }
+        }
+    }
+
+    /// Mean per-request staleness in policy versions (0.0 when nothing
+    /// completed or every request was on-policy).
+    pub fn staleness_mean(&self) -> f64 {
+        if self.completions.is_empty() {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.completions.len() as f64
         }
     }
 
@@ -268,6 +333,7 @@ mod tests {
             finished_at: SimTime::from_secs_f64(t),
             first_scheduled_at: SimTime::ZERO,
             gen_len: 100,
+            policy_version: 0,
         }
     }
 
@@ -312,6 +378,44 @@ mod tests {
         m.busy_time[0] = SimTime::from_secs_f64(10.0);
         m.busy_time[1] = SimTime::from_secs_f64(5.0);
         assert!((m.mean_utilization() - 0.75).abs() < 1e-9);
+    }
+
+    /// The live-interval denominator: an instance that joined for only
+    /// the last 2s of a 10s rollout and was busy throughout is 100%
+    /// utilized, not 20%. Always-live instances (no live_time entry)
+    /// keep the makespan denominator.
+    #[test]
+    fn utilization_uses_live_intervals_for_late_joiners() {
+        let mut m = RolloutMetrics::new(2);
+        m.makespan = SimTime::from_secs_f64(10.0);
+        m.busy_time[0] = SimTime::from_secs_f64(5.0); // always live
+        m.busy_time[1] = SimTime::from_secs_f64(2.0); // joined at t=8
+        m.live_time = vec![SimTime::from_secs_f64(10.0), SimTime::from_secs_f64(2.0)];
+        // (5/10 + 2/2) / 2 = 0.75 — not (5+2)/(10*2) = 0.35.
+        assert!((m.mean_utilization() - 0.75).abs() < 1e-9);
+        // Zero live entries fall back to the makespan.
+        m.live_time = vec![SimTime::ZERO, SimTime::ZERO];
+        assert!((m.mean_utilization() - 0.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn staleness_folds_per_completion_lag() {
+        let mut m = RolloutMetrics::new(1);
+        assert_eq!(m.staleness_mean(), 0.0);
+        m.completions.push(cpl(0, 1.0)); // version 0
+        m.completions.push(Completion {
+            policy_version: 2,
+            ..cpl(1, 2.0)
+        });
+        m.completions.push(Completion {
+            policy_version: 3,
+            ..cpl(2, 3.0)
+        });
+        m.apply_staleness(3);
+        assert_eq!(m.staleness_sum, 4); // 3 + 1 + 0
+        assert_eq!(m.staleness_max, 3);
+        assert_eq!(m.stale_requests, 2);
+        assert!((m.staleness_mean() - 4.0 / 3.0).abs() < 1e-12);
     }
 
     #[test]

@@ -619,6 +619,8 @@ impl<'m> RealRollout<'m> {
                             .first_admitted
                             .unwrap_or(now),
                         gen_len: glen as u32,
+                        // The real engine runs one policy per rollout.
+                        policy_version: 0,
                     });
                     observers.emit(RolloutEvent::Finished {
                         req: RequestId(req as u32),

@@ -25,5 +25,5 @@ pub use observer::{
 pub use registry::PolicyRegistry;
 pub use session::{
     RealBackend, RolloutBackend, RolloutReport, RolloutSession,
-    RolloutSessionBuilder, SeqResult, SimBackend,
+    RolloutSessionBuilder, RolloutStream, SeqResult, SimBackend,
 };

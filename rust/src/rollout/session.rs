@@ -144,6 +144,12 @@ impl RolloutReport {
             Json::Num(m.spec_accepted_tokens as f64),
         );
         put("tau", Json::Num(m.mean_acceptance_len()));
+        // Policy-version staleness (all zero on synchronous rollouts —
+        // the async/hybrid driver folds per-completion lag in via
+        // `RolloutMetrics::apply_staleness`).
+        put("stale_requests", Json::Num(m.stale_requests as f64));
+        put("staleness_max", Json::Num(m.staleness_max as f64));
+        put("staleness_mean", Json::Num(m.staleness_mean()));
         // Tail packing (zero for policies without tail lanes).
         put("tail_packed", Json::Num(m.tail_packed as f64));
         put(
@@ -239,13 +245,35 @@ impl RolloutBackend for SimBackend {
     }
 
     fn run(&mut self, observers: ObserverHub) -> Result<RolloutReport> {
-        let Some(scheduler) = self.scheduler.take() else {
-            bail!("rollout session already ran");
-        };
         // The wall clock covers the whole session — workload generation
         // through result assembly — matching what the pre-session
         // benches measured around `run_rollout`.
         let start = Instant::now();
+        let (sim, expected) = self.prepare(observers)?;
+        // Single-shot drain: `ClusterSim::run` is exactly
+        // `start() + step_until(FAR_FUTURE) + finish()`, so this path
+        // and the suspendable [`RolloutStream`] produce identical
+        // outcomes by construction.
+        let out = sim.run();
+        Ok(assemble_sim_report(
+            self.scheduler_name,
+            self.sd.name(),
+            self.stop_after,
+            expected,
+            out,
+            start,
+        ))
+    }
+}
+
+impl SimBackend {
+    /// Build the fully configured [`ClusterSim`] and the expected
+    /// completion count. Consumes the one-shot state (scheduler, groups,
+    /// priors, faults) — a second call bails like a second `run` would.
+    fn prepare(&mut self, observers: ObserverHub) -> Result<(ClusterSim, usize)> {
+        let Some(scheduler) = self.scheduler.take() else {
+            bail!("rollout session already ran");
+        };
         if let Some(n) = self.n_instances {
             self.cfg.n_instances = n.max(1);
         }
@@ -277,37 +305,160 @@ impl RolloutBackend for SimBackend {
         if self.profile {
             sim = sim.with_profiling();
         }
-        let out = sim.run();
-        if self.stop_after.is_none() {
-            // Conservation under faults: everything not explicitly
-            // aborted by the script must have completed.
-            out.metrics
-                .check_complete(expected - out.metrics.aborted as usize);
-        }
-        let sequences: Vec<SeqResult> = out
-            .buffer
-            .all()
-            .iter()
-            .map(|r| SeqResult {
-                id: r.id(),
-                group: r.group(),
-                prompt_len: r.spec.prompt_len,
-                gen_len: r.generated,
-                tokens: vec![],
-                chunks: r.chunks_run,
-                preemptions: r.preemptions,
-                migrations: r.migrations,
-                aborted: r.aborted,
-            })
-            .collect();
-        Ok(RolloutReport {
-            backend: self.name(),
-            scheduler: self.scheduler_name,
-            sd: self.sd.name(),
-            metrics: out.metrics,
-            sequences,
-            wall_secs: start.elapsed().as_secs_f64(),
+        Ok((sim, expected))
+    }
+}
+
+/// Shared tail of a simulated rollout: completion-conservation check plus
+/// sequence/report assembly. Used by both the single-shot
+/// [`SimBackend::run`] path and [`RolloutStream::finish`], so the two
+/// paths cannot drift apart.
+fn assemble_sim_report(
+    scheduler: &'static str,
+    sd: &'static str,
+    stop_after: Option<usize>,
+    expected: usize,
+    out: crate::engine::cluster::RolloutOutcome,
+    start: Instant,
+) -> RolloutReport {
+    if stop_after.is_none() {
+        // Conservation under faults: everything not explicitly
+        // aborted by the script must have completed.
+        out.metrics
+            .check_complete(expected - out.metrics.aborted as usize);
+    }
+    let sequences: Vec<SeqResult> = out
+        .buffer
+        .all()
+        .iter()
+        .map(|r| SeqResult {
+            id: r.id(),
+            group: r.group(),
+            prompt_len: r.spec.prompt_len,
+            gen_len: r.generated,
+            tokens: vec![],
+            chunks: r.chunks_run,
+            preemptions: r.preemptions,
+            migrations: r.migrations,
+            aborted: r.aborted,
         })
+        .collect();
+    RolloutReport {
+        backend: "sim",
+        scheduler,
+        sd,
+        metrics: out.metrics,
+        sequences,
+        wall_secs: start.elapsed().as_secs_f64(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Suspendable streaming rollout (simulated backend).
+// ---------------------------------------------------------------------
+
+/// A simulated rollout that can be advanced in bounded virtual-time
+/// segments and suspended/resumed between them — the session-layer
+/// surface the async/hybrid [`crate::iteration::TrainingDriver`] modes
+/// drive. Obtain via [`RolloutSessionBuilder::start_stream`].
+///
+/// State machine: the stream starts *running*; [`suspend`] parks it
+/// (further [`run_until`] calls are an error), [`resume`] un-parks it,
+/// and [`finish`] consumes a drained stream into the same
+/// [`RolloutReport`] the single-shot path produces. Virtual time only
+/// advances inside [`run_until`], so a suspended stream holds the
+/// cluster frozen mid-flight with all queues and KV state intact.
+///
+/// [`suspend`]: RolloutStream::suspend
+/// [`resume`]: RolloutStream::resume
+/// [`run_until`]: RolloutStream::run_until
+/// [`finish`]: RolloutStream::finish
+pub struct RolloutStream {
+    sim: ClusterSim,
+    scheduler_name: &'static str,
+    sd_name: &'static str,
+    expected: usize,
+    stop_after: Option<usize>,
+    start: Instant,
+    suspended: bool,
+    done: bool,
+}
+
+impl RolloutStream {
+    pub fn scheduler_name(&self) -> &'static str {
+        self.scheduler_name
+    }
+
+    pub fn sd_name(&self) -> &'static str {
+        self.sd_name
+    }
+
+    /// Advance the simulation until the event queue is exhausted or the
+    /// next event lies strictly *after* `deadline` (events at exactly
+    /// the deadline are processed). Returns `true` once the rollout is
+    /// complete. Pass [`SimTime::FAR_FUTURE`] to drain.
+    pub fn run_until(&mut self, deadline: SimTime) -> Result<bool> {
+        if self.suspended {
+            bail!("rollout stream is suspended; resume() before run_until()");
+        }
+        if !self.done {
+            self.done = self.sim.step_until(deadline);
+        }
+        Ok(self.done)
+    }
+
+    /// Park the stream. Virtual time is frozen until
+    /// [`Self::resume`]; suspending twice is an error.
+    pub fn suspend(&mut self) -> Result<()> {
+        if self.suspended {
+            bail!("rollout stream is already suspended");
+        }
+        self.suspended = true;
+        Ok(())
+    }
+
+    /// Un-park a suspended stream. Resuming a running stream is an
+    /// error.
+    pub fn resume(&mut self) -> Result<()> {
+        if !self.suspended {
+            bail!("rollout stream is not suspended");
+        }
+        self.suspended = false;
+        Ok(())
+    }
+
+    pub fn is_suspended(&self) -> bool {
+        self.suspended
+    }
+
+    /// Whether the underlying rollout has drained.
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Stamp the policy version subsequently *finishing* requests
+    /// complete under — the async driver calls this as trained updates
+    /// land mid-rollout. Versions are absolute (epoch index + 1).
+    pub fn set_policy_version(&mut self, v: u64) {
+        self.sim.set_policy_version(v);
+    }
+
+    /// Consume a drained stream into the unified report. Erroring on an
+    /// undrained stream (rather than silently draining) keeps the
+    /// driver's overlap accounting honest.
+    pub fn finish(self) -> Result<RolloutReport> {
+        if !self.done {
+            bail!("rollout stream still has work in flight; run_until(SimTime::FAR_FUTURE) first");
+        }
+        let out = self.sim.finish();
+        Ok(assemble_sim_report(
+            self.scheduler_name,
+            self.sd_name,
+            self.stop_after,
+            self.expected,
+            out,
+            self.start,
+        ))
     }
 }
 
@@ -623,6 +774,17 @@ impl<'m> RolloutSessionBuilder<'m> {
                 observers: self.observers,
             });
         }
+        let (backend, observers) = self.build_sim()?;
+        Ok(RolloutSession {
+            backend: Box::new(backend),
+            observers,
+        })
+    }
+
+    /// Resolve the simulator arm of the builder into a ready
+    /// [`SimBackend`] plus the observer hub. Shared by [`Self::build`]
+    /// and [`Self::start_stream`].
+    fn build_sim(self) -> Result<(SimBackend, ObserverHub)> {
         let Some(cfg) = self.workload else {
             bail!("a session needs .workload(..) or .real(..)");
         };
@@ -638,8 +800,8 @@ impl<'m> RolloutSessionBuilder<'m> {
             Some(SdChoice::Strategy(s)) => s,
             None => SdStrategy::GroupedCst,
         };
-        Ok(RolloutSession {
-            backend: Box::new(SimBackend {
+        Ok((
+            SimBackend {
                 cfg,
                 sys: self.system.unwrap_or_default(),
                 scheduler: Some(scheduler),
@@ -654,8 +816,39 @@ impl<'m> RolloutSessionBuilder<'m> {
                 warm_drift: self.warm_drift,
                 faults: self.faults,
                 profile: self.profile,
-            }),
-            observers: self.observers,
+            },
+            self.observers,
+        ))
+    }
+
+    /// Start a suspendable streaming rollout ([`RolloutStream`]) —
+    /// simulator only; the real slot engine runs single-shot. Workload
+    /// generation and cluster construction happen here, so a stream
+    /// that is immediately drained to [`SimTime::FAR_FUTURE`] and
+    /// finished produces the same report as [`Self::run`].
+    pub fn start_stream(self) -> Result<RolloutStream> {
+        if self.real.is_some() {
+            bail!(
+                "streaming suspend/resume is simulator-only; \
+                 the real backend runs single-shot via .run()"
+            );
+        }
+        let start = Instant::now();
+        let (mut backend, observers) = self.build_sim()?;
+        let scheduler_name = backend.scheduler_name;
+        let sd_name = backend.sd.name();
+        let stop_after = backend.stop_after;
+        let (mut sim, expected) = backend.prepare(observers)?;
+        sim.start();
+        Ok(RolloutStream {
+            sim,
+            scheduler_name,
+            sd_name,
+            expected,
+            stop_after,
+            start,
+            suspended: false,
+            done: false,
         })
     }
 
@@ -736,6 +929,69 @@ mod tests {
             scaled.metrics.tokens_generated,
             base.metrics.tokens_generated
         );
+    }
+
+    #[test]
+    fn stream_without_suspension_matches_single_shot_run() {
+        let builder = || {
+            RolloutSession::builder()
+                .workload(TaskPreset::Moonlight.workload_for_test())
+                .scheduler("seer")
+                .sd("grouped-cst")
+                .seed(42)
+        };
+        let strip = |r: &RolloutReport| {
+            let mut j = r.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.remove("wall_secs"); // host wall clock, not comparable
+            }
+            j.to_string()
+        };
+        let single = builder().run().unwrap();
+        let mut stream = builder().start_stream().unwrap();
+        assert!(!stream.is_done());
+        // Drain in small virtual-time segments to exercise the
+        // deadline boundary, not one FAR_FUTURE shot.
+        let mut deadline = SimTime::from_secs(3);
+        while !stream.run_until(deadline).unwrap() {
+            deadline += SimTime::from_secs(3);
+        }
+        let streamed = stream.finish().unwrap();
+        assert_eq!(strip(&single), strip(&streamed));
+    }
+
+    #[test]
+    fn stream_suspend_resume_state_machine() {
+        let builder = || {
+            RolloutSession::builder()
+                .workload(TaskPreset::Moonlight.workload_for_test())
+                .scheduler("seer")
+                .sd("none")
+                .seed(7)
+        };
+        // Finishing an undrained stream is an error.
+        let fresh = builder().start_stream().unwrap();
+        assert!(fresh
+            .finish()
+            .unwrap_err()
+            .to_string()
+            .contains("still has work in flight"));
+
+        let mut s = builder().start_stream().unwrap();
+        assert!(!s.is_suspended());
+        assert!(s.resume().is_err(), "resume while running must fail");
+        s.suspend().unwrap();
+        assert!(s.is_suspended());
+        assert!(s.suspend().is_err(), "double suspend must fail");
+        assert!(
+            s.run_until(SimTime::from_secs(1)).is_err(),
+            "run_until while suspended must fail"
+        );
+        s.resume().unwrap();
+        assert!(s.run_until(SimTime::FAR_FUTURE).unwrap());
+        let report = s.finish().unwrap();
+        assert!(report.metrics.throughput() > 0.0);
+        assert_eq!(report.backend, "sim");
     }
 
     #[test]

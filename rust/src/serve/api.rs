@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Context, Result};
 
-use crate::config::{TaskPreset, WorkloadConfig};
+use crate::config::{TaskPreset, TrainingMode, WorkloadConfig};
 use crate::iteration::{IterationSummary, TrainingConfig};
 use crate::rollout::{PolicyRegistry, RolloutSession, RolloutSessionBuilder};
 use crate::util::json::Json;
@@ -64,6 +64,9 @@ pub struct TrainParams {
     pub iters: usize,
     pub seed: u64,
     pub drift: f64,
+    /// Rollout/training overlap mode (`sync`, `hybrid`, or `async` with
+    /// a `lag` field); see [`TrainingMode::parse`].
+    pub mode: TrainingMode,
     /// Disable warm starts from the context store.
     pub cold: bool,
     /// Sleep this long after each iteration. Emulates the pacing of an
@@ -237,6 +240,13 @@ impl JobSpec {
                 Ok(JobSpec::Sweep(p))
             }
             "train" => {
+                let lag = match j.get("lag") {
+                    None => None,
+                    Some(v) => Some(
+                        v.as_u64()
+                            .context("field 'lag' must be a number")?,
+                    ),
+                };
                 let p = TrainParams {
                     task: opt_str(j, "task", "moonlight")?,
                     scheduler: opt_str(j, "scheduler", "seer")?,
@@ -244,6 +254,10 @@ impl JobSpec {
                     iters: opt_u64(j, "iters", 3)? as usize,
                     seed: opt_u64(j, "seed", 42)?,
                     drift: opt_f64(j, "drift", 0.05)?,
+                    mode: TrainingMode::parse(
+                        &opt_str(j, "mode", "sync")?,
+                        lag,
+                    )?,
                     cold: opt_bool(j, "cold", false)?,
                     throttle_ms: opt_u64(j, "throttle_ms", 0)?,
                     full,
@@ -307,6 +321,10 @@ impl JobSpec {
                 put("iters", Json::Num(p.iters as f64));
                 put("seed", Json::Num(p.seed as f64));
                 put("drift", Json::Num(p.drift));
+                put("mode", Json::Str(p.mode.mode_str().into()));
+                if let TrainingMode::Async { lag } = p.mode {
+                    put("lag", Json::Num(lag as f64));
+                }
                 put("cold", Json::Bool(p.cold));
                 put("throttle_ms", Json::Num(p.throttle_ms as f64));
                 put("full", Json::Bool(p.full));
@@ -362,6 +380,7 @@ impl TrainParams {
             iters: self.iters,
             seed: self.seed,
             drift: self.drift,
+            mode: self.mode,
             warm_start: !self.cold,
             ..TrainingConfig::new(workload_of(&self.task, self.full)?)
         })
@@ -384,6 +403,10 @@ pub fn train_report(params: &TrainParams, history: &[IterationSummary]) -> Json 
     let tokens: u64 = history.iter().map(|s| s.tokens).sum();
     o.insert("total_secs".to_string(), Json::Num(total));
     o.insert("total_tokens".to_string(), Json::Num(tokens as f64));
+    let stale: u64 = history.iter().map(|s| s.stale_requests).sum();
+    let stale_max = history.iter().map(|s| s.staleness_max).max().unwrap_or(0);
+    o.insert("total_stale_requests".to_string(), Json::Num(stale as f64));
+    o.insert("staleness_max".to_string(), Json::Num(stale_max as f64));
     if let Some(last) = history.last() {
         o.insert(
             "final_p99_finish_secs".to_string(),
@@ -513,8 +536,21 @@ mod tests {
                 iters: 4,
                 seed: 9,
                 drift: 0.1,
+                mode: TrainingMode::Async { lag: 2 },
                 cold: true,
                 throttle_ms: 25,
+                full: false,
+            }),
+            JobSpec::Train(TrainParams {
+                task: "moonlight".into(),
+                scheduler: "seer".into(),
+                sd: "grouped-cst".into(),
+                iters: 2,
+                seed: 3,
+                drift: 0.0,
+                mode: TrainingMode::Hybrid,
+                cold: false,
+                throttle_ms: 0,
                 full: false,
             }),
         ];
@@ -593,6 +629,14 @@ mod tests {
                 "iters",
             ),
             (
+                r#"{"verb":"submit","job":{"kind":"train","mode":"warp"}}"#,
+                "unknown training mode",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","mode":"sync","lag":2}}"#,
+                "only applies",
+            ),
+            (
                 r#"{"verb":"submit","job":{"kind":"sweep","schedulers":[]}}"#,
                 "at least one",
             ),
@@ -635,6 +679,7 @@ mod tests {
             iters: 1,
             seed: 1,
             drift: 0.0,
+            mode: TrainingMode::Sync,
             cold: false,
             throttle_ms: 0,
             full: false,
@@ -650,5 +695,13 @@ mod tests {
         assert!(train_report(&p, &h)
             .get("final_p99_finish_secs")
             .is_some());
+        // Sync runs report zero staleness — the fields still appear so
+        // consumers can diff them across modes.
+        assert_eq!(
+            train_report(&p, &h)
+                .get("total_stale_requests")
+                .and_then(Json::as_u64),
+            Some(0)
+        );
     }
 }

@@ -175,6 +175,7 @@ mod tests {
             iters: 2,
             seed: 5,
             drift: 0.1,
+            mode: crate::config::TrainingMode::Async { lag: 1 },
             cold: false,
             throttle_ms: 0,
             full: false,

@@ -545,7 +545,11 @@ impl JobManager {
             }
             _ => TrainingDriver::new(cfg),
         };
-        while driver.history().len() < p.iters {
+        // Total-count semantics, same as `TrainingDriver::run_to`: a
+        // resumed driver's `next_epoch` already counts checkpointed
+        // iterations, so the job runs to `p.iters` *total* — never
+        // `p.iters` more (pinned by the resume-equivalence test).
+        while driver.next_epoch() < p.iters {
             if cancel.is_cancelled() {
                 // Abort-shutdown keeps the checkpoint for restart
                 // recovery; a client cancel means the job is dead.
@@ -569,7 +573,7 @@ impl JobManager {
                 }
                 .save(dir)?;
             }
-            if p.throttle_ms > 0 && driver.history().len() < p.iters {
+            if p.throttle_ms > 0 && driver.next_epoch() < p.iters {
                 std::thread::sleep(Duration::from_millis(p.throttle_ms));
             }
         }
@@ -604,6 +608,7 @@ mod tests {
             iters,
             seed: 42,
             drift: 0.0,
+            mode: crate::config::TrainingMode::Sync,
             cold: false,
             throttle_ms,
             full: false,
@@ -707,6 +712,64 @@ mod tests {
             Some("shutting-down")
         );
         assert!(m.drained());
+    }
+
+    #[test]
+    fn resumed_job_and_resumed_cli_run_agree_on_total_iters() {
+        // The PR-9 bugfix: both resume paths use *total-count*
+        // semantics. A job checkpointed after 1 of 3 iterations must
+        // finish with exactly 3 summaries — not 1 + 3 — and match a
+        // CLI-style `run_to` resume from the same checkpoint bit for
+        // bit.
+        let JobSpec::Train(p) = train_spec(3, 0) else {
+            unreachable!()
+        };
+        let mut seeded = TrainingDriver::new(p.training_config().unwrap());
+        seeded.run_iteration(0).unwrap();
+        let history = seeded.history().to_vec();
+        let store = seeded.into_store();
+
+        let dir = std::env::temp_dir()
+            .join(format!("seer-jobs-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        TrainCheckpoint {
+            job_id: 7,
+            tenant: "alice".into(),
+            params: p.clone(),
+            history: history.clone(),
+            store: store.clone(),
+        }
+        .save(&dir)
+        .unwrap();
+
+        // Serve path: the manager recovers the checkpoint and runs the
+        // job to completion.
+        let m =
+            JobManager::new(QuotaConfig::default(), Some(dir.clone())).unwrap();
+        let reply = with_pool(&m, 1, || m.result_json(7));
+        assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
+        let iters = reply
+            .get("result")
+            .and_then(|r| r.get("iterations"))
+            .and_then(Json::as_arr)
+            .unwrap();
+        assert_eq!(iters.len(), 3, "serve resume must run to 3 total");
+
+        // CLI path: `--load-ctx`-style resume through run_to.
+        let mut cli = TrainingDriver::with_resume(
+            p.training_config().unwrap(),
+            store,
+            history,
+        )
+        .unwrap();
+        cli.run_to(p.iters).unwrap();
+        assert_eq!(cli.history().len(), iters.len());
+        let cli_json: Vec<String> =
+            cli.history().iter().map(|s| s.to_json().to_string()).collect();
+        let job_json: Vec<String> =
+            iters.iter().map(|j| j.to_string()).collect();
+        assert_eq!(cli_json, job_json);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

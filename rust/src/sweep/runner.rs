@@ -198,9 +198,10 @@ impl SweepRunner {
                 }
                 cell.run().with_context(|| {
                     format!(
-                        "sweep cell {} ({} seed {} scale {} fault {} drift {})",
+                        "sweep cell {} ({} mode {} seed {} scale {} fault {} drift {})",
                         cell.index,
                         cell.scheduler,
+                        cell.mode.tag(),
                         cell.seed,
                         cell.n_instances,
                         cell.fault_name,
@@ -241,10 +242,15 @@ impl Default for SweepRunner {
     }
 }
 
-/// Per-group (scheduler, scale, fault, drift) aggregate across seeds.
+/// Per-group (scheduler, mode, scale, fault, drift) aggregate across
+/// seeds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Aggregate {
     pub scheduler: String,
+    /// Training-mode tag (`sync`, `hybrid`, `async:N`) of this group.
+    pub mode: String,
+    /// Staleness bound the mode permits (`0` for sync).
+    pub lag: u64,
     pub n_instances: usize,
     pub fault_name: String,
     pub drift: f64,
@@ -253,16 +259,22 @@ pub struct Aggregate {
     pub mean_throughput_tok_s: f64,
     pub mean_tail_secs: f64,
     pub mean_p99_finish_secs: f64,
+    /// Mean per-request policy-version staleness across the group's
+    /// seeds (zero everywhere for sync groups).
+    pub mean_staleness: f64,
     /// Seeded-bootstrap CI over the per-seed throughputs.
     pub throughput_ci: Ci,
 }
 
 /// Paired per-seed comparison of one scheduler against the baseline
-/// (`spec.schedulers[0]`) at the same scale/fault/drift point.
+/// (`spec.schedulers[0]`) at the same mode/scale/fault/drift point.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PairedComparison {
     pub baseline: String,
     pub candidate: String,
+    /// Training-mode tag shared by both sides of the pairing.
+    pub mode: String,
+    pub lag: u64,
     pub n_instances: usize,
     pub fault_name: String,
     pub drift: f64,
@@ -298,7 +310,7 @@ impl SweepReport {
     /// Relies on the expansion contract: results arrive in grid order
     /// and each aggregate group is one contiguous run of `k` seeds.
     fn aggregate(spec: &SweepSpec, cells: Vec<CellResult>) -> SweepReport {
-        let (schedulers, scales, faults, drifts, seeds) = spec.dims();
+        let (schedulers, modes, scales, faults, drifts, seeds) = spec.dims();
         let k = seeds.len();
         let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
         let mut aggregates = Vec::new();
@@ -308,6 +320,8 @@ impl SweepReport {
                 group.iter().map(|c| c.throughput_tok_s).collect();
             aggregates.push(Aggregate {
                 scheduler: first.scheduler.clone(),
+                mode: first.mode.clone(),
+                lag: first.lag,
                 n_instances: first.n_instances,
                 fault_name: first.fault_name.clone(),
                 drift: first.drift,
@@ -325,6 +339,12 @@ impl SweepReport {
                         .map(|c| c.p99_finish_secs)
                         .collect::<Vec<_>>(),
                 ),
+                mean_staleness: mean(
+                    &group
+                        .iter()
+                        .map(|c| c.staleness_mean)
+                        .collect::<Vec<_>>(),
+                ),
                 throughput_ci: bootstrap_mean_ci(
                     &throughputs,
                     BOOTSTRAP_LEVEL,
@@ -334,9 +354,10 @@ impl SweepReport {
             });
         }
         // Paired layer: scheduler s > 0 vs scheduler 0 at the same
-        // (scale, fault, drift) point. With the scheduler dimension
-        // outermost, scheduler s's groups sit at ordinal s*per + p.
-        let per = scales.len() * faults.len() * drifts.len();
+        // (mode, scale, fault, drift) point. With the scheduler
+        // dimension outermost, scheduler s's groups sit at ordinal
+        // s*per + p.
+        let per = modes.len() * scales.len() * faults.len() * drifts.len();
         let mut paired = Vec::new();
         for s in 1..schedulers.len() {
             for p in 0..per {
@@ -353,6 +374,8 @@ impl SweepReport {
                 paired.push(PairedComparison {
                     baseline: schedulers[0].clone(),
                     candidate: schedulers[s].clone(),
+                    mode: base[0].mode.clone(),
+                    lag: base[0].lag,
                     n_instances: base[0].n_instances,
                     fault_name: base[0].fault_name.clone(),
                     drift: base[0].drift,
@@ -422,6 +445,8 @@ fn paired_stat_json(p: &Paired) -> Json {
 fn agg_json(a: &Aggregate) -> Json {
     let mut o = std::collections::BTreeMap::new();
     o.insert("scheduler".to_string(), Json::Str(a.scheduler.clone()));
+    o.insert("mode".to_string(), Json::Str(a.mode.clone()));
+    o.insert("lag".to_string(), Json::Num(a.lag as f64));
     o.insert("n_instances".to_string(), Json::Num(a.n_instances as f64));
     o.insert("fault".to_string(), Json::Str(a.fault_name.clone()));
     o.insert("drift".to_string(), Json::Num(a.drift));
@@ -439,6 +464,7 @@ fn agg_json(a: &Aggregate) -> Json {
         "mean_p99_finish_secs".to_string(),
         Json::Num(a.mean_p99_finish_secs),
     );
+    o.insert("mean_staleness".to_string(), Json::Num(a.mean_staleness));
     o.insert("throughput_ci".to_string(), ci_json(&a.throughput_ci));
     Json::Obj(o)
 }
@@ -447,6 +473,8 @@ fn paired_json(p: &PairedComparison) -> Json {
     let mut o = std::collections::BTreeMap::new();
     o.insert("baseline".to_string(), Json::Str(p.baseline.clone()));
     o.insert("candidate".to_string(), Json::Str(p.candidate.clone()));
+    o.insert("mode".to_string(), Json::Str(p.mode.clone()));
+    o.insert("lag".to_string(), Json::Num(p.lag as f64));
     o.insert("n_instances".to_string(), Json::Num(p.n_instances as f64));
     o.insert("fault".to_string(), Json::Str(p.fault_name.clone()));
     o.insert("drift".to_string(), Json::Num(p.drift));

@@ -1,26 +1,37 @@
 //! The sweep grid: [`SweepSpec`] describes a study as the cross product
-//! of scheduler policy × seed × cluster scale × fault plan × drift, and
-//! expands it into independent, self-contained [`SweepCell`]s.
+//! of scheduler policy × training mode × seed × cluster scale × fault
+//! plan × drift, and expands it into independent, self-contained
+//! [`SweepCell`]s.
 //!
 //! Expansion order is part of the spec's contract (tests pin it):
-//! scheduler is the outermost dimension, then cluster scale, fault plan,
-//! drift, and finally seed — so the cells belonging to one aggregate
-//! group (same scheduler/scale/fault/drift, varying seed) are contiguous
-//! and the runner can aggregate by index arithmetic without ever
-//! depending on completion order.
+//! scheduler is the outermost dimension, then training mode, cluster
+//! scale, fault plan, drift, and finally seed — so the cells belonging
+//! to one aggregate group (same scheduler/mode/scale/fault/drift,
+//! varying seed) are contiguous and the runner can aggregate by index
+//! arithmetic without ever depending on completion order.
+//!
+//! With no explicit mode dimension a cell is one synchronous rollout
+//! (today's behavior, byte-identical). Listing modes via
+//! [`SweepSpec::mode`] switches *every* cell — `sync` included — to a
+//! [`pipeline_iters`](SweepSpec::pipeline_iters)-epoch training
+//! pipeline through the suspendable [`crate::rollout::RolloutStream`],
+//! so mode rows compare the same amount of work: the cell's makespan
+//! becomes the pipeline span (rollout overlap included) and the
+//! staleness aggregates are folded per completion.
 
 use anyhow::{bail, Result};
 
-use crate::config::{SystemConfig, WorkloadConfig};
+use crate::config::{SystemConfig, TrainingMode, WorkloadConfig};
 use crate::rollout::RolloutSession;
 use crate::sim::faults::FaultPlan;
 use crate::util::json::Json;
 use crate::workload::generate_epoch;
 
 /// The effective dimension vectors of a spec, in expansion order:
-/// `(schedulers, scales, fault_plans, drifts, seeds)`.
+/// `(schedulers, modes, scales, fault_plans, drifts, seeds)`.
 pub type SweepDims = (
     Vec<String>,
+    Vec<TrainingMode>,
     Vec<usize>,
     Vec<(String, FaultPlan)>,
     Vec<f64>,
@@ -53,6 +64,15 @@ pub struct SweepSpec {
     /// values would run the base workload under a misleading label —
     /// the CLI rejects them).
     pub drifts: Vec<f64>,
+    /// Training-mode dimension. Empty ⇒ single-rollout synchronous
+    /// cells (today's behavior). Non-empty ⇒ every cell runs a
+    /// [`pipeline_iters`](Self::pipeline_iters)-epoch training pipeline
+    /// under its mode, `sync` included, for like-for-like rows.
+    pub modes: Vec<TrainingMode>,
+    /// Epochs each pipelined cell runs (only consulted when `modes` is
+    /// non-empty); ≥ 1, default 2 — the smallest pipeline that shows
+    /// rollout/training overlap.
+    pub pipeline_iters: usize,
 }
 
 impl SweepSpec {
@@ -66,6 +86,8 @@ impl SweepSpec {
             scales: Vec::new(),
             fault_plans: Vec::new(),
             drifts: Vec::new(),
+            modes: Vec::new(),
+            pipeline_iters: 2,
         }
     }
 
@@ -104,14 +126,33 @@ impl SweepSpec {
         self
     }
 
+    /// Add a training-mode dimension value (see the field docs: any
+    /// explicit mode switches all cells to the multi-epoch pipeline).
+    pub fn mode(mut self, mode: TrainingMode) -> Self {
+        self.modes.push(mode);
+        self
+    }
+
+    /// Epochs per pipelined cell (used only with an explicit mode
+    /// dimension).
+    pub fn pipeline_iters(mut self, n: usize) -> Self {
+        self.pipeline_iters = n;
+        self
+    }
+
     /// Effective dimension values after filling empty dimensions with
     /// their defaults, in expansion order:
-    /// `(schedulers, scales, fault_plans, drifts, seeds)`.
+    /// `(schedulers, modes, scales, fault_plans, drifts, seeds)`.
     pub fn dims(&self) -> SweepDims {
         let schedulers = if self.schedulers.is_empty() {
             vec!["seer".to_string()]
         } else {
             self.schedulers.clone()
+        };
+        let modes = if self.modes.is_empty() {
+            vec![TrainingMode::Sync]
+        } else {
+            self.modes.clone()
         };
         let scales = if self.scales.is_empty() {
             vec![self.workload.n_instances]
@@ -133,7 +174,7 @@ impl SweepSpec {
         } else {
             self.seeds.clone()
         };
-        (schedulers, scales, faults, drifts, seeds)
+        (schedulers, modes, scales, faults, drifts, seeds)
     }
 
     /// Reject dimension values the execution layer would otherwise
@@ -152,47 +193,62 @@ impl SweepSpec {
         {
             bail!("sweep drift {d} invalid: must be finite and >= 0");
         }
+        if self.pipeline_iters == 0 {
+            bail!("sweep pipeline_iters 0 invalid: must be >= 1");
+        }
         Ok(())
     }
 
     /// Number of cells the spec expands to (the dimension product).
     pub fn cardinality(&self) -> usize {
-        let (sc, s, f, d, k) = self.dims();
-        sc.len() * s.len() * f.len() * d.len() * k.len()
+        let (sc, m, s, f, d, k) = self.dims();
+        sc.len() * m.len() * s.len() * f.len() * d.len() * k.len()
     }
 
     /// Seeds per aggregate group — the innermost dimension's length.
     pub fn seeds_per_group(&self) -> usize {
-        self.dims().4.len()
+        self.dims().5.len()
     }
 
     /// Expand the grid into independent session configs, in the
     /// documented stable order. `cell.index == position` always holds.
     pub fn expand(&self) -> Vec<SweepCell> {
-        let (schedulers, scales, faults, drifts, seeds) = self.dims();
+        let (schedulers, modes, scales, faults, drifts, seeds) = self.dims();
         let cap = schedulers.len()
+            * modes.len()
             * scales.len()
             * faults.len()
             * drifts.len()
             * seeds.len();
+        // An explicit mode dimension pipelines every cell; the default
+        // dimension keeps the legacy single-rollout cell.
+        let pipeline_iters = if self.modes.is_empty() {
+            1
+        } else {
+            self.pipeline_iters.max(1)
+        };
         let mut cells = Vec::with_capacity(cap);
         for scheduler in &schedulers {
-            for &n_instances in &scales {
-                for (fault_name, plan) in &faults {
-                    for &drift in &drifts {
-                        for &seed in &seeds {
-                            cells.push(SweepCell {
-                                index: cells.len(),
-                                scheduler: scheduler.clone(),
-                                sd: self.sd.clone(),
-                                seed,
-                                n_instances,
-                                fault_name: fault_name.clone(),
-                                faults: plan.clone(),
-                                drift,
-                                workload: self.workload.clone(),
-                                system: self.system.clone(),
-                            });
+            for &mode in &modes {
+                for &n_instances in &scales {
+                    for (fault_name, plan) in &faults {
+                        for &drift in &drifts {
+                            for &seed in &seeds {
+                                cells.push(SweepCell {
+                                    index: cells.len(),
+                                    scheduler: scheduler.clone(),
+                                    sd: self.sd.clone(),
+                                    mode,
+                                    pipeline_iters,
+                                    seed,
+                                    n_instances,
+                                    fault_name: fault_name.clone(),
+                                    faults: plan.clone(),
+                                    drift,
+                                    workload: self.workload.clone(),
+                                    system: self.system.clone(),
+                                });
+                            }
                         }
                     }
                 }
@@ -204,7 +260,7 @@ impl SweepSpec {
     /// Spec echo for the report JSON (fault plans by name only — the
     /// scripts themselves live in their own files).
     pub fn to_json(&self) -> Json {
-        let (schedulers, scales, faults, drifts, seeds) = self.dims();
+        let (schedulers, modes, scales, faults, drifts, seeds) = self.dims();
         let mut o = std::collections::BTreeMap::new();
         o.insert("task".to_string(), Json::Str(self.workload.name.to_string()));
         o.insert(
@@ -239,6 +295,14 @@ impl SweepSpec {
             "drifts".to_string(),
             Json::Arr(drifts.iter().map(|&d| Json::Num(d)).collect()),
         );
+        o.insert(
+            "modes".to_string(),
+            Json::Arr(modes.iter().map(|m| Json::Str(m.tag())).collect()),
+        );
+        o.insert(
+            "pipeline_iters".to_string(),
+            Json::Num(self.pipeline_iters as f64),
+        );
         Json::Obj(o)
     }
 }
@@ -252,6 +316,11 @@ pub struct SweepCell {
     pub index: usize,
     pub scheduler: String,
     pub sd: String,
+    /// Training-mode dimension value.
+    pub mode: TrainingMode,
+    /// Epochs this cell runs; 1 ⇒ the legacy single-rollout cell, > 1 ⇒
+    /// a multi-epoch training pipeline under `mode`.
+    pub pipeline_iters: usize,
     pub seed: u64,
     pub n_instances: usize,
     pub fault_name: String,
@@ -264,30 +333,28 @@ pub struct SweepCell {
 }
 
 impl SweepCell {
-    /// Build and run this cell's rollout session, returning its
-    /// deterministic (virtual-time only) result.
+    /// Build and run this cell, returning its deterministic
+    /// (virtual-time only) result. A single-epoch `sync` cell runs the
+    /// legacy single-shot session; anything else runs the multi-epoch
+    /// pipeline (see [`SweepSpec::mode`]).
     pub fn run(&self) -> Result<CellResult> {
-        let mut builder = RolloutSession::builder()
-            .workload(self.workload.clone())
-            .system(self.system.clone())
-            .scheduler(&self.scheduler)
-            .sd(&self.sd)
-            .seed(self.seed)
-            .n_instances(self.n_instances);
+        if self.pipeline_iters > 1 || self.mode.is_pipelined() {
+            return self.run_pipelined();
+        }
+        let mut builder = self.session_builder();
         if self.drift > 0.0 {
             // Workload generation is scale-independent, so the drifted
             // epoch is the same whatever `n_instances` the cell runs at.
             let w = generate_epoch(&self.workload, self.seed, 1, self.drift);
             builder = builder.groups(w.groups);
         }
-        if !self.faults.is_empty() {
-            builder = builder.faults(self.faults.clone());
-        }
         let report = builder.run()?;
         let m = &report.metrics;
         Ok(CellResult {
             index: self.index,
             scheduler: self.scheduler.clone(),
+            mode: self.mode.tag(),
+            lag: self.mode.lag() as u64,
             seed: self.seed,
             n_instances: self.n_instances,
             fault_name: self.fault_name.clone(),
@@ -306,6 +373,136 @@ impl SweepCell {
             migrations: m.migrations,
             aborted: m.aborted,
             instances_lost: m.instances_lost,
+            staleness_mean: 0.0,
+            staleness_max: 0,
+            stale_requests: 0,
+        })
+    }
+
+    fn session_builder(&self) -> crate::rollout::RolloutSessionBuilder<'static> {
+        let mut builder = RolloutSession::builder()
+            .workload(self.workload.clone())
+            .system(self.system.clone())
+            .scheduler(&self.scheduler)
+            .sd(&self.sd)
+            .seed(self.seed)
+            .n_instances(self.n_instances);
+        if !self.faults.is_empty() {
+            builder = builder.faults(self.faults.clone());
+        }
+        builder
+    }
+
+    /// Multi-epoch pipelined cell: `pipeline_iters` cold epochs through
+    /// the suspendable stream under the cell's mode, using the same
+    /// `S_k = max(R_{k-1}, U_{k-1-lag})` recurrence as
+    /// [`crate::iteration::TrainingDriver`]. The cell's makespan is the
+    /// *pipeline span* (through the last update landing), throughput is
+    /// total tokens over that span, tail/p99 come from the final epoch,
+    /// and counters are summed. The fault script replays against every
+    /// epoch's rollout.
+    fn run_pipelined(&self) -> Result<CellResult> {
+        use crate::rl::PhaseModel;
+        use crate::sim::clock::SimTime;
+        let lag = self.mode.lag() as usize;
+        let epochs = self.pipeline_iters.max(1);
+        let phase = PhaseModel::for_workload(&self.workload);
+        let mut r_prev = 0.0f64;
+        let mut u: Vec<f64> = Vec::with_capacity(epochs);
+        let (mut tokens, mut completions) = (0u64, 0usize);
+        let (mut preempt, mut migr, mut aborted, mut lost) =
+            (0u64, 0u64, 0u64, 0u64);
+        let (mut tail_packed, mut tail_resume, mut bubble_tok) =
+            (0u64, 0u64, 0u64);
+        let mut bubble_secs = 0.0f64;
+        let (mut stal_sum, mut stal_max, mut stale_reqs) = (0u64, 0u64, 0u64);
+        let (mut tail_secs, mut p99) = (0.0f64, 0.0f64);
+        for e in 0..epochs {
+            let gate = if e > lag { u[e - 1 - lag] } else { 0.0 };
+            let s_k = r_prev.max(gate);
+            let mut builder = self.session_builder();
+            if self.drift > 0.0 {
+                // Continue the legacy cell's convention: drifted cells
+                // run the drifted sequence starting at epoch 1.
+                let w = generate_epoch(
+                    &self.workload,
+                    self.seed,
+                    (e + 1) as u64,
+                    self.drift,
+                );
+                builder = builder.groups(w.groups);
+            }
+            let mut stream = builder.start_stream()?;
+            let landed = u.iter().filter(|&&t| t <= s_k).count();
+            stream.set_policy_version(landed as u64);
+            for j in landed..e {
+                stream.run_until(SimTime::from_secs_f64(u[j] - s_k))?;
+                stream.set_policy_version((j + 1) as u64);
+            }
+            stream.run_until(SimTime::FAR_FUTURE)?;
+            let mut report = stream.finish()?;
+            report.metrics.apply_staleness(e as u64);
+            let m = &report.metrics;
+            let split = phase.split(m.makespan, m.tokens_generated);
+            let r_k = s_k + m.makespan.as_secs_f64();
+            let u_prev = u.last().copied().unwrap_or(0.0);
+            u.push(
+                r_k.max(u_prev)
+                    + split.training.as_secs_f64()
+                    + split.weight_update.as_secs_f64(),
+            );
+            r_prev = r_k;
+            tokens += m.tokens_generated;
+            completions += m.completions.len();
+            preempt += m.preemptions;
+            migr += m.migrations;
+            aborted += m.aborted;
+            lost += m.instances_lost;
+            tail_packed += m.tail_packed;
+            tail_resume += m.tail_resume_tokens;
+            bubble_secs += m.bubble_draft_time.as_secs_f64();
+            bubble_tok += m.bubble_accept_tokens;
+            stal_sum += m.staleness_sum;
+            stal_max = stal_max.max(m.staleness_max);
+            stale_reqs += m.stale_requests;
+            tail_secs = m.tail_time(0.10).as_secs_f64();
+            p99 = m.finish_percentile(99.0);
+        }
+        let span = u.last().copied().unwrap_or(0.0);
+        Ok(CellResult {
+            index: self.index,
+            scheduler: self.scheduler.clone(),
+            mode: self.mode.tag(),
+            lag: lag as u64,
+            seed: self.seed,
+            n_instances: self.n_instances,
+            fault_name: self.fault_name.clone(),
+            drift: self.drift,
+            makespan_secs: span,
+            throughput_tok_s: if span > 0.0 {
+                tokens as f64 / span
+            } else {
+                0.0
+            },
+            tail_secs,
+            p99_finish_secs: p99,
+            tail_packed,
+            tail_resume_tokens: tail_resume,
+            bubble_draft_secs: bubble_secs,
+            bubble_accept_tokens: bubble_tok,
+            tokens,
+            completions,
+            preemptions: preempt,
+            migrations: migr,
+            aborted,
+            instances_lost: lost,
+            staleness_mean: if completions > 0 {
+                stal_sum as f64 / completions as f64
+            } else {
+                0.0
+            },
+            staleness_max: stal_max,
+            stale_requests: stale_reqs,
         })
     }
 }
@@ -317,6 +514,10 @@ impl SweepCell {
 pub struct CellResult {
     pub index: usize,
     pub scheduler: String,
+    /// Training-mode tag (`"sync"`, `"hybrid"`, `"async:N"`).
+    pub mode: String,
+    /// Off-policy lag bound of the mode (0 for sync/legacy cells).
+    pub lag: u64,
     pub seed: u64,
     pub n_instances: usize,
     pub fault_name: String,
@@ -337,6 +538,11 @@ pub struct CellResult {
     pub migrations: u64,
     pub aborted: u64,
     pub instances_lost: u64,
+    /// Policy-version staleness aggregates (all zero for sync and
+    /// legacy cells).
+    pub staleness_mean: f64,
+    pub staleness_max: u64,
+    pub stale_requests: u64,
 }
 
 impl CellResult {
@@ -346,6 +552,8 @@ impl CellResult {
             o.insert(k.to_string(), v);
         };
         put("scheduler", Json::Str(self.scheduler.clone()));
+        put("mode", Json::Str(self.mode.clone()));
+        put("lag", Json::Num(self.lag as f64));
         // String, not number: u64 seeds can exceed 2^53 (see spec echo).
         put("seed", Json::Str(self.seed.to_string()));
         put("n_instances", Json::Num(self.n_instances as f64));
@@ -374,6 +582,9 @@ impl CellResult {
         put("migrations", Json::Num(self.migrations as f64));
         put("aborted", Json::Num(self.aborted as f64));
         put("instances_lost", Json::Num(self.instances_lost as f64));
+        put("staleness_mean", Json::Num(self.staleness_mean));
+        put("staleness_max", Json::Num(self.staleness_max as f64));
+        put("stale_requests", Json::Num(self.stale_requests as f64));
         Json::Obj(o)
     }
 }
@@ -410,6 +621,51 @@ mod tests {
             ),
         );
         assert_eq!(s.cardinality(), 2 * 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn mode_dimension_multiplies_and_pipelines_cells() {
+        let s = spec()
+            .mode(TrainingMode::Sync)
+            .mode(TrainingMode::Async { lag: 1 });
+        assert_eq!(s.cardinality(), 2 * 2 * 2 * 2 * 3);
+        let cells = s.expand();
+        // Every cell of an explicit-mode spec pipelines, sync included.
+        assert!(cells.iter().all(|c| c.pipeline_iters == 2));
+        // Mode sits between scheduler (outermost) and scale.
+        assert_eq!(cells[0].mode, TrainingMode::Sync);
+        let per_mode = cells.len() / 4; // 2 schedulers × 2 modes
+        assert_eq!(cells[per_mode].mode, TrainingMode::Async { lag: 1 });
+        assert_eq!(cells[per_mode].scheduler, "seer");
+        // Default spec keeps the legacy single-rollout cell.
+        assert!(spec().expand().iter().all(|c| c.pipeline_iters == 1
+            && c.mode == TrainingMode::Sync));
+    }
+
+    #[test]
+    fn pipelined_async_lag_zero_cell_matches_sync_cell() {
+        let run = |mode: TrainingMode| {
+            let s = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+                .seeds([7])
+                .mode(mode);
+            s.expand()[0].run().unwrap()
+        };
+        let sync = run(TrainingMode::Sync);
+        let lag0 = run(TrainingMode::Async { lag: 0 });
+        // Identical pipeline numbers; only the labels differ.
+        assert_eq!(sync.makespan_secs, lag0.makespan_secs);
+        assert_eq!(sync.throughput_tok_s, lag0.throughput_tok_s);
+        assert_eq!(sync.tokens, lag0.tokens);
+        assert_eq!(sync.stale_requests, 0);
+        assert_eq!(lag0.stale_requests, 0);
+        assert_eq!(sync.mode, "sync");
+        assert_eq!(lag0.mode, "async:0");
+        // A real lag overlaps: strictly shorter pipeline span, bounded
+        // staleness.
+        let lag1 = run(TrainingMode::Async { lag: 1 });
+        assert!(lag1.makespan_secs < sync.makespan_secs);
+        assert!(lag1.staleness_max <= 1);
+        assert!(lag1.tokens == sync.tokens);
     }
 
     #[test]

@@ -279,6 +279,55 @@ fn stop_after_counts_unique_completions_only() {
     );
 }
 
+/// Utilization accounting under elasticity (PR-9 bugfix): an instance
+/// added mid-run by `ScaleUp` is measured over its *live* interval, not
+/// the full makespan — and for an always-live fleet the new accounting
+/// is exactly the old `Σ busy / (makespan · n)`.
+#[test]
+fn utilization_counts_late_joiners_over_their_live_interval() {
+    // Always-live fleet: live-interval accounting changes nothing.
+    let clean = run("seer", 21, FaultPlan::new());
+    let m = &clean.metrics;
+    let naive = |m: &seer::metrics::RolloutMetrics| {
+        m.busy_time
+            .iter()
+            .map(|b| b.as_secs_f64() / m.makespan.as_secs_f64())
+            .sum::<f64>()
+            / m.busy_time.len() as f64
+    };
+    assert!(
+        (m.mean_utilization() - naive(m)).abs() < 1e-12,
+        "always-live fleet: {} != naive {}",
+        m.mean_utilization(),
+        naive(m)
+    );
+
+    // Scale one instance in late: it must not deflate the mean.
+    let horizon = clean.metrics.makespan.as_secs_f64();
+    let plan = FaultPlan::new()
+        .at(0.50 * horizon, FaultEvent::ScaleUp { n: 1 })
+        .sorted();
+    let scaled = run("seer", 21, plan);
+    let m = &scaled.metrics;
+    assert!(m.instances_added >= 1, "scale-up never fired");
+    // The joiner really has a shorter live interval and did real work,
+    // so the strict inequality below is not vacuous.
+    let joiner = m.busy_time.len() - 1;
+    assert!(m.busy_time[joiner] > seer::sim::clock::SimTime::ZERO);
+    assert!(
+        m.live_time[joiner] < m.makespan,
+        "joiner live {:?} !< makespan {:?}",
+        m.live_time[joiner],
+        m.makespan
+    );
+    assert!(
+        m.mean_utilization() > naive(m),
+        "late joiner still deflates utilization: {} <= naive {}",
+        m.mean_utilization(),
+        naive(m)
+    );
+}
+
 /// Golden snapshot (satellite 3) of the `RolloutReport::to_json` schema:
 /// the set of key paths is pinned to a checked-in fixture so report-shape
 /// regressions fail loudly. Values are covered by the determinism tests

@@ -147,12 +147,17 @@ fn saved_store_reproduces_warm_behavior() {
     first.into_store().save(&path).unwrap();
     let loaded = ContextStore::load(&path).unwrap();
     let _ = std::fs::remove_file(&path);
+    // Total-count semantics: `iters: 3` with 2 epochs already in the
+    // store runs exactly one more — the same accounting the serve
+    // plane's train jobs use.
     let mut resumed =
-        TrainingDriver::with_store(quick_cfg(true, 1, 11), loaded).unwrap();
+        TrainingDriver::with_store(quick_cfg(true, 3, 11), loaded).unwrap();
     // The resumed driver continues the epoch sequence (epoch 2), it does
     // not replay epoch 0 into the decayed statistics.
     assert_eq!(resumed.next_epoch(), 2);
-    let s = resumed.run().unwrap()[0];
+    let sums = resumed.run().unwrap();
+    assert_eq!(sums.len(), 1, "iters is a total, not an increment");
+    let s = sums[0];
     assert!(s.warm, "resumed run must start warm");
     assert_eq!(s, cont[2], "resumed iteration 3 must match continuous");
 }

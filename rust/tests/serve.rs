@@ -333,6 +333,7 @@ fn train_job_killed_mid_run_resumes_byte_identically() {
         iters: 3,
         seed: 11,
         drift: 0.1,
+        mode: seer::config::TrainingMode::Sync,
         cold: false,
         throttle_ms: 300,
         full: false,

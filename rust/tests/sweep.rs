@@ -164,6 +164,63 @@ fn report_aggregates_and_pairs_cover_the_grid() {
     }
 }
 
+/// The mode dimension (PR 9) threads through the whole report: every
+/// cell of a mode-bearing grid pipelines, aggregates and paired rows
+/// carry the mode tag and lag, staleness shows up only in overlap
+/// modes, and the paired layer pairs schedulers *within* a mode.
+#[test]
+fn mode_dimension_threads_through_aggregates_and_pairs() {
+    use seer::config::TrainingMode;
+    let spec = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+        .schedulers(&["seer", "verl"])
+        .seeds([1, 2])
+        .mode(TrainingMode::Sync)
+        .mode(TrainingMode::Async { lag: 1 })
+        .pipeline_iters(2);
+    let report = SweepRunner::new(4).run(&spec).unwrap().report;
+    assert_eq!(report.cells.len(), 8); // 2 sched × 2 modes × 2 seeds
+    assert_eq!(report.aggregates.len(), 4);
+    assert_eq!(report.paired.len(), 2); // verl vs seer, per mode
+    for a in &report.aggregates {
+        match a.mode.as_str() {
+            "sync" => {
+                assert_eq!(a.lag, 0);
+                assert_eq!(a.mean_staleness, 0.0, "sync saw staleness");
+            }
+            "async:1" => assert_eq!(a.lag, 1),
+            other => panic!("unexpected mode tag {other}"),
+        }
+    }
+    let modes: Vec<&str> =
+        report.paired.iter().map(|p| p.mode.as_str()).collect();
+    assert_eq!(modes, ["sync", "async:1"]);
+    for p in &report.paired {
+        assert_eq!((p.baseline.as_str(), p.candidate.as_str()), ("seer", "verl"));
+        assert_eq!(p.speedup.n, 2);
+    }
+    // Overlap actually overlapped: the async pipeline's span beats the
+    // serialized sync pipeline for the same scheduler/seeds.
+    let span = |mode: &str| {
+        report
+            .cells
+            .iter()
+            .filter(|c| c.scheduler == "seer" && c.mode == mode)
+            .map(|c| c.makespan_secs)
+            .sum::<f64>()
+    };
+    assert!(
+        span("async:1") < span("sync"),
+        "async:1 span {} !< sync span {}",
+        span("async:1"),
+        span("sync")
+    );
+    // The cell JSON exposes the new columns.
+    let j = report.cells[0].to_json();
+    for key in ["mode", "lag", "staleness_mean", "staleness_max", "stale_requests"] {
+        assert!(j.get(key).is_some(), "cell JSON lost '{key}'");
+    }
+}
+
 /// Golden snapshot of the `seer sweep` report schema: the set of key
 /// paths (arrays descend into their first element as `[]`; see
 /// `common::flatten_key_paths`) is pinned to a checked-in fixture so
