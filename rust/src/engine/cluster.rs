@@ -775,6 +775,13 @@ impl ClusterSim {
             FaultEvent::RequestAbort { req } => {
                 self.abort_request(req, now);
             }
+            // Trainer-side events never touch the rollout cluster: the
+            // training driver's pipeline recurrence replays them via
+            // `sim::faults::trainer_step`. Ignoring them here lets one
+            // `--faults` script cover both failure domains.
+            FaultEvent::TrainerSlowdown { .. }
+            | FaultEvent::TrainerStall { .. }
+            | FaultEvent::TrainerCrash { .. } => {}
         }
     }
 

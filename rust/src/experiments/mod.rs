@@ -24,6 +24,7 @@ pub mod table1_phases;
 pub mod table2_acceptance;
 pub mod table3_config;
 pub mod table4_ablation;
+pub mod trainer_elastic;
 
 use crate::util::cli::Args;
 
@@ -49,6 +50,7 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
         "faults" => fault_tolerance::run(&scale),
         "sd-realism" => sd_realism::run(&scale),
         "async-frontier" => async_frontier::run(&scale),
+        "trainer-elastic" => trainer_elastic::run(&scale),
         "all" => {
             for id in ALL_IDS {
                 println!("\n================ {id} ================");
@@ -62,8 +64,8 @@ pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
     }
 }
 
-pub const ALL_IDS: [&str; 17] = [
+pub const ALL_IDS: [&str; 18] = [
     "table1", "fig2", "fig3", "fig4", "table2", "table3", "fig7", "fig8",
     "fig9", "table4", "fig10", "fig11", "fig12", "multi-iter", "faults",
-    "sd-realism", "async-frontier",
+    "sd-realism", "async-frontier", "trainer-elastic",
 ];

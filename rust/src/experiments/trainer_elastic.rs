@@ -1,0 +1,212 @@
+//! `trainer-elastic` experiment (extension beyond the paper): the
+//! mode × lag × trainer-fault frontier — how much of the overlap win
+//! survives when the *trainer* is the unreliable half of the pipeline.
+//!
+//! The `faults` and `async-frontier` experiments stress the rollout
+//! cluster; here the cluster stays healthy and a deterministic
+//! trainer-side script (slowdown window, stall, one mid-run crash)
+//! is replayed into the overlap recurrence instead. Every mode sees
+//! the identical script under paired seeds, so the table answers two
+//! questions with CIs rather than point estimates: how much pipeline
+//! span each overlap mode still buys when train steps stretch, and
+//! what a lost in-flight train step (crash ⇒ redo) costs per mode.
+//! Two invariants are asserted on every run: healthy cells report
+//! zero retries and zero fault seconds, and `async --lag 0` under the
+//! trainer plan stays byte-identical to `sync` (the PR 10 acceptance
+//! identity), modulo only the mode/lag labels themselves.
+
+use anyhow::Result;
+
+use crate::config::{TaskPreset, TrainingMode};
+use crate::sim::faults::{FaultEvent, FaultPlan};
+use crate::spec::simmodel::SdStrategy;
+use crate::sweep::SweepSpec;
+use crate::util::table::Table;
+
+use super::common::{print_paired_vs, runner, PairedRow, Scale};
+
+/// The mode grid: sync anchor, its lag-0 async twin (identity check),
+/// one-step overlap, then the async lag ladder.
+fn modes() -> Vec<TrainingMode> {
+    vec![
+        TrainingMode::Sync,
+        TrainingMode::Async { lag: 0 },
+        TrainingMode::Hybrid,
+        TrainingMode::Async { lag: 1 },
+        TrainingMode::Async { lag: 2 },
+    ]
+}
+
+pub fn run(scale: &Scale) -> Result<()> {
+    let preset = TaskPreset::Moonlight;
+    let cfg = scale.workload(preset);
+    let sys = scale.sys(&cfg);
+
+    // Size the trainer script to the workload (same idiom as `faults`):
+    // fractions of a clean single-rollout makespan, so the scenario
+    // shape holds at every scale. Crash position is an epoch ordinal,
+    // not a time, so it needs no scaling.
+    let clean = scale
+        .session(preset, "seer", SdStrategy::GroupedCst)
+        .run()?;
+    let horizon = clean.metrics.makespan.as_secs_f64();
+    let plan = FaultPlan::new()
+        .at(
+            0.10 * horizon,
+            FaultEvent::TrainerSlowdown {
+                factor: 1.5,
+                from: 0.10 * horizon,
+                until: 0.60 * horizon,
+            },
+        )
+        .at(
+            0.30 * horizon,
+            FaultEvent::TrainerStall {
+                at: 0.30 * horizon,
+                secs: 0.05 * horizon,
+            },
+        )
+        .at(0.0, FaultEvent::TrainerCrash { at_iter: 1 })
+        .sorted();
+
+    let seeds: Vec<u64> =
+        (0..scale.iters.max(2)).map(|i| scale.seed + i as u64).collect();
+    let mut spec = SweepSpec::new(cfg)
+        .system(sys)
+        .sd("grouped-cst")
+        .seeds(seeds)
+        .drifts([0.05])
+        .fault_plan("none", FaultPlan::new())
+        .fault_plan("trainer-chaos", plan)
+        .pipeline_iters(3);
+    spec.schedulers = vec!["seer".to_string()];
+    for mode in modes() {
+        spec = spec.mode(mode);
+    }
+
+    let report = runner().run(&spec)?.report;
+
+    // Invariant 1: a healthy trainer never retries and never loses
+    // time to faults; a crashed one redoes at least one step.
+    for cell in &report.cells {
+        if cell.fault_name == "none" {
+            anyhow::ensure!(
+                cell.train_retries == 0 && cell.trainer_fault_secs == 0.0,
+                "{} cell (seed {}): healthy trainer reported {} retries / \
+                 {:.3}s fault time",
+                cell.mode,
+                cell.seed,
+                cell.train_retries,
+                cell.trainer_fault_secs
+            );
+        } else {
+            anyhow::ensure!(
+                cell.train_retries >= 1,
+                "{} cell (seed {}): trainer crash at iter 1 produced no \
+                 retry",
+                cell.mode,
+                cell.seed
+            );
+        }
+    }
+
+    // Invariant 2 (the PR 10 acceptance identity): async lag 0 is sync
+    // under any trainer plan. The mode grid puts the sync block first
+    // and the async:0 block second, each covering the identical
+    // (fault, drift, seed) axis in the identical order, so cells pair
+    // positionally; strip only the labels that *name* the mode.
+    let (_, grid_modes, _, faults, drifts, grid_seeds) = spec.dims();
+    let per_mode = faults.len() * drifts.len() * grid_seeds.len();
+    for (sync_cell, lag0_cell) in report.cells[..per_mode]
+        .iter()
+        .zip(&report.cells[per_mode..2 * per_mode])
+    {
+        let strip = |c: &crate::sweep::CellResult| {
+            let mut o = match c.to_json() {
+                crate::util::json::Json::Obj(o) => o,
+                other => unreachable!("cell JSON is an object, got {other}"),
+            };
+            for k in ["index", "mode", "lag"] {
+                o.remove(k);
+            }
+            crate::util::json::Json::Obj(o).to_string()
+        };
+        anyhow::ensure!(
+            strip(sync_cell) == strip(lag0_cell),
+            "sync/async:0 identity broke under trainer faults (fault {}, \
+             seed {})",
+            sync_cell.fault_name,
+            sync_cell.seed
+        );
+    }
+
+    let mut t = Table::new(
+        "trainer-elastic — mode x lag frontier under trainer-side faults \
+         (seer, grouped-cst, 3-epoch pipeline)",
+        &[
+            "Mode",
+            "Lag",
+            "Fault",
+            "Span (s)",
+            "Tok/s",
+            "Tok/s CI 95%",
+            "Retries",
+            "Fault (s)",
+        ],
+    );
+    // `Aggregate` carries no trainer-fault fields (the JSON schema is
+    // shared by every sweep); fold them from the cells, which sit in
+    // the same contiguous per-group runs the aggregator consumed.
+    for (g, a) in report.aggregates.iter().enumerate() {
+        let group = &report.cells[g * a.n_seeds..(g + 1) * a.n_seeds];
+        let retries: u64 = group.iter().map(|c| c.train_retries).sum();
+        let fault_secs: f64 =
+            group.iter().map(|c| c.trainer_fault_secs).sum();
+        t.row(&[
+            a.mode.clone(),
+            a.lag.to_string(),
+            a.fault_name.clone(),
+            format!("{:.1}", a.mean_makespan_secs),
+            format!("{:.0}", a.mean_throughput_tok_s),
+            format!(
+                "[{:.0}, {:.0}]",
+                a.throughput_ci.lo, a.throughput_ci.hi
+            ),
+            retries.to_string(),
+            format!("{:.1}", fault_secs),
+        ]);
+    }
+    t.note(
+        "span = pipeline makespan of 3 epochs; retries / fault (s) summed \
+         over the group's seeds; crash redoes the in-flight train step, \
+         slowdown/stall stretch U_k inside the overlap recurrence \
+         (sync ≡ async lag 0 under any trainer plan — asserted)",
+    );
+    t.print();
+
+    // Paired per-seed statistics against the sync anchor: every mode's
+    // cells cover the identical (fault, drift, seed) observation axis
+    // in the identical order, so the samples pair exactly.
+    let rows: Vec<PairedRow> = grid_modes
+        .iter()
+        .enumerate()
+        .map(|(mi, mode)| {
+            let cells = &report.cells[mi * per_mode..(mi + 1) * per_mode];
+            PairedRow {
+                label: mode.tag(),
+                makespans: cells.iter().map(|c| c.makespan_secs).collect(),
+                tails: cells.iter().map(|c| c.tail_secs).collect(),
+            }
+        })
+        .collect();
+    print_paired_vs("trainer-elastic", "sync", &rows, scale.seed);
+    let total_retries: u64 =
+        report.cells.iter().map(|c| c.train_retries).sum();
+    let total_fault: f64 =
+        report.cells.iter().map(|c| c.trainer_fault_secs).sum();
+    println!(
+        "(total train retries across faulted cells: {total_retries}; \
+         total trainer fault seconds: {total_fault:.1})"
+    );
+    Ok(())
+}

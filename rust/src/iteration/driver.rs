@@ -45,6 +45,7 @@ use crate::rl::PhaseModel;
 use crate::rollout::session::RolloutReport;
 use crate::rollout::{RolloutObserver, RolloutSession};
 use crate::sim::clock::SimTime;
+use crate::sim::faults::{trainer_step, FaultPlan};
 use crate::util::json::Json;
 use crate::workload::generate_epoch;
 
@@ -70,6 +71,13 @@ pub struct TrainingConfig {
     /// Rollout/training overlap discipline (see the module docs).
     /// `Sync` (the default) is today's strictly serial pipeline.
     pub mode: TrainingMode,
+    /// Trainer-side fault script replayed into the `U_k` recurrence by
+    /// [`crate::sim::faults::trainer_step`]: slowdowns/stalls inflate
+    /// the train step, crashes redo it from the last checkpoint
+    /// (`train_retries`). Cluster-side events in the plan are ignored
+    /// here — this driver's rollouts are fault-free. An empty plan
+    /// leaves every summary byte-identical to pre-fault behavior.
+    pub trainer_faults: FaultPlan,
     pub store: ContextStoreConfig,
 }
 
@@ -85,6 +93,7 @@ impl TrainingConfig {
             drift: 0.05,
             warm_start: true,
             mode: TrainingMode::Sync,
+            trainer_faults: FaultPlan::new(),
             store: ContextStoreConfig::default(),
         }
     }
@@ -125,6 +134,12 @@ pub struct IterationSummary {
     /// Completions generated under an older policy version than the one
     /// training consumed them at.
     pub stale_requests: u64,
+    /// Train-step redos forced by scripted `TrainerCrash` events at this
+    /// iteration (0 on a fault-free run).
+    pub train_retries: u64,
+    /// Seconds trainer-side faults (slowdown, stall, crash redo) added
+    /// to this iteration's update landing over the fault-free recurrence.
+    pub trainer_fault_secs: f64,
 }
 
 impl IterationSummary {
@@ -155,6 +170,8 @@ impl IterationSummary {
         put("staleness_mean", Json::Num(self.staleness_mean));
         put("staleness_max", Json::Num(self.staleness_max as f64));
         put("stale_requests", Json::Num(self.stale_requests as f64));
+        put("train_retries", Json::Num(self.train_retries as f64));
+        put("trainer_fault_secs", Json::Num(self.trainer_fault_secs));
         Json::Obj(o)
     }
 
@@ -193,6 +210,8 @@ impl IterationSummary {
             staleness_mean: f("staleness_mean")?,
             staleness_max: u("staleness_max")?,
             stale_requests: u("stale_requests")?,
+            train_retries: u("train_retries")?,
+            trainer_fault_secs: f("trainer_fault_secs")?,
         })
     }
 }
@@ -449,9 +468,32 @@ impl TrainingDriver {
         // is ready and the trainer finished the previous step.
         let rollout_end = start_at + m.makespan.as_secs_f64();
         let u_prev = self.pipe_u.last().copied().unwrap_or(0.0);
-        let update_land = rollout_end.max(u_prev)
-            + phases.training.as_secs_f64()
-            + phases.weight_update.as_secs_f64();
+        let train_start = rollout_end.max(u_prev);
+        // With a trainer-fault script, the step walks through
+        // `trainer_step` (the one shared implementation — the sweep cell
+        // recurrence uses it too, keeping sync ≡ async-lag-0 under any
+        // plan). The empty-plan path keeps the exact historical float
+        // expression so fault-free runs stay byte-identical.
+        let (update_land, train_retries, trainer_fault_secs) =
+            if self.cfg.trainer_faults.is_empty() {
+                (
+                    train_start
+                        + phases.training.as_secs_f64()
+                        + phases.weight_update.as_secs_f64(),
+                    0,
+                    0.0,
+                )
+            } else {
+                let base = phases.training.as_secs_f64()
+                    + phases.weight_update.as_secs_f64();
+                let step = trainer_step(
+                    &self.cfg.trainer_faults,
+                    iter,
+                    train_start,
+                    base,
+                );
+                (step.end_secs, step.retries, step.fault_secs)
+            };
         IterationSummary {
             iter,
             warm,
@@ -464,12 +506,15 @@ impl TrainingDriver {
             migrations: m.migrations,
             train_secs: phases.training.as_secs_f64(),
             weight_update_secs: phases.weight_update.as_secs_f64(),
-            iter_total_secs: phases.total().as_secs_f64(),
+            iter_total_secs: phases.total().as_secs_f64()
+                + trainer_fault_secs,
             rollout_start_secs: start_at,
             update_land_secs: update_land,
             staleness_mean: m.staleness_mean(),
             staleness_max: m.staleness_max,
             stale_requests: m.stale_requests,
+            train_retries,
+            trainer_fault_secs,
         }
     }
 }
@@ -594,6 +639,125 @@ mod tests {
             "overlapped rollouts must see mid-stream version bumps"
         );
         assert!(sync.iter().all(|s| s.stale_requests == 0));
+    }
+
+    #[test]
+    fn trainer_faults_shift_update_landings_and_count_retries() {
+        use crate::sim::faults::FaultEvent;
+        let base = {
+            let mut d = TrainingDriver::new(quick_cfg(true, 3));
+            d.run().unwrap()
+        };
+        // Script against the fault-free pipeline clock: a stall inside
+        // iteration 1's train step and a crash redoing iteration 2's.
+        let stall_at = base[1].update_land_secs - 0.5 * base[1].train_secs;
+        let plan = FaultPlan::new()
+            .at(
+                stall_at,
+                FaultEvent::TrainerStall {
+                    at: stall_at,
+                    secs: 30.0,
+                },
+            )
+            .at(2.0, FaultEvent::TrainerCrash { at_iter: 2 })
+            .sorted();
+        let cfg = TrainingConfig {
+            trainer_faults: plan,
+            ..quick_cfg(true, 3)
+        };
+        let mut d = TrainingDriver::new(cfg);
+        let faulted = d.run().unwrap();
+        // Rollouts are untouched (sync: faults only delay the trainer)…
+        for k in 0..3 {
+            assert_eq!(faulted[k].makespan_secs, base[k].makespan_secs);
+        }
+        // …iteration 1 absorbs the stall (up to walker float
+        // reassociation)…
+        assert!((faulted[1].trainer_fault_secs - 30.0).abs() < 1e-6);
+        assert!(
+            (faulted[1].update_land_secs
+                - (base[1].update_land_secs + 30.0))
+                .abs()
+                < 1e-6
+        );
+        assert!(faulted[1].iter_total_secs > base[1].iter_total_secs);
+        // …and iteration 2 redoes its full train step once, on top of
+        // the 30s the pipeline is already running late.
+        assert_eq!(faulted[2].train_retries, 1);
+        let redo = faulted[2].train_secs + faulted[2].weight_update_secs;
+        assert!((faulted[2].trainer_fault_secs - redo).abs() < 1e-6);
+        assert_eq!(faulted[0].train_retries, 0);
+        assert_eq!(faulted[0].trainer_fault_secs, 0.0);
+    }
+
+    #[test]
+    fn trainer_faults_preserve_lag_zero_sync_identity() {
+        use crate::sim::faults::FaultEvent;
+        let plan = FaultPlan::new()
+            .at(
+                0.0,
+                FaultEvent::TrainerSlowdown {
+                    factor: 3.0,
+                    from: 0.0,
+                    until: 1.0e9,
+                },
+            )
+            .at(1.0, FaultEvent::TrainerCrash { at_iter: 1 })
+            .sorted();
+        let history_json = |mode: TrainingMode| {
+            let cfg = TrainingConfig {
+                mode,
+                trainer_faults: plan.clone(),
+                ..quick_cfg(true, 3)
+            };
+            let mut d = TrainingDriver::new(cfg);
+            d.run().unwrap();
+            Json::Arr(d.history().iter().map(|s| s.to_json()).collect())
+                .to_string()
+        };
+        assert_eq!(
+            history_json(TrainingMode::Sync),
+            history_json(TrainingMode::Async { lag: 0 }),
+            "lag 0 must stay byte-identical to sync under trainer faults"
+        );
+    }
+
+    #[test]
+    fn overlap_hides_trainer_hiccups_that_stall_sync() {
+        use crate::sim::faults::FaultEvent;
+        // A stall early in iteration 0's train step: sync serializes the
+        // delay into every later epoch's start; hybrid keeps rolling out
+        // epoch 1 while the stalled trainer catches up.
+        let probe = {
+            let mut d = TrainingDriver::new(quick_cfg(true, 1));
+            d.run().unwrap()
+        };
+        let at = probe[0].rollout_start_secs
+            + probe[0].makespan_secs
+            + 0.25 * probe[0].train_secs;
+        let plan = FaultPlan::new()
+            .at(at, FaultEvent::TrainerStall { at, secs: 40.0 })
+            .sorted();
+        let run = |mode: TrainingMode| {
+            let cfg = TrainingConfig {
+                mode,
+                trainer_faults: plan.clone(),
+                ..quick_cfg(true, 2)
+            };
+            let mut d = TrainingDriver::new(cfg);
+            d.run().unwrap()
+        };
+        let sync = run(TrainingMode::Sync);
+        let hybrid = run(TrainingMode::Hybrid);
+        assert!((sync[0].trainer_fault_secs - 40.0).abs() < 1e-6);
+        // Sync pushes epoch 1's rollout start out by the stall; hybrid
+        // started it before the stalled update landed.
+        assert!(
+            hybrid[1].rollout_start_secs
+                < sync[1].rollout_start_secs,
+            "hybrid must start epoch 1 before sync's stalled update lands"
+        );
+        assert!(hybrid[1].update_land_secs < sync[1].update_land_secs);
     }
 
     #[test]

@@ -28,7 +28,7 @@ discrete-event cluster simulator and the real-model engine, with
 schedulers and SD strategies resolved by name from the policy registry.
 
 USAGE:
-  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|sd-realism|async-frontier|all>
+  seer experiment <table1|table2|table3|table4|fig2|fig3|fig4|fig7|fig8|fig9|fig10|fig11|fig12|multi-iter|faults|sd-realism|async-frontier|trainer-elastic|all>
        [--full] [--seed N] [--iters N]
   seer rollout --task <moonlight|qwen|kimi> [--scheduler <seer|verl|streamrl|rollpacker|no-context|oracle>]
        [--sd <none|grouped-cst|suffix-decoding|draft-model|mtp>] [--full] [--seed N]
@@ -39,10 +39,12 @@ USAGE:
        [--bench-out FILE] [--full]
   seer train [--task moonlight|qwen|kimi] [--iters N] [--seed N] [--drift F]
        [--mode sync|hybrid|async] [--lag N] [--json] [--cold]
-       [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S] [--full]
+       [--save-ctx FILE] [--load-ctx FILE] [--scheduler S] [--sd S]
+       [--trainer-faults FILE] [--full]
   seer train --real [--preset tiny|small] [--iters N] [--artifacts DIR] [--spec]
   seer serve [--addr HOST:PORT] [--workers N] [--state-dir DIR]
-       [--max-per-tenant N] [--max-jobs N]
+       [--max-per-tenant N] [--max-jobs N] [--keep-ckpts N]
+       [--retry-seed N] [--retry-base-ms N] [--retry-cap-ms N]
   seer info
 
   rollout --json prints the unified RolloutReport as one JSON object for
@@ -99,6 +101,18 @@ USAGE:
   knob as a grid dimension (every cell runs under each mode; --lag
   applies to async entries).
 
+  train --trainer-faults FILE replays a deterministic *trainer-side*
+  fault script (JSON events trainer_slowdown / trainer_stall /
+  trainer_crash) into the overlap recurrence: slowdown windows and
+  stalls inflate the train+update interval, a crash redoes the step
+  from its last checkpoint. Summaries gain train_retries and
+  trainer_fault_secs columns; cluster-side events in the same file are
+  ignored here (they belong to rollout/sweep --faults). sweep --faults
+  FILE routes the trainer-side half of the script into every
+  pipelined cell the same way. --mode async --lag 0 under a trainer
+  plan stays byte-identical to --mode sync — pinned by `seer
+  experiment trainer-elastic` and the chaos tests.
+
   serve runs the persistent control plane: a daemon accepting rollout /
   sweep / train jobs as line-delimited JSON over TCP (verbs submit,
   status, result, cancel, subscribe, shutdown) with per-tenant admission
@@ -108,6 +122,16 @@ USAGE:
   output goes to stderr (threshold via SEER_LOG=error|warn|info|debug);
   stdout carries only protocol replies. The protocol grammar and a
   sample shell client are in ARCHITECTURE.md (serve-plane section).
+
+  serve supervision (PR 10): submit envelopes accept deadline_secs
+  (wall-clock budget; terminal status deadline-exceeded), priority
+  (overload shedding evicts the newest queued job of strictly lower
+  priority when --max-jobs is hit), and max_attempts (bounded retry of
+  I/O-caused failures with deterministic capped-exponential backoff —
+  tune with --retry-seed/--retry-base-ms/--retry-cap-ms; attempts are
+  surfaced in status/result). Checkpoints are checksummed and rotated
+  (--keep-ckpts N generations, default 3); recovery falls back to the
+  newest *valid* generation when the latest is truncated or corrupt.
 ";
 
 /// Parse the shared `--lag` flag (async off-policy bound).
@@ -307,6 +331,17 @@ fn cmd_train_sim(args: &Args) -> Result<()> {
         args.get_or("mode", "sync"),
         parse_lag(args)?,
     )?;
+    // Trainer-side fault script: only the trainer half of the plan is
+    // replayed here; cluster-side events belong to rollout --faults.
+    let trainer_faults = match args.get("trainer-faults") {
+        Some(path) => {
+            let plan =
+                seer::sim::faults::FaultPlan::load(std::path::Path::new(path))?;
+            let (_, trainer) = plan.partition();
+            trainer
+        }
+        None => seer::sim::faults::FaultPlan::new(),
+    };
     let cfg = TrainingConfig {
         system,
         scheduler: args.get_or("scheduler", "seer").to_string(),
@@ -316,6 +351,7 @@ fn cmd_train_sim(args: &Args) -> Result<()> {
         drift: args.get_f64("drift", 0.05),
         warm_start: !args.has_flag("cold"),
         mode,
+        trainer_faults,
         ..TrainingConfig::new(workload)
     };
     let json = args.has_flag("json");
@@ -420,8 +456,11 @@ fn cmd_train_real(args: &Args) -> Result<()> {
 /// submitted as line-delimited JSON over TCP. Blocks until a client
 /// sends `shutdown` and the admitted jobs finish.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use seer::serve::{QuotaConfig, ServeConfig, Server};
+    use seer::serve::{
+        QuotaConfig, RetryPolicy, ServeConfig, Server, TrainCheckpoint,
+    };
     let defaults = QuotaConfig::default();
+    let retry_defaults = RetryPolicy::default();
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
         workers: args.get_usize("workers", 0),
@@ -431,6 +470,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_jobs: args.get_usize("max-jobs", defaults.max_jobs),
         },
         state_dir: args.get("state-dir").map(std::path::PathBuf::from),
+        keep_ckpts: args
+            .get_usize("keep-ckpts", TrainCheckpoint::DEFAULT_KEEP),
+        retry: RetryPolicy {
+            base_ms: args.get_u64("retry-base-ms", retry_defaults.base_ms),
+            cap_ms: args.get_u64("retry-cap-ms", retry_defaults.cap_ms),
+            seed: args.get_u64("retry-seed", retry_defaults.seed),
+        },
     };
     Server::bind(cfg)?.run()
 }

@@ -396,6 +396,12 @@ impl EventMux {
     pub fn truncated(&self) -> bool {
         self.lock().truncated
     }
+
+    /// Whether [`EventMux::close`] has been called — i.e. no further
+    /// frames will ever be emitted.
+    pub fn is_closed(&self) -> bool {
+        self.lock().closed
+    }
 }
 
 impl Default for EventMux {

@@ -23,6 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{TaskPreset, TrainingMode, WorkloadConfig};
 use crate::iteration::{IterationSummary, TrainingConfig};
 use crate::rollout::{PolicyRegistry, RolloutSession, RolloutSessionBuilder};
+use crate::sim::faults::FaultPlan;
 use crate::util::json::Json;
 
 /// Upper bound on request-line length the server will read (1 MiB).
@@ -74,7 +75,80 @@ pub struct TrainParams {
     /// simulator models but does not wait for — and gives the recovery
     /// tests a deterministic window to interrupt a job mid-run.
     pub throttle_ms: u64,
+    /// Scripted trainer-side fault plan (slowdown windows, stalls,
+    /// crashes) replayed into the overlap recurrence; empty = healthy
+    /// trainer. Only trainer-side events are accepted here — cluster
+    /// faults belong to the rollout engine, not the train loop.
+    pub trainer_faults: FaultPlan,
     pub full: bool,
+}
+
+/// Per-job supervision knobs, parsed from the submit envelope alongside
+/// the spec. Deliberately *not* part of [`JobSpec`]: checkpoints
+/// persist the spec only, so a job recovered after a daemon restart
+/// runs under default control (no deadline or retry budget survives the
+/// restart — the recovered run is the retry).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct JobControl {
+    /// Wall-clock budget once the job starts running; exceeding it ends
+    /// the job with terminal status `deadline-exceeded`. `None` means
+    /// unbounded. Wall-clock is used only for this supervision decision
+    /// — it never reaches a report.
+    pub deadline_secs: Option<f64>,
+    /// Shedding rank. Under global-cap pressure the daemon sheds the
+    /// newest *queued* job of strictly lower priority to admit this
+    /// one; equal-priority jobs are never shed. Default 0.
+    pub priority: u64,
+    /// Total execution attempts (1 = no retry). Retryable failures are
+    /// re-queued with deterministic capped-exponential backoff until
+    /// the budget is spent; fatal errors fail on the first attempt.
+    pub max_attempts: u64,
+}
+
+impl Default for JobControl {
+    fn default() -> Self {
+        JobControl {
+            deadline_secs: None,
+            priority: 0,
+            max_attempts: 1,
+        }
+    }
+}
+
+impl JobControl {
+    /// Upper bound on `max_attempts` — a retry budget is a supervision
+    /// tool, not a crash-loop license.
+    pub const MAX_ATTEMPTS: u64 = 8;
+
+    /// Parse the control fields out of a submit's `job` object. Absent
+    /// fields take defaults; present-but-invalid fields are errors.
+    pub fn from_json(j: &Json) -> Result<JobControl> {
+        let deadline_secs = match j.get("deadline_secs") {
+            None => None,
+            Some(v) => {
+                let d = v
+                    .as_f64()
+                    .context("field 'deadline_secs' must be a number")?;
+                if !(d.is_finite() && d > 0.0) {
+                    bail!("deadline_secs must be finite and > 0");
+                }
+                Some(d)
+            }
+        };
+        let priority = opt_u64(j, "priority", 0)?;
+        let max_attempts = opt_u64(j, "max_attempts", 1)?;
+        if !(1..=Self::MAX_ATTEMPTS).contains(&max_attempts) {
+            bail!(
+                "max_attempts must be in 1..={} (got {max_attempts})",
+                Self::MAX_ATTEMPTS
+            );
+        }
+        Ok(JobControl {
+            deadline_secs,
+            priority,
+            max_attempts,
+        })
+    }
 }
 
 /// What a `submit` asks the daemon to run.
@@ -88,7 +162,11 @@ pub enum JobSpec {
 /// One parsed client request.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Request {
-    Submit { tenant: String, spec: JobSpec },
+    Submit {
+        tenant: String,
+        spec: JobSpec,
+        control: JobControl,
+    },
     /// One job's status, or — with no id — a whole-daemon summary.
     Status { job: Option<u64> },
     /// Block until the job is terminal, then return its result.
@@ -247,6 +325,24 @@ impl JobSpec {
                             .context("field 'lag' must be a number")?,
                     ),
                 };
+                let trainer_faults = match j.get("trainer_faults") {
+                    None => FaultPlan::new(),
+                    Some(v) => {
+                        let plan = FaultPlan::from_json(v)
+                            .context("field 'trainer_faults'")?;
+                        plan.validate().context("field 'trainer_faults'")?;
+                        if let Some(e) =
+                            plan.events.iter().find(|e| !e.event.is_trainer())
+                        {
+                            bail!(
+                                "trainer_faults must hold trainer-side \
+                                 events only (got '{}')",
+                                e.event.kind()
+                            );
+                        }
+                        plan
+                    }
+                };
                 let p = TrainParams {
                     task: opt_str(j, "task", "moonlight")?,
                     scheduler: opt_str(j, "scheduler", "seer")?,
@@ -260,6 +356,7 @@ impl JobSpec {
                     )?,
                     cold: opt_bool(j, "cold", false)?,
                     throttle_ms: opt_u64(j, "throttle_ms", 0)?,
+                    trainer_faults,
                     full,
                 };
                 if p.iters == 0 {
@@ -327,6 +424,11 @@ impl JobSpec {
                 }
                 put("cold", Json::Bool(p.cold));
                 put("throttle_ms", Json::Num(p.throttle_ms as f64));
+                // Omitted when empty so healthy-trainer specs (and the
+                // checkpoints embedding them) keep their exact bytes.
+                if !p.trainer_faults.is_empty() {
+                    put("trainer_faults", p.trainer_faults.to_json());
+                }
                 put("full", Json::Bool(p.full));
             }
         }
@@ -382,6 +484,7 @@ impl TrainParams {
             drift: self.drift,
             mode: self.mode,
             warm_start: !self.cold,
+            trainer_faults: self.trainer_faults.clone(),
             ..TrainingConfig::new(workload_of(&self.task, self.full)?)
         })
     }
@@ -407,6 +510,10 @@ pub fn train_report(params: &TrainParams, history: &[IterationSummary]) -> Json 
     let stale_max = history.iter().map(|s| s.staleness_max).max().unwrap_or(0);
     o.insert("total_stale_requests".to_string(), Json::Num(stale as f64));
     o.insert("staleness_max".to_string(), Json::Num(stale_max as f64));
+    let retries: u64 = history.iter().map(|s| s.train_retries).sum();
+    let fault: f64 = history.iter().map(|s| s.trainer_fault_secs).sum();
+    o.insert("total_train_retries".to_string(), Json::Num(retries as f64));
+    o.insert("total_trainer_fault_secs".to_string(), Json::Num(fault));
     if let Some(last) = history.last() {
         o.insert(
             "final_p99_finish_secs".to_string(),
@@ -434,10 +541,14 @@ impl Request {
                 if tenant.is_empty() {
                     bail!("tenant must be non-empty");
                 }
-                let spec = JobSpec::from_json(
-                    j.get("job").context("submit needs a 'job' object")?,
-                )?;
-                Ok(Request::Submit { tenant, spec })
+                let job = j.get("job").context("submit needs a 'job' object")?;
+                let spec = JobSpec::from_json(job)?;
+                let control = JobControl::from_json(job)?;
+                Ok(Request::Submit {
+                    tenant,
+                    spec,
+                    control,
+                })
             }
             "status" => Ok(Request::Status {
                 job: match j.get("job") {
@@ -500,10 +611,16 @@ mod tests {
             r#"{"verb":"submit","job":{"kind":"rollout"}}"#,
         )
         .unwrap();
-        let Request::Submit { tenant, spec } = r else {
+        let Request::Submit {
+            tenant,
+            spec,
+            control,
+        } = r
+        else {
             panic!("not a submit")
         };
         assert_eq!(tenant, "default");
+        assert_eq!(control, JobControl::default());
         let JobSpec::Rollout(p) = spec else { panic!("not rollout") };
         assert_eq!(p.task, "moonlight");
         assert_eq!(p.scheduler, "seer");
@@ -539,6 +656,15 @@ mod tests {
                 mode: TrainingMode::Async { lag: 2 },
                 cold: true,
                 throttle_ms: 25,
+                trainer_faults: FaultPlan::new()
+                    .at(0.0, crate::sim::faults::FaultEvent::TrainerSlowdown {
+                        factor: 2.0,
+                        from: 10.0,
+                        until: 20.0,
+                    })
+                    .at(0.0, crate::sim::faults::FaultEvent::TrainerCrash {
+                        at_iter: 1,
+                    }),
                 full: false,
             }),
             JobSpec::Train(TrainParams {
@@ -551,6 +677,7 @@ mod tests {
                 mode: TrainingMode::Hybrid,
                 cold: false,
                 throttle_ms: 0,
+                trainer_faults: FaultPlan::new(),
                 full: false,
             }),
         ];
@@ -641,6 +768,34 @@ mod tests {
                 "at least one",
             ),
             (r#"{"verb":"shutdown","mode":"maybe"}"#, "shutdown mode"),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","deadline_secs":0}}"#,
+                "deadline_secs",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","deadline_secs":"soon"}}"#,
+                "'deadline_secs' must be a number",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","max_attempts":0}}"#,
+                "max_attempts",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","max_attempts":99}}"#,
+                "max_attempts",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","trainer_faults":7}}"#,
+                "trainer_faults",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","trainer_faults":{"events":[{"at_secs":1,"kind":"scale_up","n":1}]}}}"#,
+                "trainer-side events only",
+            ),
+            (
+                r#"{"verb":"submit","job":{"kind":"train","trainer_faults":{"events":[{"at_secs":0,"kind":"trainer_slowdown","factor":-1,"from":0,"until":1}]}}}"#,
+                "trainer_faults",
+            ),
         ] {
             let e = Request::parse(line).unwrap_err().to_string();
             assert!(
@@ -648,6 +803,52 @@ mod tests {
                 "{line}: {e}"
             );
         }
+    }
+
+    #[test]
+    fn job_control_fields_parse_from_the_submit_envelope() {
+        let r = Request::parse(
+            r#"{"verb":"submit","job":{"kind":"train","deadline_secs":1.5,"priority":3,"max_attempts":4}}"#,
+        )
+        .unwrap();
+        let Request::Submit { control, spec, .. } = r else {
+            panic!("not a submit")
+        };
+        assert_eq!(
+            control,
+            JobControl {
+                deadline_secs: Some(1.5),
+                priority: 3,
+                max_attempts: 4,
+            }
+        );
+        // Control fields never leak into the spec (nor, therefore, into
+        // checkpoints): the same job without them parses identically.
+        let again = Request::parse(r#"{"verb":"submit","job":{"kind":"train"}}"#)
+            .unwrap();
+        let Request::Submit { spec: bare, .. } = again else {
+            panic!("not a submit")
+        };
+        assert_eq!(spec, bare);
+    }
+
+    #[test]
+    fn trainer_fault_plans_ride_the_train_spec() {
+        let r = Request::parse(
+            r#"{"verb":"submit","job":{"kind":"train","trainer_faults":{"events":[{"at_secs":0,"kind":"trainer_stall","at":12.0,"secs":30.0},{"at_secs":0,"kind":"trainer_crash","at_iter":2}]}}}"#,
+        )
+        .unwrap();
+        let Request::Submit {
+            spec: JobSpec::Train(p),
+            ..
+        } = r
+        else {
+            panic!("not a train submit")
+        };
+        assert_eq!(p.trainer_faults.len(), 2);
+        // The plan reaches the training config the executor runs.
+        let cfg = p.training_config().unwrap();
+        assert_eq!(cfg.trainer_faults, p.trainer_faults);
     }
 
     #[test]
@@ -682,6 +883,7 @@ mod tests {
             mode: TrainingMode::Sync,
             cold: false,
             throttle_ms: 0,
+            trainer_faults: FaultPlan::new(),
             full: false,
         };
         let mut d = crate::iteration::TrainingDriver::new(

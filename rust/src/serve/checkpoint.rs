@@ -14,6 +14,27 @@
 //! run's. Checkpoints are deleted when their job completes, fails, or
 //! is cancelled by a client (an *abort shutdown* retains them — that is
 //! the recovery path).
+//!
+//! # Format v2: checksum + rotation
+//!
+//! A checkpoint file is a wrapper object `{"crc": "<fnv1a64 hex>",
+//! "data": {…}, "v": 2}` where `crc` is the FNV-1a-64 checksum of the
+//! canonical serialization of `data` (the v1 payload). Because
+//! [`crate::util::json`] serialization is canonical (BTreeMap key
+//! order, shortest-roundtrip floats), the verifier re-serializes the
+//! parsed `data` and compares — any torn write, truncation, or bit
+//! flip fails closed. Bare v1 objects (no `v` tag) are still accepted
+//! on read.
+//!
+//! Each save *rotates*: the previous newest moves to
+//! `train_<id>.ckpt.json.1`, `.1` to `.2`, …, keeping the last
+//! [`TrainCheckpoint::DEFAULT_KEEP`] generations (configurable via
+//! `serve --keep-ckpts`). Recovery ([`TrainCheckpoint::load_newest_valid`],
+//! used by [`TrainCheckpoint::scan_dir`]) walks the generations newest
+//! first and resumes from the first that verifies; a job is an error
+//! only when *no* generation is valid — a daemon silently dropping a
+//! recoverable job is still the one behavior this module exists to
+//! prevent.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -24,6 +45,31 @@ use crate::iteration::{ContextStore, IterationSummary};
 use crate::util::json::Json;
 
 use super::api::{JobSpec, TrainParams};
+
+/// FNV-1a 64-bit hash — the checkpoint integrity checksum. Chosen for
+/// being a dozen lines of dependency-free code with good avalanche on
+/// the torn-write / truncation corruptions checkpoints actually see;
+/// this is an integrity check, not a cryptographic one.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Path of rotated generation `n` (1-based) for a base checkpoint path:
+/// `train_<id>.ckpt.json.1`, `.2`, … Generation 0 is the base itself.
+fn generation_path(base: &Path, n: usize) -> PathBuf {
+    if n == 0 {
+        base.to_path_buf()
+    } else {
+        let mut os = base.as_os_str().to_os_string();
+        os.push(format!(".{n}"));
+        PathBuf::from(os)
+    }
+}
 
 /// Everything needed to resume one interrupted train job.
 #[derive(Debug, Clone)]
@@ -91,50 +137,152 @@ impl TrainCheckpoint {
         })
     }
 
-    /// `<dir>/train_<id>.ckpt.json`.
+    /// Generations kept per job by default: the live file plus two
+    /// rotated predecessors.
+    pub const DEFAULT_KEEP: usize = 3;
+
+    /// `<dir>/train_<id>.ckpt.json` — always the *newest* generation,
+    /// so existence checks and external tooling need no rotation logic.
     pub fn path_for(dir: &Path, job_id: u64) -> PathBuf {
         dir.join(format!("train_{job_id}.ckpt.json"))
     }
 
-    /// Atomically persist: write `.tmp`, then rename over the target.
+    /// Serialize as the v2 wrapper: checksum over the canonical `data`
+    /// serialization, so any truncation or bit flip fails closed on read.
+    fn wrap(&self) -> String {
+        let data = self.to_json().to_string();
+        let mut o = BTreeMap::new();
+        o.insert(
+            "crc".to_string(),
+            Json::Str(format!("{:016x}", fnv1a64(data.as_bytes()))),
+        );
+        o.insert("data".to_string(), self.to_json());
+        o.insert("v".to_string(), Json::Num(2.0));
+        Json::Obj(o).to_string()
+    }
+
+    /// Persist with rotation, keeping [`Self::DEFAULT_KEEP`] generations.
     pub fn save(&self, dir: &Path) -> Result<()> {
+        self.save_rotating(dir, Self::DEFAULT_KEEP)
+    }
+
+    /// Atomically persist: write `.tmp`, shift prior generations one
+    /// slot down (dropping any past `keep - 1`), then rename over the
+    /// base path. A crash at any point leaves every surviving
+    /// generation either fully old or fully new — never torn.
+    pub fn save_rotating(&self, dir: &Path, keep: usize) -> Result<()> {
+        let keep = keep.max(1);
         std::fs::create_dir_all(dir).with_context(|| {
             format!("creating checkpoint dir {}", dir.display())
         })?;
         let path = Self::path_for(dir, self.job_id);
         let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json().to_string())
+        std::fs::write(&tmp, self.wrap())
             .with_context(|| format!("writing {}", tmp.display()))?;
+        for n in (1..keep).rev() {
+            let from = generation_path(&path, n - 1);
+            if from.exists() {
+                std::fs::rename(&from, generation_path(&path, n))
+                    .with_context(|| {
+                        format!("rotating {}", from.display())
+                    })?;
+            }
+        }
+        // Trim anything beyond the cap (e.g. after lowering --keep-ckpts).
+        let mut n = keep;
+        while generation_path(&path, n).exists() {
+            let _ = std::fs::remove_file(generation_path(&path, n));
+            n += 1;
+        }
         std::fs::rename(&tmp, &path)
             .with_context(|| format!("renaming into {}", path.display()))?;
         Ok(())
     }
 
+    /// Parse and *verify* one generation file. v2 wrappers must pass
+    /// the checksum; bare v1 objects are accepted unverified.
     pub fn load(path: &Path) -> Result<TrainCheckpoint> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         let j = Json::parse(&text).map_err(|e| {
             anyhow::anyhow!("checkpoint {}: {e}", path.display())
         })?;
-        Self::from_json(&j)
+        let data = match j.get("v").and_then(Json::as_u64) {
+            Some(2) => {
+                let crc = j.get("crc").and_then(Json::as_str).with_context(
+                    || format!("checkpoint {}: missing 'crc'", path.display()),
+                )?;
+                let data = j.get("data").with_context(|| {
+                    format!("checkpoint {}: missing 'data'", path.display())
+                })?;
+                let actual =
+                    format!("{:016x}", fnv1a64(data.to_string().as_bytes()));
+                if actual != crc {
+                    anyhow::bail!(
+                        "checkpoint {}: checksum mismatch (recorded {crc}, \
+                         computed {actual})",
+                        path.display()
+                    );
+                }
+                data.clone()
+            }
+            _ => j, // v1: bare payload, no checksum to verify.
+        };
+        Self::from_json(&data)
     }
 
-    /// Delete the checkpoint for `job_id`, if present.
+    /// Walk generations newest-first and return the first that
+    /// verifies. Errors only when every existing generation is
+    /// corrupt (or none exists).
+    pub fn load_newest_valid(path: &Path) -> Result<TrainCheckpoint> {
+        let mut errs = Vec::new();
+        let mut n = 0usize;
+        loop {
+            let gen = generation_path(path, n);
+            if n > 0 && !gen.exists() {
+                break;
+            }
+            match Self::load(&gen) {
+                Ok(c) => return Ok(c),
+                Err(e) => errs.push(format!("{e:#}")),
+            }
+            n += 1;
+        }
+        anyhow::bail!(
+            "no valid checkpoint generation for {}: {}",
+            path.display(),
+            errs.join("; ")
+        )
+    }
+
+    /// Delete every generation of the checkpoint for `job_id`.
     pub fn remove(dir: &Path, job_id: u64) -> Result<()> {
         let path = Self::path_for(dir, job_id);
-        match std::fs::remove_file(&path) {
-            Ok(()) => Ok(()),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
-            Err(e) => {
-                Err(e).with_context(|| format!("removing {}", path.display()))
+        let mut n = 0usize;
+        loop {
+            let gen = generation_path(&path, n);
+            match std::fs::remove_file(&gen) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    if n > 0 {
+                        return Ok(());
+                    }
+                }
+                Err(e) => {
+                    return Err(e).with_context(|| {
+                        format!("removing {}", gen.display())
+                    })
+                }
             }
+            n += 1;
         }
     }
 
-    /// All checkpoints in `dir`, sorted by job id. A missing directory
-    /// is an empty recovery set; an unreadable *file* is an error — a
-    /// daemon silently dropping a recoverable job is the one behavior
-    /// this module exists to prevent.
+    /// All checkpoints in `dir`, sorted by job id, each recovered from
+    /// its newest valid generation. A missing directory is an empty
+    /// recovery set; a job whose every generation is unreadable is an
+    /// error — a daemon silently dropping a recoverable job is the one
+    /// behavior this module exists to prevent.
     pub fn scan_dir(dir: &Path) -> Result<Vec<TrainCheckpoint>> {
         let entries = match std::fs::read_dir(dir) {
             Ok(e) => e,
@@ -153,8 +301,10 @@ impl TrainCheckpoint {
                 .file_name()
                 .and_then(|n| n.to_str())
                 .unwrap_or_default();
+            // Rotated generations end in `.ckpt.json.<n>` and are
+            // reached through their base file, not enumerated here.
             if name.starts_with("train_") && name.ends_with(".ckpt.json") {
-                out.push(Self::load(&path)?);
+                out.push(Self::load_newest_valid(&path)?);
             }
         }
         out.sort_by_key(|c| c.job_id);
@@ -179,6 +329,7 @@ mod tests {
             cold: false,
             throttle_ms: 0,
             full: false,
+            trainer_faults: crate::sim::faults::FaultPlan::new(),
         }
     }
 
@@ -235,12 +386,133 @@ mod tests {
     }
 
     #[test]
-    fn corrupt_checkpoint_is_an_error_not_a_skip() {
+    fn fully_corrupt_checkpoint_is_an_error_not_a_skip() {
         let dir = std::env::temp_dir()
             .join(format!("seer-ckpt-corrupt-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
+        // Sole generation is truncated: there is nothing valid to fall
+        // back to, so recovery must refuse rather than drop the job.
         std::fs::write(dir.join("train_9.ckpt.json"), "{\"job_id\":").unwrap();
         assert!(TrainCheckpoint::scan_dir(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_rejects_bit_flips_that_still_parse() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-ckpt-crc-{}", std::process::id()));
+        let ckpt = checkpoint_after_one_iteration();
+        ckpt.save(&dir).unwrap();
+        let path = TrainCheckpoint::path_for(&dir, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        // Corrupt the payload without breaking JSON syntax: a bare v1
+        // parser would accept this silently.
+        let flipped = text.replacen("\"tenant\":\"alice\"", "\"tenant\":\"mallory\"", 1);
+        assert_ne!(flipped, text, "fixture must actually change");
+        std::fs::write(&path, flipped).unwrap();
+        let err = TrainCheckpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Writes `n` successive checkpoints of the same job (one more
+    /// completed iteration each), returning the final driver history
+    /// length per saved generation for later assertions.
+    fn save_generations(dir: &Path, n: usize) -> Vec<usize> {
+        let mut p = params();
+        p.iters = n + 1;
+        let mut d = TrainingDriver::new(p.training_config().unwrap());
+        let mut lens = Vec::new();
+        for e in 0..n {
+            d.run_iteration(e).unwrap();
+            let ckpt = TrainCheckpoint {
+                job_id: 7,
+                tenant: "alice".into(),
+                params: p.clone(),
+                history: d.history().to_vec(),
+                store: d.store().clone(),
+            };
+            ckpt.save(dir).unwrap();
+            lens.push(d.history().len());
+        }
+        lens
+    }
+
+    #[test]
+    fn rotation_keeps_last_k_and_falls_back_to_newest_valid() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-ckpt-rotate-{}", std::process::id()));
+        let k = TrainCheckpoint::DEFAULT_KEEP;
+        let lens = save_generations(&dir, k + 2);
+        let base = TrainCheckpoint::path_for(&dir, 7);
+
+        // Exactly K generations survive: base (newest) plus .1 … .(K-1).
+        assert!(base.exists());
+        for n in 1..k {
+            assert!(generation_path(&base, n).exists(), "gen {n} missing");
+        }
+        assert!(!generation_path(&base, k).exists(), "gen {k} not trimmed");
+
+        // Newest generation holds the most iterations; untouched, the
+        // fallback loader returns it.
+        let newest = TrainCheckpoint::load_newest_valid(&base).unwrap();
+        assert_eq!(newest.history.len(), lens[k + 1]);
+
+        // Truncate the newest at several offsets — mid-document, a few
+        // bytes in, and to zero length — and corrupt the recorded
+        // checksum; every variant must fall back to generation .1.
+        let pristine = std::fs::read_to_string(&base).unwrap();
+        let cuts = [0, 1, 7, pristine.len() / 2, pristine.len() - 1];
+        for &cut in &cuts {
+            std::fs::write(&base, &pristine[..cut]).unwrap();
+            let back = TrainCheckpoint::load_newest_valid(&base).unwrap();
+            assert_eq!(back.history.len(), lens[k], "truncated at {cut}");
+        }
+        let bad_crc = pristine.replacen("{\"crc\":\"", "{\"crc\":\"0", 1);
+        std::fs::write(&base, &bad_crc).unwrap();
+        let back = TrainCheckpoint::load_newest_valid(&base).unwrap();
+        assert_eq!(back.history.len(), lens[k]);
+
+        // scan_dir recovers through the same fallback, and the resumed
+        // driver continues the epoch sequence where that generation
+        // left off.
+        let scanned = TrainCheckpoint::scan_dir(&dir).unwrap();
+        assert_eq!(scanned.len(), 1);
+        assert_eq!(scanned[0].history.len(), lens[k]);
+        let d = TrainingDriver::with_resume(
+            scanned[0].params.training_config().unwrap(),
+            scanned[0].store.clone(),
+            scanned[0].history.clone(),
+        )
+        .unwrap();
+        assert_eq!(d.next_epoch(), lens[k]);
+
+        // Corrupt every surviving generation: now recovery must error.
+        for n in 1..k {
+            std::fs::write(generation_path(&base, n), "<>").unwrap();
+        }
+        assert!(TrainCheckpoint::load_newest_valid(&base).is_err());
+        assert!(TrainCheckpoint::scan_dir(&dir).is_err());
+
+        // remove() clears every generation, corrupt or not.
+        TrainCheckpoint::remove(&dir, 7).unwrap();
+        assert!(!base.exists());
+        for n in 1..k {
+            assert!(!generation_path(&base, n).exists());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bare_v1_checkpoints_still_load() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-ckpt-v1-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let ckpt = checkpoint_after_one_iteration();
+        let path = TrainCheckpoint::path_for(&dir, ckpt.job_id);
+        std::fs::write(&path, ckpt.to_json().to_string()).unwrap();
+        let back = TrainCheckpoint::load(&path).unwrap();
+        assert_eq!(back.history, ckpt.history);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

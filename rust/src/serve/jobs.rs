@@ -12,11 +12,20 @@
 //! granularity) and an [`EventMux`] so any number of `subscribe`
 //! connections can watch it live.
 //!
-//! Lifecycle: `queued → running → done | failed | cancelled` (queued
-//! jobs may cancel directly). Train jobs additionally checkpoint after
-//! every iteration ([`TrainCheckpoint`]); an abort shutdown leaves the
-//! checkpoint on disk, and [`JobManager::new`] re-queues whatever it
-//! finds there — that pair is the kill-then-restart recovery path.
+//! Lifecycle: `queued → running → done | failed | cancelled |
+//! deadline-exceeded | shed` (queued jobs may cancel — or be shed —
+//! directly). Train jobs additionally checkpoint after every iteration
+//! ([`TrainCheckpoint`]); an abort shutdown leaves the checkpoint on
+//! disk, and [`JobManager::new`] re-queues whatever it finds there —
+//! that pair is the kill-then-restart recovery path.
+//!
+//! Supervision (PR 10): each job carries a [`JobControl`] — a
+//! wall-clock `deadline_secs` enforced at the existing cancellation
+//! points, a `priority` that overload shedding consults when the
+//! *global* cap denies a submit, and a `max_attempts` retry budget
+//! replayed with the deterministic [`RetryPolicy`] backoff. Wall-clock
+//! touches supervision decisions only — never a report, which stays a
+//! pure function of the spec.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
@@ -31,10 +40,11 @@ use crate::rollout::EventMux;
 use crate::sweep::{CancelToken, SweepRunner};
 use crate::util::json::Json;
 
-use super::api::{self, JobSpec};
+use super::api::{self, JobControl, JobSpec};
 use super::checkpoint::TrainCheckpoint;
 use super::log;
-use super::quota::QuotaConfig;
+use super::quota::{QuotaConfig, QuotaDenied};
+use super::retry::{is_retryable, RetryPolicy};
 
 /// Where a job is in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -44,6 +54,12 @@ pub enum JobState {
     Done,
     Failed,
     Cancelled,
+    /// The wall-clock `deadline_secs` budget ran out at a cancellation
+    /// point.
+    DeadlineExceeded,
+    /// Evicted while queued to admit a higher-priority job under
+    /// global-cap pressure.
+    Shed,
 }
 
 impl JobState {
@@ -54,15 +70,14 @@ impl JobState {
             JobState::Done => "done",
             JobState::Failed => "failed",
             JobState::Cancelled => "cancelled",
+            JobState::DeadlineExceeded => "deadline-exceeded",
+            JobState::Shed => "shed",
         }
     }
 
     /// Terminal states never transition again.
     pub fn is_terminal(&self) -> bool {
-        matches!(
-            self,
-            JobState::Done | JobState::Failed | JobState::Cancelled
-        )
+        !matches!(self, JobState::Queued | JobState::Running)
     }
 }
 
@@ -70,12 +85,15 @@ impl JobState {
 enum Outcome {
     Done(Json),
     Cancelled,
+    /// Deadline hit; carries the human reason for status/result.
+    DeadlineExceeded(String),
 }
 
 struct Job {
     id: u64,
     tenant: String,
     spec: JobSpec,
+    control: JobControl,
     state: JobState,
     result: Option<Json>,
     error: Option<String>,
@@ -83,6 +101,8 @@ struct Job {
     mux: EventMux,
     /// Train jobs: (iterations done, iterations total).
     progress: Option<(usize, usize)>,
+    /// Execution attempts started so far (1 = first run, no retry yet).
+    attempts: u64,
     /// Re-queued from an on-disk checkpoint at daemon start.
     recovered: bool,
 }
@@ -118,6 +138,9 @@ pub struct JobManager {
     cv: Condvar,
     quota: QuotaConfig,
     state_dir: Option<PathBuf>,
+    retry: RetryPolicy,
+    /// Checkpoint generations kept per train job (`--keep-ckpts`).
+    keep_ckpts: usize,
     shutdown: AtomicBool,
     abort: AtomicBool,
 }
@@ -156,11 +179,16 @@ impl JobManager {
                         tenant: ck.tenant.clone(),
                         progress: Some((ck.history.len(), ck.params.iters)),
                         spec: JobSpec::Train(ck.params),
+                        // Control knobs are not checkpointed: a
+                        // recovered job runs unbounded and unranked —
+                        // the recovered run *is* the retry.
+                        control: JobControl::default(),
                         state: JobState::Queued,
                         result: None,
                         error: None,
                         cancel: CancelToken::new(),
                         mux: EventMux::new(),
+                        attempts: 0,
                         recovered: true,
                     },
                 );
@@ -171,9 +199,24 @@ impl JobManager {
             cv: Condvar::new(),
             quota,
             state_dir,
+            retry: RetryPolicy::default(),
+            keep_ckpts: TrainCheckpoint::DEFAULT_KEEP,
             shutdown: AtomicBool::new(false),
             abort: AtomicBool::new(false),
         })
+    }
+
+    /// Replace the retry backoff policy (daemon-wide; seeded, so two
+    /// daemons configured alike schedule identical retries).
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Checkpoint generations kept per train job (min 1).
+    pub fn with_keep_ckpts(mut self, keep: usize) -> Self {
+        self.keep_ckpts = keep.max(1);
+        self
     }
 
     fn lock(&self) -> MutexGuard<'_, Inner> {
@@ -192,8 +235,42 @@ impl JobManager {
         self.is_shutdown() && self.lock().in_flight() == 0
     }
 
+    /// Under global-cap pressure, evict the most shed-worthy *queued*
+    /// job of strictly lower priority than `priority`: lowest priority
+    /// first, newest (highest id) among ties — the cheapest promise to
+    /// break. Returns the shed id, or `None` if nothing qualifies.
+    fn shed_for(&self, g: &mut Inner, priority: u64) -> Option<u64> {
+        let victim = g
+            .jobs
+            .values()
+            .filter(|j| {
+                j.state == JobState::Queued && j.control.priority < priority
+            })
+            .min_by_key(|j| (j.control.priority, std::cmp::Reverse(j.id)))?
+            .id;
+        let job = g.jobs.get_mut(&victim).expect("victim job");
+        job.state = JobState::Shed;
+        job.error = Some(format!(
+            "shed while queued: global cap reached and a priority-{priority} \
+             job arrived (this job's priority: {})",
+            job.control.priority
+        ));
+        job.cancel.cancel();
+        job.mux.close();
+        if let Some(dir) = &self.state_dir {
+            let _ = TrainCheckpoint::remove(dir, victim);
+        }
+        log::warn("jobs", format!("job {victim}: shed under overload"));
+        Some(victim)
+    }
+
     /// Admission control + enqueue. `Err` is a ready-to-send reply.
-    pub fn submit(&self, tenant: &str, spec: JobSpec) -> Result<u64, Json> {
+    pub fn submit(
+        &self,
+        tenant: &str,
+        spec: JobSpec,
+        control: JobControl,
+    ) -> Result<u64, Json> {
         if self.is_shutdown() {
             return Err(api::err_reply(
                 "shutting-down",
@@ -201,9 +278,38 @@ impl JobManager {
             ));
         }
         let mut g = self.lock();
-        self.quota
-            .admit(tenant, g.tenant_in_flight(tenant), g.in_flight())
-            .map_err(|reason| api::err_reply("quota", &reason))?;
+        if let Err(denied) =
+            self.quota
+                .admit(tenant, g.tenant_in_flight(tenant), g.in_flight())
+        {
+            match denied {
+                // Overload may be relieved by shedding a strictly
+                // lower-priority queued job — but never on behalf of a
+                // tenant its own cap would deny anyway; re-run
+                // admission after, so both caps still bind.
+                QuotaDenied::GlobalCap(_)
+                    if g.tenant_in_flight(tenant)
+                        < self.quota.max_per_tenant
+                        && self.shed_for(&mut g, control.priority).is_some() =>
+                {
+                    if let Err(denied) = self.quota.admit(
+                        tenant,
+                        g.tenant_in_flight(tenant),
+                        g.in_flight(),
+                    ) {
+                        drop(g);
+                        self.cv.notify_all();
+                        return Err(api::err_reply(
+                            "quota",
+                            denied.reason(),
+                        ));
+                    }
+                }
+                denied => {
+                    return Err(api::err_reply("quota", denied.reason()))
+                }
+            }
+        }
         let id = g.next_id;
         g.next_id += 1;
         let progress = match &spec {
@@ -220,12 +326,14 @@ impl JobManager {
                 id,
                 tenant: tenant.to_string(),
                 spec,
+                control,
                 state: JobState::Queued,
                 result: None,
                 error: None,
                 cancel: CancelToken::new(),
                 mux: EventMux::new(),
                 progress,
+                attempts: 0,
                 recovered: false,
             },
         );
@@ -241,6 +349,7 @@ impl JobManager {
             ("tenant", Json::Str(job.tenant.clone())),
             ("kind", Json::Str(job.spec.kind().to_string())),
             ("state", Json::Str(job.state.name().to_string())),
+            ("attempts", Json::Num(job.attempts as f64)),
             ("recovered", Json::Bool(job.recovered)),
         ];
         if let Some((done, total)) = job.progress {
@@ -276,6 +385,8 @@ impl JobManager {
                     ("done", count(JobState::Done)),
                     ("failed", count(JobState::Failed)),
                     ("cancelled", count(JobState::Cancelled)),
+                    ("deadline_exceeded", count(JobState::DeadlineExceeded)),
+                    ("shed", count(JobState::Shed)),
                     ("shutting_down", Json::Bool(self.is_shutdown())),
                 ])
             }
@@ -295,6 +406,7 @@ impl JobManager {
                     return api::ok_reply(vec![
                         ("job", Json::Num(id as f64)),
                         ("state", Json::Str("done".to_string())),
+                        ("attempts", Json::Num(job.attempts as f64)),
                         (
                             "result",
                             job.result.clone().unwrap_or(Json::Null),
@@ -311,6 +423,20 @@ impl JobManager {
                     return api::err_reply(
                         "cancelled",
                         &format!("job {id} was cancelled"),
+                    )
+                }
+                JobState::DeadlineExceeded => {
+                    return api::err_reply(
+                        "deadline-exceeded",
+                        job.error.as_deref().unwrap_or("deadline exceeded"),
+                    )
+                }
+                JobState::Shed => {
+                    return api::err_reply(
+                        "shed",
+                        job.error.as_deref().unwrap_or(
+                            "shed while queued under overload",
+                        ),
                     )
                 }
                 JobState::Queued | JobState::Running => {
@@ -419,11 +545,12 @@ impl JobManager {
     /// [`crate::serve::server::Server::run`].
     pub fn worker_loop(&self, worker_id: usize) {
         loop {
-            let (id, spec, cancel, mux, tenant) = {
+            let (id, spec, control, cancel, mux, tenant) = {
                 let mut g = self.lock();
                 loop {
-                    // Skip queue entries whose job was cancelled while
-                    // queued (cancel leaves the id in the deque).
+                    // Skip queue entries whose job was cancelled (or
+                    // shed) while queued — both leave the id in the
+                    // deque.
                     match g.queue.pop_front() {
                         Some(id) => {
                             let job = g.jobs.get_mut(&id).expect("queued job");
@@ -434,6 +561,7 @@ impl JobManager {
                             break (
                                 id,
                                 job.spec.clone(),
+                                job.control,
                                 job.cancel.clone(),
                                 job.mux.clone(),
                                 job.tenant.clone(),
@@ -458,7 +586,45 @@ impl JobManager {
                     spec.kind()
                 ),
             );
-            let outcome = self.execute(id, &spec, &cancel, &mux, &tenant);
+            // The deadline clock starts when the job starts *running* —
+            // queue wait is the daemon's fault, not the job's.
+            let deadline = control.deadline_secs.map(|s| {
+                std::time::Instant::now() + Duration::from_secs_f64(s)
+            });
+            // Attempt loop: retryable failures re-run (resuming from
+            // the job's own checkpoint where one exists) after a
+            // deterministic backoff, until the budget is spent.
+            let mut attempt = 0u64;
+            let outcome = loop {
+                attempt += 1;
+                if let Some(job) = self.lock().jobs.get_mut(&id) {
+                    job.attempts = attempt;
+                }
+                self.cv.notify_all();
+                match self.execute(id, &spec, &cancel, &mux, &tenant, deadline)
+                {
+                    Ok(o) => break Ok(o),
+                    Err(e) => {
+                        let budget_left = attempt < control.max_attempts;
+                        if !budget_left
+                            || !is_retryable(&e)
+                            || cancel.is_cancelled()
+                        {
+                            break Err(e);
+                        }
+                        let delay = self.retry.delay_ms(id, attempt);
+                        log::warn(
+                            "jobs",
+                            format!(
+                                "job {id}: attempt {attempt}/{} failed \
+                                 retryably ({e:#}); retrying in {delay} ms",
+                                control.max_attempts
+                            ),
+                        );
+                        std::thread::sleep(Duration::from_millis(delay));
+                    }
+                }
+            };
             let mut g = self.lock();
             let job = g.jobs.get_mut(&id).expect("running job");
             match outcome {
@@ -470,6 +636,11 @@ impl JobManager {
                 Ok(Outcome::Cancelled) => {
                     job.state = JobState::Cancelled;
                     log::info("jobs", format!("job {id}: cancelled"));
+                }
+                Ok(Outcome::DeadlineExceeded(msg)) => {
+                    job.state = JobState::DeadlineExceeded;
+                    log::warn("jobs", format!("job {id}: {msg}"));
+                    job.error = Some(msg);
                 }
                 Err(e) => {
                     job.state = JobState::Failed;
@@ -483,6 +654,21 @@ impl JobManager {
         }
     }
 
+    /// The deadline message if `deadline` has passed, else `None`.
+    /// Wall-clock is consulted here and nowhere else in the job path.
+    fn deadline_hit(
+        id: u64,
+        deadline: Option<std::time::Instant>,
+    ) -> Option<String> {
+        match deadline {
+            Some(d) if std::time::Instant::now() >= d => Some(format!(
+                "job {id}: wall-clock deadline exceeded at a cancellation \
+                 point"
+            )),
+            _ => None,
+        }
+    }
+
     fn execute(
         &self,
         id: u64,
@@ -490,9 +676,16 @@ impl JobManager {
         cancel: &CancelToken,
         mux: &EventMux,
         tenant: &str,
+        deadline: Option<std::time::Instant>,
     ) -> Result<Outcome> {
         if cancel.is_cancelled() {
             return Ok(Outcome::Cancelled);
+        }
+        // Rollout and sweep jobs check the deadline at their start (and
+        // train jobs at every iteration); a result that *finishes*
+        // before anyone looks again is returned, not discarded.
+        if let Some(msg) = Self::deadline_hit(id, deadline) {
+            return Ok(Outcome::DeadlineExceeded(msg));
         }
         match spec {
             JobSpec::Rollout(p) => {
@@ -513,7 +706,9 @@ impl JobManager {
                     Err(e) => Err(e),
                 }
             }
-            JobSpec::Train(p) => self.execute_train(id, p, cancel, mux, tenant),
+            JobSpec::Train(p) => {
+                self.execute_train(id, p, cancel, mux, tenant, deadline)
+            }
         }
     }
 
@@ -524,6 +719,7 @@ impl JobManager {
         cancel: &CancelToken,
         mux: &EventMux,
         tenant: &str,
+        deadline: Option<std::time::Instant>,
     ) -> Result<Outcome> {
         let cfg = p.training_config()?;
         let ckpt_path = self
@@ -532,7 +728,10 @@ impl JobManager {
             .map(|dir| TrainCheckpoint::path_for(dir, id));
         let mut driver = match &ckpt_path {
             Some(path) if path.exists() => {
-                let ck = TrainCheckpoint::load(path)?;
+                // Newest-valid fallback: a truncated or bit-flipped
+                // newest generation rolls back to the last good one
+                // instead of failing the job.
+                let ck = TrainCheckpoint::load_newest_valid(path)?;
                 log::info(
                     "jobs",
                     format!(
@@ -560,6 +759,14 @@ impl JobManager {
                 }
                 return Ok(Outcome::Cancelled);
             }
+            if let Some(msg) = Self::deadline_hit(id, deadline) {
+                // A deadline is the client bounding the job's lifetime:
+                // terminal by policy, so the checkpoint goes too.
+                if let Some(dir) = &self.state_dir {
+                    TrainCheckpoint::remove(dir, id)?;
+                }
+                return Ok(Outcome::DeadlineExceeded(msg));
+            }
             let epoch = driver.next_epoch();
             driver.run_iteration_observed(epoch, Some(Box::new(mux.clone())))?;
             self.set_progress(id, driver.history().len(), p.iters);
@@ -571,7 +778,7 @@ impl JobManager {
                     history: driver.history().to_vec(),
                     store: driver.store().clone(),
                 }
-                .save(dir)?;
+                .save_rotating(dir, self.keep_ckpts)?;
             }
             if p.throttle_ms > 0 && driver.next_epoch() < p.iters {
                 std::thread::sleep(Duration::from_millis(p.throttle_ms));
@@ -611,6 +818,7 @@ mod tests {
             mode: crate::config::TrainingMode::Sync,
             cold: false,
             throttle_ms,
+            trainer_faults: crate::sim::faults::FaultPlan::new(),
             full: false,
         })
     }
@@ -636,7 +844,7 @@ mod tests {
     fn submit_run_result_lifecycle() {
         let m = JobManager::new(QuotaConfig::default(), None).unwrap();
         let reply = with_pool(&m, 1, || {
-            let id = m.submit("alice", rollout_spec()).unwrap();
+            let id = m.submit("alice", rollout_spec(), JobControl::default()).unwrap();
             m.result_json(id)
         });
         assert_eq!(reply.get("ok").and_then(Json::as_bool), Some(true));
@@ -658,22 +866,22 @@ mod tests {
         )
         .unwrap();
         // No workers: jobs stay queued, holding their quota.
-        m.submit("a", train_spec(1, 0)).unwrap();
-        let rejected = m.submit("a", train_spec(1, 0)).unwrap_err();
+        m.submit("a", train_spec(1, 0), JobControl::default()).unwrap();
+        let rejected = m.submit("a", train_spec(1, 0), JobControl::default()).unwrap_err();
         assert_eq!(
             rejected.get("code").and_then(Json::as_str),
             Some("quota")
         );
-        m.submit("b", train_spec(1, 0)).unwrap();
+        m.submit("b", train_spec(1, 0), JobControl::default()).unwrap();
         // Cancelling frees the quota slot.
         m.cancel_json(1);
-        assert!(m.submit("a", train_spec(1, 0)).is_ok());
+        assert!(m.submit("a", train_spec(1, 0), JobControl::default()).is_ok());
     }
 
     #[test]
     fn cancel_queued_job_never_runs() {
         let m = JobManager::new(QuotaConfig::default(), None).unwrap();
-        let id = m.submit("a", rollout_spec()).unwrap();
+        let id = m.submit("a", rollout_spec(), JobControl::default()).unwrap();
         let reply = m.cancel_json(id);
         assert_eq!(
             reply.get("state").and_then(Json::as_str),
@@ -706,7 +914,7 @@ mod tests {
     fn submit_after_shutdown_is_rejected() {
         let m = JobManager::new(QuotaConfig::default(), None).unwrap();
         m.request_shutdown(false);
-        let e = m.submit("a", rollout_spec()).unwrap_err();
+        let e = m.submit("a", rollout_spec(), JobControl::default()).unwrap_err();
         assert_eq!(
             e.get("code").and_then(Json::as_str),
             Some("shutting-down")
@@ -773,9 +981,140 @@ mod tests {
     }
 
     #[test]
+    fn overload_sheds_newest_lowest_priority_queued_job() {
+        let m = JobManager::new(
+            QuotaConfig {
+                max_per_tenant: 4,
+                max_jobs: 2,
+            },
+            None,
+        )
+        .unwrap();
+        // No workers: both jobs stay queued, filling the global cap.
+        let low = |prio| JobControl {
+            priority: prio,
+            ..JobControl::default()
+        };
+        let j1 = m.submit("a", train_spec(1, 0), low(0)).unwrap();
+        let j2 = m.submit("a", train_spec(1, 0), low(0)).unwrap();
+        // Equal priority never sheds: the third submit is plain quota.
+        let e = m.submit("b", train_spec(1, 0), low(0)).unwrap_err();
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("quota"));
+        // Higher priority sheds the *newest* of the lowest-priority
+        // queued jobs (j2, not j1) and is admitted in its place.
+        let j4 = m.submit("b", train_spec(1, 0), low(5)).unwrap();
+        assert_eq!(m.state_of(j2), Some(JobState::Shed));
+        assert_eq!(m.state_of(j1), Some(JobState::Queued));
+        assert_eq!(m.state_of(j4), Some(JobState::Queued));
+        let r = m.result_json(j2);
+        assert_eq!(r.get("code").and_then(Json::as_str), Some("shed"));
+        let s = m.status_json(None);
+        assert_eq!(s.get("shed").and_then(Json::as_u64), Some(1));
+        // The shed job's mux is closed so subscribers drain immediately.
+        assert!(m.mux_of(j2).unwrap().is_closed());
+    }
+
+    #[test]
+    fn deadline_exceeded_is_terminal_and_drops_the_checkpoint() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-jobs-deadline-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m =
+            JobManager::new(QuotaConfig::default(), Some(dir.clone())).unwrap();
+        let control = JobControl {
+            deadline_secs: Some(0.05),
+            ..JobControl::default()
+        };
+        // 3 iterations with a 100 ms throttle cannot fit in 50 ms: the
+        // deadline check at the next iteration boundary must fire.
+        let reply = with_pool(&m, 1, || {
+            let id = m.submit("a", train_spec(3, 100), control).unwrap();
+            m.result_json(id)
+        });
+        assert_eq!(
+            reply.get("code").and_then(Json::as_str),
+            Some("deadline-exceeded"),
+            "{reply}"
+        );
+        assert_eq!(m.state_of(1), Some(JobState::DeadlineExceeded));
+        assert!(
+            !TrainCheckpoint::path_for(&dir, 1).exists(),
+            "deadline-exceeded is terminal by policy; checkpoint must go"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retryable_failures_consume_the_attempt_budget_then_fail() {
+        let dir = std::env::temp_dir()
+            .join(format!("seer-jobs-retry-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // A directory squatting on the checkpoint tmp path makes every
+        // checkpoint write fail with an I/O error — retryable, and
+        // persistent across attempts.
+        std::fs::create_dir_all(dir.join("train_1.ckpt.json.tmp")).unwrap();
+        let m = JobManager::new(QuotaConfig::default(), Some(dir.clone()))
+            .unwrap()
+            .with_retry_policy(RetryPolicy {
+                base_ms: 1,
+                cap_ms: 2,
+                seed: 1,
+            });
+        let control = JobControl {
+            max_attempts: 3,
+            ..JobControl::default()
+        };
+        let reply = with_pool(&m, 1, || {
+            let id = m.submit("a", train_spec(2, 0), control).unwrap();
+            m.result_json(id)
+        });
+        assert_eq!(
+            reply.get("code").and_then(Json::as_str),
+            Some("job-failed"),
+            "{reply}"
+        );
+        let status = m.status_json(Some(1));
+        assert_eq!(
+            status.get("attempts").and_then(Json::as_u64),
+            Some(3),
+            "budget of 3 must be fully consumed: {status}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn non_retryable_failures_fail_fast_on_the_first_attempt() {
+        let m = JobManager::new(QuotaConfig::default(), None).unwrap();
+        // Built directly (parse-time validation would reject it): the
+        // executor hits a deterministic config error.
+        let JobSpec::Train(mut p) = train_spec(1, 0) else {
+            unreachable!()
+        };
+        p.scheduler = "bogus".into();
+        let control = JobControl {
+            max_attempts: 5,
+            ..JobControl::default()
+        };
+        let reply = with_pool(&m, 1, || {
+            let id = m.submit("a", JobSpec::Train(p), control).unwrap();
+            m.result_json(id)
+        });
+        assert_eq!(
+            reply.get("code").and_then(Json::as_str),
+            Some("job-failed")
+        );
+        let status = m.status_json(Some(1));
+        assert_eq!(
+            status.get("attempts").and_then(Json::as_u64),
+            Some(1),
+            "a deterministic failure must not burn the retry budget: {status}"
+        );
+    }
+
+    #[test]
     fn status_summary_counts_states() {
         let m = JobManager::new(QuotaConfig::default(), None).unwrap();
-        m.submit("a", train_spec(2, 0)).unwrap();
+        m.submit("a", train_spec(2, 0), JobControl::default()).unwrap();
         let s = m.status_json(None);
         assert_eq!(s.get("jobs").and_then(Json::as_u64), Some(1));
         assert_eq!(s.get("queued").and_then(Json::as_u64), Some(1));

@@ -8,15 +8,21 @@
 //! * [`api`] — the line-delimited JSON protocol: requests, replies,
 //!   and the typed [`api::JobSpec`] a `submit` carries.
 //! * [`quota`] — admission control: per-tenant and global in-flight
-//!   caps, rejections with machine-readable reasons.
+//!   caps, typed rejections with machine-readable reasons (global-cap
+//!   denials may trigger priority shedding; tenant-cap denials never
+//!   do).
 //! * [`jobs`] — the job table, queue, lifecycle state machine, and
 //!   the executors that run each [`api::JobSpec`] kind on the
 //!   [`crate::sweep::SweepRunner`] worker pool, with job-granular
-//!   cancellation ([`crate::sweep::CancelToken`]) and live event
-//!   fan-out ([`crate::rollout::EventMux`]).
-//! * [`checkpoint`] — crash-durable train-job state: atomic
-//!   per-iteration snapshots that a restarted daemon resumes
-//!   byte-identically.
+//!   cancellation ([`crate::sweep::CancelToken`]), live event
+//!   fan-out ([`crate::rollout::EventMux`]), per-job deadlines,
+//!   bounded retry, and overload shedding ([`api::JobControl`]).
+//! * [`retry`] — deterministic capped-exponential backoff with seeded
+//!   jitter, plus retryable-vs-fatal error classification.
+//! * [`checkpoint`] — crash-durable train-job state: atomic,
+//!   checksummed, rotated per-iteration snapshots that a restarted
+//!   daemon resumes byte-identically, falling back to the newest
+//!   *valid* generation when the latest is torn.
 //! * [`server`] — the TCP front end: accept loop, bounded line
 //!   reader, verb dispatch, NDJSON `subscribe` streaming, graceful
 //!   and abort shutdown.
@@ -32,10 +38,14 @@ pub mod checkpoint;
 pub mod jobs;
 pub mod log;
 pub mod quota;
+pub mod retry;
 pub mod server;
 
-pub use api::{JobSpec, Request, RolloutParams, SweepParams, TrainParams};
+pub use api::{
+    JobControl, JobSpec, Request, RolloutParams, SweepParams, TrainParams,
+};
 pub use checkpoint::TrainCheckpoint;
 pub use jobs::{JobManager, JobState};
-pub use quota::QuotaConfig;
+pub use quota::{QuotaConfig, QuotaDenied};
+pub use retry::RetryPolicy;
 pub use server::{ServeConfig, Server};

@@ -10,6 +10,31 @@
 //! a tenant with quota 1 can keep exactly one job in the system at a
 //! time, while worker-pool capacity — not the quota — decides whether
 //! an admitted job runs immediately or waits in the queue.
+//!
+//! The denial is *typed* ([`QuotaDenied`]): a global-cap denial is
+//! overload, which the manager may relieve by shedding a lower-priority
+//! queued job; a tenant-cap denial is that tenant's own backlog and is
+//! never grounds to shed someone else's work.
+
+/// Why admission was refused. Carries the human reason; the variant
+/// decides whether shedding may apply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QuotaDenied {
+    /// The whole daemon is at capacity — shedding a strictly
+    /// lower-priority queued job may make room.
+    GlobalCap(String),
+    /// This tenant is at its own cap — only its jobs finishing (or
+    /// being cancelled) makes room.
+    TenantCap(String),
+}
+
+impl QuotaDenied {
+    pub fn reason(&self) -> &str {
+        match self {
+            QuotaDenied::GlobalCap(r) | QuotaDenied::TenantCap(r) => r,
+        }
+    }
+}
 
 /// Admission limits for a [`crate::serve::jobs::JobManager`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,24 +57,25 @@ impl Default for QuotaConfig {
 impl QuotaConfig {
     /// Decide admission for a tenant currently holding
     /// `tenant_in_flight` jobs, with `total_in_flight` jobs in the
-    /// system. `Err` is the rejection reason, ready to send back.
+    /// system. `Err` is the typed rejection, its reason ready to send
+    /// back.
     pub fn admit(
         &self,
         tenant: &str,
         tenant_in_flight: usize,
         total_in_flight: usize,
-    ) -> Result<(), String> {
+    ) -> Result<(), QuotaDenied> {
         if total_in_flight >= self.max_jobs {
-            return Err(format!(
+            return Err(QuotaDenied::GlobalCap(format!(
                 "global job cap reached ({} in flight, cap {})",
                 total_in_flight, self.max_jobs
-            ));
+            )));
         }
         if tenant_in_flight >= self.max_per_tenant {
-            return Err(format!(
+            return Err(QuotaDenied::TenantCap(format!(
                 "tenant '{}' quota reached ({} in flight, quota {})",
                 tenant, tenant_in_flight, self.max_per_tenant
-            ));
+            )));
         }
         Ok(())
     }
@@ -76,8 +102,9 @@ mod tests {
             max_jobs: 64,
         };
         let e = q.admit("alice", 1, 1).unwrap_err();
-        assert!(e.contains("alice"), "{e}");
-        assert!(e.contains("quota"), "{e}");
+        assert!(matches!(e, QuotaDenied::TenantCap(_)), "{e:?}");
+        assert!(e.reason().contains("alice"), "{e:?}");
+        assert!(e.reason().contains("quota"), "{e:?}");
     }
 
     #[test]
@@ -87,6 +114,7 @@ mod tests {
             max_jobs: 2,
         };
         let e = q.admit("bob", 0, 2).unwrap_err();
-        assert!(e.contains("global"), "{e}");
+        assert!(matches!(e, QuotaDenied::GlobalCap(_)), "{e:?}");
+        assert!(e.reason().contains("global"), "{e:?}");
     }
 }

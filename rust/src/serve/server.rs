@@ -28,12 +28,19 @@ use crate::sweep::SweepRunner;
 use crate::util::json::Json;
 
 use super::api::{self, Request, MAX_LINE_BYTES};
+use super::checkpoint::TrainCheckpoint;
 use super::jobs::JobManager;
 use super::log;
 use super::quota::QuotaConfig;
+use super::retry::RetryPolicy;
 
 /// How often blocked reads and the accept loop re-check for shutdown.
 const POLL_INTERVAL: Duration = Duration::from_millis(50);
+
+/// How long a reply write may make zero progress before the connection
+/// is declared dead. A subscriber that stops reading mid-NDJSON must
+/// not pin its handler thread (and with it, daemon shutdown) forever.
+const WRITE_STALL_BUDGET: Duration = Duration::from_secs(10);
 
 /// Daemon configuration, filled in from CLI flags by `main`.
 #[derive(Debug, Clone)]
@@ -45,6 +52,10 @@ pub struct ServeConfig {
     pub quota: QuotaConfig,
     /// Where train jobs checkpoint; `None` disables checkpointing.
     pub state_dir: Option<PathBuf>,
+    /// Checkpoint generations kept per train job (`--keep-ckpts`).
+    pub keep_ckpts: usize,
+    /// Retry backoff schedule for supervised jobs (`--retry-seed`).
+    pub retry: RetryPolicy,
 }
 
 impl Default for ServeConfig {
@@ -54,6 +65,8 @@ impl Default for ServeConfig {
             workers: 0,
             quota: QuotaConfig::default(),
             state_dir: None,
+            keep_ckpts: TrainCheckpoint::DEFAULT_KEEP,
+            retry: RetryPolicy::default(),
         }
     }
 }
@@ -79,7 +92,11 @@ impl Server {
         } else {
             cfg.workers
         };
-        let manager = Arc::new(JobManager::new(cfg.quota, cfg.state_dir)?);
+        let manager = Arc::new(
+            JobManager::new(cfg.quota, cfg.state_dir)?
+                .with_retry_policy(cfg.retry)
+                .with_keep_ckpts(cfg.keep_ckpts),
+        );
         Ok(Server {
             listener,
             manager,
@@ -229,10 +246,47 @@ impl LineReader {
     }
 }
 
+/// Write one reply line, polling on the stream's short write timeout.
+/// Errors when the peer is gone (broken pipe / reset) or stops reading
+/// long enough to exhaust [`WRITE_STALL_BUDGET`] with zero progress —
+/// a plain `write_all` on a full send buffer would block the handler
+/// thread unboundedly, wedging daemon shutdown behind one dead client.
 fn send(w: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
     let mut line = reply.to_string();
     line.push('\n');
-    w.write_all(line.as_bytes())
+    let buf = line.as_bytes();
+    let mut written = 0usize;
+    let mut last_progress = std::time::Instant::now();
+    while written < buf.len() {
+        match w.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    ErrorKind::WriteZero,
+                    "peer closed mid-write",
+                ))
+            }
+            Ok(n) => {
+                written += n;
+                last_progress = std::time::Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut
+                ) =>
+            {
+                if last_progress.elapsed() >= WRITE_STALL_BUDGET {
+                    return Err(std::io::Error::new(
+                        ErrorKind::TimedOut,
+                        "client stopped reading",
+                    ));
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// One NDJSON stream frame. Event frames are the event's own
@@ -278,6 +332,9 @@ fn handle_conn(stream: TcpStream, manager: &JobManager) -> Result<()> {
     stream
         .set_read_timeout(Some(POLL_INTERVAL))
         .context("setting read timeout")?;
+    stream
+        .set_write_timeout(Some(POLL_INTERVAL))
+        .context("setting write timeout")?;
     let mut writer = stream.try_clone().context("cloning stream")?;
     let mut reader = LineReader {
         stream,
@@ -313,8 +370,12 @@ fn handle_conn(stream: TcpStream, manager: &JobManager) -> Result<()> {
             }
         };
         match req {
-            Request::Submit { tenant, spec } => {
-                let reply = match manager.submit(&tenant, spec) {
+            Request::Submit {
+                tenant,
+                spec,
+                control,
+            } => {
+                let reply = match manager.submit(&tenant, spec, control) {
                     Ok(id) => {
                         api::ok_reply(vec![("job", Json::Num(id as f64))])
                     }
@@ -348,7 +409,24 @@ fn handle_conn(stream: TcpStream, manager: &JobManager) -> Result<()> {
                     ]),
                 )?;
                 for frame in rx {
-                    send(&mut writer, &frame_json(job, &frame, manager))?;
+                    if let Err(e) =
+                        send(&mut writer, &frame_json(job, &frame, manager))
+                    {
+                        // The subscriber went away (or stopped reading)
+                        // mid-stream. Dropping `rx` is the idempotent
+                        // unsubscribe — the mux prunes the dead channel
+                        // at its next emission — and the job itself
+                        // never waited on this connection, so teardown
+                        // here is purely local.
+                        log::debug(
+                            "server",
+                            format!(
+                                "subscriber of job {job} dropped mid-stream: \
+                                 {e}"
+                            ),
+                        );
+                        return Ok(());
+                    }
                     if frame == MuxFrame::Closed {
                         break;
                     }

@@ -44,6 +44,20 @@ pub enum FaultEvent {
     /// Cancel one request outright (user abort / filtered sample). The
     /// request terminates as *aborted*, not completed.
     RequestAbort { req: RequestId },
+    /// Trainer-side: train-step compute runs `factor`× slower while the
+    /// pipeline clock (`U_k` time, seconds) is inside `[from, until)`.
+    /// Overlapping windows multiply. Replayed by
+    /// [`trainer_step`], not by the rollout cluster.
+    TrainerSlowdown { factor: f64, from: f64, until: f64 },
+    /// Trainer-side: training halts for `secs` at pipeline-clock second
+    /// `at`. A stall that lands while the trainer is idle (between
+    /// steps) is absorbed for free; one that lands inside a busy train
+    /// step inserts `secs` of zero progress. Fires at most once.
+    TrainerStall { at: f64, secs: f64 },
+    /// Trainer-side: iteration `at_iter`'s in-flight train step is lost
+    /// (torn optimizer state) and redone in full from the last
+    /// checkpoint — one extra attempt per crash event at that iteration.
+    TrainerCrash { at_iter: usize },
 }
 
 impl FaultEvent {
@@ -56,7 +70,21 @@ impl FaultEvent {
             FaultEvent::ScaleUp { .. } => "scale_up",
             FaultEvent::ScaleDown { .. } => "scale_down",
             FaultEvent::RequestAbort { .. } => "request_abort",
+            FaultEvent::TrainerSlowdown { .. } => "trainer_slowdown",
+            FaultEvent::TrainerStall { .. } => "trainer_stall",
+            FaultEvent::TrainerCrash { .. } => "trainer_crash",
         }
+    }
+
+    /// Whether this event targets the training side of the pipeline
+    /// (replayed by [`trainer_step`]) rather than the rollout cluster.
+    pub fn is_trainer(&self) -> bool {
+        matches!(
+            self,
+            FaultEvent::TrainerSlowdown { .. }
+                | FaultEvent::TrainerStall { .. }
+                | FaultEvent::TrainerCrash { .. }
+        )
     }
 }
 
@@ -131,6 +159,19 @@ impl FaultPlan {
                         bail!("fault event {i}: {} of 0 instances", e.event.kind());
                     }
                 }
+                FaultEvent::TrainerSlowdown { factor, from, until } => {
+                    if !(factor.is_finite() && factor > 0.0) {
+                        bail!("fault event {i}: trainer slowdown factor {factor} must be finite and > 0");
+                    }
+                    if !(from.is_finite() && until.is_finite() && 0.0 <= from && from <= until) {
+                        bail!("fault event {i}: trainer slowdown window [{from}, {until}) must satisfy 0 <= from <= until");
+                    }
+                }
+                FaultEvent::TrainerStall { at, secs } => {
+                    if !(at.is_finite() && at >= 0.0 && secs.is_finite() && secs >= 0.0) {
+                        bail!("fault event {i}: trainer stall at {at} for {secs}s must be finite and non-negative");
+                    }
+                }
                 _ => {}
             }
         }
@@ -200,6 +241,60 @@ impl FaultPlan {
         plan.sorted()
     }
 
+    /// Seeded random *trainer-side* script for the chaos/property
+    /// harnesses: one slowdown window, up to two stalls, and up to one
+    /// crash inside the first `iters` iterations, all parameterized over
+    /// `horizon_secs` of pipeline-clock time. Deterministic in the
+    /// arguments. Kept separate from [`FaultPlan::random`] so existing
+    /// cluster-fault property tests keep their exact draw sequences.
+    pub fn random_trainer(seed: u64, iters: usize, horizon_secs: f64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0x7E_A13);
+        let mut plan = FaultPlan::new();
+        if rng.bool(0.8) {
+            let from = rng.uniform(0.05, 0.6) * horizon_secs;
+            let until = from + rng.uniform(0.1, 0.35) * horizon_secs;
+            plan = plan.at(
+                from,
+                FaultEvent::TrainerSlowdown {
+                    factor: rng.uniform(1.5, 4.0),
+                    from,
+                    until,
+                },
+            );
+        }
+        for _ in 0..rng.range_usize(0, 2) {
+            let at = rng.uniform(0.05, 0.85) * horizon_secs;
+            plan = plan.at(
+                at,
+                FaultEvent::TrainerStall {
+                    at,
+                    secs: rng.uniform(0.02, 0.15) * horizon_secs,
+                },
+            );
+        }
+        if iters > 0 && rng.bool(0.6) {
+            let at_iter = rng.range_usize(0, iters - 1);
+            plan = plan.at(
+                at_iter as f64,
+                FaultEvent::TrainerCrash { at_iter },
+            );
+        }
+        plan.sorted()
+    }
+
+    /// Split the plan into its cluster-side and trainer-side halves
+    /// (each sorted, authored order preserved within a timestamp): the
+    /// rollout cluster replays the first, the training driver's pipeline
+    /// recurrence ([`trainer_step`]) replays the second. One `--faults`
+    /// file can therefore script both failure domains.
+    pub fn partition(&self) -> (FaultPlan, FaultPlan) {
+        let (trainer, cluster): (Vec<TimedFault>, Vec<TimedFault>) = self
+            .events
+            .iter()
+            .partition(|e| e.event.is_trainer());
+        (FaultPlan { events: cluster }, FaultPlan { events: trainer })
+    }
+
     // -----------------------------------------------------------------
     // JSON (de)serialization through util::json.
     // -----------------------------------------------------------------
@@ -235,6 +330,21 @@ impl FaultPlan {
                     }
                     FaultEvent::RequestAbort { req } => {
                         o.insert("req".to_string(), Json::Num(req.0 as f64));
+                    }
+                    FaultEvent::TrainerSlowdown { factor, from, until } => {
+                        o.insert("factor".to_string(), Json::Num(factor));
+                        o.insert("from".to_string(), Json::Num(from));
+                        o.insert("until".to_string(), Json::Num(until));
+                    }
+                    FaultEvent::TrainerStall { at, secs } => {
+                        o.insert("at".to_string(), Json::Num(at));
+                        o.insert("secs".to_string(), Json::Num(secs));
+                    }
+                    FaultEvent::TrainerCrash { at_iter } => {
+                        o.insert(
+                            "at_iter".to_string(),
+                            Json::Num(at_iter as f64),
+                        );
                     }
                 }
                 Json::Obj(o)
@@ -306,6 +416,34 @@ impl FaultPlan {
                         )? as u32,
                     ),
                 },
+                "trainer_slowdown" => {
+                    let f64_field = |key: &str| -> Result<f64> {
+                        ev.get(key).and_then(|v| v.as_f64()).with_context(
+                            || format!("fault event {i}: missing '{key}'"),
+                        )
+                    };
+                    FaultEvent::TrainerSlowdown {
+                        factor: f64_field("factor")?,
+                        from: f64_field("from")?,
+                        until: f64_field("until")?,
+                    }
+                }
+                "trainer_stall" => FaultEvent::TrainerStall {
+                    at: ev.get("at").and_then(|v| v.as_f64()).with_context(
+                        || format!("fault event {i}: missing 'at'"),
+                    )?,
+                    secs: ev.get("secs").and_then(|v| v.as_f64()).with_context(
+                        || format!("fault event {i}: missing 'secs'"),
+                    )?,
+                },
+                "trainer_crash" => FaultEvent::TrainerCrash {
+                    at_iter: ev
+                        .get("at_iter")
+                        .and_then(|v| v.as_usize())
+                        .with_context(|| {
+                            format!("fault event {i}: missing 'at_iter'")
+                        })?,
+                },
                 other => bail!("fault event {i}: unknown kind '{other}'"),
             };
             plan = plan.at(at, event);
@@ -333,6 +471,132 @@ impl FaultPlan {
     }
 }
 
+// ---------------------------------------------------------------------
+// Trainer-side fault replay (the training half of the failure domain).
+// ---------------------------------------------------------------------
+
+/// The outcome of replaying one train step through a plan's trainer-side
+/// events (see [`trainer_step`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainerStepOutcome {
+    /// Pipeline-clock second at which the (possibly redone) step lands.
+    pub end_secs: f64,
+    /// Crash-forced redo count (`TrainerCrash` events at this iteration).
+    pub retries: u64,
+    /// Seconds added over the fault-free `start + base` landing time.
+    pub fault_secs: f64,
+}
+
+/// Replay iteration `iter`'s train step — `base_secs` of fault-free
+/// compute starting at pipeline-clock `start_secs` — through the
+/// trainer-side events of `plan`, returning when it actually lands.
+///
+/// This is the *one* implementation of trainer-fault semantics: both
+/// [`crate::iteration::TrainingDriver`] and the sweep cell pipeline call
+/// it with identical `(start, base)` inputs, which is what keeps `--mode
+/// async --lag 0` byte-identical to `--mode sync` under any trainer
+/// plan. Pure `f64` walking, no wall clock, no RNG.
+///
+/// Semantics:
+/// - Each [`FaultEvent::TrainerCrash`] with `at_iter == iter` costs one
+///   full extra attempt (the in-flight step is lost and redone from the
+///   last checkpoint); attempts run back to back.
+/// - [`FaultEvent::TrainerSlowdown`] windows divide progress rate by
+///   `factor` while the clock is inside `[from, until)`; overlapping
+///   windows multiply.
+/// - A [`FaultEvent::TrainerStall`] whose `at` falls inside a busy
+///   attempt inserts `secs` of zero progress; stalls before the step
+///   starts land in trainer-idle time and are absorbed free. Because
+///   train steps never overlap in pipeline time (`U_k` is monotone),
+///   each stall fires at most once per run.
+///
+/// The enclosing [`TimedFault::at`] timestamp is only the plan's sort
+/// key for trainer events; timing lives in the variant fields.
+pub fn trainer_step(
+    plan: &FaultPlan,
+    iter: usize,
+    start_secs: f64,
+    base_secs: f64,
+) -> TrainerStepOutcome {
+    let mut slowdowns: Vec<(f64, f64, f64)> = Vec::new();
+    let mut stalls: Vec<(f64, f64)> = Vec::new();
+    let mut retries = 0u64;
+    for e in &plan.events {
+        match e.event {
+            FaultEvent::TrainerSlowdown { factor, from, until } => {
+                slowdowns.push((from, until, factor));
+            }
+            FaultEvent::TrainerStall { at, secs } => stalls.push((at, secs)),
+            FaultEvent::TrainerCrash { at_iter } if at_iter == iter => {
+                retries += 1;
+            }
+            _ => {}
+        }
+    }
+    stalls.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+    // One attempt: walk `work` fault-free seconds of compute forward
+    // from `t0`, piecewise over slowdown-window boundaries and stalls.
+    let walk_once = |t0: f64| -> f64 {
+        let mut t = t0;
+        let mut work = base_secs;
+        while work > 0.0 {
+            // Progress-rate divisor from the windows active at `t`.
+            let mut factor = 1.0;
+            for &(from, until, f) in &slowdowns {
+                if from <= t && t < until {
+                    factor *= f;
+                }
+            }
+            // A stall exactly at `t` fires now (strictly-later stalls
+            // are breakpoints below); the shift past it re-enters the
+            // loop so overlapping windows re-price the remainder.
+            if let Some(&(at, secs)) = stalls.iter().find(|&&(at, _)| at == t)
+            {
+                // Mark consumed by nudging past it is unnecessary: the
+                // next loop iteration sees `t = at + secs > at` (or the
+                // zero-length stall is a no-op either way).
+                t += secs;
+                if secs > 0.0 {
+                    continue;
+                }
+            }
+            // Next breakpoint: a window edge or stall strictly after `t`.
+            let mut next = f64::INFINITY;
+            for &(from, until, _) in &slowdowns {
+                if from > t {
+                    next = next.min(from);
+                }
+                if until > t {
+                    next = next.min(until);
+                }
+            }
+            for &(at, _) in &stalls {
+                if at > t {
+                    next = next.min(at);
+                }
+            }
+            let finish = t + work * factor;
+            if finish <= next {
+                return finish;
+            }
+            work -= (next - t) / factor;
+            t = next;
+        }
+        t
+    };
+
+    let mut t = start_secs;
+    for _ in 0..=retries {
+        t = walk_once(t);
+    }
+    TrainerStepOutcome {
+        end_secs: t,
+        retries,
+        fault_secs: t - (start_secs + base_secs),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -351,6 +615,16 @@ mod tests {
             .at(50.0, FaultEvent::ScaleDown { n: 1 })
             .at(60.0, FaultEvent::InstanceRecover { instance: InstanceId(1) })
             .at(5.0, FaultEvent::RequestAbort { req: RequestId(7) })
+            .at(
+                20.0,
+                FaultEvent::TrainerSlowdown {
+                    factor: 2.0,
+                    from: 20.0,
+                    until: 35.0,
+                },
+            )
+            .at(40.0, FaultEvent::TrainerStall { at: 40.0, secs: 3.0 })
+            .at(1.0, FaultEvent::TrainerCrash { at_iter: 1 })
     }
 
     #[test]
@@ -387,6 +661,11 @@ mod tests {
             r#"{"events": [{"at_secs": -1, "kind": "scale_up", "n": 1}]}"#,
             r#"{"events": [{"at_secs": 1, "kind": "warp", "n": 1}]}"#,
             r#"{"events": [{"at_secs": 1, "kind": "instance_slowdown", "instance": 0, "factor": "fast"}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "trainer_slowdown", "factor": 2.0, "from": 1}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "trainer_slowdown", "factor": 2.0, "from": 5, "until": 1}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "trainer_stall", "at": 1}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "trainer_stall", "at": 1, "secs": -2}]}"#,
+            r#"{"events": [{"at_secs": 1, "kind": "trainer_crash"}]}"#,
         ] {
             assert!(FaultPlan::from_json_str(bad).is_err(), "accepted {bad}");
         }
@@ -420,7 +699,118 @@ mod tests {
         assert!(bad.validate().is_err());
         let bad = FaultPlan::new().at(1.0, FaultEvent::ScaleUp { n: 0 });
         assert!(bad.validate().is_err());
+        let bad = FaultPlan::new().at(
+            1.0,
+            FaultEvent::TrainerSlowdown {
+                factor: 2.0,
+                from: 10.0,
+                until: 5.0,
+            },
+        );
+        assert!(bad.validate().is_err());
+        let bad = FaultPlan::new()
+            .at(1.0, FaultEvent::TrainerStall { at: 1.0, secs: -1.0 });
+        assert!(bad.validate().is_err());
         assert!(sample_plan().validate().is_ok());
+    }
+
+    #[test]
+    fn partition_splits_trainer_from_cluster_events() {
+        let plan = sample_plan().sorted();
+        let (cluster, trainer) = plan.partition();
+        assert_eq!(cluster.len() + trainer.len(), plan.len());
+        assert_eq!(trainer.len(), 3);
+        assert!(trainer.events.iter().all(|e| e.event.is_trainer()));
+        assert!(cluster.events.iter().all(|e| !e.event.is_trainer()));
+        // Partition preserves each half's relative (sorted) order.
+        for half in [&cluster, &trainer] {
+            let times: Vec<u64> =
+                half.events.iter().map(|e| e.at.as_micros()).collect();
+            let mut expect = times.clone();
+            expect.sort();
+            assert_eq!(times, expect);
+        }
+    }
+
+    #[test]
+    fn random_trainer_is_deterministic_and_trainer_only() {
+        let a = FaultPlan::random_trainer(7, 4, 300.0);
+        let b = FaultPlan::random_trainer(7, 4, 300.0);
+        assert_eq!(a, b);
+        assert!(a.events.iter().all(|e| e.event.is_trainer()));
+        a.validate().unwrap();
+        // Crash iterations stay inside the run.
+        for e in &a.events {
+            if let FaultEvent::TrainerCrash { at_iter } = e.event {
+                assert!(at_iter < 4);
+            }
+        }
+        let c = FaultPlan::random_trainer(8, 4, 300.0);
+        let d = FaultPlan::random_trainer(9, 4, 300.0);
+        assert!(a != c || a != d);
+    }
+
+    #[test]
+    fn trainer_step_is_identity_without_trainer_events() {
+        let plan = FaultPlan::new()
+            .at(1.0, FaultEvent::ScaleUp { n: 1 })
+            .sorted();
+        let out = trainer_step(&plan, 0, 10.0, 5.0);
+        assert_eq!(out.end_secs, 15.0);
+        assert_eq!(out.retries, 0);
+        assert_eq!(out.fault_secs, 0.0);
+    }
+
+    #[test]
+    fn trainer_step_applies_slowdown_stall_and_crash_exactly() {
+        // Slowdown 2x over [12, 14): step [10, 15) fault-free becomes
+        // 10→12 (2s work) + 2s wall for 1s work + 2s remaining = 16.
+        let slow = FaultPlan::new().at(
+            12.0,
+            FaultEvent::TrainerSlowdown {
+                factor: 2.0,
+                from: 12.0,
+                until: 14.0,
+            },
+        );
+        let out = trainer_step(&slow, 0, 10.0, 5.0);
+        assert_eq!(out.end_secs, 16.0);
+        assert_eq!(out.fault_secs, 1.0);
+
+        // A stall inside the busy window inserts its full length...
+        let stall = FaultPlan::new()
+            .at(12.0, FaultEvent::TrainerStall { at: 12.0, secs: 3.0 });
+        let out = trainer_step(&stall, 0, 10.0, 5.0);
+        assert_eq!(out.end_secs, 18.0);
+        // ...but a stall in idle time (before the step starts) is free.
+        let idle = FaultPlan::new()
+            .at(2.0, FaultEvent::TrainerStall { at: 2.0, secs: 3.0 });
+        let out = trainer_step(&idle, 0, 10.0, 5.0);
+        assert_eq!(out.end_secs, 15.0);
+        assert_eq!(out.fault_secs, 0.0);
+
+        // One crash at this iteration = one full redo, back to back.
+        let crash =
+            FaultPlan::new().at(0.0, FaultEvent::TrainerCrash { at_iter: 2 });
+        let out = trainer_step(&crash, 2, 10.0, 5.0);
+        assert_eq!(out.end_secs, 20.0);
+        assert_eq!(out.retries, 1);
+        assert_eq!(out.fault_secs, 5.0);
+        // Other iterations are untouched by that crash.
+        let out = trainer_step(&crash, 1, 10.0, 5.0);
+        assert_eq!(out.end_secs, 15.0);
+        assert_eq!(out.retries, 0);
+    }
+
+    #[test]
+    fn trainer_step_is_deterministic_and_monotone() {
+        let plan = FaultPlan::random_trainer(3, 6, 200.0);
+        let a = trainer_step(&plan, 1, 30.0, 12.0);
+        let b = trainer_step(&plan, 1, 30.0, 12.0);
+        assert_eq!(a, b);
+        // Faults only ever delay the landing.
+        assert!(a.end_secs >= 42.0);
+        assert!(a.fault_secs >= 0.0);
     }
 
     #[test]

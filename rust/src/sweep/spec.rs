@@ -376,6 +376,8 @@ impl SweepCell {
             staleness_mean: 0.0,
             staleness_max: 0,
             stale_requests: 0,
+            train_retries: 0,
+            trainer_fault_secs: 0.0,
         })
     }
 
@@ -387,8 +389,12 @@ impl SweepCell {
             .sd(&self.sd)
             .seed(self.seed)
             .n_instances(self.n_instances);
-        if !self.faults.is_empty() {
-            builder = builder.faults(self.faults.clone());
+        // Only the cluster half of the script reaches the rollout
+        // engine; trainer-side events replay into the pipeline
+        // recurrence (`run_pipelined`) instead.
+        let (cluster, _) = self.faults.partition();
+        if !cluster.is_empty() {
+            builder = builder.faults(cluster);
         }
         builder
     }
@@ -407,6 +413,12 @@ impl SweepCell {
         let lag = self.mode.lag() as usize;
         let epochs = self.pipeline_iters.max(1);
         let phase = PhaseModel::for_workload(&self.workload);
+        // Trainer half of the cell's fault script, replayed into the
+        // U_k recurrence through the same `trainer_step` walker the
+        // training driver uses (sync ≡ async-lag-0 by construction).
+        let (_, trainer) = self.faults.partition();
+        let mut train_retries = 0u64;
+        let mut trainer_fault_secs = 0.0f64;
         let mut r_prev = 0.0f64;
         let mut u: Vec<f64> = Vec::with_capacity(epochs);
         let (mut tokens, mut completions) = (0u64, 0usize);
@@ -446,11 +458,27 @@ impl SweepCell {
             let split = phase.split(m.makespan, m.tokens_generated);
             let r_k = s_k + m.makespan.as_secs_f64();
             let u_prev = u.last().copied().unwrap_or(0.0);
-            u.push(
-                r_k.max(u_prev)
-                    + split.training.as_secs_f64()
-                    + split.weight_update.as_secs_f64(),
-            );
+            let train_start = r_k.max(u_prev);
+            // Empty trainer plan keeps the exact historical float
+            // expression (byte-identity with pre-fault reports).
+            if trainer.is_empty() {
+                u.push(
+                    train_start
+                        + split.training.as_secs_f64()
+                        + split.weight_update.as_secs_f64(),
+                );
+            } else {
+                let step = crate::sim::faults::trainer_step(
+                    &trainer,
+                    e,
+                    train_start,
+                    split.training.as_secs_f64()
+                        + split.weight_update.as_secs_f64(),
+                );
+                u.push(step.end_secs);
+                train_retries += step.retries;
+                trainer_fault_secs += step.fault_secs;
+            }
             r_prev = r_k;
             tokens += m.tokens_generated;
             completions += m.completions.len();
@@ -503,6 +531,8 @@ impl SweepCell {
             },
             staleness_max: stal_max,
             stale_requests: stale_reqs,
+            train_retries,
+            trainer_fault_secs,
         })
     }
 }
@@ -543,6 +573,10 @@ pub struct CellResult {
     pub staleness_mean: f64,
     pub staleness_max: u64,
     pub stale_requests: u64,
+    /// Trainer-side fault replay totals across the cell's pipeline
+    /// (zero for legacy cells and trainer-fault-free plans).
+    pub train_retries: u64,
+    pub trainer_fault_secs: f64,
 }
 
 impl CellResult {
@@ -585,6 +619,11 @@ impl CellResult {
         put("staleness_mean", Json::Num(self.staleness_mean));
         put("staleness_max", Json::Num(self.staleness_max as f64));
         put("stale_requests", Json::Num(self.stale_requests as f64));
+        put("train_retries", Json::Num(self.train_retries as f64));
+        put(
+            "trainer_fault_secs",
+            Json::Num(self.trainer_fault_secs),
+        );
         Json::Obj(o)
     }
 }
@@ -666,6 +705,66 @@ mod tests {
         assert!(lag1.makespan_secs < sync.makespan_secs);
         assert!(lag1.staleness_max <= 1);
         assert!(lag1.tokens == sync.tokens);
+    }
+
+    #[test]
+    fn trainer_fault_cells_pipeline_the_walker_and_stay_lag0_identical() {
+        let plan = FaultPlan::new()
+            .at(
+                0.0,
+                FaultEvent::TrainerSlowdown {
+                    factor: 2.0,
+                    from: 0.0,
+                    until: 1.0e9,
+                },
+            )
+            .at(0.0, FaultEvent::TrainerCrash { at_iter: 1 })
+            .sorted();
+        let run = |mode: TrainingMode| {
+            let s = SweepSpec::new(TaskPreset::Moonlight.workload_for_test())
+                .seeds([7])
+                .fault_plan("trainer-chaos", plan.clone())
+                .mode(mode);
+            s.expand()[0].run().unwrap()
+        };
+        let sync = run(TrainingMode::Sync);
+        let lag0 = run(TrainingMode::Async { lag: 0 });
+        // The acceptance identity, at the cell layer: lag 0 under a
+        // trainer plan is byte-equal to sync under the same plan.
+        assert_eq!(
+            {
+                let mut j = sync.to_json();
+                if let Json::Obj(o) = &mut j {
+                    o.remove("mode");
+                    o.remove("lag");
+                }
+                j.to_string()
+            },
+            {
+                let mut j = lag0.to_json();
+                if let Json::Obj(o) = &mut j {
+                    o.remove("mode");
+                    o.remove("lag");
+                }
+                j.to_string()
+            }
+        );
+        assert_eq!(sync.train_retries, 1);
+        assert!(sync.trainer_fault_secs > 0.0);
+        // The healthy twin of the same cell reports zeros.
+        let healthy = SweepSpec::new(
+            TaskPreset::Moonlight.workload_for_test(),
+        )
+        .seeds([7])
+        .mode(TrainingMode::Sync)
+        .expand()[0]
+            .run()
+            .unwrap();
+        assert_eq!(healthy.train_retries, 0);
+        assert_eq!(healthy.trainer_fault_secs, 0.0);
+        // Trainer events never perturb the rollouts themselves.
+        assert_eq!(healthy.tokens, sync.tokens);
+        assert!(sync.makespan_secs > healthy.makespan_secs);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! Deterministic chaos harness (PR 10): kill/restart the daemon
+//! mid-train, corrupt the newest checkpoint generation between rounds,
+//! and drop client connections mid-line — then assert recovery
+//! converges to a final report byte-identical to the fault-free run.
+//!
+//! Determinism rules the harness relies on: reports carry no
+//! wall-clock fields, the training driver replays identically from any
+//! checkpointed epoch, and checkpoint recovery falls back to the
+//! newest *valid* generation — so every schedule of kills and
+//! corruptions that lets the job finish at all must land on the same
+//! bytes. The second test pins the acceptance identity end to end:
+//! `--mode async --lag 0` equals `--mode sync` under a trainer-side
+//! fault plan.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use seer::config::TrainingMode;
+use seer::iteration::TrainingDriver;
+use seer::serve::api::train_report;
+use seer::serve::{
+    QuotaConfig, ServeConfig, Server, TrainCheckpoint, TrainParams,
+};
+use seer::sim::faults::{FaultEvent, FaultPlan};
+use seer::util::json::Json;
+
+fn start_server(state_dir: PathBuf) -> (String, JoinHandle<()>) {
+    let server = Server::bind(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        quota: QuotaConfig::default(),
+        state_dir: Some(state_dir),
+        ..ServeConfig::default()
+    })
+    .expect("bind");
+    let addr = server.local_addr().expect("local addr").to_string();
+    let handle = std::thread::spawn(move || server.run().expect("server run"));
+    (addr, handle)
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        Client {
+            reader: BufReader::new(TcpStream::connect(addr).expect("connect")),
+        }
+    }
+
+    fn request(&mut self, line: &str) -> Json {
+        let stream = self.reader.get_mut();
+        stream.write_all(line.as_bytes()).expect("send");
+        stream.write_all(b"\n").expect("send newline");
+        let mut reply = String::new();
+        let n = self.reader.read_line(&mut reply).expect("recv");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(reply.trim_end()).expect("reply is valid JSON")
+    }
+}
+
+fn ok(j: &Json) -> bool {
+    j.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+fn wait_for(what: &str, mut probe: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while !probe() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn iters_done(c: &mut Client, job: u64) -> u64 {
+    c.request(&format!(r#"{{"verb":"status","job":{job}}}"#))
+        .get("progress")
+        .and_then(|p| p.get("iters_done"))
+        .and_then(Json::as_u64)
+        .unwrap_or(0)
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("seer-chaos-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Kill a round's daemon mid-job: first drop a raw connection mid-line
+/// (the bounded reader must shrug it off), then abort-shutdown.
+fn kill_round(addr: &str, c: &mut Client, handle: JoinHandle<()>) {
+    {
+        let mut raw = TcpStream::connect(addr).expect("raw connect");
+        raw.write_all(br#"{"verb":"stat"#).expect("partial line");
+    } // dropped here, mid-line — no newline ever arrives
+    assert!(ok(&c.request(r#"{"verb":"shutdown","mode":"abort"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn chaos_rounds_converge_to_the_fault_free_report() {
+    let dir = temp_dir("rounds");
+    let params = TrainParams {
+        task: "moonlight".to_string(),
+        scheduler: "seer".to_string(),
+        sd: "grouped-cst".to_string(),
+        iters: 4,
+        seed: 11,
+        drift: 0.1,
+        mode: TrainingMode::Sync,
+        cold: false,
+        throttle_ms: 250,
+        full: false,
+        trainer_faults: FaultPlan::new(),
+    };
+
+    // The fault-free reference, straight on the driver.
+    let mut driver = TrainingDriver::new(params.training_config().unwrap());
+    for _ in 0..params.iters {
+        driver.run_iteration(driver.next_epoch()).unwrap();
+    }
+    let expected = train_report(&params, driver.history()).to_string();
+
+    // Round 1: run until two generations exist, then kill the daemon.
+    let (addr, handle) = start_server(dir.clone());
+    let mut c = Client::connect(&addr);
+    let submitted = c.request(
+        r#"{"verb":"submit","job":{"kind":"train","iters":4,"seed":11,"drift":0.1,"throttle_ms":250}}"#,
+    );
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").and_then(Json::as_u64).unwrap();
+    wait_for("two checkpoint generations", || iters_done(&mut c, job) >= 2);
+    kill_round(&addr, &mut c, handle);
+
+    // Chaos 1: truncate the newest generation mid-record. Recovery must
+    // fall back to the previous valid generation and redo the lost
+    // iteration, not fail and not skip the job.
+    let base = TrainCheckpoint::path_for(&dir, job);
+    assert!(base.exists(), "abort shutdown must retain the checkpoint");
+    let bytes = std::fs::read(&base).unwrap();
+    std::fs::write(&base, &bytes[..bytes.len() / 2]).unwrap();
+
+    // Round 2: resume from the torn state dir, make more progress.
+    let (addr, handle) = start_server(dir.clone());
+    let mut c = Client::connect(&addr);
+    let status = c.request(&format!(r#"{{"verb":"status","job":{job}}}"#));
+    assert_eq!(
+        status.get("recovered").and_then(Json::as_bool),
+        Some(true),
+        "{status}"
+    );
+    wait_for("third iteration after fallback", || {
+        iters_done(&mut c, job) >= 3
+    });
+    kill_round(&addr, &mut c, handle);
+
+    // Chaos 2: flip the recorded checksum of the newest generation —
+    // the record still parses, but verification must reject it.
+    let text = std::fs::read_to_string(&base).unwrap();
+    assert!(text.contains("\"crc\":\""), "v2 record carries a checksum");
+    std::fs::write(&base, text.replacen("{\"crc\":\"", "{\"crc\":\"0", 1))
+        .unwrap();
+
+    // Round 3: final recovery runs the job to completion.
+    let (addr, handle) = start_server(dir.clone());
+    let mut c = Client::connect(&addr);
+    let result = c.request(&format!(r#"{{"verb":"result","job":{job}}}"#));
+    assert!(ok(&result), "{result}");
+    assert_eq!(
+        result.get("result").unwrap().to_string(),
+        expected,
+        "chaos-recovered final report differs from the fault-free run"
+    );
+    assert!(
+        !base.exists(),
+        "completed job must clean up all checkpoint generations"
+    );
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sync_and_lag_zero_reports_agree_under_trainer_chaos() {
+    let plan = FaultPlan::new()
+        .at(
+            10.0,
+            FaultEvent::TrainerSlowdown {
+                factor: 2.0,
+                from: 10.0,
+                until: 120.0,
+            },
+        )
+        .at(30.0, FaultEvent::TrainerStall { at: 30.0, secs: 15.0 })
+        .at(0.0, FaultEvent::TrainerCrash { at_iter: 1 })
+        .sorted();
+
+    let report = |mode: TrainingMode| {
+        let params = TrainParams {
+            task: "moonlight".to_string(),
+            scheduler: "seer".to_string(),
+            sd: "grouped-cst".to_string(),
+            iters: 3,
+            seed: 7,
+            drift: 0.05,
+            mode,
+            cold: false,
+            throttle_ms: 0,
+            full: false,
+            trainer_faults: plan.clone(),
+        };
+        let mut driver =
+            TrainingDriver::new(params.training_config().unwrap());
+        for _ in 0..params.iters {
+            driver.run_iteration(driver.next_epoch()).unwrap();
+        }
+        // Strip only the spec echo — it names the mode; every measured
+        // byte must agree.
+        let Json::Obj(mut o) = train_report(&params, driver.history())
+        else {
+            unreachable!()
+        };
+        o.remove("spec");
+        Json::Obj(o).to_string()
+    };
+
+    let sync = report(TrainingMode::Sync);
+    let lag0 = report(TrainingMode::Async { lag: 0 });
+    assert_eq!(
+        sync, lag0,
+        "async --lag 0 must stay byte-identical to sync under trainer faults"
+    );
+    let parsed = Json::parse(&sync).unwrap();
+    assert!(
+        parsed
+            .get("total_train_retries")
+            .and_then(Json::as_u64)
+            .unwrap()
+            >= 1,
+        "the crash event must cost at least one redone train step: {sync}"
+    );
+    assert!(
+        parsed
+            .get("total_trainer_fault_secs")
+            .and_then(|v| v.as_f64())
+            .unwrap()
+            > 0.0,
+        "slowdown/stall must surface as trainer fault seconds: {sync}"
+    );
+}

@@ -32,6 +32,7 @@ fn start_server(
         workers,
         quota,
         state_dir,
+        ..ServeConfig::default()
     })
     .expect("bind");
     let addr = server.local_addr().expect("local addr").to_string();
@@ -337,6 +338,7 @@ fn train_job_killed_mid_run_resumes_byte_identically() {
         cold: false,
         throttle_ms: 300,
         full: false,
+        trainer_faults: seer::sim::faults::FaultPlan::new(),
     };
 
     // Reference: the same job uninterrupted, straight on the driver.
@@ -396,4 +398,101 @@ fn train_job_killed_mid_run_resumes_byte_identically() {
     assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
     handle.join().unwrap();
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn subscriber_dropped_mid_stream_never_blocks_the_job() {
+    let (addr, handle) = start_server(QuotaConfig::default(), 1, None);
+    let mut c = Client::connect(&addr);
+
+    let submitted = c.request(
+        r#"{"verb":"submit","job":{"kind":"train","iters":4,"throttle_ms":100,"seed":3}}"#,
+    );
+    assert!(ok(&submitted), "{submitted}");
+    let job = submitted.get("job").and_then(Json::as_u64).unwrap();
+
+    // A second client subscribes to the live stream, reads the ack and
+    // a single frame, then drops its socket mid-NDJSON. The handler
+    // thread must treat the dead peer as an unsubscribe, not an error.
+    {
+        let mut sub = Client::connect(&addr);
+        let ack =
+            sub.request(&format!(r#"{{"verb":"subscribe","job":{job}}}"#));
+        assert!(ok(&ack), "{ack}");
+        assert_eq!(ack.get("streaming").and_then(Json::as_bool), Some(true));
+        let _half_read_frame = sub.recv();
+    } // TcpStream dropped here, mid-stream.
+
+    // The job still runs to completion — nothing blocked on the dead
+    // subscriber's channel.
+    let result = c.request(&format!(r#"{{"verb":"result","job":{job}}}"#));
+    assert!(ok(&result), "{result}");
+    assert_eq!(
+        result.get("attempts").and_then(Json::as_u64),
+        Some(1),
+        "{result}"
+    );
+
+    // And the mux slot was pruned, not leaked: a fresh subscriber gets
+    // the full replay with a clean terminal frame.
+    let mut sub2 = Client::connect(&addr);
+    let ack = sub2.request(&format!(r#"{{"verb":"subscribe","job":{job}}}"#));
+    assert!(ok(&ack), "{ack}");
+    loop {
+        let frame = sub2.recv();
+        if frame.get("type").and_then(Json::as_str) == Some("end") {
+            assert_eq!(state_of(&frame), "done", "{frame}");
+            break;
+        }
+    }
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown"}"#)));
+    handle.join().unwrap();
+}
+
+#[test]
+fn deadline_and_priority_ride_the_wire() {
+    let quota = QuotaConfig {
+        max_per_tenant: 8,
+        max_jobs: 2,
+    };
+    let (addr, handle) = start_server(quota, 1, None);
+    let mut c = Client::connect(&addr);
+
+    // A deadline the long train cannot meet: typed terminal status.
+    let doomed = c.request(
+        r#"{"verb":"submit","job":{"kind":"train","iters":500,"throttle_ms":50,"deadline_secs":0.2}}"#,
+    );
+    assert!(ok(&doomed), "{doomed}");
+    let doomed_id = doomed.get("job").and_then(Json::as_u64).unwrap();
+    let r = c.request(&format!(r#"{{"verb":"result","job":{doomed_id}}}"#));
+    assert_eq!(code(&r), Some("deadline-exceeded"), "{r}");
+    let s = c.request(&format!(r#"{{"verb":"status","job":{doomed_id}}}"#));
+    assert_eq!(state_of(&s), "deadline-exceeded", "{s}");
+
+    // Overload shedding: fill the global cap with low-priority queued
+    // work, then submit at a higher priority.
+    let slow =
+        r#"{"verb":"submit","job":{"kind":"train","iters":500,"throttle_ms":50}}"#;
+    let running = c.request(slow);
+    assert!(ok(&running), "{running}");
+    let queued = c.request(slow);
+    assert!(ok(&queued), "{queued}");
+    let queued_id = queued.get("job").and_then(Json::as_u64).unwrap();
+    wait_for("worker busy so the victim stays queued", || {
+        state_of(&c.request(&format!(
+            r#"{{"verb":"status","job":{}}}"#,
+            running.get("job").and_then(Json::as_u64).unwrap()
+        ))) == "running"
+    });
+
+    let urgent = c.request(
+        r#"{"verb":"submit","job":{"kind":"rollout","priority":5}}"#,
+    );
+    assert!(ok(&urgent), "sheddable queue must admit priority: {urgent}");
+    let shed = c.request(&format!(r#"{{"verb":"result","job":{queued_id}}}"#));
+    assert_eq!(code(&shed), Some("shed"), "{shed}");
+
+    assert!(ok(&c.request(r#"{"verb":"shutdown","mode":"abort"}"#)));
+    handle.join().unwrap();
 }

@@ -214,9 +214,18 @@ fn mode_dimension_threads_through_aggregates_and_pairs() {
         span("async:1"),
         span("sync")
     );
-    // The cell JSON exposes the new columns.
+    // The cell JSON exposes the new columns (PR 9 staleness, PR 10
+    // trainer-fault accounting — zero here, but always present).
     let j = report.cells[0].to_json();
-    for key in ["mode", "lag", "staleness_mean", "staleness_max", "stale_requests"] {
+    for key in [
+        "mode",
+        "lag",
+        "staleness_mean",
+        "staleness_max",
+        "stale_requests",
+        "train_retries",
+        "trainer_fault_secs",
+    ] {
         assert!(j.get(key).is_some(), "cell JSON lost '{key}'");
     }
 }
